@@ -1,0 +1,41 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the `test`-config MXFP4+RHT+SR train artifact, runs a handful of
+//! training steps through the full stack (PJRT execution of the AOT HLO,
+//! gradient all-reduce, AdamW), and prints the loss trajectory.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use mxfp4_train::config::TrainConfig;
+use mxfp4_train::coordinator::Trainer;
+use mxfp4_train::data::Dataset;
+use mxfp4_train::runtime::Registry;
+
+fn main() -> anyhow::Result<()> {
+    mxfp4_train::util::log::level_from_env();
+
+    // 1. discover the AOT artifacts emitted by `make artifacts`
+    let registry = Registry::open(&mxfp4_train::runtime::default_artifacts_dir())
+        .map_err(anyhow::Error::msg)?;
+
+    // 2. configure a short run with the paper's recipe
+    let mut cfg = TrainConfig::preset("test");
+    cfg.recipe = "mxfp4_rht_sr".into(); // MXFP4 backward + RHT + SR
+    cfg.steps = 60;
+    cfg.eval_every = 20;
+
+    // 3. synthetic corpus (or Dataset::from_text_file for real text)
+    let dataset = Dataset::synthetic(200_000, 256, 0);
+
+    // 4. train
+    let mut trainer = Trainer::new(&registry, cfg, dataset, None)?;
+    let summary = trainer.run()?;
+
+    println!(
+        "\nquickstart done: {} steps, train loss {:.3}, val ppl {:.1}",
+        summary.steps,
+        summary.final_train_loss,
+        (summary.final_val_loss as f64).exp()
+    );
+    Ok(())
+}

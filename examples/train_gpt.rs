@@ -1,0 +1,70 @@
+//! **The end-to-end driver** (DESIGN.md experiment T2): trains a GPT for a
+//! few hundred steps under every Table-2 backward-precision recipe and
+//! reports the final-loss table + writes the per-step CSVs that regenerate
+//! Figures 3-6/10-14.
+//!
+//!     cargo run --release --example train_gpt -- [--config tiny]
+//!         [--steps 300] [--sweep recipes|blocksize|fp8] [--dp 1]
+//!
+//! Expected shape (the paper's Table 2 ordering at any scale):
+//!   bf16  ≈  mxfp4_rht_sr  ≈  mxfp4_sr  <  mxfp4_rht  <  mxfp4 (pure NR)
+
+use mxfp4_train::config::TrainConfig;
+use mxfp4_train::coordinator::Trainer;
+use mxfp4_train::data::Dataset;
+use mxfp4_train::runtime::Registry;
+use mxfp4_train::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    mxfp4_train::util::log::level_from_env();
+    let args = Args::parse(std::env::args().skip(1));
+    let config = args.get_or("config", "tiny").to_string();
+    let steps = args.get_usize("steps", 300);
+    let dp = args.get_usize("dp", 1);
+    let sweep = args.get_or("sweep", "recipes");
+
+    let recipes: Vec<&str> = match sweep {
+        "recipes" => vec!["bf16", "mxfp4", "mxfp4_sr", "mxfp4_rht", "mxfp4_rht_sr"],
+        "blocksize" => vec!["mxfp4_rht_sr_g32", "mxfp4_rht_sr", "mxfp4_rht_sr_g128"],
+        "fp8" => vec!["bf16", "fp8_fwd_mxfp4_rht_sr"],
+        other => anyhow::bail!("unknown --sweep {other}"),
+    };
+
+    let registry = Registry::open(&mxfp4_train::runtime::default_artifacts_dir())
+        .map_err(anyhow::Error::msg)?;
+    let results = std::path::PathBuf::from("results");
+
+    let mut rows = Vec::new();
+    for recipe in &recipes {
+        if registry.find(&config, recipe, "train").is_none() {
+            eprintln!("skip {recipe}: no artifact for config {config} (see aot.py DEFAULT_PLAN)");
+            continue;
+        }
+        let mut cfg = TrainConfig::preset(&config);
+        cfg.recipe = recipe.to_string();
+        cfg.steps = steps;
+        cfg.dp_workers = dp;
+        cfg.eval_every = (steps / 10).max(1);
+        cfg.apply_cli(&args);
+        cfg.steps = steps;
+        cfg.recipe = recipe.to_string();
+        // identical data + init across recipes: only the backward precision differs
+        let dataset = Dataset::synthetic(2_000_000, 256, 123);
+        let mut trainer = Trainer::new(&registry, cfg, dataset, Some(&results))?;
+        rows.push(trainer.run()?);
+    }
+
+    println!("\n=== Table 2 analogue: GPT {config}, {steps} steps, backward-precision sweep ===");
+    println!("{:<30} {:>12} {:>10} {:>10}", "backward precision", "train loss", "val loss", "val ppl");
+    for s in &rows {
+        println!(
+            "{:<30} {:>12.4} {:>10.4} {:>10.2}",
+            s.run_name.trim_start_matches(&format!("{config}_")),
+            s.final_train_loss,
+            s.final_val_loss,
+            (s.final_val_loss as f64).exp()
+        );
+    }
+    println!("\nper-step curves: results/<run>/train.csv, results/<run>/val.csv (Figures 3-6)");
+    Ok(())
+}

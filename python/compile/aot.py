@@ -1,0 +1,318 @@
+"""AOT compiler: lower (config, recipe) train/eval/logits graphs to HLO text.
+
+This is the single point where python runs — ``make artifacts`` invokes it
+once; afterwards the rust coordinator is self-contained.
+
+Interchange format is **HLO text**, NOT ``lowered.compile().serialize()``:
+the image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowering goes stablehlo -> XlaComputation ->
+``as_hlo_text()`` exactly like the reference ``gen_hlo.py``.
+
+Every ``<name>.hlo.txt`` ships a ``<name>.meta.json`` sidecar recording the
+full input/output signature (names, shapes, dtypes) plus the parameter ABI
+(the deterministic ``model.param_shapes`` order) — rust's artifact registry
+parses these with its own JSON parser. A ``manifest.json`` indexes the set.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts \
+        [--configs test,tiny] [--recipes bf16,mxfp4_rht_sr,...] [--batch N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, recipes
+
+# Default batch size per named config (kept small: CPU-emulated MXFP4).
+DEFAULT_BATCHES = {"test": 4, "tiny": 8, "small": 8, "base": 8}
+
+# Default artifact matrix for `make artifacts`: every Table-2 recipe on the
+# test + tiny configs (integration tests / quick sweeps), plus the headline
+# recipe and baseline on small (the e2e example's model).
+DEFAULT_PLAN = {
+    "test": ["bf16", "mxfp4", "mxfp4_sr", "mxfp4_rht", "mxfp4_rht_sr"],
+    "tiny": [
+        "bf16",
+        "mxfp4",
+        "mxfp4_sr",
+        "mxfp4_rht",
+        "mxfp4_rht_sr",
+        "mxfp4_rht_sr_g32",
+        "mxfp4_rht_sr_g128",
+        "mxint4_rht_sr",
+        "fp8_fwd_mxfp4_rht_sr",
+    ],
+    "small": ["bf16", "mxfp4", "mxfp4_rht_sr"],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides tensors above ~1k elements as ``constant({...})`` and the 0.5.1
+    text parser silently re-materializes them as ZEROS — corrupting the
+    Hadamard matrix and the causal mask. (Found the hard way; see
+    DESIGN.md §Gotchas.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(name: str, shape, dtype: str) -> dict:
+    return {"name": name, "shape": list(int(s) for s in shape), "dtype": dtype}
+
+
+def _param_specs(cfg: model.GPTConfig) -> list[dict]:
+    return [_spec(n, s, "f32") for n, s in model.param_shapes(cfg).items()]
+
+
+def _abstract_args(cfg: model.GPTConfig, batch: int, kind: str):
+    """ShapeDtypeStructs for the artifact signature, in ABI order."""
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    par = [jax.ShapeDtypeStruct(s, jnp.float32) for s in model.param_shapes(cfg).values()]
+    if kind == "train":
+        return [jax.ShapeDtypeStruct((), jnp.uint32), tok, tok, *par]
+    if kind == "eval":
+        return [tok, tok, *par]
+    if kind == "logits":
+        return [tok, *par]
+    raise ValueError(kind)
+
+
+def build_fn(cfg: model.GPTConfig, recipe: recipes.Recipe, kind: str):
+    """A flat-argument wrapper around the model entry points."""
+    names = list(model.param_shapes(cfg).keys())
+
+    if kind == "train":
+
+        def fn(seed, tokens, labels, *flat):
+            params = dict(zip(names, flat))
+            return model.train_step(params, tokens, labels, seed, cfg, recipe)
+
+    elif kind == "eval":
+
+        def fn(tokens, labels, *flat):
+            params = dict(zip(names, flat))
+            return model.eval_step(params, tokens, labels, cfg, recipe)
+
+    elif kind == "logits":
+
+        def fn(tokens, *flat):
+            params = dict(zip(names, flat))
+            return model.logits_fn(params, tokens, cfg, recipe)
+
+    else:
+        raise ValueError(kind)
+    return fn
+
+
+def artifact_meta(
+    name: str, kind: str, cfg_name: str, cfg: model.GPTConfig, recipe: recipes.Recipe, batch: int
+) -> dict:
+    b, t, v = batch, cfg.seq_len, cfg.vocab
+    params = _param_specs(cfg)
+    if kind == "train":
+        inputs = [
+            _spec("seed", (), "u32"),
+            _spec("tokens", (b, t), "i32"),
+            _spec("labels", (b, t), "i32"),
+            *params,
+        ]
+        outputs = [_spec("loss", (), "f32")] + [
+            _spec(f"grad_{p['name']}", p["shape"], "f32") for p in params
+        ]
+    elif kind == "eval":
+        inputs = [_spec("tokens", (b, t), "i32"), _spec("labels", (b, t), "i32"), *params]
+        outputs = [_spec("loss", (), "f32")]
+    else:  # logits
+        inputs = [_spec("tokens", (b, t), "i32"), *params]
+        outputs = [_spec("logits", (b, t, v), "f32")]
+    return {
+        "name": name,
+        "kind": kind,
+        "config_name": cfg_name,
+        "config": dataclasses.asdict(cfg),
+        "recipe": dataclasses.asdict(recipe),
+        "recipe_name": recipe.name,
+        "batch": batch,
+        "param_count": cfg.param_count(),
+        "inputs": inputs,
+        "outputs": outputs,
+        "params": params,
+    }
+
+
+def emit(out_dir: str, cfg_name: str, recipe_name: str, kind: str, batch: int) -> dict:
+    cfg = model.CONFIGS[cfg_name]
+    recipe = recipes.get(recipe_name)
+    name = f"{cfg_name}_{recipe_name}_{kind}"
+    fn = build_fn(cfg, recipe, kind)
+    t0 = time.time()
+    # keep_unused: the artifact ABI is positional — e.g. the `seed` input is
+    # unused in the deterministic bf16/exact recipe but rust always feeds it.
+    lowered = jax.jit(fn, keep_unused=True).lower(*_abstract_args(cfg, batch, kind))
+    text = to_hlo_text(lowered)
+    meta = artifact_meta(name, kind, cfg_name, cfg, recipe, batch)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s")
+    return {"name": name, "kind": kind, "config": cfg_name, "recipe": recipe_name, "batch": batch}
+
+
+def emit_golden(out_dir: str) -> None:
+    """Golden vectors: the cross-language bit-accuracy contract.
+
+    The rust `mx`/`hadamard` substrates must reproduce these outputs
+    *exactly* (cargo test `golden::`) — this pins rust to the same
+    semantics pytest pins the Pallas kernels to.
+    """
+    from .kernels import ref
+
+    key = jax.random.PRNGKey(1234)
+    cases = []
+    for i, scale in enumerate([1e-4, 0.37, 1.0, 42.0, 3e4]):
+        k = jax.random.fold_in(key, i)
+        v = jax.random.normal(k, (2, 64)) * scale
+        q = ref.quantize_mx_nr(v)
+        g = ref._group(v, ref.MX_BLOCK)
+        x = ref.shared_scale(g)[..., 0]
+        cases.append(
+            {
+                "input": [float(f) for f in v.flatten().tolist()],
+                "shape": list(v.shape),
+                "qdq_nr": [float(f) for f in q.flatten().tolist()],
+                "scales": [float(f) for f in x.flatten().tolist()],
+            }
+        )
+    # RHT with a fixed sign vector (deterministic given sign)
+    sign = jnp.asarray([1.0, -1.0] * 32)  # g = 64
+    v = jax.random.normal(jax.random.fold_in(key, 99), (4, 128)) * 2.0
+    t = ref.rht_last_axis(v, sign)
+    rht_case = {
+        "sign": [float(f) for f in sign.tolist()],
+        "input": [float(f) for f in v.flatten().tolist()],
+        "shape": list(v.shape),
+        "output": [float(f) for f in t.flatten().tolist()],
+    }
+    # SR with explicit dither noise (deterministic given u)
+    vv = jax.random.normal(jax.random.fold_in(key, 7), (2, 32)) * 1.7
+    u = jax.random.uniform(jax.random.fold_in(key, 8), (2, 32))
+    qs = ref.quantize_mx_sr(vv, u)
+    sr_case = {
+        "input": [float(f) for f in vv.flatten().tolist()],
+        "noise": [float(f) for f in u.flatten().tolist()],
+        "shape": list(vv.shape),
+        "qdq_sr": [float(f) for f in qs.flatten().tolist()],
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump({"quant_nr": cases, "rht": rht_case, "quant_sr": sr_case}, f)
+    print("  golden.json (rust bit-accuracy vectors)")
+
+
+def _write_mxck(path: str, names: list[str], tensors) -> None:
+    """Write the rust checkpoint format (coordinator/checkpoint.rs)."""
+    import struct
+
+    with open(path, "wb") as f:
+        f.write(b"MXCK")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(names)))
+        for name, t in zip(names, tensors):
+            import numpy as np
+
+            arr = np.asarray(t, dtype="<f4").reshape(-1)
+            f.write(struct.pack("<I", len(name)))
+            f.write(name.encode())
+            f.write(struct.pack("<Q", arr.size))
+            f.write(arr.tobytes())
+
+
+def emit_model_golden(out_dir: str) -> None:
+    """Model-level cross-language check: fixed params + batch -> the loss
+    the `test_bf16_eval` artifact must reproduce when rust executes it."""
+    import numpy as np
+
+    cfg = model.CONFIGS["test"]
+    recipe = recipes.get("bf16")
+    params = model.init_params(jax.random.PRNGKey(42), cfg)
+    names = list(model.param_shapes(cfg).keys())
+    batch = DEFAULT_BATCHES["test"]
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (batch, cfg.seq_len), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (batch, cfg.seq_len), 0, cfg.vocab)
+    (loss,) = model.eval_step(params, tokens, labels, cfg, recipe)
+    _write_mxck(os.path.join(out_dir, "golden_params.mxck"), names, [params[n] for n in names])
+    doc = {
+        "tokens": np.asarray(tokens).flatten().tolist(),
+        "labels": np.asarray(labels).flatten().tolist(),
+        "expected_loss": float(loss),
+    }
+    with open(os.path.join(out_dir, "golden_model.json"), "w") as f:
+        json.dump(doc, f)
+    print(f"  golden_model.json (expected eval loss {float(loss):.6f})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=None, help="comma list; default = plan")
+    ap.add_argument("--recipes", default=None, help="comma list; default = plan per config")
+    ap.add_argument("--batch", type=int, default=None, help="override batch size")
+    ap.add_argument("--kinds", default="train,eval,logits")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    plan = dict(DEFAULT_PLAN)
+    if args.configs:
+        cfgs = args.configs.split(",")
+        plan = {c: (args.recipes.split(",") if args.recipes else DEFAULT_PLAN.get(c, ["bf16"])) for c in cfgs}
+    elif args.recipes:
+        plan = {c: args.recipes.split(",") for c in plan}
+
+    kinds = args.kinds.split(",")
+    manifest = []
+    t0 = time.time()
+    for cfg_name, recipe_names in plan.items():
+        batch = args.batch or DEFAULT_BATCHES[cfg_name]
+        print(f"[{cfg_name}] batch={batch} recipes={recipe_names}")
+        for rn in recipe_names:
+            if "train" in kinds:
+                manifest.append(emit(args.out_dir, cfg_name, rn, "train", batch))
+        # eval + logits don't depend on the backward recipe — emit once per
+        # distinct forward precision present in the recipe list.
+        fwd_seen = set()
+        for rn in recipe_names:
+            fwd = recipes.get(rn).fwd
+            if fwd in fwd_seen:
+                continue
+            fwd_seen.add(fwd)
+            if "eval" in kinds:
+                manifest.append(emit(args.out_dir, cfg_name, rn, "eval", batch))
+            if "logits" in kinds:
+                manifest.append(emit(args.out_dir, cfg_name, rn, "logits", batch))
+
+    emit_golden(args.out_dir)
+    emit_model_golden(args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=1)
+    print(f"wrote {len(manifest)} artifacts in {time.time()-t0:.1f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Fused RHT + MXFP4-quantize Pallas kernel (the §4.2 prologue fusion).
+
+The paper notes that an efficient implementation fuses Algorithm 3's
+lines 3-6 (the blockwise RHT) into lines 7-8 (the MXFP4 GEMM) "reducing
+costly memory accesses". This kernel is that fusion's prologue half: each
+(BLK_R, g) operand tile is read from HBM once, hit with the resident
+diag(S)·H_g MXU tile, quantized to MXFP4 (Algorithm 1 or 2) in-register,
+and only the qdq result is written back — IO O(bn), never materializing
+the transformed high-precision operand.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .mxfp4 import (
+    _nearest_tile,
+    _shared_scale_tile,
+    _stochastic_tile,
+    pick_block,
+)
+
+# See rht.py: fat tiles keep the grid short; x-tile + u-tile + out-tile at
+# (2048, g<=256) stay under 6 MB of VMEM.
+DEFAULT_BLK_R = 2048
+
+
+def _rht_qdq_nr_kernel(x_ref, m_ref, o_ref, *, dtype: str = "fp4"):
+    t = jnp.dot(x_ref[...], m_ref[...], preferred_element_type=jnp.float32)
+    x = _shared_scale_tile(t)
+    o_ref[...] = _nearest_tile(jnp.clip(t / x, -8.0, 8.0), dtype) * x
+
+
+def _rht_qdq_sr_kernel(x_ref, m_ref, u_ref, o_ref, *, prescale: bool, dtype: str = "fp4"):
+    t = jnp.dot(x_ref[...], m_ref[...], preferred_element_type=jnp.float32)
+    u = u_ref[...]
+    x = _shared_scale_tile(t)
+    scaled = t / x
+    if prescale:
+        scaled = scaled * 0.75
+    o_ref[...] = _stochastic_tile(scaled, u, dtype) * x
+
+
+def rht_qdq(
+    x: jnp.ndarray,
+    sign: jnp.ndarray,
+    u: jnp.ndarray | None = None,
+    *,
+    stochastic: bool = True,
+    prescale: bool = True,
+    blk_r: int = DEFAULT_BLK_R,
+    dtype: str = "fp4",
+) -> jnp.ndarray:
+    """Fused blockwise-RHT + MXFP4 qdq along the last axis.
+
+    Equivalent to ``ref.quantize_mx_{sr,nr}(ref.rht_last_axis(x, sign))``
+    but with one HBM round-trip. ``u`` (uniform [0,1), same shape as x) is
+    required when ``stochastic=True``. g = len(sign) must be a multiple of
+    32 so MX groups tile the transformed chunks exactly.
+    """
+    g = sign.shape[0]
+    assert g % ref.MX_BLOCK == 0, g
+    shape = x.shape
+    assert shape[-1] % g == 0, (shape, g)
+    m = ref.rht_matrix(sign)
+    x2 = x.reshape(-1, g)
+    rows = x2.shape[0]
+    br = pick_block(rows, blk_r)
+    if stochastic:
+        assert u is not None and u.shape == x.shape
+        u2 = u.reshape(-1, g)
+        kernel = functools.partial(_rht_qdq_sr_kernel, prescale=prescale, dtype=dtype)
+        out = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+            grid=(rows // br,),
+            in_specs=[
+                pl.BlockSpec((br, g), lambda i: (i, 0)),
+                pl.BlockSpec((g, g), lambda i: (0, 0)),
+                pl.BlockSpec((br, g), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((br, g), lambda i: (i, 0)),
+            interpret=True,
+        )(x2, m, u2)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_rht_qdq_nr_kernel, dtype=dtype),
+            out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+            grid=(rows // br,),
+            in_specs=[
+                pl.BlockSpec((br, g), lambda i: (i, 0)),
+                pl.BlockSpec((g, g), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((br, g), lambda i: (i, 0)),
+            interpret=True,
+        )(x2, m)
+    return out.reshape(shape)

@@ -1,0 +1,273 @@
+"""Pallas kernels for MXFP4 quantize-dequantize (Algorithms 1 & 2).
+
+TPU-shaped rethink of the paper's CUDA kernels (DESIGN.md
+§Hardware-Adaptation):
+
+  * The CUDA version computes the 32-wide block max with a warp shuffle;
+    here each grid step owns a ``(BLK_R, BLK_C)`` VMEM tile and computes
+    all its group maxima with an in-register reshape
+    ``(R, C) -> (R, C/32, 32)`` + lane reduction — VPU-friendly, no
+    cross-tile communication because MX groups never straddle tiles
+    (32 | BLK_C is asserted).
+  * Rounding is a branch-free ``select`` chain over the 8-point E2M1 grid
+    (what a TPU VPU actually executes) rather than a table lookup.
+  * SR dither noise arrives as an *input tile* streamed with the same
+    BlockSpec as the operand. On Trainium/Blackwell this is a hardware
+    dither; AOT-wise the noise is produced by ``jax.random`` inside the
+    same HLO module from a seed the rust coordinator feeds each step.
+
+Kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); structure — BlockSpec tiling, VMEM footprint — is what we
+optimize and document, numerics are bit-identical to ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile shape: multiples of the (8, 128) f32 VPU tile, sized so one
+# operand tile is 1 MB in VMEM (512 x 512 f32). Fewer, fatter grid steps:
+# on real TPU this amortizes the per-step DMA + loop overhead against ~16MB
+# of VMEM (in/out/noise tiles = 3 MB); under interpret=True it amortizes the
+# per-step interpreter cost, which profiling showed dominates (§Perf L1).
+DEFAULT_BLK_R = 512
+DEFAULT_BLK_C = 512
+
+
+def pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (prefers powers of 2)."""
+    best = 1
+    d = 1
+    while d <= min(n, target):
+        if n % d == 0:
+            best = d
+        d *= 2
+    # fall back to a linear scan for non-power-of-two shapes
+    for d in range(best + 1, min(n, target) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+# ---------------------------------------------------------------------------
+# In-kernel FP4 rounding primitives (branch-free select chains)
+# ---------------------------------------------------------------------------
+
+
+def _fp4_nearest_tile(x):
+    """Nearest-round a tile to the FP4 grid, ties-to-even (see ref.py)."""
+    mag = jnp.abs(x)
+    # Ties: 0.25->0, 0.75->1, 1.25->1, 1.75->2, 2.5->2, 3.5->4, 5->4
+    q = jnp.where(
+        mag <= 0.25,
+        0.0,
+        jnp.where(
+            mag < 0.75,
+            0.5,
+            jnp.where(
+                mag <= 1.25,
+                1.0,
+                jnp.where(
+                    mag < 1.75,
+                    1.5,
+                    jnp.where(
+                        mag <= 2.5,
+                        2.0,
+                        jnp.where(mag < 3.5, 3.0, jnp.where(mag <= 5.0, 4.0, 6.0)),
+                    ),
+                ),
+            ),
+        ),
+    )
+    return jnp.sign(x) * q
+
+
+def _fp4_floor_ceil_tile(mag):
+    """(floor, ceil) of a magnitude tile onto the FP4 grid; mag in [0, 6]."""
+    f = jnp.where(
+        mag >= 6.0,
+        6.0,
+        jnp.where(
+            mag >= 4.0,
+            4.0,
+            jnp.where(
+                mag >= 3.0,
+                3.0,
+                jnp.where(
+                    mag >= 2.0,
+                    2.0,
+                    jnp.where(
+                        mag >= 1.5,
+                        1.5,
+                        jnp.where(mag >= 1.0, 1.0, jnp.where(mag >= 0.5, 0.5, 0.0)),
+                    ),
+                ),
+            ),
+        ),
+    )
+    c = jnp.where(
+        mag > 4.0,
+        6.0,
+        jnp.where(
+            mag > 3.0,
+            4.0,
+            jnp.where(
+                mag > 2.0,
+                3.0,
+                jnp.where(
+                    mag > 1.5,
+                    2.0,
+                    jnp.where(
+                        mag > 1.0,
+                        1.5,
+                        jnp.where(mag > 0.5, 1.0, jnp.where(mag > 0.0, 0.5, 0.0)),
+                    ),
+                ),
+            ),
+        ),
+    )
+    return f, c
+
+
+def _fp4_stochastic_tile(x, u):
+    """Stochastically round a tile to the FP4 grid (dither ``u`` in [0,1))."""
+    x = jnp.clip(x, -ref.FP4_MAX, ref.FP4_MAX)
+    mag = jnp.abs(x)
+    f, c = _fp4_floor_ceil_tile(mag)
+    gap = c - f
+    p = jnp.where(gap > 0, (mag - f) / jnp.where(gap > 0, gap, 1.0), 0.0)
+    return jnp.sign(x) * jnp.where(u < p, c, f)
+
+
+def _int4_nearest_tile(x):
+    """Nearest-round a tile to the INT4 grid (ties-to-even via round)."""
+    return jnp.clip(jnp.round(x), -8.0, 7.0)
+
+
+def _int4_stochastic_tile(x, u):
+    """Stochastically round a tile to INT4 (uniform dither, Eq. 1)."""
+    x = jnp.clip(x, -8.0, 7.0)
+    f = jnp.floor(x)
+    p = x - f
+    return jnp.where(u < p, jnp.minimum(f + 1.0, 7.0), f)
+
+
+def _nearest_tile(x, dtype):
+    if dtype == "int4":
+        return _int4_nearest_tile(x)
+    return _fp4_nearest_tile(x)
+
+
+def _stochastic_tile(x, u, dtype):
+    if dtype == "int4":
+        return _int4_stochastic_tile(x, u)
+    return _fp4_stochastic_tile(x, u)
+
+
+def _shared_scale_tile(tile):
+    """Per-32-group scale X for a (R, C) tile; returns (R, C) broadcast X."""
+    r, c = tile.shape
+    grouped = tile.reshape(r, c // ref.MX_BLOCK, ref.MX_BLOCK)
+    m = jnp.max(jnp.abs(grouped), axis=-1, keepdims=True)
+    _, e2 = jnp.frexp(jnp.where(m > 0, m, 1.0))
+    e = jnp.where(m > 0, e2 - 1, 0) - ref.FP4_EMAX
+    e = jnp.where(m > 0, e, ref.SCALE_EMIN)
+    x = ref.exact_pow2(e)
+    return jnp.broadcast_to(x, grouped.shape).reshape(r, c)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _qdq_nr_kernel(x_ref, o_ref, *, dtype: str = "fp4"):
+    """Algorithm 1 (biased OCP MX quantization), qdq, one VMEM tile."""
+    tile = x_ref[...]
+    x = _shared_scale_tile(tile)
+    o_ref[...] = _nearest_tile(jnp.clip(tile / x, -8.0, 8.0), dtype) * x
+
+
+def _qdq_sr_kernel(x_ref, u_ref, o_ref, *, prescale: bool, dtype: str = "fp4"):
+    """Algorithm 2 (unbiased: 3/4 pre-scale + SR), qdq, one VMEM tile."""
+    tile = x_ref[...]
+    u = u_ref[...]
+    x = _shared_scale_tile(tile)
+    scaled = tile / x
+    if prescale:
+        scaled = scaled * 0.75
+    o_ref[...] = _stochastic_tile(scaled, u, dtype) * x
+
+
+# ---------------------------------------------------------------------------
+# Public wrappers (pallas_call builders)
+# ---------------------------------------------------------------------------
+
+
+def _tile_grid(shape, blk_r, blk_c):
+    r, c = shape
+    br = pick_block(r, blk_r)
+    bc = pick_block(c // ref.MX_BLOCK, max(blk_c // ref.MX_BLOCK, 1)) * ref.MX_BLOCK
+    return (r // br, c // bc), (br, bc)
+
+
+def mxfp4_qdq_nr(
+    x: jnp.ndarray,
+    blk_r: int = DEFAULT_BLK_R,
+    blk_c: int = DEFAULT_BLK_C,
+    dtype: str = "fp4",
+) -> jnp.ndarray:
+    """Pallas MX qdq, Algorithm 1 (nearest rounding). x: (..., C), 32|C.
+    ``dtype`` selects the base element format: "fp4" (E2M1) or "int4"."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    grid, (br, bc) = _tile_grid(x2.shape, blk_r, blk_c)
+    out = pl.pallas_call(
+        functools.partial(_qdq_nr_kernel, dtype=dtype),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=True,
+    )(x2)
+    return out.reshape(shape)
+
+
+def mxfp4_qdq_sr(
+    x: jnp.ndarray,
+    u: jnp.ndarray,
+    prescale: bool = True,
+    blk_r: int = DEFAULT_BLK_R,
+    blk_c: int = DEFAULT_BLK_C,
+    dtype: str = "fp4",
+) -> jnp.ndarray:
+    """Pallas MX qdq, Algorithm 2 (3/4 pre-scale + stochastic rounding).
+
+    ``u`` is uniform-[0,1) dither of the same shape. Output is an unbiased
+    estimate of (3/4)·x (of x when ``prescale=False``, modulo clip bias).
+    ``dtype`` selects "fp4" or "int4" base elements.
+    """
+    assert x.shape == u.shape
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    u2 = u.reshape(-1, shape[-1])
+    grid, (br, bc) = _tile_grid(x2.shape, blk_r, blk_c)
+    kernel = functools.partial(_qdq_sr_kernel, prescale=prescale, dtype=dtype)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=True,
+    )(x2, u2)
+    return out.reshape(shape)

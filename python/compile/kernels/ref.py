@@ -1,0 +1,375 @@
+"""Pure-jnp reference oracle for the MXFP4 training pipeline.
+
+This module is the *numeric ground truth* for the whole repo:
+
+  * the Pallas kernels (`mxfp4.py`, `rht.py`, `fused.py`) are tested
+    against it with pytest + hypothesis,
+  * the rust `mx` / `hadamard` substrates mirror it bit-for-bit and are
+    cross-checked via golden vectors generated from here.
+
+Semantics follow the paper exactly:
+
+  * FP4 is E2M1 (1 sign, 2 exponent, 1 mantissa; bias 1). Representable
+    magnitudes: {0, 0.5, 1, 1.5, 2, 3, 4, 6}.
+  * Algorithm 1 ("reference" OCP MX quantization): per 32-element group,
+    shared_exp = floor(log2(max|v|)) - emax_elem  (emax_elem = 2 for FP4),
+    X = 2^shared_exp, elements nearest-rounded to FP4 after dividing by X.
+    Values scaled into (6, 8] clip to 6 — the bias the paper identifies.
+  * Algorithm 2 (unbiased): elements additionally scaled by 3/4 before
+    stochastic rounding, making the MX block an unbiased estimate of
+    (3/4)·v; a GEMM of two such blocks estimates (9/16)·(A·B), undone by a
+    16/9 rescale of the accumulator (Lemma 3.1).
+  * Blockwise RHT (§3.2): x.view(-1, g) @ diag(S)·H_g with a single shared
+    g-dim sign vector S; H_g is the orthonormal (1/sqrt(g)-scaled) Sylvester
+    Hadamard matrix, so (HS)^T(HS) = I and the transform cancels inside the
+    GEMM.
+
+Everything is f32 "qdq" (quantize-dequantize) emulation: containers stay
+f32 but every value is exactly X * (an FP4 grid point), which the tests
+assert. This matches how the paper trains (Microsoft microxcaling
+emulation) and how rust's bit-accurate codec checks us.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# FP4 (E2M1) grid
+# ---------------------------------------------------------------------------
+
+# Non-negative representable magnitudes of FP4 E2M1, ascending.
+FP4_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+# Midpoints between consecutive grid values (used for nearest rounding).
+FP4_MIDPOINTS = (FP4_GRID[:-1] + FP4_GRID[1:]) / 2.0
+# Grid values with an even mantissa bit (M=0): used for ties-to-even.
+FP4_EVEN_MASK = np.array([True, False, True, False, True, False, True, False])
+
+FP4_MAX = 6.0  # largest normal magnitude
+FP4_EMAX = 2  # exponent of the largest normal (6 = 1.5 * 2^2)
+MX_BLOCK = 32  # OCP MX group size
+E8M0_MIN, E8M0_MAX = -127, 127  # representable E8M0 shared-exponent range
+# f32 qdq emulation clamps the shared exponent to the *normal* f32 range:
+# XLA CPU flushes subnormals to zero, so X = 2^-127 would silently become 0
+# (and 0/0 = NaN). 2^-126 is the smallest FTZ-safe scale; the rust codec
+# mirrors this clamp so both sides stay bit-identical.
+SCALE_EMIN, SCALE_EMAX = -126, 127
+
+
+def exact_pow2(e: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^e for integer e in [-126, 127], via exponent-field bitcast.
+
+    ``jnp.exp2`` on XLA CPU is computed through a polynomial and is *wrong
+    in the last ulp for most integer exponents* (measured: 221/254 exact
+    powers of two are off) — unacceptable for a scale that must divide out
+    exactly. Building the float from its bit pattern is exact.
+    """
+    e = jnp.clip(e.astype(jnp.int32), SCALE_EMIN, SCALE_EMAX)
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
+def fp4_nearest(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the nearest FP4 (E2M1) value, ties-to-even mantissa.
+
+    Input is clipped to [-6, 6] first (overflow saturates, as in OCP MX
+    Algorithm 1 — this is exactly the clipping bias Algorithm 2 removes).
+    """
+    x = jnp.clip(x, -FP4_MAX, FP4_MAX)
+    mag = jnp.abs(x)
+    mids = jnp.asarray(FP4_MIDPOINTS)
+    # index of nearest grid point; side differs only exactly on midpoints
+    idx_up = jnp.searchsorted(mids, mag, side="right")
+    idx_dn = jnp.searchsorted(mids, mag, side="left")
+    # where mag sits exactly on a midpoint, idx_dn < idx_up; pick the even one
+    grid = jnp.asarray(FP4_GRID)
+    even = jnp.asarray(FP4_EVEN_MASK)
+    tie = idx_dn != idx_up
+    pick_dn = tie & even[jnp.clip(idx_dn, 0, 7)]
+    idx = jnp.where(pick_dn, idx_dn, idx_up)
+    return jnp.sign(x) * grid[idx]
+
+
+def fp4_stochastic(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Stochastically round to the FP4 grid.
+
+    ``u`` is i.i.d. uniform on [0, 1) with the same shape as ``x``. For x
+    between consecutive grid points f <= x <= c, rounds up with probability
+    (x - f) / (c - f) — exactly unbiased (E[SR(x)] = x) for |x| <= 6.
+    Inputs outside [-6, 6] saturate (callers must pre-scale; Algorithm 2's
+    3/4 factor guarantees in-range inputs).
+
+    This is the "dithering" formulation of Eq. (1) generalized to the
+    non-uniform FP4 grid: comparing u against the fractional position is
+    equivalent to adding uniform noise scaled by the local gap (c - f) and
+    nearest-rounding.
+    """
+    x = jnp.clip(x, -FP4_MAX, FP4_MAX)
+    mag = jnp.abs(x)
+    grid = jnp.asarray(FP4_GRID)
+    # f = floor on grid, c = ceil on grid
+    idx_c = jnp.clip(jnp.searchsorted(grid, mag, side="left"), 0, 7)
+    c = grid[idx_c]
+    idx_f = jnp.where(c == mag, idx_c, jnp.maximum(idx_c - 1, 0))
+    f = grid[idx_f]
+    gap = c - f
+    # fractional position in [0, 1); 0 when on-grid (gap == 0)
+    p = jnp.where(gap > 0, (mag - f) / jnp.where(gap > 0, gap, 1.0), 0.0)
+    rounded = jnp.where(u < p, c, f)
+    return jnp.sign(x) * rounded
+
+
+# ---------------------------------------------------------------------------
+# Shared exponent (E8M0 scale)
+# ---------------------------------------------------------------------------
+
+
+def floor_log2(m: jnp.ndarray) -> jnp.ndarray:
+    """Exact floor(log2(m)) for m > 0 via exponent extraction (frexp).
+
+    float log2 of a power of two can land just below the integer under
+    fused-math; frexp is exact: m = mant * 2^e with mant in [0.5, 1), so
+    floor(log2(m)) = e - 1.
+    """
+    _, e = jnp.frexp(m)
+    return e - 1
+
+
+def shared_scale(v: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Per-MX-group scale X = 2^shared_exp (Alg. 1 lines 1-2), keepdims.
+
+    ``v`` must already be grouped: ``axis`` indexes within an MX group of
+    size 32 (or any size — the formula only uses the max). An all-zero
+    group gets X = 2^-126 (the FTZ-safe scale floor, see SCALE_EMIN) so qdq
+    maps it to exact zeros. The shared exponent is clamped to the
+    FTZ-safe sub-range of E8M0.
+    """
+    m = jnp.max(jnp.abs(v), axis=axis, keepdims=True)
+    e = jnp.where(m > 0, floor_log2(jnp.where(m > 0, m, 1.0)), 0) - FP4_EMAX
+    e = jnp.where(m > 0, e, SCALE_EMIN)
+    return exact_pow2(e)
+
+
+def _group(v: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Reshape the last axis into (..., n/block, block) MX groups."""
+    assert v.shape[-1] % block == 0, (v.shape, block)
+    return v.reshape(*v.shape[:-1], v.shape[-1] // block, block)
+
+
+def _ungroup(v: jnp.ndarray) -> jnp.ndarray:
+    return v.reshape(*v.shape[:-2], v.shape[-2] * v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 / Algorithm 2 (qdq emulation along the last axis)
+# ---------------------------------------------------------------------------
+
+
+def quantize_mx_nr(v: jnp.ndarray, block: int = MX_BLOCK) -> jnp.ndarray:
+    """Algorithm 1: biased OCP MX quantization (nearest rounding), qdq.
+
+    Values scaled into (6, 8] by the shared exponent clip to 6, which is
+    the source of the bias quantified in §3.1 (~3% of entries for wide
+    distributions).
+    """
+    g = _group(v, block)
+    x = shared_scale(g)
+    q = fp4_nearest(g / x)
+    return _ungroup(q * x)
+
+
+def quantize_mx_sr(
+    v: jnp.ndarray, u: jnp.ndarray, block: int = MX_BLOCK, prescale: bool = True
+) -> jnp.ndarray:
+    """Algorithm 2: unbiased MX quantization (3/4 pre-scale + SR), qdq.
+
+    Returns an unbiased estimate of (3/4)·v — callers undo the (3/4)^2
+    factor on the GEMM accumulator (16/9), per Lemma 3.1. ``u`` is uniform
+    [0,1) noise of v's shape. ``prescale=False`` gives an SR-without-scale
+    ablation (biased in the (6, 8] clip region).
+    """
+    g = _group(v, block)
+    un = _group(u, block)
+    x = shared_scale(g)
+    scaled = g / x
+    if prescale:
+        scaled = scaled * 0.75
+    q = fp4_stochastic(scaled, un)
+    return _ungroup(q * x)
+
+
+# ---------------------------------------------------------------------------
+# MXINT4 (the paper's "our analysis also applies to MXINT4" extension)
+# ---------------------------------------------------------------------------
+
+INT4_MIN, INT4_MAX = -8.0, 7.0
+# After the Alg.1-style shared exponent, magnitudes land in [4, 8); the
+# uniform INT4 grid has gap Δ = 1 everywhere (vs FP4's 0.5/1/2 ladder).
+
+
+def int4_nearest(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the nearest INT4 integer, ties-to-even, saturating."""
+    return jnp.clip(jnp.round(x), INT4_MIN, INT4_MAX)
+
+
+def int4_stochastic(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Stochastically round to the INT4 grid (uniform Δ = 1 dithering —
+    exactly Eq. 1 of the paper)."""
+    x = jnp.clip(x, INT4_MIN, INT4_MAX)
+    f = jnp.floor(x)
+    p = x - f
+    return jnp.where(u < p, jnp.minimum(f + 1.0, INT4_MAX), f)
+
+
+def quantize_mxint_nr(v: jnp.ndarray, block: int = MX_BLOCK) -> jnp.ndarray:
+    """MXINT4 Algorithm 1: shared exponent + nearest rounding, qdq.
+
+    Uses the same shared-exponent rule as MXFP4 (floor(log2 max) - 2), so
+    scaled magnitudes are < 8: the positive edge (7, 8) clips to 7 — the
+    INT4 analogue of the (6, 8] FP4 clip bias.
+    """
+    g = _group(v, block)
+    x = shared_scale(g)
+    q = int4_nearest(g / x)
+    return _ungroup(q * x)
+
+
+def quantize_mxint_sr(v: jnp.ndarray, u: jnp.ndarray, block: int = MX_BLOCK) -> jnp.ndarray:
+    """MXINT4 Algorithm 2: 3/4 pre-scale + SR -> unbiased estimate of (3/4)v.
+
+    3/4 * 8 = 6 < 7, so the pre-scale removes clipping on both edges
+    (|scaled| < 6 <= 7 and > -8), mirroring Lemma 3.1.
+    """
+    g = _group(v, block)
+    un = _group(u, block)
+    x = shared_scale(g)
+    q = int4_stochastic(g / x * 0.75, un)
+    return _ungroup(q * x)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise random Hadamard transform (§3.2)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def hadamard_matrix(g: int) -> np.ndarray:
+    """Orthonormal Sylvester Hadamard matrix H_g (g a power of two)."""
+    assert g & (g - 1) == 0 and g > 0, f"g={g} must be a power of two"
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < g:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(g)).astype(np.float32)
+
+
+def rht_matrix(sign: jnp.ndarray) -> jnp.ndarray:
+    """Precomputed RHT operator M = diag(S) @ H_g  (g = len(sign)).
+
+    Applying x.view(-1, g) @ M is the paper's blockwise RHT; M is
+    orthogonal so M @ M^T = I.
+    """
+    g = sign.shape[0]
+    h = jnp.asarray(hadamard_matrix(g))
+    return sign[:, None].astype(jnp.float32) * h
+
+
+def rht_last_axis(v: jnp.ndarray, sign: jnp.ndarray) -> jnp.ndarray:
+    """Blockwise RHT along the last axis: per g-chunk, (chunk * S) @ H."""
+    g = sign.shape[0]
+    m = rht_matrix(sign)
+    grouped = _group(v, g)
+    return _ungroup(grouped @ m)
+
+
+# ---------------------------------------------------------------------------
+# Emulated MXFP4 GEMM (Algorithm 3 core)
+# ---------------------------------------------------------------------------
+
+MX_MODES = ("exact", "nr", "sr", "rht", "rht_sr")
+
+
+def mx_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    mode: str = "rht_sr",
+    g: int = 64,
+    key: jax.Array | None = None,
+    block: int = MX_BLOCK,
+    dtype: str = "fp4",
+) -> jnp.ndarray:
+    """Emulated MXFP4/MXINT4 GEMM  C = A @ B  with the paper's recipe.
+
+    A: (r, k), B: (k, c); MX groups are formed along the reduction dim k
+    for both operands. Modes:
+
+      * ``"nr"``      — Algorithm 1 only (biased; the "pure MXFP4" ablation)
+      * ``"sr"``      — Algorithm 2, no RHT (unbiased, high variance)
+      * ``"rht"``     — RHT + Algorithm 1 (biased, low distortion)
+      * ``"rht_sr"``  — RHT + Algorithm 2 (the paper's recipe)
+      * ``"exact"``   — plain f32 matmul (BF16-recipe stand-in)
+
+    ``key`` drives SR dither noise and the RHT sign vector; required for
+    any mode involving randomness.
+    """
+    assert mode in MX_MODES, mode
+    if mode == "exact":
+        return a @ b
+
+    k = a.shape[-1]
+    assert b.shape[0] == k
+    use_rht = mode.startswith("rht")
+    use_sr = mode.endswith("sr")
+
+    ka = kb = None
+    if use_rht:
+        assert key is not None, f"mode {mode} needs a PRNG key"
+        assert k % g == 0, (k, g)
+        ks, ka, kb = jax.random.split(key, 3)
+        sign = jax.random.rademacher(ks, (g,), dtype=jnp.float32)
+        a = rht_last_axis(a, sign)
+        b = rht_last_axis(b.T, sign).T  # transform B along its reduction dim
+    elif use_sr:
+        assert key is not None, f"mode {mode} needs a PRNG key"
+        ka, kb = jax.random.split(key)
+
+    q_sr = quantize_mxint_sr if dtype == "int4" else quantize_mx_sr
+    q_nr = quantize_mxint_nr if dtype == "int4" else quantize_mx_nr
+    if use_sr:
+        ua = jax.random.uniform(ka, a.shape, dtype=jnp.float32)
+        ub = jax.random.uniform(kb, b.shape, dtype=jnp.float32)
+        qa = q_sr(a, ua, block)
+        qb = q_sr(b.T, ub.T, block).T
+        return (qa @ qb) * (16.0 / 9.0)
+    else:
+        qa = q_nr(a, block)
+        qb = q_nr(b.T, block).T
+        return qa @ qb
+
+
+# ---------------------------------------------------------------------------
+# FP8 / BF16 qdq emulation (forward-pass recipes)
+# ---------------------------------------------------------------------------
+
+
+def fp8_e4m3_qdq(x: jnp.ndarray) -> jnp.ndarray:
+    """Quantize-dequantize through FP8 E4M3 (per-tensor amax scaling).
+
+    Used for the FP8-forward-pass experiments (appendix §6.1). The paper's
+    TE recipe uses delayed per-tensor scaling; we fold it into a simple
+    amax-based per-tensor scale which has the same relative-error profile
+    (~0.3% for Gaussian inputs, matching the appendix's emulation note).
+    """
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, 448.0 / amax, 1.0)
+    y = x * scale
+    f8 = y.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    return f8 / scale
+
+
+def bf16_qdq(x: jnp.ndarray) -> jnp.ndarray:
+    """Quantize-dequantize through BF16 (the baseline mixed-precision path)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)

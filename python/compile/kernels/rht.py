@@ -1,0 +1,59 @@
+"""Pallas kernel for the blockwise random Hadamard transform (§3.2).
+
+The paper applies the RHT as a *dense* (g x g) matmul over g-element tiles
+of the reduction dimension (g <= 256), arguing it stays memory-bound in
+the GEMM operands. On TPU this maps directly onto the MXU: the precomputed
+operator M = diag(S) @ H_g is a single (g, g) systolic tile that stays
+resident in VMEM across the whole grid (its BlockSpec index map is
+constant), while (BLK_R, g) operand tiles stream through HBM->VMEM once —
+the same IO schedule as the paper's fused CUDA prologue.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .mxfp4 import pick_block
+
+# (BLK_R, g) operand tiles: 2048 x 64 f32 = 512 KB per tile; the resident
+# (g, g) operator adds at most 256 KB — comfortably inside VMEM while
+# keeping the interpret-mode grid short (§Perf L1).
+DEFAULT_BLK_R = 2048
+
+
+def _rht_kernel(x_ref, m_ref, o_ref):
+    """One (BLK_R, g) tile times the resident (g, g) RHT operator."""
+    o_ref[...] = jnp.dot(x_ref[...], m_ref[...], preferred_element_type=jnp.float32)
+
+
+def rht_last_axis(x: jnp.ndarray, sign: jnp.ndarray, blk_r: int = DEFAULT_BLK_R) -> jnp.ndarray:
+    """Blockwise RHT along the last axis via a Pallas grid.
+
+    Equivalent to ``ref.rht_last_axis``: the last axis is chopped into
+    g-chunks (g = len(sign)) and each chunk is multiplied by
+    diag(S) @ H_g. The input is viewed as (N/g, g) rows, so *all* leading
+    structure — batch, sequence, rows of W — is flattened exactly like
+    Algorithm 3's ``.view(bm/g, g)``.
+    """
+    g = sign.shape[0]
+    shape = x.shape
+    assert shape[-1] % g == 0, (shape, g)
+    m = ref.rht_matrix(sign)  # (g, g), computed in-graph from the sign input
+    x2 = x.reshape(-1, g)
+    rows = x2.shape[0]
+    br = pick_block(rows, blk_r)
+    out = pl.pallas_call(
+        _rht_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, g), lambda i: (i, 0)),
+            pl.BlockSpec((g, g), lambda i: (0, 0)),  # resident operator
+        ],
+        out_specs=pl.BlockSpec((br, g), lambda i: (i, 0)),
+        interpret=True,
+    )(x2, m)
+    return out.reshape(shape)

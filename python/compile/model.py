@@ -1,0 +1,276 @@
+"""L2: GPT decoder with MXFP4 backward-pass linear layers.
+
+A functional (pure-pytree) GPT-2-style decoder:
+
+  * tied token embedding / LM head, learned positional embeddings,
+  * pre-LN blocks: causal MHA + GELU MLP,
+  * every *decoder linear layer* (qkv, attn-proj, fc1, fc2) is an
+    ``MxLinear``: forward runs in the recipe's mixed precision
+    (BF16 / FP8 qdq emulation), backward computes dL/dx and dL/dW through
+    the emulated MXFP4 GEMM of Algorithm 3 (RHT -> quantize -> GEMM ->
+    16/9 rescale), via ``jax.custom_vjp``.
+
+Everything the rust coordinator executes is lowered from here by
+``aot.py``: ``train_step`` (loss + grads), ``eval_step`` (loss only) and
+``logits`` (for the downstream-eval harness). Layer parameters are
+stacked on a leading axis and the blocks run under ``jax.lax.scan`` so
+the lowered HLO stays compact at any depth.
+
+Randomness (SR dither, RHT signs) derives from a ``seed`` *input* to the
+artifact: rust feeds a fresh seed each step, keeping the compiled module
+pure and the run bit-reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import mxgemm
+from .kernels import ref
+from .recipes import Recipe
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GPTConfig:
+    """Architecture hyperparameters (mirrors the paper's appendix table)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    seq_len: int = 64
+    d_ff: int = 0  # 0 -> 4 * d_model
+
+    def __post_init__(self):
+        object.__setattr__(self, "d_ff", self.d_ff or 4 * self.d_model)
+        assert self.d_model % self.n_heads == 0
+        assert self.d_model % 32 == 0, "MX groups must tile d_model"
+        assert self.d_ff % 32 == 0, "MX groups must tile d_ff"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        shapes = param_shapes(self)
+        return int(sum(np.prod(s) for s in shapes.values()))
+
+
+# Named model sizes used across examples/benches (DESIGN.md §6).
+CONFIGS = {
+    "test": GPTConfig(vocab=256, d_model=64, n_layers=2, n_heads=2, seq_len=32),
+    "tiny": GPTConfig(vocab=256, d_model=128, n_layers=4, n_heads=4, seq_len=64),
+    "small": GPTConfig(vocab=256, d_model=256, n_layers=6, n_heads=8, seq_len=128),
+    "base": GPTConfig(vocab=256, d_model=512, n_layers=8, n_heads=8, seq_len=256),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters (flat dict, deterministic order — the rust ABI)
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: GPTConfig) -> Dict[str, Tuple[int, ...]]:
+    """Flat name -> shape map. Layer tensors are stacked on axis 0.
+
+    The *iteration order of this dict* is the parameter ABI: aot.py records
+    it in the artifact metadata and rust flattens its parameter store in
+    the same order.
+    """
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    return {
+        "tok_emb": (cfg.vocab, d),
+        "pos_emb": (cfg.seq_len, d),
+        "ln1_g": (L, d),
+        "ln1_b": (L, d),
+        "qkv_w": (L, 3 * d, d),
+        "proj_w": (L, d, d),
+        "ln2_g": (L, d),
+        "ln2_b": (L, d),
+        "fc1_w": (L, f, d),
+        "fc2_w": (L, d, f),
+        "lnf_g": (d,),
+        "lnf_b": (d,),
+    }
+
+
+def init_params(key: jax.Array, cfg: GPTConfig) -> Params:
+    """GPT-2 style init: N(0, 0.02), residual projections scaled by depth."""
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    params: Params = {}
+    resid_scale = 1.0 / np.sqrt(2 * cfg.n_layers)
+    for (name, shape), k in zip(shapes.items(), keys):
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            w = jax.random.normal(k, shape, jnp.float32) * 0.02
+            if name in ("proj_w", "fc2_w"):
+                w = w * resid_scale
+            params[name] = w
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MxLinear: the paper's contribution, as a custom_vjp
+# ---------------------------------------------------------------------------
+
+
+def _fwd_qdq(t: jnp.ndarray, fwd: str) -> jnp.ndarray:
+    if fwd == "bf16":
+        return ref.bf16_qdq(t)
+    if fwd == "fp8":
+        return ref.fp8_e4m3_qdq(t)
+    return t  # f32
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def mx_linear(x: jnp.ndarray, w: jnp.ndarray, key: jax.Array, recipe: Recipe):
+    """y = x @ w.T with recipe'd forward precision and MXFP4 backward.
+
+    x: (..., n); w: (m, n); key drives the backward pass randomness (SR
+    dither + RHT signs). Biases are omitted, as in the paper's GPT blocks
+    (their dL/db is a cheap reduction anyway).
+    """
+    return _fwd_qdq(x, recipe.fwd) @ _fwd_qdq(w, recipe.fwd).T
+
+
+def _mx_linear_fwd(x, w, key, recipe: Recipe):
+    y = _fwd_qdq(x, recipe.fwd) @ _fwd_qdq(w, recipe.fwd).T
+    return y, (x, w, key)
+
+
+def _mx_linear_bwd(recipe: Recipe, res, gy):
+    """Algorithm 3: both backward GEMMs through the emulated MXFP4 pipeline.
+
+    dL/dx = G @ W     (reduction over m)
+    dL/dW = G^T @ X   (reduction over the batch/token dim b)
+    """
+    x, w, key = res
+    n = x.shape[-1]
+    m = w.shape[0]
+    x2 = x.reshape(-1, n)
+    g2 = gy.reshape(-1, m)
+    kx, kw = jax.random.split(key)
+    dx = mxgemm.mx_matmul(
+        g2, w, mode=recipe.bwd_mode, g=recipe.g, key=kx, impl=recipe.impl, dtype=recipe.dtype
+    )
+    dw = mxgemm.mx_matmul(
+        g2.T, x2, mode=recipe.bwd_mode, g=recipe.g, key=kw, impl=recipe.impl, dtype=recipe.dtype
+    )
+    return dx.reshape(x.shape), dw, jnp.zeros_like(res[2])
+
+
+mx_linear.defvjp(_mx_linear_fwd, _mx_linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def causal_attention(q, k, v, n_heads: int):
+    """Standard causal MHA over (B, T, D) in f32 (attention itself is not a
+    decoder *linear layer*; the paper leaves it in the forward precision)."""
+    b, t, d = q.shape
+    hd = d // n_heads
+
+    def split(x):
+        return x.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = (qh @ kh.transpose(0, 1, 3, 2)) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = probs @ vh
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def block(x: jnp.ndarray, lp: Dict[str, jnp.ndarray], key: jax.Array, cfg: GPTConfig, recipe: Recipe):
+    """One pre-LN decoder block; lp holds this layer's (unstacked) tensors."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+    qkv = mx_linear(h, lp["qkv_w"], k1, recipe)
+    q, k_, v = jnp.split(qkv, 3, axis=-1)
+    attn = causal_attention(q, k_, v, cfg.n_heads)
+    x = x + mx_linear(attn, lp["proj_w"], k2, recipe)
+    h = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+    h = mx_linear(h, lp["fc1_w"], k3, recipe)
+    h = jax.nn.gelu(h)
+    x = x + mx_linear(h, lp["fc2_w"], k4, recipe)
+    return x
+
+
+LAYER_PARAMS = ("ln1_g", "ln1_b", "qkv_w", "proj_w", "ln2_g", "ln2_b", "fc1_w", "fc2_w")
+
+
+def forward(params: Params, tokens: jnp.ndarray, seed: jnp.ndarray, cfg: GPTConfig, recipe: Recipe):
+    """Logits (B, T, V). ``seed`` is a scalar uint32 driving all randomness."""
+    b, t = tokens.shape
+    base = jax.random.key(seed)
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t][None, :, :]
+
+    stacked = {n: params[n] for n in LAYER_PARAMS}
+    layer_keys = jax.random.split(jax.random.fold_in(base, 1), cfg.n_layers)
+
+    def body(h, xs):
+        lp, k = xs
+        return block(h, lp, k, cfg, recipe), None
+
+    x, _ = jax.lax.scan(body, x, (stacked, layer_keys))
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    # tied LM head — also an MxLinear (it is a decoder linear layer)
+    head_key = jax.random.fold_in(base, 2)
+    logits = mx_linear(x, params["tok_emb"], head_key, recipe)
+    return logits
+
+
+def loss_fn(params: Params, tokens, labels, seed, cfg: GPTConfig, recipe: Recipe):
+    """Mean autoregressive cross-entropy; labels = tokens shifted by one."""
+    logits = forward(params, tokens, seed, cfg, recipe)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (what rust executes)
+# ---------------------------------------------------------------------------
+
+
+def train_step(params: Params, tokens, labels, seed, cfg: GPTConfig, recipe: Recipe):
+    """(loss, grads) — grads in param_shapes order, one per parameter."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels, seed, cfg, recipe)
+    return (loss, *[grads[n] for n in param_shapes(cfg)])
+
+
+def eval_step(params: Params, tokens, labels, cfg: GPTConfig, recipe: Recipe):
+    """Validation loss under the *forward* recipe (no backward noise)."""
+    return (loss_fn(params, tokens, labels, jnp.uint32(0), cfg, recipe),)
+
+
+def logits_fn(params: Params, tokens, cfg: GPTConfig, recipe: Recipe):
+    """Raw logits for the downstream zero-shot / generation harness."""
+    return (forward(params, tokens, jnp.uint32(0), cfg, recipe),)

@@ -1,0 +1,77 @@
+"""Emulated MXFP4 GEMM with selectable implementation (L1 dispatch).
+
+``mx_matmul`` is the single entry point the model's backward pass uses.
+``impl="pallas"`` routes the RHT + quantize steps through the Pallas
+kernels (fused prologue when both are on); ``impl="ref"`` uses the
+pure-jnp oracle. Both are bit-identical (tests assert it) — the pallas
+path is the deployable kernel structure, the ref path lowers to leaner
+HLO for the big training artifacts (see DESIGN.md §Perf, L2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused, mxfp4, ref, rht
+
+IMPLS = ("ref", "pallas")
+
+
+def _quantize_operands_pallas(a, bt, mode, g, key, dtype="fp4"):
+    """qdq both operands along their (last-axis) reduction dim via Pallas."""
+    use_rht = mode.startswith("rht")
+    use_sr = mode.endswith("sr")
+    if use_rht:
+        ks, ka, kb = jax.random.split(key, 3)
+        sign = jax.random.rademacher(ks, (g,), dtype=jnp.float32)
+        if use_sr:
+            ua = jax.random.uniform(ka, a.shape, dtype=jnp.float32)
+            ub = jax.random.uniform(kb, bt.shape, dtype=jnp.float32)
+            qa = fused.rht_qdq(a, sign, ua, stochastic=True, dtype=dtype)
+            qb = fused.rht_qdq(bt, sign, ub, stochastic=True, dtype=dtype)
+        else:
+            qa = fused.rht_qdq(a, sign, stochastic=False, dtype=dtype)
+            qb = fused.rht_qdq(bt, sign, stochastic=False, dtype=dtype)
+    elif use_sr:
+        ka, kb = jax.random.split(key)
+        ua = jax.random.uniform(ka, a.shape, dtype=jnp.float32)
+        ub = jax.random.uniform(kb, bt.shape, dtype=jnp.float32)
+        qa = mxfp4.mxfp4_qdq_sr(a, ua, dtype=dtype)
+        qb = mxfp4.mxfp4_qdq_sr(bt, ub, dtype=dtype)
+    else:
+        qa = mxfp4.mxfp4_qdq_nr(a, dtype=dtype)
+        qb = mxfp4.mxfp4_qdq_nr(bt, dtype=dtype)
+    return qa, qb
+
+
+def mx_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    mode: str = "rht_sr",
+    g: int = 64,
+    key: jax.Array | None = None,
+    impl: str = "pallas",
+    dtype: str = "fp4",
+) -> jnp.ndarray:
+    """C = A @ B through the paper's emulated MXFP4 pipeline.
+
+    A: (r, k), B: (k, c). See ``ref.mx_matmul`` for mode semantics. The
+    pallas impl quantizes B via its transpose so both operands group along
+    the shared reduction dim k, exactly like ``MXFP4_GEMM`` in Alg. 3.
+    """
+    assert impl in IMPLS, impl
+    if mode == "exact":
+        return a @ b
+    if impl == "ref":
+        return ref.mx_matmul(a, b, mode=mode, g=g, key=key, dtype=dtype)
+
+    assert key is not None or mode == "nr", mode
+    if key is None:
+        key = jax.random.PRNGKey(0)  # nr is deterministic; key unused
+    qa, qbt = _quantize_operands_pallas(a, b.T, mode, g, key, dtype)
+    c = qa @ qbt.T
+    if mode.endswith("sr"):
+        c = c * (16.0 / 9.0)
+    return c

@@ -1,0 +1,89 @@
+"""Precision-recipe registry.
+
+A recipe pins (a) the forward-pass mixed precision and (b) the backward
+MXFP4 construction for decoder linear layers — exactly the axes Table 2 /
+Figures 3-9 sweep. Recipes are frozen (hashable) so they can be
+``nondiff_argnums`` of the custom_vjp linear layer and baked into one AOT
+artifact each.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+FWD_PRECISIONS = ("f32", "bf16", "fp8")
+BWD_MODES = ("exact", "nr", "sr", "rht", "rht_sr")
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    """Precision recipe for decoder linear layers.
+
+    fwd:       forward GEMM operand precision ("bf16" is the paper's
+               baseline; "fp8" reproduces appendix §6.1; "f32" is a debug
+               path).
+    bwd_mode:  MXFP4 construction for the two backward GEMMs
+               ("exact" = BF16-backward baseline; "nr"/"sr"/"rht"/"rht_sr"
+               per Table 2's ablations).
+    g:         RHT block size (Table 4 sweeps 32..256). 32 | g <= 256.
+    impl:      "pallas" routes quantize+RHT through the L1 kernels,
+               "ref" through the pure-jnp oracle (identical numerics).
+    """
+
+    fwd: str = "bf16"
+    bwd_mode: str = "rht_sr"
+    g: int = 64
+    impl: str = "pallas"
+    # base MX element format for the backward GEMMs: "fp4" (E2M1, the
+    # paper's headline) or "int4" (the "also applies to MXINT4" extension)
+    dtype: str = "fp4"
+
+    def __post_init__(self):
+        assert self.fwd in FWD_PRECISIONS, self.fwd
+        assert self.bwd_mode in BWD_MODES, self.bwd_mode
+        assert self.g % 32 == 0 and 32 <= self.g <= 1024, self.g
+
+    @property
+    def name(self) -> str:
+        parts = [self.fwd, self.bwd_mode]
+        if self.dtype != "fp4":
+            parts.insert(1, self.dtype)
+        if "rht" in self.bwd_mode:
+            parts.append(f"g{self.g}")
+        return "_".join(parts)
+
+
+# The recipe set of Table 2 (BF16 forward; backward ablations).
+TABLE2_RECIPES = {
+    "bf16": Recipe(fwd="bf16", bwd_mode="exact"),
+    "mxfp4": Recipe(fwd="bf16", bwd_mode="nr"),
+    "mxfp4_sr": Recipe(fwd="bf16", bwd_mode="sr"),
+    "mxfp4_rht": Recipe(fwd="bf16", bwd_mode="rht", g=64),
+    "mxfp4_rht_sr": Recipe(fwd="bf16", bwd_mode="rht_sr", g=64),
+}
+
+# Table 4: RHT block-size ablation.
+TABLE4_RECIPES = {
+    f"mxfp4_rht_sr_g{g}": Recipe(fwd="bf16", bwd_mode="rht_sr", g=g)
+    for g in (32, 64, 128, 256)
+}
+
+# §3 "our analysis also applies to other low precision datatypes": MXINT4.
+MXINT4_RECIPES = {
+    "mxint4_rht_sr": Recipe(fwd="bf16", bwd_mode="rht_sr", g=64, dtype="int4"),
+    "mxint4": Recipe(fwd="bf16", bwd_mode="nr", dtype="int4"),
+}
+
+# Appendix §6.1 (Figures 7-9): FP8 forward + MXFP4 backward.
+FP8_RECIPES = {
+    "fp8_fwd_bf16_bwd": Recipe(fwd="fp8", bwd_mode="exact"),
+    "fp8_fwd_mxfp4_rht_sr": Recipe(fwd="fp8", bwd_mode="rht_sr", g=64),
+}
+
+ALL_RECIPES = {**TABLE2_RECIPES, **TABLE4_RECIPES, **MXINT4_RECIPES, **FP8_RECIPES}
+
+
+def get(name: str) -> Recipe:
+    if name not in ALL_RECIPES:
+        raise KeyError(f"unknown recipe {name!r}; known: {sorted(ALL_RECIPES)}")
+    return ALL_RECIPES[name]

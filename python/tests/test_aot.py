@@ -1,0 +1,85 @@
+"""AOT pipeline tests: HLO text emission, metadata ABI, constant fidelity."""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, recipes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def emitted():
+    d = tempfile.mkdtemp(prefix="aot_test_")
+    aot.emit(d, "test", "mxfp4_rht_sr", "train", batch=2)
+    aot.emit(d, "test", "bf16", "eval", batch=2)
+    return d
+
+
+def test_hlo_text_is_parseable_shape(emitted):
+    text = open(os.path.join(emitted, "test_mxfp4_rht_sr_train.hlo.txt")).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_no_elided_constants(emitted):
+    """The 0.5.1 parser zero-fills `constant({...})` — emission must print
+    every constant in full (the bug class found during bring-up)."""
+    for name in ["test_mxfp4_rht_sr_train", "test_bf16_eval"]:
+        text = open(os.path.join(emitted, f"{name}.hlo.txt")).read()
+        assert "{...}" not in text, f"{name} contains elided constants"
+
+
+def test_metadata_abi(emitted):
+    meta = json.load(open(os.path.join(emitted, "test_mxfp4_rht_sr_train.meta.json")))
+    cfg = model.CONFIGS["test"]
+    names = list(model.param_shapes(cfg).keys())
+    assert [p["name"] for p in meta["params"]] == names
+    assert meta["inputs"][0]["name"] == "seed"
+    assert meta["inputs"][1]["shape"] == [2, cfg.seq_len]
+    assert meta["outputs"][0]["name"] == "loss"
+    assert len(meta["outputs"]) == 1 + len(names)
+    assert meta["recipe"]["bwd_mode"] == "rht_sr"
+    assert meta["param_count"] == cfg.param_count()
+
+
+def test_train_artifact_arity_includes_unused_seed(emitted):
+    """keep_unused=True: the bf16 eval takes exactly its ABI inputs; the
+    train artifact keeps `seed` even for deterministic recipes."""
+    d = emitted
+    aot.emit(d, "test", "bf16", "train", batch=2)
+    text = open(os.path.join(d, "test_bf16_train.hlo.txt")).read()
+    # 3 + n_params parameters in the entry computation
+    n_params = len(model.param_shapes(model.CONFIGS["test"]))
+    entry = text[text.index("ENTRY") :]
+    count = entry.count("parameter(")
+    assert count == 3 + n_params, f"expected {3 + n_params} params, found {count}"
+
+
+def test_abstract_args_match_kind():
+    cfg = model.CONFIGS["test"]
+    train = aot._abstract_args(cfg, 2, "train")
+    assert len(train) == 3 + len(model.param_shapes(cfg))
+    assert train[0].dtype == jnp.uint32
+    ev = aot._abstract_args(cfg, 2, "eval")
+    assert len(ev) == 2 + len(model.param_shapes(cfg))
+    lg = aot._abstract_args(cfg, 2, "logits")
+    assert len(lg) == 1 + len(model.param_shapes(cfg))
+    with pytest.raises(ValueError):
+        aot._abstract_args(cfg, 2, "bogus")
+
+
+def test_golden_emission_roundtrips(tmp_path):
+    aot.emit_golden(str(tmp_path))
+    doc = json.load(open(tmp_path / "golden.json"))
+    assert len(doc["quant_nr"]) == 5
+    case = doc["quant_nr"][0]
+    assert len(case["input"]) == len(case["qdq_nr"])
+    assert len(doc["rht"]["sign"]) == 64

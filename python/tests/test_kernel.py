@@ -1,0 +1,203 @@
+"""Pallas kernels vs the pure-jnp oracle (ref.py) — the core L1 signal.
+
+Hypothesis sweeps shapes, scales, and group sizes; every comparison is
+exact (max abs diff == 0) because kernel and oracle implement the same
+deterministic arithmetic on the same inputs (SR dither noise is an
+explicit input, not hidden state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, mxfp4, ref, rht
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(seed: int, shape, scale: float = 1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def uni(seed: int, shape):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape)
+
+
+def sign_vec(seed: int, g: int):
+    return jax.random.rademacher(jax.random.PRNGKey(seed), (g,), dtype=jnp.float32)
+
+
+def max_diff(a, b) -> float:
+    return float(jnp.max(jnp.abs(a - b)))
+
+
+# ---------------------------------------------------------------------------
+# quantizer kernels vs oracle
+# ---------------------------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=96),
+    st.sampled_from([32, 64, 96, 128, 256]),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_strategy, scale=st.sampled_from([1e-4, 0.1, 1.0, 37.0, 1e4]), seed=st.integers(0, 2**16))
+def test_qdq_nr_matches_ref(shape, scale, seed):
+    x = rnd(seed, shape, scale)
+    assert max_diff(mxfp4.mxfp4_qdq_nr(x), ref.quantize_mx_nr(x)) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_strategy, scale=st.sampled_from([1e-3, 1.0, 123.0]), seed=st.integers(0, 2**16))
+def test_qdq_sr_matches_ref(shape, scale, seed):
+    x = rnd(seed, shape, scale)
+    u = uni(seed + 1, shape)
+    assert max_diff(mxfp4.mxfp4_qdq_sr(x, u), ref.quantize_mx_sr(x, u)) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16))
+def test_qdq_sr_noprescale_matches_ref(shape, seed):
+    x = rnd(seed, shape, 2.0)
+    u = uni(seed + 1, shape)
+    got = mxfp4.mxfp4_qdq_sr(x, u, prescale=False)
+    want = ref.quantize_mx_sr(x, u, prescale=False)
+    assert max_diff(got, want) == 0.0
+
+
+def test_qdq_nr_ties_to_even():
+    # Exact midpoints of the FP4 grid, pre-scaled so X = 1 (max element 4.0).
+    row = [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0, 4.0] + [0.0] * 24
+    x = jnp.asarray([row], dtype=jnp.float32)
+    got = mxfp4.mxfp4_qdq_nr(x)[0, :8]
+    want = jnp.asarray([0.0, 1.0, 1.0, 2.0, 2.0, 4.0, 4.0, 4.0])
+    assert max_diff(got, want) == 0.0
+    assert max_diff(got, ref.quantize_mx_nr(x)[0, :8]) == 0.0
+
+
+def test_qdq_zero_block_is_zero():
+    x = jnp.zeros((4, 64))
+    assert max_diff(mxfp4.mxfp4_qdq_nr(x), jnp.zeros_like(x)) == 0.0
+    u = uni(0, x.shape)
+    assert max_diff(mxfp4.mxfp4_qdq_sr(x, u), jnp.zeros_like(x)) == 0.0
+
+
+def test_qdq_output_on_fp4_grid():
+    """Every qdq output must be exactly X * (an FP4 grid point)."""
+    x = rnd(7, (16, 128), 3.0)
+    q = np.asarray(mxfp4.mxfp4_qdq_nr(x))
+    g = np.asarray(x).reshape(16, 4, 32)
+    m = np.abs(g).max(axis=-1, keepdims=True)
+    e = np.floor(np.log2(np.where(m > 0, m, 1.0))).astype(np.int32) - 2
+    scale = np.exp2(e).astype(np.float32)
+    ratio = q.reshape(16, 4, 32) / scale
+    grid = set(ref.FP4_GRID.tolist()) | set((-ref.FP4_GRID).tolist())
+    assert all(float(v) in grid for v in ratio.flatten())
+
+
+# ---------------------------------------------------------------------------
+# RHT kernels vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=64),
+    g=st.sampled_from([32, 64, 128, 256]),
+    chunks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(0, 2**16),
+)
+def test_rht_matches_ref(rows, g, chunks, seed):
+    x = rnd(seed, (rows, g * chunks))
+    s = sign_vec(seed + 1, g)
+    assert max_diff(rht.rht_last_axis(x, s), ref.rht_last_axis(x, s)) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=st.sampled_from([32, 64, 128]), seed=st.integers(0, 2**16))
+def test_fused_rht_qdq_sr_matches_composed(g, seed):
+    x = rnd(seed, (32, g * 2), 2.0)
+    u = uni(seed + 1, x.shape)
+    s = sign_vec(seed + 2, g)
+    got = fused.rht_qdq(x, s, u, stochastic=True)
+    want = ref.quantize_mx_sr(ref.rht_last_axis(x, s), u)
+    assert max_diff(got, want) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=st.sampled_from([32, 64, 128]), seed=st.integers(0, 2**16))
+def test_fused_rht_qdq_nr_matches_composed(g, seed):
+    x = rnd(seed, (24, g * 3), 0.5)
+    s = sign_vec(seed + 2, g)
+    got = fused.rht_qdq(x, s, stochastic=False)
+    want = ref.quantize_mx_nr(ref.rht_last_axis(x, s))
+    assert max_diff(got, want) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# kernels survive jit + lowering (the AOT path)
+# ---------------------------------------------------------------------------
+
+
+def test_kernels_jit_and_lower():
+    @jax.jit
+    def f(x, u, s):
+        return fused.rht_qdq(x, s, u, stochastic=True)
+
+    x = rnd(3, (8, 64))
+    u = uni(4, x.shape)
+    s = sign_vec(5, 64)
+    out = f(x, u, s)
+    assert out.shape == x.shape
+    # lowering to stablehlo text must succeed (what aot.py does)
+    txt = str(jax.jit(f).lower(x, u, s).compiler_ir("stablehlo"))
+    assert "func" in txt
+
+
+def test_pick_block():
+    assert mxfp4.pick_block(256, 128) == 128
+    assert mxfp4.pick_block(37, 128) == 37
+    assert mxfp4.pick_block(96, 64) == 48 or 96 % mxfp4.pick_block(96, 64) == 0
+    for n in [1, 2, 7, 24, 100, 1024]:
+        b = mxfp4.pick_block(n, 128)
+        assert n % b == 0 and b <= max(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# MXINT4 kernel variants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shape_strategy, scale=st.sampled_from([0.1, 1.0, 50.0]), seed=st.integers(0, 2**16))
+def test_int4_qdq_nr_matches_ref(shape, scale, seed):
+    x = rnd(seed, shape, scale)
+    got = mxfp4.mxfp4_qdq_nr(x, dtype="int4")
+    want = ref.quantize_mxint_nr(x)
+    assert max_diff(got, want) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16))
+def test_int4_qdq_sr_matches_ref(shape, seed):
+    x = rnd(seed, shape, 2.0)
+    u = uni(seed + 1, shape)
+    got = mxfp4.mxfp4_qdq_sr(x, u, dtype="int4")
+    want = ref.quantize_mxint_sr(x, u)
+    assert max_diff(got, want) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=st.sampled_from([32, 64]), seed=st.integers(0, 2**16))
+def test_int4_fused_rht_qdq_matches_composed(g, seed):
+    x = rnd(seed, (16, g * 2), 1.5)
+    u = uni(seed + 1, x.shape)
+    s = sign_vec(seed + 2, g)
+    got = fused.rht_qdq(x, s, u, stochastic=True, dtype="int4")
+    want = ref.quantize_mxint_sr(ref.rht_last_axis(x, s), u)
+    assert max_diff(got, want) == 0.0

@@ -1,0 +1,166 @@
+"""L2 model tests: shapes, gradients, recipe plumbing, scan equivalence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, mxgemm, recipes
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.CONFIGS["test"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, CFG.seq_len), 0, CFG.vocab)
+    labs = jax.random.randint(jax.random.PRNGKey(2), (2, CFG.seq_len), 0, CFG.vocab)
+    return toks, labs
+
+
+def test_param_shapes_and_count(params):
+    shapes = model.param_shapes(CFG)
+    assert set(params.keys()) == set(shapes.keys())
+    for n, s in shapes.items():
+        assert params[n].shape == s, n
+    assert CFG.param_count() == sum(int(np.prod(s)) for s in shapes.values())
+
+
+def test_forward_shapes(params, batch):
+    toks, _ = batch
+    logits = model.forward(params, toks, jnp.uint32(0), CFG, recipes.get("bf16"))
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_near_uniform_at_init(params, batch):
+    toks, labs = batch
+    loss = model.loss_fn(params, toks, labs, jnp.uint32(0), CFG, recipes.get("bf16"))
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_causality(params):
+    """Changing a future token must not change past logits."""
+    toks = jnp.zeros((1, CFG.seq_len), jnp.int32)
+    toks2 = toks.at[0, -1].set(42)
+    r = recipes.get("bf16")
+    l1 = model.forward(params, toks, jnp.uint32(0), CFG, r)
+    l2 = model.forward(params, toks2, jnp.uint32(0), CFG, r)
+    np.testing.assert_array_equal(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]))
+    assert not np.allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]))
+
+
+def test_train_step_outputs(params, batch):
+    toks, labs = batch
+    out = model.train_step(params, toks, labs, jnp.uint32(3), CFG, recipes.get("mxfp4_rht_sr"))
+    names = list(model.param_shapes(CFG).keys())
+    assert len(out) == 1 + len(names)
+    for g, n in zip(out[1:], names):
+        assert g.shape == params[n].shape, n
+        assert bool(jnp.all(jnp.isfinite(g))), n
+
+
+def test_bf16_grads_close_to_f32(params, batch):
+    """The bf16 recipe's gradient should approximate the exact-f32 one."""
+    toks, labs = batch
+    f32 = recipes.Recipe(fwd="f32", bwd_mode="exact")
+    bf16 = recipes.get("bf16")
+    g_f32 = model.train_step(params, toks, labs, jnp.uint32(0), CFG, f32)[1:]
+    g_bf = model.train_step(params, toks, labs, jnp.uint32(0), CFG, bf16)[1:]
+    for a, b in zip(g_f32, g_bf):
+        na, nb = float(jnp.linalg.norm(a)), float(jnp.linalg.norm(b))
+        if na > 1e-6:
+            rel = float(jnp.linalg.norm(a - b)) / na
+            assert rel < 0.15, (na, nb, rel)
+
+
+def test_mxfp4_grads_are_noisy_but_correlated(params, batch):
+    """MXFP4 backward gradients point the same way as exact ones."""
+    toks, labs = batch
+    exact = model.train_step(params, toks, labs, jnp.uint32(0), CFG, recipes.get("bf16"))[1:]
+    mx = model.train_step(params, toks, labs, jnp.uint32(0), CFG, recipes.get("mxfp4_rht_sr"))[1:]
+    for a, b in zip(exact, mx):
+        na, nb = float(jnp.linalg.norm(a)), float(jnp.linalg.norm(b))
+        if na < 1e-6:
+            continue
+        cos = float(jnp.vdot(a, b)) / (na * nb)
+        assert cos > 0.6, cos
+
+
+def test_seed_changes_mx_grads_not_bf16(params, batch):
+    toks, labs = batch
+    r = recipes.get("mxfp4_rht_sr")
+    g1 = model.train_step(params, toks, labs, jnp.uint32(1), CFG, r)
+    g2 = model.train_step(params, toks, labs, jnp.uint32(2), CFG, r)
+    assert not np.array_equal(np.asarray(g1[1]), np.asarray(g2[1]))
+    b = recipes.get("bf16")
+    h1 = model.train_step(params, toks, labs, jnp.uint32(1), CFG, b)
+    h2 = model.train_step(params, toks, labs, jnp.uint32(2), CFG, b)
+    np.testing.assert_array_equal(np.asarray(h1[1]), np.asarray(h2[1]))
+
+
+def test_eval_and_logits_consistent(params, batch):
+    toks, labs = batch
+    r = recipes.get("bf16")
+    (loss,) = model.eval_step(params, toks, labs, CFG, r)
+    (logits,) = model.logits_fn(params, toks, CFG, r)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    manual = -jnp.mean(jnp.take_along_axis(logp, labs[..., None], axis=-1))
+    assert abs(float(loss) - float(manual)) < 1e-5
+
+
+def test_fp8_fwd_recipe_runs(params, batch):
+    toks, labs = batch
+    r = recipes.get("fp8_fwd_mxfp4_rht_sr")
+    out = model.train_step(params, toks, labs, jnp.uint32(0), CFG, r)
+    assert np.isfinite(float(out[0]))
+
+
+# ---------------------------------------------------------------------------
+# mxgemm dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_mxgemm_impls_agree_deterministic_modes():
+    a = jax.random.normal(jax.random.PRNGKey(0), (16, 128))
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 8))
+    for mode in ["nr", "rht"]:
+        key = jax.random.PRNGKey(7)
+        c_ref = mxgemm.mx_matmul(a, b, mode=mode, g=64, key=key, impl="ref")
+        c_pal = mxgemm.mx_matmul(a, b, mode=mode, g=64, key=key, impl="pallas")
+        np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+
+
+def test_mxgemm_sr_impls_statistically_agree():
+    """SR paths draw noise differently per impl but share semantics: both
+    must be unbiased estimates of the exact product."""
+    a = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+    b = jax.random.normal(jax.random.PRNGKey(3), (64, 4))
+    want = np.asarray(a @ b)
+    for impl in ["ref", "pallas"]:
+        keys = jax.random.split(jax.random.PRNGKey(4), 400)
+        got = np.mean(
+            [np.asarray(mxgemm.mx_matmul(a, b, mode="rht_sr", key=k, impl=impl)) for k in keys],
+            axis=0,
+        )
+        np.testing.assert_allclose(got, want, atol=0.35)
+
+
+def test_recipe_registry():
+    assert recipes.get("bf16").bwd_mode == "exact"
+    assert recipes.get("mxfp4_rht_sr").g == 64
+    assert recipes.get("mxfp4_rht_sr_g128").g == 128
+    assert recipes.get("fp8_fwd_mxfp4_rht_sr").fwd == "fp8"
+    with pytest.raises(KeyError):
+        recipes.get("nope")
+    names = {r.name for r in recipes.ALL_RECIPES.values()}
+    assert len(names) >= 8  # distinct recipe identities

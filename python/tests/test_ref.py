@@ -1,0 +1,313 @@
+"""Properties of the reference oracle itself: the paper's Lemma 3.1
+(unbiasedness), Theorem 3.2 (RHT variance reduction), the §3.1 clipping
+bias of Algorithm 1, and structural invariants (orthogonality, scales).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(seed, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# FP4 grid / rounding primitives
+# ---------------------------------------------------------------------------
+
+
+def test_fp4_grid_is_e2m1():
+    # E2M1, bias 1: subnormals {0, 0.5}; normals (1+M/2)*2^(E-1), E=1..3
+    want = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    assert ref.FP4_GRID.tolist() == want
+
+
+def test_fp4_nearest_idempotent_on_grid():
+    pts = jnp.asarray(np.concatenate([ref.FP4_GRID, -ref.FP4_GRID]))
+    assert float(jnp.max(jnp.abs(ref.fp4_nearest(pts) - pts))) == 0.0
+
+
+def test_fp4_nearest_saturates():
+    x = jnp.asarray([100.0, -100.0, 7.0, -6.5])
+    got = ref.fp4_nearest(x)
+    assert got.tolist() == [6.0, -6.0, 6.0, -6.0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_fp4_nearest_error_bounded(seed):
+    """NR error is at most half the local gap (gaps: .5 below 2, 1 to 4, 2 to 6)."""
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (256,), minval=-6.0, maxval=6.0)
+    q = ref.fp4_nearest(x)
+    err = jnp.abs(q - x)
+    gap_half = jnp.where(jnp.abs(x) <= 2.0, 0.25, jnp.where(jnp.abs(x) <= 4.0, 0.5, 1.0))
+    assert bool(jnp.all(err <= gap_half + 1e-6))
+
+
+def test_fp4_stochastic_unbiased_scalar():
+    """E[SR(x)] == x on a dense u-grid (exact expectation by quadrature)."""
+    for x in [0.1, 0.6, 1.1, 1.7, 2.4, 3.3, 4.7, 5.9, -2.2]:
+        u = jnp.linspace(0.0, 1.0, 20001)[:-1]  # [0, 1)
+        xs = jnp.full_like(u, x)
+        mean = float(jnp.mean(ref.fp4_stochastic(xs, u)))
+        assert abs(mean - x) < 2e-4, (x, mean)
+
+
+def test_fp4_stochastic_on_grid_is_exact():
+    pts = jnp.asarray(np.concatenate([ref.FP4_GRID, -ref.FP4_GRID]))
+    u = jnp.full(pts.shape, 0.7)
+    assert float(jnp.max(jnp.abs(ref.fp4_stochastic(pts, u) - pts))) == 0.0
+
+
+def test_floor_log2_exact_on_powers_of_two():
+    e = np.arange(-126, 128)
+    m = jnp.asarray(np.exp2(e.astype(np.float64)).astype(np.float32))
+    assert bool(jnp.all(ref.floor_log2(m) == jnp.asarray(e)))
+    # just below a power of two floors down
+    assert int(ref.floor_log2(jnp.float32(3.9999))) == 1
+    assert int(ref.floor_log2(jnp.float32(4.0))) == 2
+
+
+def test_exact_pow2():
+    e = np.arange(-126, 128)
+    want = jnp.asarray(np.exp2(e.astype(np.float64)).astype(np.float32))
+    assert bool(jnp.all(ref.exact_pow2(jnp.asarray(e)) == want))
+
+
+# ---------------------------------------------------------------------------
+# shared scale (Algorithm 1 lines 1-2)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.sampled_from([1e-6, 1e-2, 1.0, 1e3]))
+def test_shared_scale_normalizes_below_8(seed, scale):
+    v = rnd(seed, (8, 4, 32), scale)
+    x = ref.shared_scale(v)
+    scaled = jnp.abs(v) / x
+    assert bool(jnp.all(scaled < 8.0 + 1e-5))
+    # and the max element is >= 4 (shared exp is tight)
+    m = jnp.max(scaled, axis=-1)
+    assert bool(jnp.all(m >= 4.0 - 1e-5))
+
+
+def test_shared_scale_zero_block():
+    v = jnp.zeros((1, 1, 32))
+    x = ref.shared_scale(v)
+    assert float(x[0, 0, 0]) == 2.0 ** -126  # FTZ-safe scale floor
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 bias (§3.1) and Algorithm 2 unbiasedness (Lemma 3.1)
+# ---------------------------------------------------------------------------
+
+
+def test_alg1_clipping_bias_exists():
+    """§3.1: ~3% of Gaussian entries land in (6, 8] after scaling and clip."""
+    v = rnd(0, (4096, 32), 1.0)
+    x = ref.shared_scale(v.reshape(4096, 1, 32))
+    scaled = jnp.abs(v.reshape(4096, 1, 32)) / x
+    frac_clipped = float(jnp.mean(scaled > 6.0))
+    assert 0.005 < frac_clipped < 0.10, frac_clipped
+    # and Algorithm 1 therefore under-estimates magnitudes on average
+    q = ref.quantize_mx_nr(v)
+    bias = float(jnp.mean(jnp.abs(q)) - jnp.mean(jnp.abs(v)))
+    assert bias < 0.0
+
+
+def test_alg2_unbiased_three_quarters():
+    """Lemma 3.1: E[Alg2(v)] = (3/4) v — estimated over many dither draws."""
+    v = rnd(1, (32,), 2.0)
+    n = 4000
+    vv = jnp.broadcast_to(v, (n, 32))
+    u = jax.random.uniform(jax.random.PRNGKey(2), (n, 32))
+    q = ref.quantize_mx_sr(vv, u)
+    est = q.mean(axis=0)
+    # standard error of the mean: gap*X/sqrt(12)/sqrt(n); gap*X <= 2 here
+    np.testing.assert_allclose(np.asarray(est), 0.75 * np.asarray(v), atol=0.08)
+
+
+def test_alg2_never_clips():
+    """3/4 pre-scale keeps all scaled magnitudes <= 6 (proof of Lemma 3.1)."""
+    v = rnd(3, (512, 32), 10.0)
+    x = ref.shared_scale(v.reshape(512, 1, 32))
+    scaled = 0.75 * jnp.abs(v.reshape(512, 1, 32)) / x
+    assert bool(jnp.all(scaled < 6.0 + 1e-5))
+
+
+def test_mx_matmul_sr_unbiased():
+    """Lemma 3.1 end-to-end: E[mx_matmul_sr(A,B)] ~= A@B after 16/9 rescale."""
+    a = rnd(4, (4, 64))
+    b = rnd(5, (64, 4))
+    want = np.asarray(a @ b)
+    n = 600
+    keys = jax.random.split(jax.random.PRNGKey(6), n)
+    got = np.mean(
+        [np.asarray(ref.mx_matmul(a, b, mode="sr", key=k)) for k in keys], axis=0
+    )
+    # mean of n GEMMs: tolerance ~ 3 * std/sqrt(n)
+    np.testing.assert_allclose(got, want, atol=0.25)
+
+
+def test_mx_matmul_nr_biased():
+    """Algorithm 1 is deterministic — repeated calls give the same (biased) C."""
+    a = rnd(7, (8, 64), 2.0)
+    b = rnd(8, (64, 8), 2.0)
+    c1 = ref.mx_matmul(a, b, mode="nr")
+    c2 = ref.mx_matmul(a, b, mode="nr")
+    assert float(jnp.max(jnp.abs(c1 - c2))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# RHT properties (§3.2, Theorem 3.2)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=st.sampled_from([32, 64, 128, 256]), seed=st.integers(0, 2**16))
+def test_rht_orthogonal(g, seed):
+    s = jax.random.rademacher(jax.random.PRNGKey(seed), (g,), dtype=jnp.float32)
+    m = ref.rht_matrix(s)
+    err = float(jnp.max(jnp.abs(m @ m.T - jnp.eye(g))))
+    assert err < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=st.sampled_from([32, 64]), seed=st.integers(0, 2**16))
+def test_rht_cancels_in_gemm(g, seed):
+    """(HSa)·(HSb) == a·b — the transform is free inside the dot product."""
+    s = jax.random.rademacher(jax.random.PRNGKey(seed), (g,), dtype=jnp.float32)
+    a = rnd(seed + 1, (4, g * 2))
+    b = rnd(seed + 2, (g * 2, 4))
+    ta = ref.rht_last_axis(a, s)
+    tb = ref.rht_last_axis(b.T, s).T
+    err = float(jnp.max(jnp.abs(ta @ tb - a @ b)))
+    assert err < 1e-3
+
+
+def test_rht_norm_preserved():
+    s = jax.random.rademacher(jax.random.PRNGKey(0), (64,), dtype=jnp.float32)
+    x = rnd(1, (16, 256))
+    t = ref.rht_last_axis(x, s)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(t), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rht_concentrates_outliers():
+    """Eq. 5: a spike vector becomes dense with ~‖x‖/sqrt(g) entries."""
+    g = 128
+    s = jax.random.rademacher(jax.random.PRNGKey(3), (g,), dtype=jnp.float32)
+    x = jnp.zeros((1, g)).at[0, 17].set(10.0)  # worst case: single outlier
+    t = ref.rht_last_axis(x, s)
+    assert float(jnp.max(jnp.abs(t))) <= 10.0 / np.sqrt(g) + 1e-5
+
+
+def test_theorem_3_2_variance_reduction():
+    """SR-GEMM variance with RHT grows slower in b than without (Fig. 2)."""
+    def gemm_var(b, use_rht, trials=200, seed=0):
+        key = jax.random.PRNGKey(seed)
+        ka, kb, ko = jax.random.split(key, 3)
+        a = jax.random.normal(ka, (1, b))
+        bb = jax.random.normal(kb, (b, 1))
+        # inject outliers (p = 1%, scale 5) as in Fig. 2
+        mask = jax.random.bernoulli(ko, 0.01, (1, b))
+        a = jnp.where(mask, a * 5.0, a)
+        mode = "rht_sr" if use_rht else "sr"
+        keys = jax.random.split(jax.random.PRNGKey(seed + 1), trials)
+        outs = jnp.stack(
+            [ref.mx_matmul(a, bb, mode=mode, g=32, key=k)[0, 0] for k in keys]
+        )
+        return float(jnp.var(outs))
+
+    v_plain_small, v_plain_big = gemm_var(64, False), gemm_var(1024, False)
+    v_rht_small, v_rht_big = gemm_var(64, True), gemm_var(1024, True)
+    growth_plain = v_plain_big / max(v_plain_small, 1e-12)
+    growth_rht = v_rht_big / max(v_rht_small, 1e-12)
+    assert growth_rht < growth_plain, (growth_rht, growth_plain)
+
+
+# ---------------------------------------------------------------------------
+# fp8 / bf16 qdq
+# ---------------------------------------------------------------------------
+
+
+def test_fp8_qdq_relative_error():
+    x = rnd(0, (64, 64))
+    rel = float(jnp.linalg.norm(ref.fp8_e4m3_qdq(x) - x) / jnp.linalg.norm(x))
+    assert rel < 0.04  # appendix: ~0.3% output error; elementwise ~3%
+
+
+def test_bf16_qdq_exact_on_bf16_values():
+    x = jnp.asarray([1.0, 0.5, -2.0, 3.140625])
+    assert float(jnp.max(jnp.abs(ref.bf16_qdq(x) - x))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# MXINT4 extension ("our analysis also applies to MXINT4", §3)
+# ---------------------------------------------------------------------------
+
+
+def test_int4_nearest_grid():
+    x = jnp.asarray([3.2, 3.5, 2.5, -2.5, 100.0, -100.0, 0.4])
+    got = ref.int4_nearest(x)
+    assert got.tolist() == [3.0, 4.0, 2.0, -2.0, 7.0, -8.0, 0.0]
+
+
+def test_int4_stochastic_unbiased():
+    for x in [0.3, 1.7, -2.4, 6.9, -7.6]:
+        u = jnp.linspace(0.0, 1.0, 10001)[:-1]
+        mean = float(jnp.mean(ref.int4_stochastic(jnp.full_like(u, x), u)))
+        assert abs(mean - x) < 1e-3, (x, mean)
+
+
+def test_mxint_nr_outputs_integral_residuals():
+    v = rnd(0, (8, 4, 32), 3.0).reshape(8, 128)
+    q = ref.quantize_mxint_nr(v)
+    g = ref._group(v, 32)
+    x = ref.shared_scale(g)
+    r = ref._group(q, 32) / x
+    assert bool(jnp.all(r == jnp.round(r)))
+    assert bool(jnp.all((r >= -8) & (r <= 7)))
+
+
+def test_mxint_sr_unbiased_three_quarters():
+    v = rnd(1, (32,), 2.0)
+    n = 4000
+    vv = jnp.broadcast_to(v, (n, 32))
+    u = jax.random.uniform(jax.random.PRNGKey(2), (n, 32))
+    q = ref.quantize_mxint_sr(vv, u)
+    est = q.mean(axis=0)
+    np.testing.assert_allclose(np.asarray(est), 0.75 * np.asarray(v), atol=0.06)
+
+
+def test_mxint_vs_mxfp4_error_tradeoff():
+    """INT4's uniform grid wins near the block max; FP4's fine rungs win
+    near zero — the trade-off that motivates per-format recipes."""
+    k = jax.random.PRNGKey(3)
+    big = jax.random.uniform(k, (64, 32), minval=4.0, maxval=7.0)
+    mse = lambda q, v: float(jnp.mean((q - v) ** 2))
+    assert mse(ref.quantize_mxint_nr(big), big) < mse(ref.quantize_mx_nr(big), big)
+    small = jax.random.normal(k, (64, 32)) * 0.2
+    small = small.at[:, 0].set(6.0)
+    assert mse(ref.quantize_mx_nr(small), small) < mse(ref.quantize_mxint_nr(small), small)
+
+
+def test_mx_matmul_int4_modes():
+    a = rnd(4, (8, 64))
+    b = rnd(5, (64, 8))
+    for mode in ["nr", "rht_sr"]:
+        c = ref.mx_matmul(a, b, mode=mode, key=jax.random.PRNGKey(6), dtype="int4")
+        rel = float(jnp.linalg.norm(c - a @ b) / jnp.linalg.norm(a @ b))
+        assert rel < 0.6, (mode, rel)

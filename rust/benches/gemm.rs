@@ -1,0 +1,54 @@
+//! Bench: the rust GEMM substrate (threaded scaling + MX-mode costs) and
+//! the packed MX dot product — supports the Fig. 2 / Table 5 harnesses.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mxfp4_train::gemm::{matmul, mx_matmul, Mat, MxMode};
+use mxfp4_train::mx::block::MxVec;
+use mxfp4_train::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seed(0);
+    let a = Mat::gaussian(256, 1024, 1.0, &mut rng);
+    let b = Mat::gaussian(1024, 256, 1.0, &mut rng);
+    let flops = 2.0 * 256.0 * 1024.0 * 256.0;
+
+    harness::header("f32 GEMM thread scaling (256x1024x256)");
+    let mut t1 = 0.0;
+    for w in [1usize, 2, 4, 8] {
+        let t = harness::bench(&format!("gemm workers={w}"), flops, "flop", 1, 3, || {
+            std::hint::black_box(matmul(&a, &b, w));
+        });
+        if w == 1 {
+            t1 = t;
+        }
+    }
+    println!("(speedup at 8 workers: {:.2}x over 1)", t1 / {
+        harness::time_secs(0, 3, || {
+            std::hint::black_box(matmul(&a, &b, 8));
+        })
+    });
+
+    harness::header("MX GEMM modes (256x1024x256, g=64)");
+    for (label, mode) in [
+        ("exact", MxMode::Exact),
+        ("nr", MxMode::Nr),
+        ("rht_sr", MxMode::RhtSr),
+    ] {
+        harness::bench(&format!("mx_matmul {label}"), flops, "flop", 1, 3, || {
+            std::hint::black_box(mx_matmul(&a, &b, mode, 64, &mut Rng::seed(1), 4));
+        });
+    }
+
+    harness::header("packed MX dot product (32K elements)");
+    let mut x = vec![0.0f32; 1 << 15];
+    let mut y = vec![0.0f32; 1 << 15];
+    rng.fill_normal(&mut x, 1.0);
+    rng.fill_normal(&mut y, 1.0);
+    let qx = MxVec::quantize_nr(&x);
+    let qy = MxVec::quantize_nr(&y);
+    harness::bench("MxVec::dot", x.len() as f64, "elem", 2, 20, || {
+        std::hint::black_box(qx.dot(&qy));
+    });
+}

@@ -1,0 +1,40 @@
+//! Shared micro-bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` target's `main()`; targets use
+//! `bench()` to time closures with warmup + median-of-means and print
+//! aligned rows. Compiled as a module into each bench via `#[path]`.
+
+use std::time::Instant;
+
+/// Median-of-means seconds/iteration with warmup.
+pub fn time_secs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let reps = 3usize;
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t.elapsed().as_secs_f64() / iters.max(1) as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[reps / 2]
+}
+
+/// Time and print one row: label, secs/iter, and a derived rate.
+pub fn bench<F: FnMut()>(label: &str, units: f64, unit_name: &str, warmup: usize, iters: usize, f: F) -> f64 {
+    let secs = time_secs(warmup, iters, f);
+    println!(
+        "{label:<44} {:>12.3} us/iter {:>14.2} {unit_name}/s",
+        secs * 1e6,
+        units / secs
+    );
+    secs
+}
+
+pub fn header(title: &str) {
+    println!("\n==== {title} ====");
+}

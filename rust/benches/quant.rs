@@ -1,0 +1,92 @@
+//! Bench: quantization kernels (§4.2b analogue) — NR vs SR cost, packed
+//! vs qdq, and the Alg. 2 invariants under timing loads.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mxfp4_train::mx::{block::MxVec, int4, quant};
+use mxfp4_train::rng::Rng;
+
+fn main() {
+    let n = 1 << 20;
+    let mut base = vec![0.0f32; n];
+    Rng::seed(0).fill_normal(&mut base, 2.0);
+    let elems = n as f64;
+
+    harness::header("MXFP4 quantization over 1M f32 (per-element rates)");
+    harness::bench("Algorithm 1 (NR qdq)", elems, "elem", 1, 5, || {
+        let mut v = base.clone();
+        quant::qdq_nr(&mut v);
+        std::hint::black_box(v);
+    });
+    let t_sr = harness::bench("Algorithm 2 (SR qdq, software dither)", elems, "elem", 1, 5, || {
+        let mut v = base.clone();
+        quant::qdq_sr(&mut v, &mut Rng::seed(1));
+        std::hint::black_box(v);
+    });
+    harness::bench("Algorithm 2 minus prescale (ablation)", elems, "elem", 1, 5, || {
+        let mut v = base.clone();
+        quant::qdq_sr_noprescale(&mut v, &mut Rng::seed(1));
+        std::hint::black_box(v);
+    });
+    harness::bench("packed MxVec quantize (NR, 4.25 b/elem)", elems, "elem", 1, 5, || {
+        std::hint::black_box(MxVec::quantize_nr(&base));
+    });
+    let packed = MxVec::quantize_nr(&base);
+    harness::bench("packed MxVec dequantize", elems, "elem", 1, 5, || {
+        std::hint::black_box(packed.dequantize());
+    });
+
+    harness::header("MXINT4 extension: quantization cost + error vs MXFP4");
+    harness::bench("MXINT4 Algorithm 1 (NR qdq)", elems, "elem", 1, 5, || {
+        let mut v = base.clone();
+        int4::qdq_nr(&mut v);
+        std::hint::black_box(v);
+    });
+    harness::bench("MXINT4 Algorithm 2 (SR qdq)", elems, "elem", 1, 5, || {
+        let mut v = base.clone();
+        int4::qdq_sr(&mut v, &mut Rng::seed(1));
+        std::hint::black_box(v);
+    });
+    {
+        let mse = |v: &[f32]| -> f64 {
+            v.iter().zip(&base).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+                / v.len() as f64
+        };
+        let mut vi = base.clone();
+        int4::qdq_nr(&mut vi);
+        let mut vf = base.clone();
+        quant::qdq_nr(&mut vf);
+        println!(
+            "Gaussian NR qdq MSE: MXINT4 {:.3e} vs MXFP4 {:.3e} (ratio {:.2})",
+            mse(&vi),
+            mse(&vf),
+            mse(&vi) / mse(&vf)
+        );
+    }
+
+    // §3.1 clip-fraction measurement (the Algorithm 1 bias source)
+    harness::header("Algorithm 1 clipping bias (§3.1)");
+    let frac = quant::clip_fraction(&base);
+    println!("fraction of Gaussian entries scaled into (6, 8]: {:.2}% (paper: ~3%)", frac * 100.0);
+    assert!((0.005..0.10).contains(&frac));
+
+    // SR must stay unbiased even at bench sizes
+    let mut v = base[..32].to_vec();
+    let mut mean = vec![0.0f64; 32];
+    let trials = 2000;
+    for t in 0..trials {
+        v.copy_from_slice(&base[..32]);
+        quant::qdq_sr(&mut v, &mut Rng::seed(100 + t));
+        for (m, &x) in mean.iter_mut().zip(&v) {
+            *m += x as f64;
+        }
+    }
+    let max_bias = mean
+        .iter()
+        .zip(&base[..32])
+        .map(|(m, &o)| (m / trials as f64 - 0.75 * o as f64).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |E[Alg2(v)] - 0.75 v| over a block: {max_bias:.4} (SEM-limited)");
+    let _ = t_sr;
+}

@@ -1,0 +1,64 @@
+//! Bench: §4.2a — RHT overhead relative to the GEMM it fuses into, across
+//! block sizes, plus dense-vs-FWHT crossover (Table 5's last two columns).
+//!
+//! Paper reference points (H100, FP8 RHT-GEMM): +9.7% for 7B shapes,
+//! +1.6% for 70B shapes; memory-bound while g <~ 256.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mxfp4_train::gemm::{matmul, Mat};
+use mxfp4_train::hadamard;
+use mxfp4_train::rng::Rng;
+use mxfp4_train::util::threadpool;
+
+fn main() {
+    let workers = threadpool::default_workers();
+    let mut rng = Rng::seed(3);
+
+    // "7B-ish" proxy shape scaled to CPU: (m, n, k) = (512, 512, 512)
+    let a = Mat::gaussian(512, 512, 1.0, &mut rng);
+    let b = Mat::gaussian(512, 512, 1.0, &mut rng);
+    let flops = 2.0 * 512f64.powi(3);
+
+    harness::header("f32 GEMM baseline (512^3)");
+    let t_gemm = harness::bench("gemm", flops, "flop", 1, 3, || {
+        std::hint::black_box(matmul(&a, &b, workers));
+    });
+
+    harness::header("blockwise RHT on one operand (512x512), dense operator");
+    let elems = (512 * 512) as f64;
+    let mut dense_times = Vec::new();
+    for g in [32usize, 64, 128, 256, 1024] {
+        let sign = hadamard::sample_sign(g, &mut rng);
+        let mut buf = a.data.clone();
+        let t = harness::bench(&format!("rht dense g={g}"), elems, "elem", 1, 3, || {
+            hadamard::rht_blockwise_dense(&mut buf, &sign, workers);
+        });
+        println!("{:<44} {:>11.1}% of GEMM", format!("  -> overhead vs gemm (g={g})"), 100.0 * t / t_gemm);
+        dense_times.push((g, t));
+    }
+
+    harness::header("blockwise RHT via FWHT (O(n log g))");
+    for g in [256usize, 1024] {
+        let sign = hadamard::sample_sign(g, &mut rng);
+        let mut buf = a.data.clone();
+        let t = harness::bench(&format!("rht fwht g={g}"), elems, "elem", 1, 3, || {
+            hadamard::rht_blockwise_fwht(&mut buf, &sign, workers);
+        });
+        let dense = dense_times.iter().find(|(gg, _)| *gg == g).map(|(_, t)| *t);
+        if let Some(d) = dense {
+            println!(
+                "{:<44} {:>11.2}x faster than dense",
+                format!("  -> fwht vs dense (g={g})"),
+                d / t
+            );
+        }
+    }
+
+    // paper claim shape: dense RHT cost grows ~linearly in g; FWHT beats
+    // dense at g = 1024 (the HadaCore row of Table 5)
+    let t32 = dense_times[0].1;
+    let t1024 = dense_times.last().unwrap().1;
+    assert!(t1024 > 2.0 * t32, "dense RHT cost must grow with g: {t32} vs {t1024}");
+}

@@ -1,0 +1,61 @@
+//! Bench: end-to-end train-step latency per recipe on the `test` config —
+//! the L3 §Perf instrument. Separates PJRT execution from coordinator
+//! overhead (all-reduce + clip + AdamW) so the "coordinator <10% of step"
+//! target (DESIGN.md §7) is measurable.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mxfp4_train::optim::{self, AdamW, ParamRounding};
+use mxfp4_train::runtime::{executor, Executor, Registry};
+
+fn main() {
+    let reg = match Registry::open(&mxfp4_train::runtime::default_artifacts_dir()) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("skipping train_step bench: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    harness::header("train-step latency by recipe (test config, batch 4 x seq 32)");
+    for recipe in ["bf16", "mxfp4", "mxfp4_sr", "mxfp4_rht", "mxfp4_rht_sr"] {
+        let Some(art) = reg.find("test", recipe, "train") else { continue };
+        let exe = Executor::compile_cpu(art).unwrap();
+        let params = executor::init_params(art, 0);
+        let n = art.tokens_per_step();
+        let tokens: Vec<i32> = (0..n as i32).map(|i| i % 251).collect();
+        let labels: Vec<i32> = (0..n as i32).map(|i| (i + 1) % 251).collect();
+        let mut seed = 0u32;
+        harness::bench(&format!("pjrt train_step [{recipe}]"), n as f64, "tok", 1, 5, || {
+            seed += 1;
+            std::hint::black_box(exe.train_step(seed, &tokens, &labels, &params).unwrap());
+        });
+    }
+
+    harness::header("coordinator-side cost (grad clip + AdamW fused update)");
+    let art = reg.find("test", "bf16", "train").unwrap();
+    let exe = Executor::compile_cpu(art).unwrap();
+    let params = executor::init_params(art, 0);
+    let names: Vec<String> = art.params.iter().map(|p| p.name.clone()).collect();
+    let n = art.tokens_per_step();
+    let tokens: Vec<i32> = (0..n as i32).map(|i| i % 251).collect();
+    let labels: Vec<i32> = (0..n as i32).map(|i| (i + 1) % 251).collect();
+    let out = exe.train_step(1, &tokens, &labels, &params).unwrap();
+    let nparams: usize = params.iter().map(Vec::len).sum();
+
+    let mut opt = AdamW::new(&params, &names, 0.9, 0.95, 1e-8, 0.01, ParamRounding::Nearest, 0);
+    let mut compute = params.clone();
+    let t_opt = harness::bench("clip + adamw step", nparams as f64, "param", 1, 10, || {
+        let mut grads = out.grads.clone();
+        optim::clip_global_norm(&mut grads, 1.0, 4);
+        opt.step(&grads, 1e-3, &mut compute);
+    });
+    let t_step = harness::time_secs(1, 5, || {
+        std::hint::black_box(exe.train_step(2, &tokens, &labels, &params).unwrap());
+    });
+    println!(
+        "coordinator share of a bf16 step: {:.1}% (target < 10%)",
+        100.0 * t_opt / (t_opt + t_step)
+    );
+}

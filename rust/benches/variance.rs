@@ -1,0 +1,72 @@
+//! Bench: Fig. 2 regeneration — SR-GEMM variance vs b, with/without RHT
+//! (DESIGN.md F2). Prints the figure's series and asserts the Theorem 3.2
+//! growth-rate ordering; also times the underlying mx_matmul.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mxfp4_train::gemm::{mx_matmul, Mat, MxMode};
+use mxfp4_train::rng::Rng;
+
+fn variance_point(b: usize, p: f64, samples: usize, trials: usize) -> (f64, f64) {
+    let mut rng = Rng::seed(0xF16 ^ b as u64);
+    let mut sum = [0.0f64; 2];
+    for s in 0..samples {
+        let a = Mat::gaussian_outliers(1, b, p, 5.0, &mut rng);
+        let x = Mat::gaussian_outliers(b, 1, p, 5.0, &mut rng);
+        for (i, mode) in [MxMode::Sr, MxMode::RhtSr].into_iter().enumerate() {
+            let vals: Vec<f64> = (0..trials)
+                .map(|t| {
+                    mx_matmul(&a, &x, mode, 32, &mut Rng::seed((s * 100 + t) as u64), 1).data[0]
+                        as f64
+                })
+                .collect();
+            let mean = vals.iter().sum::<f64>() / trials as f64;
+            sum[i] += vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (trials - 1) as f64;
+        }
+    }
+    (sum[0] / samples as f64, sum[1] / samples as f64)
+}
+
+fn main() {
+    harness::header("Fig. 2: SR-GEMM variance vs b (A,B ~ N(0,I) + Bern(p) N(0,5I))");
+    let (samples, trials) = (96, 16);
+    for p in [0.0, 0.01] {
+        println!("\np = {p}");
+        println!("{:>6} {:>14} {:>14} {:>7}", "b", "var no-RHT", "var RHT", "ratio");
+        let mut prev = (0.0, 0.0);
+        let mut growth = (0.0, 0.0);
+        for (i, b) in [128usize, 512, 2048].into_iter().enumerate() {
+            let (vp, vr) = variance_point(b, p, samples, trials);
+            println!("{b:>6} {vp:>14.5} {vr:>14.5} {:>7.2}", vp / vr.max(1e-12));
+            if i > 0 {
+                growth = (vp / prev.0, vr / prev.1);
+            }
+            prev = (vp, vr);
+        }
+        // Theorem 3.2: variance grows slower with the RHT
+        assert!(
+            growth.1 < growth.0,
+            "RHT variance growth {} must be below no-RHT {}",
+            growth.1,
+            growth.0
+        );
+    }
+
+    harness::header("mx_matmul wall time (128x1024 @ 1024x128)");
+    let mut rng = Rng::seed(7);
+    let a = Mat::gaussian(128, 1024, 1.0, &mut rng);
+    let b = Mat::gaussian(1024, 128, 1.0, &mut rng);
+    let flops = 2.0 * 128.0 * 1024.0 * 128.0;
+    for (label, mode) in [
+        ("exact", MxMode::Exact),
+        ("nr", MxMode::Nr),
+        ("sr", MxMode::Sr),
+        ("rht (g=64)", MxMode::Rht),
+        ("rht_sr (g=64)", MxMode::RhtSr),
+    ] {
+        harness::bench(&format!("mx_matmul {label}"), flops, "flop", 1, 3, || {
+            std::hint::black_box(mx_matmul(&a, &b, mode, 64, &mut Rng::seed(1), 4));
+        });
+    }
+}

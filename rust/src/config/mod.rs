@@ -1,0 +1,203 @@
+//! Run configuration: model/recipe selection + training hyperparameters.
+//!
+//! Mirrors the paper's appendix hyperparameter table (scaled to this
+//! testbed). Configs load from simple `key = value` files (one per line,
+//! `#` comments) and from CLI overrides — no external config language.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Training hyperparameters (appendix table, scaled).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Named model config baked into the artifact ("test"/"tiny"/"small"/"base").
+    pub config: String,
+    /// Recipe name ("bf16", "mxfp4", "mxfp4_sr", "mxfp4_rht", "mxfp4_rht_sr", ...).
+    pub recipe: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub min_lr: f32,
+    pub warmup_frac: f32,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub grad_clip: f32,
+    /// Data-parallel worker count (microbatch shards per step).
+    pub dp_workers: usize,
+    /// Validation cadence (steps); 0 disables.
+    pub eval_every: usize,
+    /// Number of holdout batches per eval.
+    pub eval_batches: usize,
+    pub seed: u64,
+    /// Master-weight rounding for the BF16 parameter copy: "nearest" | "stochastic".
+    pub param_rounding: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            config: "tiny".into(),
+            recipe: "mxfp4_rht_sr".into(),
+            steps: 200,
+            lr: 1.5e-3,
+            min_lr: 1.5e-4,
+            warmup_frac: 0.05,
+            weight_decay: 0.01,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            grad_clip: 1.0,
+            dp_workers: 1,
+            eval_every: 20,
+            eval_batches: 4,
+            seed: 0,
+            param_rounding: "nearest".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply a `key = value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_f32 = |v: &str| v.parse::<f32>().map_err(|e| format!("{key}: {e}"));
+        let parse_usize = |v: &str| v.parse::<usize>().map_err(|e| format!("{key}: {e}"));
+        match key {
+            "config" => self.config = value.into(),
+            "recipe" => self.recipe = value.into(),
+            "steps" => self.steps = parse_usize(value)?,
+            "lr" => self.lr = parse_f32(value)?,
+            "min_lr" => self.min_lr = parse_f32(value)?,
+            "warmup_frac" => self.warmup_frac = parse_f32(value)?,
+            "weight_decay" => self.weight_decay = parse_f32(value)?,
+            "beta1" => self.beta1 = parse_f32(value)?,
+            "beta2" => self.beta2 = parse_f32(value)?,
+            "eps" => self.eps = parse_f32(value)?,
+            "grad_clip" => self.grad_clip = parse_f32(value)?,
+            "dp_workers" => self.dp_workers = parse_usize(value)?,
+            "eval_every" => self.eval_every = parse_usize(value)?,
+            "eval_batches" => self.eval_batches = parse_usize(value)?,
+            "seed" => self.seed = value.parse().map_err(|e| format!("{key}: {e}"))?,
+            "param_rounding" => self.param_rounding = value.into(),
+            _ => return Err(format!("unknown config key {key:?}")),
+        }
+        Ok(())
+    }
+
+    /// Load from a `key = value` file.
+    pub fn from_file(path: &Path) -> Result<TrainConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut cfg = TrainConfig::default();
+        for (entry_no, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or(format!("{}:{}: expected key = value", path.display(), entry_no + 1))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply every recognized `--key value` option from a parsed CLI;
+    /// unknown keys are left to the caller.
+    pub fn apply_cli(&mut self, args: &crate::util::cli::Args) {
+        for (k, v) in &args.options {
+            let _ = self.set(k, v);
+        }
+    }
+
+    /// Per-size presets following the appendix table's LR scaling.
+    pub fn preset(config: &str) -> TrainConfig {
+        let mut c = TrainConfig { config: config.into(), ..TrainConfig::default() };
+        match config {
+            "test" => {
+                c.steps = 50;
+                c.lr = 2e-3;
+            }
+            "tiny" => {
+                c.steps = 200;
+                c.lr = 1.5e-3;
+            }
+            "small" => {
+                c.steps = 300;
+                c.lr = 1e-3;
+            }
+            "base" => {
+                c.steps = 400;
+                c.lr = 6e-4;
+            }
+            _ => {}
+        }
+        c.min_lr = c.lr * 0.1;
+        c
+    }
+
+    pub fn summary(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        m.insert("config".into(), self.config.clone());
+        m.insert("recipe".into(), self.recipe.clone());
+        m.insert("steps".into(), self.steps.to_string());
+        m.insert("lr".into(), format!("{}", self.lr));
+        m.insert("dp_workers".into(), self.dp_workers.to_string());
+        m.insert("seed".into(), self.seed.to_string());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = TrainConfig::default();
+        assert!(c.lr > 0.0 && c.min_lr < c.lr);
+        assert!(c.beta2 > c.beta1);
+    }
+
+    #[test]
+    fn set_roundtrips() {
+        let mut c = TrainConfig::default();
+        c.set("lr", "0.002").unwrap();
+        c.set("steps", "123").unwrap();
+        c.set("recipe", "mxfp4").unwrap();
+        assert_eq!(c.lr, 0.002);
+        assert_eq!(c.steps, 123);
+        assert_eq!(c.recipe, "mxfp4");
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("lr", "abc").is_err());
+    }
+
+    #[test]
+    fn from_file_parses() {
+        let dir = std::env::temp_dir().join("mxfp4_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.cfg");
+        std::fs::write(&p, "# comment\nconfig = small\nlr = 0.0005 # inline\nsteps=77\n").unwrap();
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.config, "small");
+        assert_eq!(c.lr, 0.0005);
+        assert_eq!(c.steps, 77);
+    }
+
+    #[test]
+    fn presets_scale_lr_down_with_size() {
+        let tiny = TrainConfig::preset("tiny");
+        let base = TrainConfig::preset("base");
+        assert!(base.lr < tiny.lr);
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let args = crate::util::cli::Args::parse(
+            ["--lr", "0.01", "--steps", "9"].iter().map(|s| s.to_string()),
+        );
+        let mut c = TrainConfig::default();
+        c.apply_cli(&args);
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.steps, 9);
+    }
+}

@@ -1,0 +1,117 @@
+//! Checkpointing: binary tensor snapshots of master weights (+ optional
+//! optimizer moments) with a JSON manifest. Own format (no serde):
+//!
+//! ```text
+//!   magic  "MXCK"            4 bytes
+//!   version u32 LE           4 bytes
+//!   n_tensors u32 LE
+//!   per tensor:
+//!     name_len u32 LE, name bytes (utf-8)
+//!     numel u64 LE
+//!     f32 LE data
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MXCK";
+const VERSION: u32 = 1;
+
+/// Named tensor set (params, adam m, adam v each saved as one file).
+pub fn save(path: &Path, names: &[String], tensors: &[Vec<f32>]) -> std::io::Result<()> {
+    assert_eq!(names.len(), tensors.len());
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(names.len() as u32).to_le_bytes())?;
+    for (name, t) in names.iter().zip(tensors) {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.len() as u64).to_le_bytes())?;
+        // bulk-write the f32 payload
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 4) };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Load a tensor set; returns (names, tensors).
+pub fn load(path: &Path) -> std::io::Result<(Vec<String>, Vec<Vec<f32>>)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not a MXCK checkpoint"));
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    if u32::from_le_bytes(u32b) != VERSION {
+        return Err(bad("unsupported checkpoint version"));
+    }
+    f.read_exact(&mut u32b)?;
+    let n = u32::from_le_bytes(u32b) as usize;
+    let mut names = Vec::with_capacity(n);
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        f.read_exact(&mut u32b)?;
+        let name_len = u32::from_le_bytes(u32b) as usize;
+        if name_len > 4096 {
+            return Err(bad("absurd name length"));
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        let numel = u64::from_le_bytes(u64b) as usize;
+        let mut data = vec![0.0f32; numel];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+        };
+        f.read_exact(bytes)?;
+        names.push(String::from_utf8(name).map_err(|_| bad("bad tensor name"))?);
+        tensors.push(data);
+    }
+    Ok((names, tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("mxfp4_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("test.mxck");
+        let names = vec!["tok_emb".to_string(), "lnf_g".to_string()];
+        let tensors = vec![vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE], vec![1.0f32; 7]];
+        save(&p, &names, &tensors).unwrap();
+        let (n2, t2) = load(&p).unwrap();
+        assert_eq!(n2, names);
+        assert_eq!(t2, tensors);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("mxfp4_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("garbage.mxck");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn empty_set() {
+        let dir = std::env::temp_dir().join("mxfp4_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("empty.mxck");
+        save(&p, &[], &[]).unwrap();
+        let (n, t) = load(&p).unwrap();
+        assert!(n.is_empty() && t.is_empty());
+    }
+}

@@ -1,0 +1,148 @@
+//! Simulated data parallelism: a leader/worker pool with gradient
+//! all-reduce, the FSDP/ZeRO-style topology of §3.2's motivation.
+//!
+//! PJRT handles are !Send, so each worker *thread* builds its own CPU
+//! client + compiled executable at startup and serves microbatch requests
+//! over channels for the whole run — exactly a leader process fanning out
+//! to device workers. The leader broadcasts a parameter snapshot
+//! (Arc-shared, zero-copy) and all-reduces (averages) the returned
+//! gradient shards.
+//!
+//! Why this matters to the paper: Algorithm 3's *blockwise* RHT never
+//! mixes across the batch dimension, so sharding the batch across workers
+//! needs no cross-worker communication before the backward GEMMs — each
+//! worker applies the RHT to its own shard. A full-dimension RHT would
+//! force an all-gather of activations here; this topology is the
+//! paper's argument made executable.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{Artifact, Executor};
+
+/// One microbatch of work for a worker.
+pub struct Request {
+    pub seed: u32,
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub params: Arc<Vec<Vec<f32>>>,
+}
+
+/// A worker's gradient contribution.
+pub struct Response {
+    pub worker: usize,
+    pub loss: f32,
+    pub grads: Vec<Vec<f32>>,
+}
+
+enum Ctl {
+    Work(Request),
+    Shutdown,
+}
+
+/// Leader-side handle to the worker pool.
+pub struct DpPool {
+    txs: Vec<mpsc::Sender<Ctl>>,
+    rx: mpsc::Receiver<Result<Response, String>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub workers: usize,
+}
+
+impl DpPool {
+    /// Spawn `workers` threads, each compiling `artifact` on its own
+    /// PJRT client. Blocks until all workers are ready (or one fails).
+    pub fn spawn(artifact: &Artifact, workers: usize) -> Result<DpPool> {
+        let (res_tx, rx) = mpsc::channel::<Result<Response, String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, work_rx) = mpsc::channel::<Ctl>();
+            txs.push(tx);
+            let artifact = artifact.clone();
+            let res_tx = res_tx.clone();
+            let ready_tx = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let exe = match Executor::compile_cpu(&artifact) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("worker {w}: {e}")));
+                        return;
+                    }
+                };
+                while let Ok(Ctl::Work(req)) = work_rx.recv() {
+                    let Request { seed, tokens, labels, params } = req;
+                    let out = exe
+                        .train_step(seed, &tokens, &labels, &params)
+                        .map(|o| Response { worker: w, loss: o.loss, grads: o.grads })
+                        .map_err(|e| format!("worker {w}: {e}"));
+                    // release the parameter snapshot *before* reporting, so
+                    // the leader can reclaim its Arc without cloning
+                    drop(params);
+                    if res_tx.send(out).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        for _ in 0..workers {
+            ready_rx.recv().expect("worker panicked during startup").map_err(anyhow::Error::msg)?;
+        }
+        Ok(DpPool { txs, rx, handles, workers })
+    }
+
+    /// Run one data-parallel step: send a shard to each worker, wait for
+    /// all, average losses and all-reduce (average) gradients.
+    pub fn step(
+        &self,
+        shards: Vec<(u32, Vec<i32>, Vec<i32>)>,
+        params: &Arc<Vec<Vec<f32>>>,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        assert_eq!(shards.len(), self.workers);
+        for (tx, (seed, tokens, labels)) in self.txs.iter().zip(shards) {
+            tx.send(Ctl::Work(Request { seed, tokens, labels, params: Arc::clone(params) }))
+                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        }
+        let mut total_loss = 0.0f64;
+        let mut acc: Option<Vec<Vec<f32>>> = None;
+        for _ in 0..self.workers {
+            let resp = self.rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))?;
+            let resp = resp.map_err(anyhow::Error::msg)?;
+            total_loss += resp.loss as f64;
+            match &mut acc {
+                None => acc = Some(resp.grads),
+                Some(a) => {
+                    for (dst, src) in a.iter_mut().zip(&resp.grads) {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += *s;
+                        }
+                    }
+                }
+            }
+        }
+        let mut grads = acc.unwrap();
+        let inv = 1.0 / self.workers as f32;
+        for g in &mut grads {
+            for v in g.iter_mut() {
+                *v *= inv;
+            }
+        }
+        Ok(((total_loss / self.workers as f64) as f32, grads))
+    }
+}
+
+impl Drop for DpPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Ctl::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Run metrics: console + CSV logging of the quantities the paper plots
+//! (train loss/ppl per step, val loss/ppl per eval — Figures 3-6 and
+//! 10-14 are regenerated from these CSVs).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::timer::Timer;
+
+/// One training step's record.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub grad_norm: f64,
+    pub tokens: usize,
+    pub secs: f64,
+}
+
+/// One validation point.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub val_loss: f32,
+}
+
+impl EvalRecord {
+    pub fn ppl(&self) -> f64 {
+        (self.val_loss as f64).exp()
+    }
+}
+
+/// Collects records and streams them to `<dir>/<run>/{train,val}.csv`.
+pub struct Metrics {
+    pub run_name: String,
+    pub dir: PathBuf,
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    train_csv: Option<std::fs::File>,
+    val_csv: Option<std::fs::File>,
+    timer: Timer,
+    pub log_every: usize,
+}
+
+impl Metrics {
+    /// `dir = None` keeps everything in memory (tests).
+    pub fn new(run_name: &str, dir: Option<&Path>) -> std::io::Result<Metrics> {
+        let (train_csv, val_csv, out_dir) = match dir {
+            Some(d) => {
+                let run_dir = d.join(run_name);
+                std::fs::create_dir_all(&run_dir)?;
+                let mut t = std::fs::File::create(run_dir.join("train.csv"))?;
+                let mut v = std::fs::File::create(run_dir.join("val.csv"))?;
+                writeln!(t, "step,loss,ppl,lr,grad_norm,tokens_per_sec")?;
+                writeln!(v, "step,val_loss,val_ppl")?;
+                (Some(t), Some(v), run_dir)
+            }
+            None => (None, None, PathBuf::new()),
+        };
+        Ok(Metrics {
+            run_name: run_name.to_string(),
+            dir: out_dir,
+            steps: Vec::new(),
+            evals: Vec::new(),
+            train_csv,
+            val_csv,
+            timer: Timer::start(),
+            log_every: 10,
+        })
+    }
+
+    pub fn record_step(&mut self, rec: StepRecord) {
+        if let Some(f) = &mut self.train_csv {
+            let tps = rec.tokens as f64 / rec.secs.max(1e-9);
+            let _ = writeln!(
+                f,
+                "{},{:.6},{:.4},{:.6e},{:.4},{:.1}",
+                rec.step,
+                rec.loss,
+                (rec.loss as f64).exp(),
+                rec.lr,
+                rec.grad_norm,
+                tps
+            );
+        }
+        if self.log_every > 0 && rec.step % self.log_every == 0 {
+            crate::info!(
+                "[{}] step {:4} loss {:.4} ppl {:7.2} lr {:.2e} gnorm {:.3} ({:.0} tok/s)",
+                self.run_name,
+                rec.step,
+                rec.loss,
+                (rec.loss as f64).exp(),
+                rec.lr,
+                rec.grad_norm,
+                rec.tokens as f64 / rec.secs.max(1e-9)
+            );
+        }
+        self.steps.push(rec);
+    }
+
+    pub fn record_eval(&mut self, rec: EvalRecord) {
+        if let Some(f) = &mut self.val_csv {
+            let _ = writeln!(f, "{},{:.6},{:.4}", rec.step, rec.val_loss, rec.ppl());
+        }
+        crate::info!(
+            "[{}] step {:4} VAL loss {:.4} ppl {:.2}",
+            self.run_name,
+            rec.step,
+            rec.val_loss,
+            rec.ppl()
+        );
+        self.evals.push(rec);
+    }
+
+    /// Mean train loss over the last `n` steps (Table 2's "Train. Loss").
+    pub fn final_train_loss(&self, n: usize) -> f32 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    pub fn final_val_loss(&self) -> f32 {
+        self.evals.last().map(|e| e.val_loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.timer.secs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_files_written() {
+        let dir = std::env::temp_dir().join("mxfp4_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut m = Metrics::new("unit", Some(&dir)).unwrap();
+        m.log_every = 0;
+        m.record_step(StepRecord { step: 1, loss: 2.0, lr: 1e-3, grad_norm: 0.5, tokens: 512, secs: 0.1 });
+        m.record_eval(EvalRecord { step: 1, val_loss: 2.5 });
+        drop(m);
+        let t = std::fs::read_to_string(dir.join("unit/train.csv")).unwrap();
+        assert!(t.lines().count() == 2 && t.contains("2.000000"));
+        let v = std::fs::read_to_string(dir.join("unit/val.csv")).unwrap();
+        assert!(v.contains("2.500000"));
+    }
+
+    #[test]
+    fn final_losses() {
+        let mut m = Metrics::new("mem", None).unwrap();
+        m.log_every = 0;
+        for (i, l) in [4.0f32, 3.0, 2.0, 1.0].iter().enumerate() {
+            m.record_step(StepRecord { step: i, loss: *l, lr: 0.0, grad_norm: 0.0, tokens: 1, secs: 1.0 });
+        }
+        assert_eq!(m.final_train_loss(2), 1.5);
+        assert!(m.final_val_loss().is_nan());
+        m.record_eval(EvalRecord { step: 3, val_loss: 1.2 });
+        assert_eq!(m.final_val_loss(), 1.2);
+        assert!((m.evals[0].ppl() - (1.2f32 as f64).exp()).abs() < 1e-9);
+    }
+}

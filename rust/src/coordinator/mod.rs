@@ -1,0 +1,13 @@
+//! L3 coordinator: the training harness around the AOT artifacts.
+//!
+//! * `trainer` — step loop: data → DP workers → all-reduce → AdamW
+//! * `dp` — leader/worker pool with per-thread PJRT executables
+//! * `metrics` — CSV + console logging (regenerates the paper's curves)
+//! * `checkpoint` — binary tensor snapshots
+
+pub mod checkpoint;
+pub mod dp;
+pub mod metrics;
+pub mod trainer;
+
+pub use trainer::{RunSummary, Trainer};

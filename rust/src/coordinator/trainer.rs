@@ -1,0 +1,246 @@
+//! The training coordinator: wires data pipeline → data-parallel workers
+//! (PJRT train-step artifacts) → gradient all-reduce → clip → AdamW with
+//! FP32 masters → BF16 compute copies → metrics/eval/checkpoints.
+//!
+//! This is the Megatron-role of the stack; the paper's contribution (the
+//! MXFP4 backward pass) lives *inside* the artifact, selected by
+//! `TrainConfig::recipe`, so recipe sweeps (Table 2/4, Fig 3-9) are pure
+//! coordinator-level loops over compiled artifacts.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::dp::DpPool;
+use super::metrics::{EvalRecord, Metrics, StepRecord};
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::optim::{self, AdamW, CosineSchedule, ParamRounding};
+use crate::rng::Rng;
+use crate::runtime::{executor, Executor, Registry};
+use crate::util::timer::Timer;
+
+/// Summary returned by a finished run (Table 2 row material).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub run_name: String,
+    pub steps: usize,
+    pub tokens: usize,
+    pub final_train_loss: f32,
+    pub final_val_loss: f32,
+    pub total_secs: f64,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub metrics: Metrics,
+    pool: DpPool,
+    eval_exe: Executor,
+    opt: AdamW,
+    /// BF16 compute copies (what the artifact consumes), Arc-broadcast.
+    compute: Vec<Vec<f32>>,
+    param_names: Vec<String>,
+    dataset: Dataset,
+    schedule: CosineSchedule,
+    batch: usize,
+    seq: usize,
+    step: usize,
+    rng: Rng,
+}
+
+impl Trainer {
+    /// Build a trainer: find artifacts for (config, recipe), spawn the DP
+    /// pool, initialize parameters and optimizer state.
+    pub fn new(
+        registry: &Registry,
+        cfg: TrainConfig,
+        dataset: Dataset,
+        results_dir: Option<&Path>,
+    ) -> Result<Trainer> {
+        let train_art = registry
+            .find(&cfg.config, &cfg.recipe, "train")
+            .with_context(|| format!("no artifact {}_{}_train (run `make artifacts`)", cfg.config, cfg.recipe))?;
+        let fwd = &train_art.recipe.fwd;
+        let eval_art = registry
+            .find_fwd(&cfg.config, fwd, "eval")
+            .with_context(|| format!("no eval artifact for config {} fwd {fwd}", cfg.config))?;
+
+        let run_name = format!("{}_{}", cfg.config, cfg.recipe);
+        crate::info!(
+            "trainer: {} ({} params, batch {} x seq {}, {} dp workers, recipe {})",
+            run_name,
+            train_art.param_count,
+            train_art.batch,
+            train_art.model.seq_len,
+            cfg.dp_workers,
+            train_art.recipe.name,
+        );
+
+        let pool = DpPool::spawn(train_art, cfg.dp_workers)?;
+        let eval_exe = Executor::compile_cpu(eval_art)?;
+
+        let masters = executor::init_params(train_art, cfg.seed);
+        let param_names: Vec<String> =
+            train_art.params.iter().map(|p| p.name.clone()).collect();
+        let rounding = ParamRounding::parse(&cfg.param_rounding)
+            .with_context(|| format!("bad param_rounding {:?}", cfg.param_rounding))?;
+        let opt = AdamW::new(
+            &masters,
+            &param_names,
+            cfg.beta1,
+            cfg.beta2,
+            cfg.eps,
+            cfg.weight_decay,
+            rounding,
+            cfg.seed ^ 0xADA3,
+        );
+        // initial compute copy: bf16(masters)
+        let mut compute = masters;
+        for t in &mut compute {
+            for v in t.iter_mut() {
+                *v = crate::mx::bf16::qdq(*v);
+            }
+        }
+
+        let schedule = CosineSchedule::new(cfg.lr, cfg.min_lr, cfg.warmup_frac, cfg.steps);
+        let metrics = Metrics::new(&run_name, results_dir)?;
+        let batch = train_art.batch;
+        let seq = train_art.model.seq_len;
+        let seed = cfg.seed;
+        Ok(Trainer {
+            cfg,
+            metrics,
+            pool,
+            eval_exe,
+            opt,
+            compute,
+            param_names,
+            dataset,
+            schedule,
+            batch,
+            seq,
+            step: 0,
+            rng: Rng::fold_in(seed, 0xDA7A),
+        })
+    }
+
+    /// Tokens consumed per optimizer step (all DP shards).
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.seq * self.pool.workers
+    }
+
+    /// One optimizer step: W independent microbatches → all-reduce → clip
+    /// → AdamW. Returns the averaged loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        let t = Timer::start();
+        let mut it = self.dataset.train_batches(
+            self.batch,
+            self.seq,
+            self.cfg.seed ^ ((self.step as u64) << 16),
+        );
+        let shards: Vec<(u32, Vec<i32>, Vec<i32>)> = (0..self.pool.workers)
+            .map(|w| {
+                let b = it.next_batch();
+                // per-(step, worker) SR/RHT seed — never reused
+                let seed = (self.step * 1000 + w + 1) as u32;
+                (seed, b.tokens, b.labels)
+            })
+            .collect();
+        let _ = &mut self.rng; // reserved for future data order shuffling
+
+        let params = Arc::new(std::mem::take(&mut self.compute));
+        let (loss, mut grads) = self.pool.step(shards, &params)?;
+        // workers drop their snapshot clones before responding, so this is
+        // normally zero-copy; a straggler mid-drop costs one clone.
+        self.compute = Arc::try_unwrap(params).unwrap_or_else(|arc| (*arc).clone());
+
+        let grad_norm =
+            optim::clip_global_norm(&mut grads, self.cfg.grad_clip, crate::util::threadpool::default_workers());
+        let lr = self.schedule.lr(self.step);
+        self.opt.step(&grads, lr, &mut self.compute);
+
+        self.metrics.record_step(StepRecord {
+            step: self.step,
+            loss,
+            lr,
+            grad_norm,
+            tokens: self.tokens_per_step(),
+            secs: t.secs(),
+        });
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Validation loss over the holdout split.
+    pub fn evaluate(&mut self) -> Result<f32> {
+        let batches = self.dataset.val_batches(self.batch, self.seq, self.cfg.eval_batches);
+        let mut total = 0.0f64;
+        for b in &batches {
+            total += self.eval_exe.eval_step(&b.tokens, &b.labels, &self.compute)? as f64;
+        }
+        let loss = (total / batches.len().max(1) as f64) as f32;
+        self.metrics.record_eval(EvalRecord { step: self.step, val_loss: loss });
+        Ok(loss)
+    }
+
+    /// Run the configured number of steps with periodic eval.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let steps = self.cfg.steps;
+        for _ in self.step..steps {
+            self.train_step()?;
+            if self.cfg.eval_every > 0
+                && (self.step % self.cfg.eval_every == 0 || self.step == steps)
+            {
+                self.evaluate()?;
+            }
+        }
+        if self.cfg.eval_every > 0 && self.metrics.evals.last().map(|e| e.step) != Some(self.step)
+        {
+            self.evaluate()?;
+        }
+        Ok(self.summary())
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        RunSummary {
+            run_name: self.metrics.run_name.clone(),
+            steps: self.step,
+            tokens: self.step * self.tokens_per_step(),
+            final_train_loss: self.metrics.final_train_loss(10),
+            final_val_loss: self.metrics.final_val_loss(),
+            total_secs: self.metrics.total_secs(),
+        }
+    }
+
+    /// Save master weights (and a compute-copy snapshot) to `<dir>/`.
+    pub fn save_checkpoint(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        super::checkpoint::save(&dir.join("master.mxck"), &self.param_names, &self.opt.master)?;
+        super::checkpoint::save(&dir.join("compute.mxck"), &self.param_names, &self.compute)?;
+        Ok(())
+    }
+
+    /// Restore master weights from a checkpoint (fresh optimizer moments).
+    pub fn load_params(&mut self, path: &Path) -> Result<()> {
+        let (names, tensors) = super::checkpoint::load(path)?;
+        anyhow::ensure!(names == self.param_names, "checkpoint param names mismatch");
+        for ((m, c), t) in self.opt.master.iter_mut().zip(&mut self.compute).zip(&tensors) {
+            anyhow::ensure!(m.len() == t.len(), "checkpoint tensor size mismatch");
+            m.copy_from_slice(t);
+            for (cv, &mv) in c.iter_mut().zip(t.iter()) {
+                *cv = crate::mx::bf16::qdq(mv);
+            }
+        }
+        Ok(())
+    }
+
+    /// Borrow the current compute parameters (e.g. for the eval harness).
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.compute
+    }
+
+    pub fn param_names(&self) -> &[String] {
+        &self.param_names
+    }
+}

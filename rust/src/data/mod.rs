@@ -1,0 +1,173 @@
+//! Data pipeline: synthetic corpus generation, byte-level tokenization,
+//! sharding, and batch iteration.
+//!
+//! The paper trains on the GPT2-Wikipedia corpus; offline we synthesize a
+//! *structured* token stream — a second-order Markov "language" with
+//! Zipfian unigram statistics, sentence delimiters, and topic drift — so
+//! that (a) the loss has meaningful structure to learn (a plain uniform
+//! stream would pin every recipe to ln(V)), and (b) recipe quality
+//! differences (Table 2's ordering) surface as they do on real text.
+//! A byte-level tokenizer also lets any local text file be used instead.
+
+pub mod corpus;
+pub mod tokenizer;
+
+use crate::rng::Rng;
+
+/// A token dataset split into train/validation streams.
+pub struct Dataset {
+    pub train: Vec<i32>,
+    pub val: Vec<i32>,
+    pub vocab: usize,
+}
+
+impl Dataset {
+    /// Synthetic corpus of `n_tokens` total (90/10 train/val split).
+    pub fn synthetic(n_tokens: usize, vocab: usize, seed: u64) -> Dataset {
+        let stream = corpus::generate(n_tokens, vocab, seed);
+        Dataset::from_stream(stream, vocab)
+    }
+
+    /// Byte-level dataset from a text file.
+    pub fn from_text_file(path: &std::path::Path) -> std::io::Result<Dataset> {
+        let bytes = std::fs::read(path)?;
+        let stream = tokenizer::encode_bytes(&bytes);
+        Ok(Dataset::from_stream(stream, tokenizer::VOCAB))
+    }
+
+    pub fn from_stream(stream: Vec<i32>, vocab: usize) -> Dataset {
+        let split = stream.len() * 9 / 10;
+        let (train, val) = stream.split_at(split);
+        Dataset { train: train.to_vec(), val: val.to_vec(), vocab }
+    }
+
+    /// Batch iterator over the train split: random contiguous windows.
+    pub fn train_batches(&self, batch: usize, seq: usize, seed: u64) -> BatchIter<'_> {
+        BatchIter { data: &self.train, batch, seq, rng: Rng::seed(seed) }
+    }
+
+    /// Deterministic evaluation batches: contiguous strided windows.
+    pub fn val_batches(&self, batch: usize, seq: usize, count: usize) -> Vec<Batch> {
+        let window = seq + 1;
+        let max_start = self.val.len().saturating_sub(window);
+        let mut out = Vec::with_capacity(count);
+        for b in 0..count {
+            let mut tokens = Vec::with_capacity(batch * seq);
+            let mut labels = Vec::with_capacity(batch * seq);
+            for r in 0..batch {
+                let idx = b * batch + r;
+                let start = (idx * 977) % max_start.max(1);
+                let w = &self.val[start..start + window];
+                tokens.extend_from_slice(&w[..seq]);
+                labels.extend_from_slice(&w[1..]);
+            }
+            out.push(Batch { tokens, labels });
+        }
+        out
+    }
+}
+
+/// One (tokens, labels) pair, flattened row-major (batch, seq).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+impl Batch {
+    /// Shard a global batch into `n` microbatches (data parallelism).
+    /// Row counts must divide evenly — the artifact batch is fixed.
+    pub fn shard(&self, n: usize, rows: usize, seq: usize) -> Vec<Batch> {
+        assert_eq!(self.tokens.len(), rows * seq);
+        assert_eq!(rows % n, 0, "batch rows {rows} not divisible by {n} workers");
+        let per = rows / n * seq;
+        (0..n)
+            .map(|i| Batch {
+                tokens: self.tokens[i * per..(i + 1) * per].to_vec(),
+                labels: self.labels[i * per..(i + 1) * per].to_vec(),
+            })
+            .collect()
+    }
+}
+
+/// Infinite sampler of random training windows.
+pub struct BatchIter<'a> {
+    data: &'a [i32],
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+}
+
+impl BatchIter<'_> {
+    pub fn next_batch(&mut self) -> Batch {
+        let window = self.seq + 1;
+        let max_start = self.data.len() - window;
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut labels = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let start = self.rng.below(max_start);
+            let w = &self.data[start..start + window];
+            tokens.extend_from_slice(&w[..self.seq]);
+            labels.extend_from_slice(&w[1..]);
+        }
+        Batch { tokens, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_dataset_shapes() {
+        let ds = Dataset::synthetic(10_000, 256, 0);
+        assert_eq!(ds.train.len() + ds.val.len(), 10_000);
+        assert!(ds.val.len() >= 900);
+        assert!(ds.train.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn batches_have_shifted_labels() {
+        let ds = Dataset::synthetic(5_000, 256, 1);
+        let mut it = ds.train_batches(4, 16, 7);
+        let b = it.next_batch();
+        assert_eq!(b.tokens.len(), 64);
+        assert_eq!(b.labels.len(), 64);
+        // labels are the next-token shift of the same window
+        // (check row 0: label[i] should appear right after token[i] in data)
+        // weaker invariant that's always true: label[i] == token[i+1] within a row
+        for r in 0..4 {
+            for i in 0..15 {
+                assert_eq!(b.labels[r * 16 + i], b.tokens[r * 16 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_iter_deterministic() {
+        let ds = Dataset::synthetic(5_000, 256, 2);
+        let b1 = ds.train_batches(2, 8, 3).next_batch();
+        let b2 = ds.train_batches(2, 8, 3).next_batch();
+        assert_eq!(b1.tokens, b2.tokens);
+    }
+
+    #[test]
+    fn val_batches_deterministic_and_distinct() {
+        let ds = Dataset::synthetic(20_000, 256, 3);
+        let v1 = ds.val_batches(2, 16, 3);
+        let v2 = ds.val_batches(2, 16, 3);
+        assert_eq!(v1.len(), 3);
+        assert_eq!(v1[0].tokens, v2[0].tokens);
+        assert_ne!(v1[0].tokens, v1[1].tokens);
+    }
+
+    #[test]
+    fn shard_partitions_rows() {
+        let ds = Dataset::synthetic(5_000, 256, 4);
+        let b = ds.train_batches(8, 16, 5).next_batch();
+        let shards = b.shard(4, 8, 16);
+        assert_eq!(shards.len(), 4);
+        let rejoined: Vec<i32> = shards.iter().flat_map(|s| s.tokens.clone()).collect();
+        assert_eq!(rejoined, b.tokens);
+    }
+}

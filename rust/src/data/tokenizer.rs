@@ -1,0 +1,45 @@
+//! Byte-level tokenizer: text files map 1:1 onto the 256-token vocabulary
+//! the artifacts are compiled with, so any local corpus can replace the
+//! synthetic one (`mxfp4-train train --data path/to/file.txt`).
+
+/// Vocabulary size of the byte tokenizer (matches model.GPTConfig.vocab).
+pub const VOCAB: usize = 256;
+
+/// Encode raw bytes as tokens.
+pub fn encode_bytes(bytes: &[u8]) -> Vec<i32> {
+    bytes.iter().map(|&b| b as i32).collect()
+}
+
+/// Encode a string.
+pub fn encode(text: &str) -> Vec<i32> {
+    encode_bytes(text.as_bytes())
+}
+
+/// Decode tokens back to (lossy-UTF-8) text.
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "Training LLMs with MXFP4!";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let text = "héllo wörld";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let toks = encode("abc\u{1F600}");
+        assert!(toks.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+}

@@ -1,0 +1,159 @@
+//! Downstream evaluation harness — the Table 3 substitute.
+//!
+//! The paper's Table 3 runs 5 zero-shot tasks (ARC/PiQA/BoolQ/Wino) on the
+//! 6.7B models. Offline we build the closest synthetic equivalent that
+//! exercises the same code path (logits artifact → per-option scoring →
+//! accuracy): a **next-token cloze suite** over held-out corpus text. Each
+//! item takes a real continuation and K-1 distractor tokens; the model
+//! "answers" by ranking the true continuation's log-probability. A random
+//! model scores 1/K; better language models score higher — same claim
+//! structure as Table 3 ("MXFP4★ matches BF16 before and after
+//! fine-tuning"), documented in DESIGN.md §3.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+use crate::runtime::Executor;
+
+/// One cloze item: a context window and K candidate next tokens
+/// (candidates[answer] is the true continuation).
+#[derive(Debug, Clone)]
+pub struct ClozeItem {
+    pub context: Vec<i32>,
+    pub candidates: Vec<i32>,
+    pub answer: usize,
+}
+
+/// Build `n` cloze items from the dataset's validation split.
+/// `seq` must match the logits artifact's sequence length.
+pub fn build_cloze_suite(ds: &Dataset, n: usize, seq: usize, k: usize, seed: u64) -> Vec<ClozeItem> {
+    let mut rng = Rng::seed(seed);
+    let window = seq + 1;
+    let max_start = ds.val.len().saturating_sub(window);
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let start = rng.below(max_start.max(1));
+        let w = &ds.val[start..start + window];
+        let truth = w[seq];
+        // distractors: random vocab tokens != truth
+        let mut candidates = vec![truth];
+        while candidates.len() < k {
+            let d = rng.below(ds.vocab) as i32;
+            if d != truth && !candidates.contains(&d) {
+                candidates.push(d);
+            }
+        }
+        // shuffle candidates, remember the answer slot
+        for i in (1..candidates.len()).rev() {
+            let j = rng.below(i + 1);
+            candidates.swap(i, j);
+        }
+        let answer = candidates.iter().position(|&c| c == truth).unwrap();
+        items.push(ClozeItem { context: w[..seq].to_vec(), candidates, answer });
+    }
+    items
+}
+
+/// Score the suite with a `logits` artifact: fraction of items where the
+/// true continuation outranks every distractor.
+pub fn cloze_accuracy(exe: &Executor, params: &[Vec<f32>], items: &[ClozeItem]) -> Result<f64> {
+    let a = &exe.artifact;
+    anyhow::ensure!(a.kind == "logits", "need a logits artifact");
+    let (b, t, v) = (a.batch, a.model.seq_len, a.model.vocab);
+    let mut correct = 0usize;
+    for chunk in items.chunks(b) {
+        // pack up to `b` contexts; pad by repeating the first
+        let mut tokens = Vec::with_capacity(b * t);
+        for i in 0..b {
+            let item = &chunk[i.min(chunk.len() - 1)];
+            anyhow::ensure!(item.context.len() == t, "context length mismatch");
+            tokens.extend_from_slice(&item.context);
+        }
+        let out = exe.logits(&tokens, params)?;
+        for (i, item) in chunk.iter().enumerate() {
+            // next-token logits at the last position of row i
+            let base = i * t * v + (t - 1) * v;
+            let row = &out.data[base..base + v];
+            let best = item
+                .candidates
+                .iter()
+                .enumerate()
+                .max_by(|(_, &x), (_, &y)| {
+                    row[x as usize].partial_cmp(&row[y as usize]).unwrap()
+                })
+                .map(|(j, _)| j)
+                .unwrap();
+            if best == item.answer {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// Greedy generation with the logits artifact (demo / smoke tool).
+/// Feeds back one token at a time inside a fixed-length window.
+pub fn generate_greedy(
+    exe: &Executor,
+    params: &[Vec<f32>],
+    prompt: &[i32],
+    n_new: usize,
+) -> Result<Vec<i32>> {
+    let a = &exe.artifact;
+    let (b, t, v) = (a.batch, a.model.seq_len, a.model.vocab);
+    let mut window: Vec<i32> = prompt.to_vec();
+    anyhow::ensure!(window.len() <= t, "prompt longer than context");
+    let mut out = Vec::with_capacity(n_new);
+    for _ in 0..n_new {
+        let pos = window.len() - 1;
+        let mut tokens = vec![0i32; b * t];
+        tokens[..window.len()].copy_from_slice(&window);
+        let logits = exe.logits(&tokens, params)?;
+        let row = &logits.data[pos * v..(pos + 1) * v];
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|(_, x), (_, y)| x.partial_cmp(y).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        out.push(next);
+        if window.len() == t {
+            window.remove(0);
+        }
+        window.push(next);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloze_suite_well_formed() {
+        let ds = Dataset::synthetic(50_000, 256, 1);
+        let items = build_cloze_suite(&ds, 32, 32, 4, 2);
+        assert_eq!(items.len(), 32);
+        for it in &items {
+            assert_eq!(it.context.len(), 32);
+            assert_eq!(it.candidates.len(), 4);
+            assert!(it.answer < 4);
+            // candidates unique
+            let mut c = it.candidates.clone();
+            c.sort_unstable();
+            c.dedup();
+            assert_eq!(c.len(), 4);
+        }
+    }
+
+    #[test]
+    fn cloze_suite_deterministic() {
+        let ds = Dataset::synthetic(50_000, 256, 1);
+        let a = build_cloze_suite(&ds, 8, 16, 4, 3);
+        let b = build_cloze_suite(&ds, 8, 16, 4, 3);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].context, b[0].context);
+        assert_eq!(a[0].candidates, b[0].candidates);
+    }
+}

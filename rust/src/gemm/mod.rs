@@ -1,0 +1,282 @@
+//! GEMM substrates: blocked f32 matmul + the emulated MXFP4 GEMM
+//! (Algorithm 3's `MXFP4_GEMM`) used by the Fig. 2 variance study and the
+//! Table 5 / §4.2 overhead benches.
+//!
+//! Matrices are row-major `Mat { rows, cols, data }`. The MX GEMM groups
+//! both operands along the reduction dimension k (A by rows, B via its
+//! transpose), quantizes with Algorithm 1 or 2, multiplies in f32
+//! accumulation, and applies the 16/9 rescale for SR — mirroring
+//! `ref.mx_matmul` semantics.
+
+use crate::hadamard;
+use crate::mx::quant;
+use crate::rng::Rng;
+
+/// Row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn gaussian(rows: usize, cols: usize, sigma: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    /// Gaussian with a proportion `p` of outliers at `outlier_sigma` —
+    /// the Fig. 2 input distribution N(0,I) + Bernoulli(p)·N(0, s·I).
+    pub fn gaussian_outliers(
+        rows: usize,
+        cols: usize,
+        p: f64,
+        outlier_sigma: f32,
+        rng: &mut Rng,
+    ) -> Mat {
+        let mut m = Mat::gaussian(rows, cols, 1.0, rng);
+        for v in &mut m.data {
+            if (rng.uniform() as f64) < p {
+                *v = rng.normal() * outlier_sigma;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt()
+    }
+}
+
+/// C = A @ B, threaded f32 GEMM. B is taken *transposed*
+/// (bt: (n, k) for B: (k, n)) so both inner loops stream contiguously.
+pub fn matmul_bt(a: &Mat, bt: &Mat, workers: usize) -> Mat {
+    assert_eq!(a.cols, bt.cols, "reduction dims differ");
+    let (m, n, k) = (a.rows, bt.rows, a.cols);
+    let mut c = Mat::zeros(m, n);
+    let workers = workers.max(1).min(m.max(1));
+    let rows_per = m.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (wi, out_rows) in c.data.chunks_mut(rows_per * n).enumerate() {
+            let a = &a;
+            let bt = &bt;
+            s.spawn(move || {
+                let row0 = wi * rows_per;
+                for (ri, crow) in out_rows.chunks_mut(n).enumerate() {
+                    let arow = a.row(row0 + ri);
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        let brow = bt.row(j);
+                        let mut acc = 0.0f32;
+                        for kk in 0..k {
+                            acc += arow[kk] * brow[kk];
+                        }
+                        *cv = acc;
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Plain C = A @ B (transposes B internally).
+pub fn matmul(a: &Mat, b: &Mat, workers: usize) -> Mat {
+    matmul_bt(a, &b.transpose(), workers)
+}
+
+/// MX GEMM mode — mirrors `ref.MX_MODES`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MxMode {
+    Exact,
+    Nr,
+    Sr,
+    Rht,
+    RhtSr,
+}
+
+impl MxMode {
+    pub fn parse(s: &str) -> Option<MxMode> {
+        Some(match s {
+            "exact" => MxMode::Exact,
+            "nr" => MxMode::Nr,
+            "sr" => MxMode::Sr,
+            "rht" => MxMode::Rht,
+            "rht_sr" => MxMode::RhtSr,
+            _ => return None,
+        })
+    }
+    pub fn uses_rht(self) -> bool {
+        matches!(self, MxMode::Rht | MxMode::RhtSr)
+    }
+    pub fn uses_sr(self) -> bool {
+        matches!(self, MxMode::Sr | MxMode::RhtSr)
+    }
+}
+
+/// Emulated MXFP4 GEMM: C = A @ B with operands quantized along k.
+/// `g` is the RHT block size; `rng` drives SR dither + the sign vector.
+pub fn mx_matmul(a: &Mat, b: &Mat, mode: MxMode, g: usize, rng: &mut Rng, workers: usize) -> Mat {
+    if mode == MxMode::Exact {
+        return matmul(a, b, workers);
+    }
+    let mut qa = a.clone();
+    let mut qbt = b.transpose();
+    if mode.uses_rht() {
+        assert_eq!(a.cols % g, 0, "k {} not a multiple of g {g}", a.cols);
+        let sign = hadamard::sample_sign(g, rng);
+        hadamard::rht_blockwise_dense(&mut qa.data, &sign, workers);
+        hadamard::rht_blockwise_dense(&mut qbt.data, &sign, workers);
+    }
+    if mode.uses_sr() {
+        quant::qdq_sr(&mut qa.data, rng);
+        quant::qdq_sr(&mut qbt.data, rng);
+    } else {
+        quant::qdq_nr(&mut qa.data);
+        quant::qdq_nr(&mut qbt.data);
+    }
+    let mut c = matmul_bt(&qa, &qbt, workers);
+    if mode.uses_sr() {
+        for v in &mut c.data {
+            *v *= quant::GEMM_RESCALE;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Mat { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+        let b = Mat { rows: 2, cols: 2, data: vec![1.0, 1.0, 1.0, 1.0] };
+        let c = matmul(&a, &b, 1);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_threaded_matches_single() {
+        let mut rng = Rng::seed(1);
+        let a = Mat::gaussian(37, 64, 1.0, &mut rng);
+        let b = Mat::gaussian(64, 29, 1.0, &mut rng);
+        let c1 = matmul(&a, &b, 1);
+        let c4 = matmul(&a, &b, 4);
+        assert_eq!(c1.data, c4.data);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed(2);
+        let a = Mat::gaussian(13, 7, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn mx_matmul_exact_mode_is_plain() {
+        let mut rng = Rng::seed(3);
+        let a = Mat::gaussian(8, 64, 1.0, &mut rng);
+        let b = Mat::gaussian(64, 8, 1.0, &mut rng);
+        let c1 = matmul(&a, &b, 1);
+        let c2 = mx_matmul(&a, &b, MxMode::Exact, 64, &mut Rng::seed(9), 1);
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn mx_matmul_nr_close_to_exact() {
+        let mut rng = Rng::seed(4);
+        let a = Mat::gaussian(16, 128, 1.0, &mut rng);
+        let b = Mat::gaussian(128, 16, 1.0, &mut rng);
+        let exact = matmul(&a, &b, 1);
+        let q = mx_matmul(&a, &b, MxMode::Nr, 64, &mut Rng::seed(5), 1);
+        let num: f64 =
+            exact.data.iter().zip(&q.data).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let rel = (num.sqrt()) / exact.frob_norm();
+        assert!(rel < 0.5, "rel {rel}"); // 4-bit: ~0.17 typical
+        assert!(rel > 0.01, "suspiciously exact: {rel}");
+    }
+
+    #[test]
+    fn mx_matmul_sr_unbiased() {
+        // Lemma 3.1 in rust: mean over repeated SR GEMMs approaches exact.
+        let mut rng = Rng::seed(6);
+        let a = Mat::gaussian(2, 64, 1.0, &mut rng);
+        let b = Mat::gaussian(64, 2, 1.0, &mut rng);
+        let exact = matmul(&a, &b, 1);
+        let trials = 800;
+        let mut mean = vec![0.0f64; 4];
+        for t in 0..trials {
+            let c = mx_matmul(&a, &b, MxMode::Sr, 64, &mut Rng::seed(100 + t), 1);
+            for (m, &v) in mean.iter_mut().zip(&c.data) {
+                *m += v as f64;
+            }
+        }
+        for (m, &e) in mean.iter().zip(&exact.data) {
+            let est = m / trials as f64;
+            assert!((est - e as f64).abs() < 0.30, "est {est} want {e}");
+        }
+    }
+
+    #[test]
+    fn mx_matmul_rht_sr_lower_variance_with_outliers() {
+        // Theorem 3.2's practical content, on one fixed operand pair.
+        let mut rng = Rng::seed(7);
+        let a = Mat::gaussian_outliers(1, 512, 0.02, 5.0, &mut rng);
+        let b = Mat::gaussian_outliers(512, 1, 0.02, 5.0, &mut rng);
+        let var = |mode: MxMode| {
+            let trials = 300;
+            let vals: Vec<f64> = (0..trials)
+                .map(|t| mx_matmul(&a, &b, mode, 32, &mut Rng::seed(500 + t), 1).data[0] as f64)
+                .collect();
+            let mean = vals.iter().sum::<f64>() / trials as f64;
+            vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / trials as f64
+        };
+        let v_sr = var(MxMode::Sr);
+        let v_rht_sr = var(MxMode::RhtSr);
+        assert!(v_rht_sr < v_sr, "rht_sr {v_rht_sr} vs sr {v_sr}");
+    }
+
+    #[test]
+    fn gaussian_outliers_density() {
+        let mut rng = Rng::seed(8);
+        let m = Mat::gaussian_outliers(64, 512, 0.05, 5.0, &mut rng);
+        let big = m.data.iter().filter(|v| v.abs() > 4.0).count() as f64 / m.data.len() as f64;
+        // ~5% outliers at sigma=5 -> a visible fraction above 4
+        assert!(big > 0.005, "big frac {big}");
+    }
+}

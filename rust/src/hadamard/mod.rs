@@ -1,0 +1,253 @@
+//! Random Hadamard transform (§3.2): dense blockwise operator + O(n log n)
+//! FWHT, with the paper's two application styles (Table 5 compares them).
+//!
+//! The blockwise RHT views a matrix as (N/g, g) rows and multiplies each
+//! g-chunk by `diag(S) · H_g` with a single shared sign vector S — exactly
+//! Algorithm 3 lines 3-6. `H_g` is the orthonormal Sylvester matrix
+//! (1/sqrt(g) scaling), so the transform cancels inside a GEMM:
+//! (HSa)·(HSb) = a·b.
+
+use crate::rng::Rng;
+use crate::util::threadpool;
+
+/// Orthonormal Sylvester Hadamard matrix H_g, row-major (g power of two).
+pub fn dense_hadamard(g: usize) -> Vec<f32> {
+    assert!(g.is_power_of_two(), "g = {g} must be a power of two");
+    let mut h = vec![0.0f32; g * g];
+    h[0] = 1.0;
+    let mut n = 1;
+    while n < g {
+        // block-double: [[h, h], [h, -h]]
+        for r in 0..n {
+            for c in 0..n {
+                let v = h[r * g + c];
+                h[r * g + (c + n)] = v;
+                h[(r + n) * g + c] = v;
+                h[(r + n) * g + (c + n)] = -v;
+            }
+        }
+        n *= 2;
+    }
+    let norm = 1.0 / (g as f32).sqrt();
+    for v in &mut h {
+        *v *= norm;
+    }
+    h
+}
+
+/// The RHT operator M = diag(S) @ H_g (row i of H scaled by S[i]).
+pub fn rht_operator(sign: &[f32]) -> Vec<f32> {
+    let g = sign.len();
+    let mut m = dense_hadamard(g);
+    for (r, &s) in sign.iter().enumerate() {
+        for c in 0..g {
+            m[r * g + c] *= s;
+        }
+    }
+    m
+}
+
+/// Sample a Rademacher sign vector of length g.
+pub fn sample_sign(g: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut s = vec![0.0; g];
+    rng.fill_sign(&mut s);
+    s
+}
+
+/// In-place fast Walsh-Hadamard transform of one g-length chunk
+/// (orthonormal scaling). O(g log g) — the HadaCore-style alternative the
+/// paper benchmarks at g = 1024.
+pub fn fwht(chunk: &mut [f32]) {
+    let g = chunk.len();
+    assert!(g.is_power_of_two());
+    let mut h = 1;
+    while h < g {
+        for i in (0..g).step_by(h * 2) {
+            for j in i..i + h {
+                let (x, y) = (chunk[j], chunk[j + h]);
+                chunk[j] = x + y;
+                chunk[j + h] = x - y;
+            }
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (g as f32).sqrt();
+    for v in chunk {
+        *v *= norm;
+    }
+}
+
+/// Blockwise RHT over a flat buffer viewed as (len/g, g), using the dense
+/// operator (memory-bound for g <= 256, per §3.2). `workers` threads.
+pub fn rht_blockwise_dense(data: &mut [f32], sign: &[f32], workers: usize) {
+    let g = sign.len();
+    assert_eq!(data.len() % g, 0, "len {} not a multiple of g {}", data.len(), g);
+    let m = rht_operator(sign);
+    threadpool::scope_chunks(data, workers, g, |_, chunk| {
+        let mut tmp = vec![0.0f32; g];
+        for row in chunk.chunks_mut(g) {
+            // tmp = row @ M  (row vector times operator)
+            for t in tmp.iter_mut() {
+                *t = 0.0;
+            }
+            for (k, &rv) in row.iter().enumerate() {
+                if rv != 0.0 {
+                    let mrow = &m[k * g..(k + 1) * g];
+                    for (t, &mv) in tmp.iter_mut().zip(mrow) {
+                        *t += rv * mv;
+                    }
+                }
+            }
+            row.copy_from_slice(&tmp);
+        }
+    });
+}
+
+/// Blockwise RHT via sign-then-FWHT (mathematically identical to the dense
+/// operator: (x * S) @ H). O(n log g) — Table 5's "O(n log n)" row.
+pub fn rht_blockwise_fwht(data: &mut [f32], sign: &[f32], workers: usize) {
+    let g = sign.len();
+    assert_eq!(data.len() % g, 0);
+    threadpool::scope_chunks(data, workers, g, |_, chunk| {
+        for row in chunk.chunks_mut(g) {
+            for (v, &s) in row.iter_mut().zip(sign) {
+                *v *= s;
+            }
+            fwht(row);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn dense_hadamard_orthonormal() {
+        for g in [2usize, 8, 32, 64, 128] {
+            let h = dense_hadamard(g);
+            for r in 0..g {
+                for c in 0..g {
+                    let dot: f32 = (0..g).map(|k| h[r * g + k] * h[c * g + k]).sum();
+                    let want = if r == c { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-5, "g {g} ({r},{c}) {dot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn operator_is_orthogonal() {
+        let sign = sample_sign(64, &mut Rng::seed(1));
+        let m = rht_operator(&sign);
+        let g = 64;
+        for r in 0..g {
+            for c in 0..g {
+                let dot: f32 = (0..g).map(|k| m[r * g + k] * m[c * g + k]).sum();
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_matches_dense() {
+        let g = 128;
+        let mut rng = Rng::seed(2);
+        let mut x = vec![0.0f32; g];
+        rng.fill_normal(&mut x, 1.0);
+        let h = dense_hadamard(g);
+        // dense: y = x @ H (H symmetric, so also H @ x)
+        let mut want = vec![0.0f32; g];
+        for (k, &xv) in x.iter().enumerate() {
+            for (w, &hv) in want.iter_mut().zip(&h[k * g..(k + 1) * g]) {
+                *w += xv * hv;
+            }
+        }
+        let mut got = x.clone();
+        fwht(&mut got);
+        assert!(max_abs_diff(&got, &want) < 1e-4);
+    }
+
+    #[test]
+    fn dense_and_fwht_paths_agree() {
+        let g = 64;
+        let mut rng = Rng::seed(3);
+        let sign = sample_sign(g, &mut rng);
+        let mut a = vec![0.0f32; g * 10];
+        rng.fill_normal(&mut a, 2.0);
+        let mut b = a.clone();
+        rht_blockwise_dense(&mut a, &sign, 2);
+        rht_blockwise_fwht(&mut b, &sign, 2);
+        assert!(max_abs_diff(&a, &b) < 1e-4);
+    }
+
+    #[test]
+    fn rht_preserves_norm() {
+        let g = 64;
+        let mut rng = Rng::seed(4);
+        let sign = sample_sign(g, &mut rng);
+        let mut x = vec![0.0f32; g * 8];
+        rng.fill_normal(&mut x, 1.5);
+        let norm0: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        rht_blockwise_dense(&mut x, &sign, 1);
+        let norm1: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((norm0 - norm1).abs() / norm0 < 1e-5);
+    }
+
+    #[test]
+    fn rht_cancels_in_dot_product() {
+        // (HSa)·(HSb) == a·b
+        let g = 32;
+        let mut rng = Rng::seed(5);
+        let sign = sample_sign(g, &mut rng);
+        let mut a = vec![0.0f32; g * 4];
+        let mut b = vec![0.0f32; g * 4];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let want: f64 = a.iter().zip(&b).map(|(x, y)| (x * y) as f64).sum();
+        rht_blockwise_dense(&mut a, &sign, 1);
+        rht_blockwise_dense(&mut b, &sign, 1);
+        let got: f64 = a.iter().zip(&b).map(|(x, y)| (x * y) as f64).sum();
+        assert!((want - got).abs() < 1e-3 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn rht_concentrates_a_spike() {
+        // Eq. 5: a single outlier spreads to magnitude ~ ||x|| / sqrt(g)
+        let g = 128;
+        let sign = sample_sign(g, &mut Rng::seed(6));
+        let mut x = vec![0.0f32; g];
+        x[17] = 10.0;
+        rht_blockwise_dense(&mut x, &sign, 1);
+        let max = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert!((max - 10.0 / (g as f32).sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn involution_via_transpose() {
+        // M is orthogonal: applying M then M^T restores the input.
+        let g = 32;
+        let mut rng = Rng::seed(7);
+        let sign = sample_sign(g, &mut rng);
+        let mut x = vec![0.0f32; g * 3];
+        rng.fill_normal(&mut x, 1.0);
+        let orig = x.clone();
+        // y = x@M; then y@M^T = x. M^T = H^T diag(S) = H diag(S) (H symmetric);
+        // i.e. FWHT then multiply by sign.
+        rht_blockwise_dense(&mut x, &sign, 1);
+        threadpool::scope_chunks(&mut x, 1, g, |_, chunk| {
+            for row in chunk.chunks_mut(g) {
+                fwht(row);
+                for (v, &s) in row.iter_mut().zip(&sign) {
+                    *v *= s;
+                }
+            }
+        });
+        assert!(max_abs_diff(&x, &orig) < 1e-4);
+    }
+}

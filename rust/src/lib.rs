@@ -1,0 +1,34 @@
+//! # mxfp4-train
+//!
+//! Reproduction of **"Training LLMs with MXFP4"** (Tseng, Yu, Park —
+//! AISTATS 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels for MXFP4
+//!   quantization (Algorithms 1 & 2) and the blockwise random Hadamard
+//!   transform, AOT-lowered into the model HLO.
+//! * **L2** (`python/compile/model.py`): a GPT decoder whose linear
+//!   layers compute their backward GEMMs through the paper's
+//!   RHT + stochastic-rounding MXFP4 pipeline.
+//! * **L3** (this crate): the training coordinator — PJRT runtime for the
+//!   AOT artifacts, data pipeline, AdamW + schedules, simulated
+//!   data-parallelism with gradient all-reduce, metrics, checkpoints —
+//!   plus bit-accurate rust substrates (`mx`, `hadamard`, `gemm`) that
+//!   power the paper's variance study (Fig. 2) and overhead/throughput
+//!   benches (Table 5, §4.2) and a roofline `perfmodel`.
+//!
+//! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
+//! measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod gemm;
+pub mod hadamard;
+pub mod mx;
+pub mod optim;
+pub mod perfmodel;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,268 @@
+//! `mxfp4-train` — the leader binary.
+//!
+//! Subcommands:
+//!   train       train a GPT with a chosen precision recipe
+//!   sweep       run the Table 2 / Table 4 recipe sweeps
+//!   eval        validation perplexity + cloze accuracy for a checkpoint
+//!   generate    greedy generation demo from a checkpoint
+//!   variance    Fig. 2 variance study (rust substrates)
+//!   table5      roofline throughput table (perfmodel)
+//!   formats     print Table 1 (FP datatype zoo)
+//!   artifacts   list discovered AOT artifacts
+//!
+//! Run `mxfp4-train <cmd> --help-keys` for per-command options.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use mxfp4_train::config::TrainConfig;
+use mxfp4_train::coordinator::Trainer;
+use mxfp4_train::data::Dataset;
+use mxfp4_train::runtime::{executor, Executor, Registry};
+use mxfp4_train::util::cli::Args;
+use mxfp4_train::{eval, gemm, hadamard, info, mx, perfmodel, rng::Rng};
+
+fn main() -> Result<()> {
+    mxfp4_train::util::log::level_from_env();
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("variance") => cmd_variance(&args),
+        Some("table5") => cmd_table5(&args),
+        Some("formats") => cmd_formats(),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            eprintln!(
+                "usage: mxfp4-train <train|sweep|eval|generate|variance|table5|formats|artifacts> [--key value ...]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn registry(args: &Args) -> Result<Registry> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(mxfp4_train::runtime::default_artifacts_dir);
+    Registry::open(&dir).map_err(anyhow::Error::msg)
+}
+
+fn dataset(args: &Args, seed: u64) -> Result<Dataset> {
+    match args.get("data") {
+        Some(path) => {
+            info!("loading byte-level dataset from {path}");
+            Ok(Dataset::from_text_file(std::path::Path::new(path))?)
+        }
+        None => {
+            let tokens = args.get_usize("corpus-tokens", 2_000_000);
+            Ok(Dataset::synthetic(tokens, 256, seed ^ 0xC0_0905))
+        }
+    }
+}
+
+fn results_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("results", "results"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig::preset(args.get_or("config", "tiny"));
+    cfg.apply_cli(args);
+    let reg = registry(args)?;
+    let ds = dataset(args, cfg.seed)?;
+    let rd = results_dir(args);
+    let mut trainer = Trainer::new(&reg, cfg, ds, Some(&rd))?;
+    let summary = trainer.run()?;
+    if args.has("save") || args.get("checkpoint-dir").is_some() {
+        let dir = PathBuf::from(args.get_or("checkpoint-dir", "results"))
+            .join(&summary.run_name)
+            .join("ckpt");
+        trainer.save_checkpoint(&dir)?;
+        info!("checkpoint -> {}", dir.display());
+    }
+    println!(
+        "{}: {} steps, {} tokens, train loss {:.4}, val loss {:.4} (ppl {:.2}) in {:.1}s",
+        summary.run_name,
+        summary.steps,
+        summary.tokens,
+        summary.final_train_loss,
+        summary.final_val_loss,
+        (summary.final_val_loss as f64).exp(),
+        summary.total_secs
+    );
+    Ok(())
+}
+
+/// Recipe sweeps: `--sweep recipes` (Table 2 / Figs 3-6) or
+/// `--sweep blocksize` (Table 4).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let which = args.get_or("sweep", "recipes");
+    let recipes: Vec<&str> = match which {
+        "recipes" => vec!["bf16", "mxfp4", "mxfp4_sr", "mxfp4_rht", "mxfp4_rht_sr"],
+        "blocksize" => {
+            vec!["mxfp4_rht_sr_g32", "mxfp4_rht_sr", "mxfp4_rht_sr_g128"]
+        }
+        other => anyhow::bail!("unknown sweep {other:?} (recipes|blocksize)"),
+    };
+    let reg = registry(args)?;
+    let rd = results_dir(args);
+    let mut rows = Vec::new();
+    for recipe in recipes {
+        let mut cfg = TrainConfig::preset(args.get_or("config", "tiny"));
+        cfg.apply_cli(args);
+        cfg.recipe = recipe.to_string();
+        if reg.find(&cfg.config, recipe, "train").is_none() {
+            info!("skipping {recipe}: no artifact for config {}", cfg.config);
+            continue;
+        }
+        let ds = dataset(args, cfg.seed)?;
+        let mut trainer = Trainer::new(&reg, cfg, ds, Some(&rd))?;
+        let s = trainer.run()?;
+        rows.push(s);
+    }
+    println!("\n=== sweep: {which} (Table {} analogue) ===", if which == "recipes" { "2" } else { "4" });
+    println!("{:<28} {:>10} {:>12} {:>10} {:>10}", "run", "steps", "train loss", "val loss", "val ppl");
+    for s in &rows {
+        println!(
+            "{:<28} {:>10} {:>12.4} {:>10.4} {:>10.2}",
+            s.run_name,
+            s.steps,
+            s.final_train_loss,
+            s.final_val_loss,
+            (s.final_val_loss as f64).exp()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    let config = args.get_or("config", "tiny");
+    let fwd = args.get_or("fwd", "bf16");
+    let ckpt = args.get("checkpoint").context("--checkpoint <master.mxck> required")?;
+    let ds = dataset(args, 1)?;
+
+    let ev = reg.find_fwd(config, fwd, "eval").context("no eval artifact")?;
+    let lg = reg.find_fwd(config, fwd, "logits").context("no logits artifact")?;
+    let exe_e = Executor::compile_cpu(ev)?;
+    let exe_l = Executor::compile_cpu(lg)?;
+
+    let (_names, mut params) = mxfp4_train::coordinator::checkpoint::load(std::path::Path::new(ckpt))?;
+    for t in &mut params {
+        for v in t.iter_mut() {
+            *v = mx::bf16::qdq(*v);
+        }
+    }
+
+    let batches = ds.val_batches(ev.batch, ev.model.seq_len, args.get_usize("eval-batches", 8));
+    let mut total = 0.0;
+    for b in &batches {
+        total += exe_e.eval_step(&b.tokens, &b.labels, &params)? as f64;
+    }
+    let loss = total / batches.len() as f64;
+    let items = eval::build_cloze_suite(&ds, args.get_usize("cloze-items", 128), lg.model.seq_len, 4, 99);
+    let acc = eval::cloze_accuracy(&exe_l, &params, &items)?;
+    println!("val loss {loss:.4} (ppl {:.2}); cloze@4 accuracy {:.3} (chance 0.25)", loss.exp(), acc);
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    let config = args.get_or("config", "tiny");
+    let ckpt = args.get("checkpoint").context("--checkpoint <master.mxck> required")?;
+    let lg = reg.find_fwd(config, "bf16", "logits").context("no logits artifact")?;
+    let exe = Executor::compile_cpu(lg)?;
+    let (_names, params) = mxfp4_train::coordinator::checkpoint::load(std::path::Path::new(ckpt))?;
+    let ds = dataset(args, 1)?;
+    let prompt: Vec<i32> = ds.val[..16].to_vec();
+    let out = eval::generate_greedy(&exe, &params, &prompt, args.get_usize("tokens", 32))?;
+    println!("prompt tokens: {prompt:?}");
+    println!("generated:     {out:?}");
+    Ok(())
+}
+
+/// Fig. 2: mean variance of Q(A)^T Q(B) with and without the RHT.
+fn cmd_variance(args: &Args) -> Result<()> {
+    let samples = args.get_usize("samples", 512);
+    let p = args.get_f32("outliers", 0.01) as f64;
+    println!("Fig. 2: SR-GEMM variance, {} samples/point, outlier p = {p}", samples);
+    println!("{:>6} {:>16} {:>16} {:>8}", "b", "var (no RHT)", "var (RHT)", "ratio");
+    for b in [64usize, 128, 256, 512, 1024, 2048, 4096] {
+        let (v_plain, v_rht) = variance_point(b, p, samples, 0);
+        println!("{b:>6} {v_plain:>16.6} {v_rht:>16.6} {:>8.2}", v_plain / v_rht.max(1e-12));
+    }
+    Ok(())
+}
+
+/// One Fig. 2 data point: SR-GEMM output variance across dither draws,
+/// averaged over operand samples.
+fn variance_point(b: usize, p: f64, samples: usize, seed: u64) -> (f64, f64) {
+    let trials = 24; // SR draws per operand pair
+    let mut rng = Rng::seed(seed ^ b as u64);
+    let mut sum_plain = 0.0;
+    let mut sum_rht = 0.0;
+    for s in 0..samples {
+        let a = gemm::Mat::gaussian_outliers(1, b, p, 5.0, &mut rng);
+        let bb = gemm::Mat::gaussian_outliers(b, 1, p, 5.0, &mut rng);
+        for (mode, acc) in
+            [(gemm::MxMode::Sr, &mut sum_plain), (gemm::MxMode::RhtSr, &mut sum_rht)]
+        {
+            let vals: Vec<f64> = (0..trials)
+                .map(|t| {
+                    gemm::mx_matmul(&a, &bb, mode, 32, &mut Rng::seed((s * 1000 + t) as u64), 1)
+                        .data[0] as f64
+                })
+                .collect();
+            let mean = vals.iter().sum::<f64>() / trials as f64;
+            *acc += vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (trials - 1) as f64;
+        }
+    }
+    (sum_plain / samples as f64, sum_rht / samples as f64)
+}
+
+fn cmd_table5(args: &Args) -> Result<()> {
+    let hw = match args.get_or("hw", "A100") {
+        "B200" => perfmodel::B200,
+        _ => perfmodel::A100,
+    };
+    let layer = perfmodel::LLAMA2_70B_LAYER;
+    println!("Table 5 (modeled, {}): Llama-2-70B decoder layer, FP16 forward", hw.name);
+    println!("{:<28} {:>12} {:>12}", "BW pass", "E2E tok/s", "BW tok/s");
+    for cfg in perfmodel::table5_configs() {
+        let (label, e2e, bw) = perfmodel::table5_row(&hw, &layer, &cfg);
+        println!("{label:<28} {e2e:>12.0} {bw:>12.0}");
+    }
+    let (vs8, vs16) = perfmodel::headline_speedups(&hw, &layer);
+    println!("\nheadline (backward pass): {vs8:.2}x vs 8-bit, {vs16:.2}x vs 16-bit");
+    Ok(())
+}
+
+fn cmd_formats() -> Result<()> {
+    println!("Table 1: common HW-supported FP datatypes");
+    println!("{:<10} {:>6} {:>5} {:>9} {:>9}", "name", "bits", "sign", "exponent", "mantissa");
+    for (name, total, s, e, m) in mx::format_table() {
+        println!("{name:<10} {total:>6} {s:>5} {e:>9} {m:>9}");
+    }
+    println!("\nFP4 (E2M1) grid: {:?}", mx::fp4::FP4_GRID);
+    println!("MXFP4: 32-element blocks, E8M0 shared scale, 4.25 bits/elem");
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    println!("{:<40} {:>8} {:>8} {:>12} {:>8}", "artifact", "kind", "batch", "params", "recipe");
+    for a in &reg.artifacts {
+        println!(
+            "{:<40} {:>8} {:>8} {:>12} {:>8}",
+            a.name, a.kind, a.batch, a.param_count, a.recipe.bwd_mode
+        );
+    }
+    // silence unused warnings for modules used only by some commands
+    let _ = hadamard::dense_hadamard(2);
+    let _ = executor::dtype_name(mxfp4_train::runtime::DType::F32);
+    Ok(())
+}

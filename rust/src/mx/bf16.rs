@@ -1,0 +1,95 @@
+//! BF16 (1/8/7) emulation: round-to-nearest-even truncation of f32.
+//!
+//! Used for the mixed-precision forward-path emulation, the optimizer's
+//! BF16 parameter copies (with optional stochastic rounding, per the
+//! Collage-style update-preservation discussed in §2.4), and Table 1.
+
+/// Round f32 to the nearest BF16, ties-to-even, returned as f32.
+#[inline]
+pub fn qdq(x: f32) -> f32 {
+    f32::from_bits(round_bits(x.to_bits()))
+}
+
+#[inline]
+fn round_bits(bits: u32) -> u32 {
+    // round-to-nearest-even on the low 16 bits
+    let round_bias = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round_bias)) & 0xFFFF_0000
+}
+
+/// Encode to the 16-bit container.
+#[inline]
+pub fn encode(x: f32) -> u16 {
+    (round_bits(x.to_bits()) >> 16) as u16
+}
+
+/// Decode from the 16-bit container.
+#[inline]
+pub fn decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Stochastically round f32 to BF16 given dither u in [0, 1): preserves
+/// tiny updates in expectation (§2.4's late-training argument).
+#[inline]
+pub fn qdq_stochastic(x: f32, u: f32) -> f32 {
+    let bits = x.to_bits();
+    let low = bits & 0xFFFF;
+    let floor = f32::from_bits(bits & 0xFFFF_0000);
+    if low == 0 || !x.is_finite() {
+        return x;
+    }
+    let p = low as f32 / 65536.0;
+    if u < p {
+        // next representable BF16 away from zero
+        f32::from_bits((bits & 0xFFFF_0000).wrapping_add(0x1_0000))
+    } else {
+        floor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_bf16_values() {
+        for x in [1.0f32, 0.5, -2.0, 3.140625, 0.0, -0.0] {
+            assert_eq!(qdq(x), x);
+        }
+    }
+
+    #[test]
+    fn rounds_to_7_bit_mantissa() {
+        let x = 1.0 + 1.0 / 256.0; // needs 8 mantissa bits
+        let q = qdq(x);
+        assert!(q == 1.0 || q == 1.0 + 1.0 / 128.0);
+        // ties-to-even: 1 + 1/256 is exactly between 1.0 and 1+1/128
+        assert_eq!(q, 1.0);
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let mut rng = crate::rng::Rng::seed(1);
+        for _ in 0..1000 {
+            let x = rng.normal() * 100.0;
+            let q = qdq(x);
+            assert_eq!(decode(encode(x)), q);
+            // relative error bounded by 2^-8
+            if x != 0.0 {
+                assert!(((q - x) / x).abs() < 1.0 / 256.0 + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_unbiased() {
+        let x = 1.0 + 1.0 / 512.0; // 1/4 of the way between bf16 neighbors
+        let n = 200_000;
+        let mut rng = crate::rng::Rng::seed(2);
+        let mean: f64 =
+            (0..n).map(|_| qdq_stochastic(x, rng.uniform()) as f64).sum::<f64>() / n as f64;
+        // SEM at n = 200k is ~8e-6; allow 5 sigma
+        assert!((mean - x as f64).abs() < 4e-5, "mean {mean}");
+    }
+}

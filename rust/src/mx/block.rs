@@ -1,0 +1,217 @@
+//! Packed MX containers: the true 4.25-bit-per-element storage format.
+//!
+//! `MxBlock` packs 32 FP4 codes into 16 bytes + an i16 shared exponent
+//! (E8M0 semantics). `MxVec` is a contiguous run of blocks with exact
+//! memory accounting — used by the rust-side MX GEMM (Fig. 2 / Table 5
+//! benches) and by property tests that the packed path decodes to exactly
+//! the qdq values.
+
+use super::fp4;
+use super::quant::{MX_BLOCK, PRESCALE};
+use super::scale;
+use crate::rng::Rng;
+
+/// One MX group: 32 FP4 elements sharing a power-of-two scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MxBlock {
+    /// Shared exponent e (scale = 2^e), E8M0-range.
+    pub exp: i16,
+    /// 32 nibbles, element i in byte i/2 (low nibble first).
+    pub codes: [u8; 16],
+}
+
+impl MxBlock {
+    /// Quantize 32 f32s with Algorithm 1 (nearest rounding).
+    pub fn quantize_nr(v: &[f32]) -> MxBlock {
+        assert_eq!(v.len(), MX_BLOCK);
+        let e = scale::shared_exp(v);
+        let x = scale::exact_pow2(e);
+        let mut codes = [0u8; 16];
+        for (i, &val) in v.iter().enumerate() {
+            let q = fp4::nearest((val / x).clamp(-8.0, 8.0));
+            set_nibble(&mut codes, i, fp4::encode(q));
+        }
+        MxBlock { exp: e as i16, codes }
+    }
+
+    /// Quantize with Algorithm 2 (3/4 pre-scale + SR). The decoded block
+    /// estimates (3/4)·v.
+    pub fn quantize_sr(v: &[f32], rng: &mut Rng) -> MxBlock {
+        assert_eq!(v.len(), MX_BLOCK);
+        let e = scale::shared_exp(v);
+        let x = scale::exact_pow2(e);
+        let mut codes = [0u8; 16];
+        for (i, &val) in v.iter().enumerate() {
+            let q = fp4::stochastic(val / x * PRESCALE, rng.uniform());
+            set_nibble(&mut codes, i, fp4::encode(q));
+        }
+        MxBlock { exp: e as i16, codes }
+    }
+
+    /// Decode element i.
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        fp4::decode(get_nibble(&self.codes, i)) * scale::exact_pow2(self.exp as i32)
+    }
+
+    /// Decode all 32 elements into `out`.
+    pub fn dequantize(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), MX_BLOCK);
+        let x = scale::exact_pow2(self.exp as i32);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = fp4::decode(get_nibble(&self.codes, i)) * x;
+        }
+    }
+
+    /// Dot product of two packed blocks in f32 accumulation — the inner
+    /// loop of the MX GEMM. (Real HW does this in the tensor core; here it
+    /// documents the exact semantics.)
+    pub fn dot(&self, other: &MxBlock) -> f32 {
+        let xa = scale::exact_pow2(self.exp as i32);
+        let xb = scale::exact_pow2(other.exp as i32);
+        let mut acc = 0.0f32;
+        for i in 0..MX_BLOCK {
+            acc += fp4::decode(get_nibble(&self.codes, i)) * fp4::decode(get_nibble(&other.codes, i));
+        }
+        acc * xa * xb
+    }
+}
+
+#[inline]
+fn set_nibble(codes: &mut [u8; 16], i: usize, v: u8) {
+    let b = i / 2;
+    if i % 2 == 0 {
+        codes[b] = (codes[b] & 0xF0) | (v & 0x0F);
+    } else {
+        codes[b] = (codes[b] & 0x0F) | (v << 4);
+    }
+}
+
+#[inline]
+fn get_nibble(codes: &[u8; 16], i: usize) -> u8 {
+    let b = codes[i / 2];
+    if i % 2 == 0 {
+        b & 0x0F
+    } else {
+        b >> 4
+    }
+}
+
+/// A packed MX vector: ceil(n/32) blocks.
+#[derive(Debug, Clone)]
+pub struct MxVec {
+    pub len: usize,
+    pub blocks: Vec<MxBlock>,
+}
+
+impl MxVec {
+    pub fn quantize_nr(v: &[f32]) -> MxVec {
+        assert_eq!(v.len() % MX_BLOCK, 0);
+        MxVec { len: v.len(), blocks: v.chunks(MX_BLOCK).map(MxBlock::quantize_nr).collect() }
+    }
+
+    pub fn quantize_sr(v: &[f32], rng: &mut Rng) -> MxVec {
+        assert_eq!(v.len() % MX_BLOCK, 0);
+        MxVec {
+            len: v.len(),
+            blocks: v.chunks(MX_BLOCK).map(|b| MxBlock::quantize_sr(b, rng)).collect(),
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.len];
+        for (block, chunk) in self.blocks.iter().zip(out.chunks_mut(MX_BLOCK)) {
+            block.dequantize(chunk);
+        }
+        out
+    }
+
+    /// Dot product against another MxVec of the same length.
+    pub fn dot(&self, other: &MxVec) -> f32 {
+        assert_eq!(self.len, other.len);
+        self.blocks.iter().zip(&other.blocks).map(|(a, b)| a.dot(b)).sum()
+    }
+
+    /// Storage bits per element: 4 (code) + 8/32 (shared exponent) = 4.25.
+    pub fn bits_per_element(&self) -> f64 {
+        let bits = self.blocks.len() * (16 * 8 + 8);
+        bits as f64 / self.len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::quant;
+
+    #[test]
+    fn nibble_roundtrip() {
+        let mut codes = [0u8; 16];
+        for i in 0..32 {
+            set_nibble(&mut codes, i, (i % 16) as u8);
+        }
+        for i in 0..32 {
+            assert_eq!(get_nibble(&codes, i), (i % 16) as u8);
+        }
+    }
+
+    #[test]
+    fn packed_nr_matches_qdq() {
+        // The packed container must decode to exactly the qdq emulation.
+        let mut rng = Rng::seed(20);
+        let mut v = vec![0.0f32; 256];
+        rng.fill_normal(&mut v, 3.0);
+        let mut qdq = v.clone();
+        quant::qdq_nr(&mut qdq);
+        let packed = MxVec::quantize_nr(&v);
+        assert_eq!(packed.dequantize(), qdq);
+    }
+
+    #[test]
+    fn packed_sr_matches_qdq_given_same_noise() {
+        // same rng seed -> same dither sequence -> identical values
+        let mut v = vec![0.0f32; 64];
+        Rng::seed(21).fill_normal(&mut v, 2.0);
+        let mut qdq = v.clone();
+        quant::qdq_sr(&mut qdq, &mut Rng::seed(33));
+        let packed = MxVec::quantize_sr(&v, &mut Rng::seed(33));
+        assert_eq!(packed.dequantize(), qdq);
+    }
+
+    #[test]
+    fn dot_matches_dequantized_dot() {
+        let mut rng = Rng::seed(22);
+        let mut a = vec![0.0f32; 128];
+        let mut b = vec![0.0f32; 128];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let qa = MxVec::quantize_nr(&a);
+        let qb = MxVec::quantize_nr(&b);
+        let da = qa.dequantize();
+        let db = qb.dequantize();
+        let want: f32 = da.iter().zip(&db).map(|(x, y)| x * y).sum();
+        let got = qa.dot(&qb);
+        assert!((got - want).abs() < 1e-3 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn bitrate_is_4_25() {
+        let v = vec![1.0f32; 320];
+        let packed = MxVec::quantize_nr(&v);
+        assert!((packed.bits_per_element() - 4.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extreme_scales_roundtrip() {
+        for &s in &[1e-30f32, 1e-10, 1.0, 1e10, 1e30] {
+            let v: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * s).collect();
+            let packed = MxVec::quantize_nr(&v);
+            let dq = packed.dequantize();
+            assert!(dq.iter().all(|e| e.is_finite()));
+            // max magnitude element survives within NR error
+            let m = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let dm = dq.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            assert!(dm > 0.5 * m, "scale {s}: {dm} vs {m}");
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! FP4 (E2M1) codec: 1 sign, 2 exponent, 1 mantissa bits, exponent bias 1.
+//!
+//! Representable magnitudes: 0, 0.5 (subnormal), 1, 1.5, 2, 3, 4, 6.
+//! Codes are 4-bit: [sign | e1 e0 | m]. This is the bit layout used by
+//! OCP MX / Blackwell FP4 and Table 1 of the paper.
+
+/// The 8 non-negative representable FP4 magnitudes, indexed by code & 0x7.
+pub const FP4_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Largest finite FP4 magnitude.
+pub const FP4_MAX: f32 = 6.0;
+
+/// Exponent of the largest normal (6 = 1.5 * 2^2) — `emax_elem` in Alg. 1.
+pub const FP4_EMAX: i32 = 2;
+
+/// Decode a 4-bit code (low nibble) to f32.
+#[inline]
+pub fn decode(code: u8) -> f32 {
+    let mag = FP4_GRID[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Encode an *exact grid value* to its 4-bit code. Panics off-grid (use
+/// `nearest`/`stochastic` first). -0.0 encodes as +0.
+pub fn encode(v: f32) -> u8 {
+    let mag = v.abs();
+    let idx = FP4_GRID.iter().position(|&g| g == mag).expect("value not on FP4 grid") as u8;
+    if v < 0.0 {
+        idx | 0x8
+    } else {
+        idx
+    }
+}
+
+/// Nearest FP4 grid value, ties-to-even mantissa; saturates beyond ±6.
+/// Bit-identical to `ref.fp4_nearest` / the Pallas select chain:
+/// ties 0.25→0, 0.75→1, 1.25→1, 1.75→2, 2.5→2, 3.5→4, 5→4.
+#[inline]
+pub fn nearest(x: f32) -> f32 {
+    let mag = x.abs();
+    let q = if mag <= 0.25 {
+        0.0
+    } else if mag < 0.75 {
+        0.5
+    } else if mag <= 1.25 {
+        1.0
+    } else if mag < 1.75 {
+        1.5
+    } else if mag <= 2.5 {
+        2.0
+    } else if mag < 3.5 {
+        3.0
+    } else if mag <= 5.0 {
+        4.0
+    } else {
+        6.0
+    };
+    if x.is_sign_negative() {
+        -q
+    } else {
+        q
+    }
+}
+
+/// (floor, ceil) of a magnitude onto the FP4 grid; input clamped to [0, 6].
+#[inline]
+pub fn floor_ceil(mag: f32) -> (f32, f32) {
+    let f = if mag >= 6.0 {
+        6.0
+    } else if mag >= 4.0 {
+        4.0
+    } else if mag >= 3.0 {
+        3.0
+    } else if mag >= 2.0 {
+        2.0
+    } else if mag >= 1.5 {
+        1.5
+    } else if mag >= 1.0 {
+        1.0
+    } else if mag >= 0.5 {
+        0.5
+    } else {
+        0.0
+    };
+    let c = if mag > 4.0 {
+        6.0
+    } else if mag > 3.0 {
+        4.0
+    } else if mag > 2.0 {
+        3.0
+    } else if mag > 1.5 {
+        2.0
+    } else if mag > 1.0 {
+        1.5
+    } else if mag > 0.5 {
+        1.0
+    } else if mag > 0.0 {
+        0.5
+    } else {
+        0.0
+    };
+    (f, c)
+}
+
+/// Stochastic rounding to the FP4 grid given dither `u` in [0, 1).
+/// For f <= |x| <= c rounds up with probability (|x|-f)/(c-f) — exactly
+/// unbiased for |x| <= 6 (Eq. 1 generalized to the non-uniform grid).
+/// Bit-identical to `ref.fp4_stochastic` given the same `u`.
+#[inline]
+pub fn stochastic(x: f32, u: f32) -> f32 {
+    let xc = x.clamp(-FP4_MAX, FP4_MAX);
+    let mag = xc.abs();
+    let (f, c) = floor_ceil(mag);
+    let gap = c - f;
+    let p = if gap > 0.0 { (mag - f) / gap } else { 0.0 };
+    let q = if u < p { c } else { f };
+    if xc.is_sign_negative() || (xc == 0.0 && x.is_sign_negative()) {
+        -q
+    } else {
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_roundtrip_all_codes() {
+        for code in 0u8..16 {
+            let v = decode(code);
+            // -0.0 re-encodes as +0 (code 8 is negative zero)
+            if code == 0x8 {
+                assert_eq!(v, 0.0);
+                continue;
+            }
+            assert_eq!(decode(encode(v)), v, "code {code}");
+        }
+    }
+
+    #[test]
+    fn grid_is_e2m1() {
+        // subnormal: M * 0.5 for E=0; normal: (1 + M/2) * 2^(E-1)
+        assert_eq!(FP4_GRID, [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn nearest_idempotent_on_grid() {
+        for &g in &FP4_GRID {
+            assert_eq!(nearest(g), g);
+            assert_eq!(nearest(-g), -g);
+        }
+    }
+
+    #[test]
+    fn nearest_ties_to_even() {
+        let cases = [
+            (0.25, 0.0),
+            (0.75, 1.0),
+            (1.25, 1.0),
+            (1.75, 2.0),
+            (2.5, 2.0),
+            (3.5, 4.0),
+            (5.0, 4.0),
+        ];
+        for (x, want) in cases {
+            assert_eq!(nearest(x), want, "tie at {x}");
+            assert_eq!(nearest(-x), -want, "tie at -{x}");
+        }
+    }
+
+    #[test]
+    fn nearest_saturates() {
+        assert_eq!(nearest(100.0), 6.0);
+        assert_eq!(nearest(-7.0), -6.0);
+    }
+
+    #[test]
+    fn floor_ceil_brackets() {
+        for i in 0..1200 {
+            let mag = i as f32 * 0.005; // 0..6
+            let (f, c) = floor_ceil(mag);
+            assert!(f <= mag + 1e-6 && mag <= c + 1e-6, "mag {mag} f {f} c {c}");
+            assert!(FP4_GRID.contains(&f) && FP4_GRID.contains(&c));
+        }
+    }
+
+    #[test]
+    fn stochastic_on_grid_exact() {
+        for &g in &FP4_GRID {
+            assert_eq!(stochastic(g, 0.99), g);
+            assert_eq!(stochastic(-g, 0.0), -g);
+        }
+    }
+
+    #[test]
+    fn stochastic_unbiased_by_quadrature() {
+        // E[SR(x)] over a dense uniform grid of u equals x
+        for &x in &[0.1f32, 0.6, 1.2, 1.7, 2.4, 3.3, 4.7, 5.9, -2.2, -0.3] {
+            let n = 40_000;
+            let mean: f64 =
+                (0..n).map(|i| stochastic(x, (i as f32 + 0.5) / n as f32) as f64).sum::<f64>()
+                    / n as f64;
+            assert!((mean - x as f64).abs() < 2e-4, "x {x} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn stochastic_saturates_out_of_range() {
+        assert_eq!(stochastic(8.0, 0.5), 6.0);
+        assert_eq!(stochastic(-9.0, 0.5), -6.0);
+    }
+}

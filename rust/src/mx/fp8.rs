@@ -1,0 +1,126 @@
+//! FP8 codecs: E4M3 (bias 7, max 448, no inf) and E5M2 (bias 15, max 57344).
+//!
+//! E4M3 is the paper's forward-precision comparator (FP8-LM recipes use
+//! E4M3 forward / E5M2 backward); the perfmodel uses both for Table 5's
+//! INT8-as-FP8 proxy rows, and the FP8-forward recipe (appendix §6.1)
+//! emulates with per-tensor amax scaling + E4M3 qdq, matching ref.py.
+
+/// Parameters of an FP8 format.
+#[derive(Debug, Clone, Copy)]
+pub struct Fp8Spec {
+    pub ebits: u32,
+    pub mbits: u32,
+    pub bias: i32,
+    pub max: f32,
+}
+
+/// E4M3 (OCP FP8, finite-only flavor): max normal 448.
+pub const E4M3: Fp8Spec = Fp8Spec { ebits: 4, mbits: 3, bias: 7, max: 448.0 };
+/// E5M2: max normal 57344.
+pub const E5M2: Fp8Spec = Fp8Spec { ebits: 5, mbits: 2, bias: 15, max: 57344.0 };
+
+/// Round f32 to the nearest representable value of `spec` (ties-to-even),
+/// saturating at ±max. Subnormals of the target format are handled.
+pub fn qdq(x: f32, spec: Fp8Spec) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return if x.is_finite() { x } else { x.signum() * spec.max };
+    }
+    let mag = x.abs();
+    if mag >= spec.max {
+        return x.signum() * spec.max;
+    }
+    let e = super::scale::floor_log2(mag);
+    // quantization step for this binade; subnormal range uses the min-normal step
+    let emin = 1 - spec.bias;
+    let eff_e = e.max(emin);
+    let step = super::scale::exact_pow2(eff_e - spec.mbits as i32);
+    let q = (mag / step).round_ties_even() * step;
+    // rounding can carry into the next binade (e.g. 0.9375 * 2^k -> 2^k); fine.
+    let q = q.min(spec.max);
+    if x < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Per-tensor amax-scaled qdq (the TransformerEngine-style recipe the
+/// appendix emulates): scale so amax maps to spec.max, qdq, unscale.
+pub fn qdq_tensor_scaled(xs: &mut [f32], spec: Fp8Spec) {
+    let amax = xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    if amax == 0.0 {
+        return;
+    }
+    let scale = spec.max / amax;
+    for v in xs.iter_mut() {
+        *v = qdq(*v * scale, spec) / scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_exact_values() {
+        // representable: 1.0, 1.125 (1+1/8), 448, 0.001953125 (2^-9 = min subnormal)
+        for x in [1.0f32, 1.125, 448.0, 240.0, 0.0625] {
+            assert_eq!(qdq(x, E4M3), x, "x {x}");
+            assert_eq!(qdq(-x, E4M3), -x);
+        }
+    }
+
+    #[test]
+    fn e4m3_saturates() {
+        assert_eq!(qdq(1e6, E4M3), 448.0);
+        assert_eq!(qdq(-1e6, E4M3), -448.0);
+        assert_eq!(qdq(449.0, E4M3), 448.0);
+    }
+
+    #[test]
+    fn e5m2_exact_values() {
+        for x in [1.0f32, 1.25, 57344.0, 0.5, 3.0] {
+            assert_eq!(qdq(x, E5M2), x, "x {x}");
+        }
+    }
+
+    #[test]
+    fn e4m3_relative_error_bound() {
+        let mut rng = crate::rng::Rng::seed(9);
+        for _ in 0..5000 {
+            let x = rng.normal() * 10.0;
+            if x == 0.0 {
+                continue;
+            }
+            let q = qdq(x, E4M3);
+            // normal-range relative error <= 2^-4 (half ulp of 3-bit mantissa)
+            if x.abs() > 0.02 {
+                assert!(((q - x) / x).abs() <= 1.0 / 16.0 + 1e-6, "x {x} q {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_range_matches_table_1_argument() {
+        // §2.5: E4M3 dynamic range max/min_normal = 448 / 2^-6 ~ 2.9e4;
+        // the paper quotes 448/0.5^... loosely — we assert the ratio is huge
+        // vs FP4's 6/0.5 = 12.
+        let fp4_range = 6.0f32 / 0.5;
+        let e4m3_min_normal = super::super::scale::exact_pow2(1 - E4M3.bias);
+        let e4m3_range = 448.0 / e4m3_min_normal;
+        assert_eq!(fp4_range, 12.0);
+        assert!(e4m3_range > 1e4);
+    }
+
+    #[test]
+    fn tensor_scaled_qdq_small_relative_error() {
+        let mut rng = crate::rng::Rng::seed(10);
+        let mut xs: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let orig = xs.clone();
+        qdq_tensor_scaled(&mut xs, E4M3);
+        let num: f64 = xs.iter().zip(&orig).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = orig.iter().map(|&b| (b as f64).powi(2)).sum();
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.04, "rel {rel}"); // appendix: ~0.3% output err; 3-4% elementwise
+    }
+}

@@ -1,0 +1,158 @@
+//! MXINT4: signed 4-bit *integer* elements under an E8M0 shared scale —
+//! the paper's "our analysis also applies to other low precision
+//! datatypes such as MXINT4" extension, mirrored bit-for-bit with
+//! `ref.quantize_mxint_{nr,sr}`.
+//!
+//! Grid: integers in [-8, 7], uniform gap Δ = 1 (vs FP4's 0.5/1/2
+//! ladder). Same shared-exponent rule as MXFP4 (floor(log2 max) - 2), so
+//! scaled magnitudes land in [4, 8): the positive edge (7, 8) clips — the
+//! INT4 analogue of the (6, 8] FP4 clip bias — and Algorithm 2's 3/4
+//! pre-scale removes it (0.75 * 8 = 6 <= 7).
+
+use super::quant::{MX_BLOCK, PRESCALE};
+use super::scale;
+use crate::rng::Rng;
+
+pub const INT4_MIN: f32 = -8.0;
+pub const INT4_MAX: f32 = 7.0;
+
+/// Nearest integer in [-8, 7], ties-to-even (bit-matches `jnp.round`).
+#[inline]
+pub fn nearest(x: f32) -> f32 {
+    x.round_ties_even().clamp(INT4_MIN, INT4_MAX)
+}
+
+/// Stochastic rounding to the INT4 grid given dither u in [0, 1).
+#[inline]
+pub fn stochastic(x: f32, u: f32) -> f32 {
+    let x = x.clamp(INT4_MIN, INT4_MAX);
+    let f = x.floor();
+    let p = x - f;
+    if u < p {
+        (f + 1.0).min(INT4_MAX)
+    } else {
+        f
+    }
+}
+
+/// MXINT4 Algorithm 1 (nearest rounding), in-place qdq.
+pub fn qdq_nr(v: &mut [f32]) {
+    assert_eq!(v.len() % MX_BLOCK, 0);
+    for block in v.chunks_mut(MX_BLOCK) {
+        let x = scale::block_scale(block);
+        for e in block {
+            *e = nearest(*e / x) * x;
+        }
+    }
+}
+
+/// MXINT4 Algorithm 2 (3/4 pre-scale + SR), in-place qdq; estimates (3/4)v.
+pub fn qdq_sr(v: &mut [f32], rng: &mut Rng) {
+    assert_eq!(v.len() % MX_BLOCK, 0);
+    for block in v.chunks_mut(MX_BLOCK) {
+        let x = scale::block_scale(block);
+        for e in block {
+            *e = stochastic(*e / x * PRESCALE, rng.uniform()) * x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_grid_and_ties() {
+        assert_eq!(nearest(3.2), 3.0);
+        assert_eq!(nearest(3.5), 4.0);
+        assert_eq!(nearest(2.5), 2.0); // ties-to-even
+        assert_eq!(nearest(-2.5), -2.0);
+        assert_eq!(nearest(100.0), 7.0);
+        assert_eq!(nearest(-100.0), -8.0);
+    }
+
+    #[test]
+    fn stochastic_unbiased_by_quadrature() {
+        for &x in &[0.3f32, 1.7, -2.4, 6.9, -7.6] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|i| stochastic(x, (i as f32 + 0.5) / n as f32) as f64).sum::<f64>()
+                    / n as f64;
+            assert!((mean - x as f64).abs() < 3e-4, "x {x} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn qdq_nr_outputs_integers_times_scale() {
+        let mut rng = Rng::seed(1);
+        let mut v = vec![0.0f32; 256];
+        rng.fill_normal(&mut v, 3.0);
+        let orig = v.clone();
+        qdq_nr(&mut v);
+        for (block, oblock) in v.chunks(MX_BLOCK).zip(orig.chunks(MX_BLOCK)) {
+            let x = scale::block_scale(oblock);
+            for &e in block {
+                let r = e / x;
+                assert_eq!(r, r.round(), "residual {r} not integral");
+                assert!((INT4_MIN..=INT4_MAX).contains(&r));
+            }
+        }
+    }
+
+    #[test]
+    fn sr_prescale_removes_clipping() {
+        let mut rng = Rng::seed(2);
+        let mut v = vec![0.0f32; 4096];
+        rng.fill_normal(&mut v, 10.0);
+        let orig = v.clone();
+        qdq_sr(&mut v, &mut Rng::seed(3));
+        for (block, oblock) in v.chunks(MX_BLOCK).zip(orig.chunks(MX_BLOCK)) {
+            let x = scale::block_scale(oblock);
+            for &e in block {
+                // 0.75 * 8 = 6: nothing should sit at the ±7/±8 clip edges
+                assert!((e / x).abs() <= 6.0 + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn int4_nr_more_accurate_than_fp4_for_large_mags() {
+        // INT4's uniform grid beats FP4's coarse top rungs (gap 2 near 6)
+        // on blocks whose mass sits near the block max — a known MXINT4
+        // vs MXFP4 trade-off this module makes measurable.
+        let mut rng = Rng::seed(4);
+        let mut v_int = vec![0.0f32; 8192];
+        for e in v_int.iter_mut() {
+            *e = 4.0 + rng.uniform() * 3.0; // uniform in [4, 7)
+        }
+        let v_fp = v_int.clone();
+        let orig = v_int.clone();
+        let mut v_fp4 = v_fp.clone();
+        qdq_nr(&mut v_int);
+        crate::mx::quant::qdq_nr(&mut v_fp4);
+        let mse = |a: &[f32]| -> f64 {
+            a.iter().zip(&orig).map(|(x, o)| ((x - o) as f64).powi(2)).sum::<f64>()
+        };
+        assert!(mse(&v_int) < mse(&v_fp4), "{} vs {}", mse(&v_int), mse(&v_fp4));
+    }
+
+    #[test]
+    fn fp4_better_than_int4_for_small_mags() {
+        // ...and FP4's fine rungs near zero win for heavy-tailed blocks
+        // (one big outlier + many small entries).
+        let mut rng = Rng::seed(5);
+        let mut orig = vec![0.0f32; 8192];
+        for chunk in orig.chunks_mut(32) {
+            rng.fill_normal(chunk, 0.2);
+            chunk[0] = 6.0; // block max pins the shared exponent
+        }
+        let mut v_int = orig.clone();
+        let mut v_fp4 = orig.clone();
+        qdq_nr(&mut v_int);
+        crate::mx::quant::qdq_nr(&mut v_fp4);
+        let mse = |a: &[f32]| -> f64 {
+            a.iter().zip(&orig).map(|(x, o)| ((x - o) as f64).powi(2)).sum::<f64>()
+        };
+        assert!(mse(&v_fp4) < mse(&v_int), "{} vs {}", mse(&v_fp4), mse(&v_int));
+    }
+}

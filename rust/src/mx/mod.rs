@@ -1,0 +1,42 @@
+//! Bit-accurate low-precision datatypes and MX quantization — the rust
+//! mirror of `python/compile/kernels/ref.py` (golden-vector tests pin the
+//! two together).
+//!
+//! * `fp4` — E2M1 codec + nearest/stochastic rounding to its grid
+//! * `fp8` — E4M3 / E5M2 qdq (forward-precision comparators)
+//! * `bf16` — BF16 qdq + stochastic variant (optimizer copies)
+//! * `scale` — E8M0 shared exponents (exact pow2, exact floor-log2)
+//! * `quant` — Algorithms 1 & 2 over f32 slices (qdq emulation)
+//! * `block` — packed 4.25-bit MX containers + MX dot product
+
+pub mod bf16;
+pub mod block;
+pub mod fp4;
+pub mod fp8;
+pub mod int4;
+pub mod quant;
+pub mod scale;
+
+/// Table 1 of the paper: common hardware FP datatypes.
+pub fn format_table() -> Vec<(&'static str, u32, u32, u32, u32)> {
+    // (name, total bits, sign, exponent, mantissa)
+    vec![
+        ("FP64", 64, 1, 11, 52),
+        ("FP32", 32, 1, 8, 23),
+        ("FP16", 16, 1, 5, 10),
+        ("BF16", 16, 1, 8, 7),
+        ("FP8 E4M3", 8, 1, 4, 3),
+        ("FP8 E5M2", 8, 1, 5, 2),
+        ("FP4 E2M1", 4, 1, 2, 1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table_1_bit_budgets_add_up() {
+        for (name, total, s, e, m) in super::format_table() {
+            assert_eq!(s + e + m, total, "{name}");
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Algorithms 1 & 2: (un)biased MXFP4 quantization over f32 slices.
+//!
+//! qdq variants write exact `X * grid-point` values back into f32 buffers
+//! (mirroring the jax emulation bit-for-bit); packed variants go through
+//! the true 4-bit container in `block.rs`. All functions process
+//! contiguous 32-element MX groups along the slice.
+
+use super::fp4;
+use super::scale;
+use crate::rng::Rng;
+
+/// OCP MX group size (hardware-supported k).
+pub const MX_BLOCK: usize = 32;
+
+/// Algorithm 2's clipping-avoidance pre-scale and its GEMM compensation.
+pub const PRESCALE: f32 = 0.75;
+pub const GEMM_RESCALE: f32 = 16.0 / 9.0;
+
+/// Algorithm 1 (biased, deterministic): nearest rounding with shared
+/// scales. `v.len()` must be a multiple of 32. In-place qdq.
+pub fn qdq_nr(v: &mut [f32]) {
+    assert_eq!(v.len() % MX_BLOCK, 0, "len {} not a multiple of 32", v.len());
+    for block in v.chunks_mut(MX_BLOCK) {
+        let x = scale::block_scale(block);
+        for e in block {
+            *e = fp4::nearest((*e / x).clamp(-8.0, 8.0)) * x;
+        }
+    }
+}
+
+/// Algorithm 2 (unbiased): 3/4 pre-scale + stochastic rounding with
+/// dither noise drawn from `rng`. In-place qdq; the result estimates
+/// (3/4)·v — GEMM consumers multiply accumulators by 16/9 (Lemma 3.1).
+pub fn qdq_sr(v: &mut [f32], rng: &mut Rng) {
+    assert_eq!(v.len() % MX_BLOCK, 0);
+    for block in v.chunks_mut(MX_BLOCK) {
+        let x = scale::block_scale(block);
+        for e in block {
+            *e = fp4::stochastic(*e / x * PRESCALE, rng.uniform()) * x;
+        }
+    }
+}
+
+/// Algorithm 2 with caller-provided dither noise (for golden-vector tests
+/// against the jax oracle, which must see identical u).
+pub fn qdq_sr_with_noise(v: &mut [f32], noise: &[f32]) {
+    assert_eq!(v.len() % MX_BLOCK, 0);
+    assert_eq!(v.len(), noise.len());
+    for (block, ublock) in v.chunks_mut(MX_BLOCK).zip(noise.chunks(MX_BLOCK)) {
+        let x = scale::block_scale(block);
+        for (e, &u) in block.iter_mut().zip(ublock) {
+            *e = fp4::stochastic(*e / x * PRESCALE, u) * x;
+        }
+    }
+}
+
+/// SR without the 3/4 pre-scale (the paper's "SR only" would still use the
+/// pre-scale; this variant exists to *measure* the clip bias it removes).
+pub fn qdq_sr_noprescale(v: &mut [f32], rng: &mut Rng) {
+    assert_eq!(v.len() % MX_BLOCK, 0);
+    for block in v.chunks_mut(MX_BLOCK) {
+        let x = scale::block_scale(block);
+        for e in block {
+            *e = fp4::stochastic(*e / x, rng.uniform()) * x;
+        }
+    }
+}
+
+/// Per-block scales for a slice (diagnostics / benches).
+pub fn block_scales(v: &[f32]) -> Vec<f32> {
+    v.chunks(MX_BLOCK).map(scale::block_scale).collect()
+}
+
+/// Fraction of elements that Algorithm 1 would clip (scaled into (6, 8]) —
+/// the §3.1 bias measurement.
+pub fn clip_fraction(v: &[f32]) -> f64 {
+    let mut clipped = 0usize;
+    for block in v.chunks(MX_BLOCK) {
+        let x = scale::block_scale(block);
+        clipped += block.iter().filter(|&&e| (e / x).abs() > 6.0).count();
+    }
+    clipped as f64 / v.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian(n: usize, seed: u64, sigma: f32) -> Vec<f32> {
+        let mut rng = Rng::seed(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, sigma);
+        v
+    }
+
+    #[test]
+    fn nr_outputs_on_scaled_grid() {
+        let mut v = gaussian(256, 1, 2.0);
+        let orig = v.clone();
+        qdq_nr(&mut v);
+        for (block, oblock) in v.chunks(MX_BLOCK).zip(orig.chunks(MX_BLOCK)) {
+            let x = scale::block_scale(oblock);
+            for &e in block {
+                let r = e / x;
+                assert!(fp4::FP4_GRID.contains(&r.abs()), "residual {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn nr_deterministic() {
+        let mut a = gaussian(128, 2, 1.0);
+        let mut b = a.clone();
+        qdq_nr(&mut a);
+        qdq_nr(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nr_error_bounded_by_block_gap() {
+        let orig = gaussian(4096, 3, 5.0);
+        let mut v = orig.clone();
+        qdq_nr(&mut v);
+        for (block, oblock) in v.chunks(MX_BLOCK).zip(orig.chunks(MX_BLOCK)) {
+            let x = scale::block_scale(oblock);
+            for (&q, &o) in block.iter().zip(oblock) {
+                // worst case: clip region (6,8] has error < 2 * X
+                assert!((q - o).abs() <= 2.0 * x + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn nr_idempotent() {
+        let mut v = gaussian(256, 4, 1.0);
+        qdq_nr(&mut v);
+        let once = v.clone();
+        qdq_nr(&mut v);
+        assert_eq!(once, v);
+    }
+
+    #[test]
+    fn sr_is_unbiased_three_quarters() {
+        // Lemma 3.1: E[qdq_sr(v)] = 3/4 v
+        let orig = gaussian(32, 5, 2.0);
+        let n = 20_000;
+        let mut rng = Rng::seed(6);
+        let mut mean = vec![0.0f64; 32];
+        for _ in 0..n {
+            let mut v = orig.clone();
+            qdq_sr(&mut v, &mut rng);
+            for (m, &e) in mean.iter_mut().zip(&v) {
+                *m += e as f64;
+            }
+        }
+        let x = scale::block_scale(&orig) as f64;
+        for (m, &o) in mean.iter().zip(&orig) {
+            let est = m / n as f64;
+            // SEM of a bounded variable with gap <= 2X
+            assert!(
+                (est - 0.75 * o as f64).abs() < 4.0 * x / (n as f64).sqrt() + 5e-3,
+                "est {est} want {}",
+                0.75 * o
+            );
+        }
+    }
+
+    #[test]
+    fn sr_never_exceeds_range() {
+        // 3/4 pre-scale guarantees |scaled| < 6 => no clipping
+        let mut v = gaussian(4096, 7, 100.0);
+        let orig = v.clone();
+        qdq_sr(&mut v, &mut Rng::seed(8));
+        for (block, oblock) in v.chunks(MX_BLOCK).zip(orig.chunks(MX_BLOCK)) {
+            let x = scale::block_scale(oblock);
+            for &e in block {
+                assert!(e.abs() / x <= 6.0 + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn clip_fraction_matches_paper_3_percent() {
+        // §3.1: "roughly 3% of the entries will get clipped" for Gaussians
+        let v = gaussian(1 << 18, 9, 1.0);
+        let frac = clip_fraction(&v);
+        assert!((0.01..0.08).contains(&frac), "clip frac {frac}");
+    }
+
+    #[test]
+    fn zero_blocks_stay_zero() {
+        let mut v = vec![0.0f32; 64];
+        qdq_nr(&mut v);
+        assert!(v.iter().all(|&e| e == 0.0));
+        qdq_sr(&mut v, &mut Rng::seed(1));
+        assert!(v.iter().all(|&e| e == 0.0));
+        assert!(v.iter().all(|e| e.is_finite())); // no FTZ NaNs
+    }
+
+    #[test]
+    fn scales_are_powers_of_two() {
+        let v = gaussian(512, 10, 3.0);
+        for s in block_scales(&v) {
+            assert_eq!(s.to_bits() & 0x007F_FFFF, 0, "scale {s} not a power of 2");
+        }
+    }
+}

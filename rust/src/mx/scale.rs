@@ -1,0 +1,114 @@
+//! E8M0 shared scales: power-of-two block scales for MX formats.
+//!
+//! E8M0 stores only an 8-bit exponent (no sign, no mantissa): values
+//! 2^e for e in [-127, 127] plus a NaN code. Our f32 qdq emulation clamps
+//! e to [-126, 127] (SCALE_EMIN) to avoid f32 subnormals — XLA CPU (and
+//! typical accelerator FTZ modes) flush them to zero, and the jax oracle
+//! applies the identical clamp, keeping both sides bit-identical.
+
+use super::fp4::FP4_EMAX;
+
+/// FTZ-safe clamp range for the shared exponent in f32 emulation.
+pub const SCALE_EMIN: i32 = -126;
+pub const SCALE_EMAX: i32 = 127;
+
+/// Exact floor(log2(|m|)) for finite m != 0, via exponent-field extraction.
+/// (Float log2 is off by an ulp on exact powers of two; bits are exact.)
+#[inline]
+pub fn floor_log2(m: f32) -> i32 {
+    debug_assert!(m != 0.0 && m.is_finite());
+    let bits = m.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    if exp == 0 {
+        // subnormal: value = mant * 2^-149, so floor(log2) = bitlen(mant)-1-149
+        let mant = bits & 0x7F_FFFF;
+        (31 - mant.leading_zeros() as i32) - 149
+    } else {
+        exp - 127
+    }
+}
+
+/// Exact 2^e for e in [-126, 127], by constructing the bit pattern.
+#[inline]
+pub fn exact_pow2(e: i32) -> f32 {
+    let e = e.clamp(SCALE_EMIN, SCALE_EMAX);
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Shared exponent of an MX block (Alg. 1 line 1): floor(log2(max|v|)) - emax.
+/// Returns SCALE_EMIN for an all-zero block.
+#[inline]
+pub fn shared_exp(block: &[f32]) -> i32 {
+    let m = block.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+    if m == 0.0 {
+        SCALE_EMIN
+    } else {
+        (floor_log2(m) - FP4_EMAX).clamp(SCALE_EMIN, SCALE_EMAX)
+    }
+}
+
+/// Block scale X = 2^shared_exp.
+#[inline]
+pub fn block_scale(block: &[f32]) -> f32 {
+    exact_pow2(shared_exp(block))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_log2_on_powers_of_two() {
+        for e in -126..=127 {
+            let m = exact_pow2(e);
+            assert_eq!(floor_log2(m), e, "2^{e}");
+        }
+    }
+
+    #[test]
+    fn floor_log2_between_powers() {
+        assert_eq!(floor_log2(3.9999), 1);
+        assert_eq!(floor_log2(4.0), 2);
+        assert_eq!(floor_log2(0.75), -1);
+        assert_eq!(floor_log2(6.0), 2);
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(-8.0f32.abs()), 3);
+    }
+
+    #[test]
+    fn exact_pow2_matches_f64() {
+        for e in -126..=127 {
+            assert_eq!(exact_pow2(e) as f64, 2f64.powi(e), "2^{e}");
+        }
+    }
+
+    #[test]
+    fn shared_exp_examples() {
+        // max = 6 -> floor(log2 6) = 2 -> e = 0 -> X = 1
+        assert_eq!(shared_exp(&[1.0, -6.0, 0.5]), 0);
+        // max = 8 -> floor = 3 -> e = 1 -> X = 2
+        assert_eq!(shared_exp(&[8.0]), 1);
+        // max just under 8 -> floor = 2 -> e = 0
+        assert_eq!(shared_exp(&[7.9]), 0);
+        // zero block
+        assert_eq!(shared_exp(&[0.0, 0.0]), SCALE_EMIN);
+    }
+
+    #[test]
+    fn scaled_max_always_below_8() {
+        // the §3.1 bound: m / 2^shared_exp in [4, 8)
+        let mut rng = crate::rng::Rng::seed(11);
+        for _ in 0..2000 {
+            let mut block = [0.0f32; 32];
+            let scale = exact_pow2((rng.below(100) as i32) - 50);
+            rng.fill_normal(&mut block, scale);
+            let m = block.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            if m == 0.0 {
+                continue;
+            }
+            let x = block_scale(&block);
+            let scaled = m / x;
+            assert!((4.0 - 1e-4..8.0).contains(&scaled), "scaled {scaled}");
+        }
+    }
+}

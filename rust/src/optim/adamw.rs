@@ -1,0 +1,275 @@
+//! AdamW with FP32 master weights and a BF16 "compute" parameter copy.
+//!
+//! The update runs fused (one pass over each tensor, threaded): m/v moment
+//! update, bias correction, decoupled weight decay, master-weight write,
+//! and the BF16 re-round of the copy the artifacts consume. This is the
+//! L3 hot loop the §Perf pass optimizes.
+
+use crate::mx::bf16;
+use crate::rng::Rng;
+use crate::util::threadpool;
+
+/// How the BF16 parameter copy is rounded from the FP32 masters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamRounding {
+    /// Round-to-nearest-even (standard mixed precision).
+    Nearest,
+    /// Stochastic rounding — preserves tiny late-training updates in
+    /// expectation (§2.4 / Collage).
+    Stochastic,
+}
+
+impl ParamRounding {
+    pub fn parse(s: &str) -> Option<ParamRounding> {
+        Some(match s {
+            "nearest" => ParamRounding::Nearest,
+            "stochastic" => ParamRounding::Stochastic,
+            _ => return None,
+        })
+    }
+}
+
+/// AdamW state over a flat list of parameter tensors.
+pub struct AdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub rounding: ParamRounding,
+    /// FP32 master weights (source of truth).
+    pub master: Vec<Vec<f32>>,
+    /// Which tensors get weight decay (true for matrices, false for
+    /// gains/biases — standard no-decay-on-LN practice).
+    decay_mask: Vec<bool>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    step: u64,
+    workers: usize,
+    rng_seed: u64,
+}
+
+impl AdamW {
+    /// Build from initial parameters. `names` drive the weight-decay mask.
+    pub fn new(
+        params: &[Vec<f32>],
+        names: &[String],
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+        rounding: ParamRounding,
+        seed: u64,
+    ) -> AdamW {
+        assert_eq!(params.len(), names.len());
+        let decay_mask =
+            names.iter().map(|n| !(n.ends_with("_g") || n.ends_with("_b"))).collect();
+        AdamW {
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            rounding,
+            master: params.to_vec(),
+            decay_mask,
+            m: params.iter().map(|p| vec![0.0; p.len()]).collect(),
+            v: params.iter().map(|p| vec![0.0; p.len()]).collect(),
+            step: 0,
+            workers: threadpool::default_workers(),
+            rng_seed: seed,
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// One fused optimizer step. `grads` matches `master`'s layout;
+    /// `compute_params` (the BF16 copies fed to the artifact) are
+    /// re-rounded in the same pass.
+    pub fn step(&mut self, grads: &[Vec<f32>], lr: f32, compute_params: &mut [Vec<f32>]) {
+        assert_eq!(grads.len(), self.master.len());
+        self.step += 1;
+        let t = self.step as f64;
+        // bias corrections folded into a single scale
+        let bc1 = 1.0 - (self.beta1 as f64).powf(t);
+        let bc2 = 1.0 - (self.beta2 as f64).powf(t);
+        let step_scale = (lr as f64 * bc2.sqrt() / bc1) as f32;
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let step_no = self.step;
+        let rounding = self.rounding;
+        let rng_seed = self.rng_seed;
+
+        for i in 0..self.master.len() {
+            let wd = if self.decay_mask[i] { self.weight_decay } else { 0.0 };
+            let g = &grads[i];
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            let master = &mut self.master[i];
+            let compute = &mut compute_params[i];
+            assert_eq!(g.len(), master.len());
+
+            // zip the five tensors chunk-wise across workers; small tensors
+            // (LN gains, biases) run inline — spawning threads for a few
+            // hundred elements costs more than the update (§Perf L3)
+            let n = g.len();
+            let workers = self
+                .workers
+                .max(1)
+                .min((n / crate::util::threadpool::MIN_PER_WORKER).max(1));
+            let per = n.div_ceil(workers);
+            if workers == 1 {
+                // inline fast path: no scope, no spawn
+                let mut rng = Rng::fold_in(rng_seed, (step_no << 20) ^ ((i as u64) << 8));
+                for k in 0..n {
+                    let gk = g[k];
+                    m[k] = b1 * m[k] + (1.0 - b1) * gk;
+                    v[k] = b2 * v[k] + (1.0 - b2) * gk * gk;
+                    let update = step_scale * m[k] / (v[k].sqrt() + eps);
+                    let wk = master[k] * (1.0 - lr * wd) - update;
+                    master[k] = wk;
+                    compute[k] = match rounding {
+                        ParamRounding::Nearest => bf16::qdq(wk),
+                        ParamRounding::Stochastic => bf16::qdq_stochastic(wk, rng.uniform()),
+                    };
+                }
+                continue;
+            }
+            std::thread::scope(|s| {
+                let mut mm: &mut [f32] = m;
+                let mut vv: &mut [f32] = v;
+                let mut ww: &mut [f32] = master;
+                let mut cc: &mut [f32] = compute;
+                let mut gg: &[f32] = g;
+                let mut w_idx = 0usize;
+                while !gg.is_empty() {
+                    let take = per.min(gg.len());
+                    let (g0, g1) = gg.split_at(take);
+                    let (m0, m1) = mm.split_at_mut(take);
+                    let (v0, v1) = vv.split_at_mut(take);
+                    let (w0, w1) = ww.split_at_mut(take);
+                    let (c0, c1) = cc.split_at_mut(take);
+                    gg = g1;
+                    mm = m1;
+                    vv = v1;
+                    ww = w1;
+                    cc = c1;
+                    let chunk_id = w_idx;
+                    w_idx += 1;
+                    s.spawn(move || {
+                        let mut rng = Rng::fold_in(
+                            rng_seed,
+                            (step_no << 20) ^ ((i as u64) << 8) ^ chunk_id as u64,
+                        );
+                        for k in 0..g0.len() {
+                            let gk = g0[k];
+                            m0[k] = b1 * m0[k] + (1.0 - b1) * gk;
+                            v0[k] = b2 * v0[k] + (1.0 - b2) * gk * gk;
+                            let update = step_scale * m0[k] / (v0[k].sqrt() + eps);
+                            // decoupled weight decay on the master weight
+                            let wk = w0[k] * (1.0 - lr * wd) - update;
+                            w0[k] = wk;
+                            c0[k] = match rounding {
+                                ParamRounding::Nearest => bf16::qdq(wk),
+                                ParamRounding::Stochastic => {
+                                    bf16::qdq_stochastic(wk, rng.uniform())
+                                }
+                            };
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_setup() -> (Vec<Vec<f32>>, Vec<String>) {
+        (vec![vec![5.0f32, -3.0, 2.0]], vec!["w".to_string()])
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize 0.5 * ||w||^2 — gradient is w itself
+        let (params, names) = quadratic_setup();
+        let mut opt =
+            AdamW::new(&params, &names, 0.9, 0.999, 1e-8, 0.0, ParamRounding::Nearest, 0);
+        let mut compute = params.clone();
+        for _ in 0..500 {
+            let grads = vec![opt.master[0].clone()];
+            opt.step(&grads, 0.05, &mut compute);
+        }
+        for &w in &opt.master[0] {
+            assert!(w.abs() < 0.05, "w {w}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_matrices_not_gains() {
+        let params = vec![vec![1.0f32; 4], vec![1.0f32; 4]];
+        let names = vec!["fc1_w".to_string(), "ln1_g".to_string()];
+        let mut opt = AdamW::new(&params, &names, 0.9, 0.999, 1e-8, 0.5, ParamRounding::Nearest, 0);
+        let mut compute = params.clone();
+        let grads = vec![vec![0.0f32; 4], vec![0.0f32; 4]];
+        opt.step(&grads, 0.1, &mut compute);
+        assert!(opt.master[0][0] < 1.0, "matrix decayed");
+        assert_eq!(opt.master[1][0], 1.0, "ln gain not decayed");
+    }
+
+    #[test]
+    fn compute_copy_is_bf16() {
+        let params = vec![vec![0.12345678f32; 8]];
+        let names = vec!["w".to_string()];
+        let mut opt = AdamW::new(&params, &names, 0.9, 0.999, 1e-8, 0.0, ParamRounding::Nearest, 0);
+        let mut compute = params.clone();
+        let grads = vec![vec![0.001f32; 8]];
+        opt.step(&grads, 0.01, &mut compute);
+        for &c in &compute[0] {
+            assert_eq!(c, bf16::qdq(c), "compute copy must be bf16-representable");
+        }
+        // masters retain full precision (differ from compute copy in general)
+        assert_ne!(opt.master[0][0], compute[0][0]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let params = vec![vec![1.0f32; 64]];
+        let names = vec!["w".to_string()];
+        let run = |seed| {
+            let mut opt =
+                AdamW::new(&params, &names, 0.9, 0.95, 1e-8, 0.01, ParamRounding::Stochastic, seed);
+            let mut compute = params.clone();
+            for s in 0..10 {
+                let grads = vec![vec![0.01f32 * (s as f32 + 1.0); 64]];
+                opt.step(&grads, 0.01, &mut compute);
+            }
+            compute[0].clone()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn stochastic_rounding_preserves_tiny_updates_in_expectation() {
+        // classic §2.4 failure: update much smaller than a bf16 ulp vanishes
+        // under nearest rounding but survives on average under SR.
+        let w0 = 1.0f32;
+        let tiny = 1e-5f32; // bf16 ulp at 1.0 is ~0.0078
+        let trials = 4000;
+        let mut sum_sr = 0.0f64;
+        for t in 0..trials {
+            let mut rng = Rng::seed(t as u64);
+            sum_sr += bf16::qdq_stochastic(w0 - tiny, rng.uniform()) as f64;
+        }
+        let mean_sr = sum_sr / trials as f64;
+        let nearest = bf16::qdq(w0 - tiny) as f64;
+        assert_eq!(nearest, 1.0, "nearest rounding loses the update");
+        assert!(
+            (mean_sr - (w0 - tiny) as f64).abs() < 3e-5,
+            "SR mean {mean_sr} should track {}",
+            w0 - tiny
+        );
+    }
+}

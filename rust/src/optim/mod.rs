@@ -1,0 +1,63 @@
+//! Optimizer stack: AdamW with FP32 master weights, cosine LR schedule
+//! with warmup, and global-norm gradient clipping — Megatron-style mixed
+//! precision (§4.1: "separate FP32 master weights and BF16 parameter
+//! copies"). The BF16 copy is what the artifact consumes; it can be
+//! rounded to BF16 with nearest or stochastic rounding (the §2.4
+//! update-preservation discussion).
+
+pub mod adamw;
+pub mod schedule;
+
+pub use adamw::{AdamW, ParamRounding};
+pub use schedule::CosineSchedule;
+
+use crate::util::threadpool;
+
+/// Global L2 norm over a set of gradient tensors.
+pub fn global_norm(grads: &[Vec<f32>]) -> f64 {
+    grads
+        .iter()
+        .map(|g| g.iter().map(|&v| (v as f64).powi(2)).sum::<f64>())
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Clip gradients to `max_norm` (no-op if already below). Returns the
+/// pre-clip norm (what Megatron logs as grad-norm).
+pub fn clip_global_norm(grads: &mut [Vec<f32>], max_norm: f32, workers: usize) -> f64 {
+    let norm = global_norm(grads);
+    if norm > max_norm as f64 && norm > 0.0 {
+        let scale = (max_norm as f64 / norm) as f32;
+        for g in grads.iter_mut() {
+            threadpool::scope_chunks(g, workers, 1024, |_, chunk| {
+                for v in chunk {
+                    *v *= scale;
+                }
+            });
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_norm_matches_manual() {
+        let grads = vec![vec![3.0f32], vec![4.0f32]];
+        assert!((global_norm(&grads) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clip_scales_down_only_when_needed() {
+        let mut grads = vec![vec![3.0f32], vec![4.0f32]];
+        let pre = clip_global_norm(&mut grads, 1.0, 1);
+        assert!((pre - 5.0).abs() < 1e-9);
+        assert!((global_norm(&grads) - 1.0).abs() < 1e-5);
+
+        let mut small = vec![vec![0.1f32]];
+        clip_global_norm(&mut small, 1.0, 1);
+        assert_eq!(small[0][0], 0.1);
+    }
+}

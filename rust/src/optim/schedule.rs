@@ -1,0 +1,72 @@
+//! Cosine learning-rate schedule with linear warmup (the appendix's
+//! "Cosine" scheduler with LR warmup fraction 0.01 and a minimum LR).
+
+/// Cosine decay from `max_lr` to `min_lr` over `total_steps`, after a
+/// linear warmup of `warmup_steps`.
+#[derive(Debug, Clone)]
+pub struct CosineSchedule {
+    pub max_lr: f32,
+    pub min_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+impl CosineSchedule {
+    pub fn new(max_lr: f32, min_lr: f32, warmup_frac: f32, total_steps: usize) -> CosineSchedule {
+        let warmup_steps = ((total_steps as f32 * warmup_frac) as usize).max(1);
+        CosineSchedule { max_lr, min_lr, warmup_steps, total_steps }
+    }
+
+    /// LR at step (0-indexed).
+    pub fn lr(&self, step: usize) -> f32 {
+        if step < self.warmup_steps {
+            return self.max_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if step >= self.total_steps {
+            return self.min_lr;
+        }
+        let progress =
+            (step - self.warmup_steps) as f32 / (self.total_steps - self.warmup_steps).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.min_lr + (self.max_lr - self.min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = CosineSchedule::new(1.0, 0.1, 0.1, 100);
+        assert_eq!(s.warmup_steps, 10);
+        assert!(s.lr(0) > 0.0);
+        assert!(s.lr(4) < s.lr(9));
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decays_to_min() {
+        let s = CosineSchedule::new(1.0, 0.1, 0.01, 1000);
+        assert!((s.lr(999) - 0.1).abs() < 1e-3);
+        assert_eq!(s.lr(5000), 0.1);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = CosineSchedule::new(2e-4, 2e-5, 0.01, 20000);
+        let mut prev = f32::MAX;
+        for step in (s.warmup_steps..20000).step_by(500) {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn midpoint_is_halfway() {
+        let s = CosineSchedule::new(1.0, 0.0, 0.0, 1000);
+        let mid = s.lr(500);
+        assert!((mid - 0.5).abs() < 0.01, "mid {mid}");
+    }
+}

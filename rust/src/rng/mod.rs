@@ -1,0 +1,194 @@
+//! Deterministic, splittable RNG (rand is unavailable offline; we also
+//! want bit-reproducible runs across platforms).
+//!
+//! xoshiro256++ seeded via splitmix64, with `fold_in` for hierarchical
+//! splitting — the same discipline jax uses with its PRNG keys: the
+//! coordinator derives per-step seeds for the train artifact, per-shard
+//! seeds for data-parallel workers, and per-experiment seeds for the
+//! benches, all from one root seed.
+
+/// xoshiro256++ PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed the generator; any u64 (including 0) is fine.
+    pub fn seed(seed: u64) -> Rng {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Derive an independent stream from this seed and extra data —
+    /// jax.random.fold_in's moral equivalent.
+    pub fn fold_in(seed: u64, data: u64) -> Rng {
+        Rng::seed(seed ^ data.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3])).rotate_left(23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of mantissa entropy.
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply trick: unbiased enough for data sampling
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (uses two uniforms per pair).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                let r = (-2.0 * (u1 as f64).ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2 as f64).cos()) as f32;
+            }
+        }
+    }
+
+    /// Random sign in {-1.0, +1.0} (Rademacher).
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32], scale: f32) {
+        for x in out {
+            *x = self.normal() * scale;
+        }
+    }
+
+    /// Fill a slice with uniforms in [0, 1).
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for x in out {
+            *x = self.uniform();
+        }
+    }
+
+    /// Fill with Rademacher signs.
+    pub fn fill_sign(&mut self, out: &mut [f32]) {
+        for x in out {
+            *x = self.rademacher();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed(42);
+        let mut b = Rng::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let mut a = Rng::seed(1);
+        let mut b = Rng::seed(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fold_in_differs_from_base() {
+        let mut a = Rng::seed(7);
+        let mut b = Rng::fold_in(7, 1);
+        let mut c = Rng::fold_in(7, 2);
+        let x = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_ne!(x.0, x.1);
+        assert_ne!(x.1, x.2);
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut r = Rng::seed(3);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed(4);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn rademacher_balanced() {
+        let mut r = Rng::seed(5);
+        let n = 100_000;
+        let pos = (0..n).filter(|_| r.rademacher() > 0.0).count();
+        let frac = pos as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.01, "frac {frac}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::seed(6);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

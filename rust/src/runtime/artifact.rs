@@ -1,0 +1,235 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt` + `*.meta.json`
+//! pairs emitted by `python/compile/aot.py` and exposes their signatures.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Tensor dtype in the artifact ABI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            _ => return None,
+        })
+    }
+}
+
+/// One input/output tensor spec.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec, String> {
+        Ok(TensorSpec {
+            name: v.get("name").as_str().ok_or("missing tensor name")?.to_string(),
+            shape: v.get("shape").as_shape().ok_or("missing shape")?,
+            dtype: DType::parse(v.get("dtype").as_str().unwrap_or("f32"))
+                .ok_or("bad dtype")?,
+        })
+    }
+}
+
+/// The precision recipe recorded in the metadata.
+#[derive(Debug, Clone)]
+pub struct RecipeMeta {
+    pub name: String,
+    pub fwd: String,
+    pub bwd_mode: String,
+    pub g: usize,
+    pub impl_name: String,
+}
+
+/// Model architecture recorded in the metadata.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub d_ff: usize,
+}
+
+/// Parsed `<name>.meta.json` + path of its HLO text.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: String,
+    pub config_name: String,
+    pub batch: usize,
+    pub param_count: usize,
+    pub model: ModelMeta,
+    pub recipe: RecipeMeta,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub params: Vec<TensorSpec>,
+    pub hlo_path: PathBuf,
+}
+
+impl Artifact {
+    /// Load from a `<base>.meta.json` path.
+    pub fn load(meta_path: &Path) -> Result<Artifact, String> {
+        let text = std::fs::read_to_string(meta_path)
+            .map_err(|e| format!("read {}: {e}", meta_path.display()))?;
+        let v = json::parse(&text).map_err(|e| format!("{}: {e}", meta_path.display()))?;
+        let name = v.get("name").as_str().ok_or("missing name")?.to_string();
+        let hlo_path = meta_path.with_file_name(format!("{name}.hlo.txt"));
+        if !hlo_path.exists() {
+            return Err(format!("missing HLO text {}", hlo_path.display()));
+        }
+        let cfg = v.get("config");
+        let rec = v.get("recipe");
+        let specs = |key: &str| -> Result<Vec<TensorSpec>, String> {
+            v.get(key)
+                .as_arr()
+                .ok_or(format!("missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Artifact {
+            name,
+            kind: v.get("kind").as_str().unwrap_or("train").to_string(),
+            config_name: v.get("config_name").as_str().unwrap_or("?").to_string(),
+            batch: v.get("batch").as_usize().ok_or("missing batch")?,
+            param_count: v.get("param_count").as_usize().unwrap_or(0),
+            model: ModelMeta {
+                vocab: cfg.get("vocab").as_usize().unwrap_or(0),
+                d_model: cfg.get("d_model").as_usize().unwrap_or(0),
+                n_layers: cfg.get("n_layers").as_usize().unwrap_or(0),
+                n_heads: cfg.get("n_heads").as_usize().unwrap_or(0),
+                seq_len: cfg.get("seq_len").as_usize().unwrap_or(0),
+                d_ff: cfg.get("d_ff").as_usize().unwrap_or(0),
+            },
+            recipe: RecipeMeta {
+                name: v.get("recipe_name").as_str().unwrap_or("?").to_string(),
+                fwd: rec.get("fwd").as_str().unwrap_or("bf16").to_string(),
+                bwd_mode: rec.get("bwd_mode").as_str().unwrap_or("exact").to_string(),
+                g: rec.get("g").as_usize().unwrap_or(64),
+                impl_name: rec.get("impl").as_str().unwrap_or("pallas").to_string(),
+            },
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            params: specs("params")?,
+            hlo_path,
+        })
+    }
+
+    /// Tokens per training step this artifact consumes.
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.model.seq_len
+    }
+}
+
+/// All artifacts in a directory, keyed by name.
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Registry {
+    pub fn open(dir: &Path) -> Result<Registry, String> {
+        let mut artifacts = Vec::new();
+        let entries =
+            std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(".meta.json")) {
+                artifacts.push(Artifact::load(&p)?);
+            }
+        }
+        artifacts.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Registry { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find by (config, recipe, kind) triple, e.g. ("tiny", "mxfp4_rht_sr", "train").
+    pub fn find(&self, config: &str, recipe: &str, kind: &str) -> Option<&Artifact> {
+        self.get(&format!("{config}_{recipe}_{kind}"))
+    }
+
+    /// For eval/logits the backward recipe is irrelevant; find any artifact
+    /// of this config + kind whose *forward* precision matches.
+    pub fn find_fwd(&self, config: &str, fwd: &str, kind: &str) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.config_name == config && a.kind == kind && a.recipe.fwd == fwd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn registry_discovers_artifacts() {
+        let reg = Registry::open(&artifacts_dir()).expect("run `make artifacts` first");
+        assert!(reg.artifacts.len() >= 10, "found {}", reg.artifacts.len());
+        let a = reg.find("test", "bf16", "train").expect("test_bf16_train");
+        assert_eq!(a.kind, "train");
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.model.d_model, 64);
+        // ABI: inputs = seed, tokens, labels, params...
+        assert_eq!(a.inputs[0].name, "seed");
+        assert_eq!(a.inputs[0].dtype, DType::U32);
+        assert_eq!(a.inputs[1].name, "tokens");
+        assert_eq!(a.inputs.len(), 3 + a.params.len());
+        // outputs = loss + one grad per param
+        assert_eq!(a.outputs.len(), 1 + a.params.len());
+        assert_eq!(a.outputs[0].name, "loss");
+    }
+
+    #[test]
+    fn recipe_metadata_roundtrips() {
+        let reg = Registry::open(&artifacts_dir()).unwrap();
+        let a = reg.find("tiny", "mxfp4_rht_sr", "train").unwrap();
+        assert_eq!(a.recipe.bwd_mode, "rht_sr");
+        assert_eq!(a.recipe.g, 64);
+        assert_eq!(a.recipe.fwd, "bf16");
+        let g32 = reg.find("tiny", "mxfp4_rht_sr_g32", "train").unwrap();
+        assert_eq!(g32.recipe.g, 32);
+    }
+
+    #[test]
+    fn find_fwd_locates_eval() {
+        let reg = Registry::open(&artifacts_dir()).unwrap();
+        let a = reg.find_fwd("tiny", "bf16", "eval").expect("tiny bf16 eval");
+        assert_eq!(a.outputs.len(), 1);
+        let l = reg.find_fwd("tiny", "bf16", "logits").expect("tiny bf16 logits");
+        assert_eq!(l.outputs[0].shape.len(), 3);
+    }
+
+    #[test]
+    fn param_shapes_consistent() {
+        let reg = Registry::open(&artifacts_dir()).unwrap();
+        let a = reg.find("test", "bf16", "train").unwrap();
+        let total: usize = a.params.iter().map(TensorSpec::numel).sum();
+        assert_eq!(total, a.param_count);
+    }
+}

@@ -1,0 +1,187 @@
+//! PJRT executor: load an artifact's HLO text, compile it on the CPU
+//! client, and run train/eval/logits steps with flat f32 parameter
+//! buffers. Adapted from /opt/xla-example/load_hlo.rs.
+//!
+//! One `Executor` owns one compiled executable. PJRT handles are raw
+//! pointers (!Send), so executors live on the thread that created them —
+//! the data-parallel coordinator gives each worker thread its own
+//! executor (see coordinator::dp).
+
+use anyhow::{Context, Result};
+
+use super::artifact::{Artifact, DType, TensorSpec};
+
+/// A compiled, ready-to-run artifact.
+pub struct Executor {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Flat tensor output of a step.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Result of one train step: scalar loss + gradients (params order).
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    pub loss: f32,
+    pub grads: Vec<Vec<f32>>,
+}
+
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+impl Executor {
+    /// Compile `artifact` on the given PJRT client.
+    pub fn compile(client: &xla::PjRtClient, artifact: &Artifact) -> Result<Executor> {
+        let proto = xla::HloModuleProto::from_text_file(&artifact.hlo_path)
+            .with_context(|| format!("parse {}", artifact.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compile {}", artifact.name))?;
+        Ok(Executor { artifact: artifact.clone(), exe })
+    }
+
+    /// Convenience: fresh CPU client + compile.
+    pub fn compile_cpu(artifact: &Artifact) -> Result<Executor> {
+        let client = xla::PjRtClient::cpu()?;
+        Executor::compile(&client, artifact)
+    }
+
+    fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.artifact.params.len(),
+            "param count mismatch: got {}, artifact {} wants {}",
+            params.len(),
+            self.artifact.name,
+            self.artifact.params.len()
+        );
+        for (p, spec) in params.iter().zip(&self.artifact.params) {
+            anyhow::ensure!(
+                p.len() == spec.numel(),
+                "param {} numel mismatch: got {}, want {}",
+                spec.name,
+                p.len(),
+                spec.numel()
+            );
+        }
+        Ok(())
+    }
+
+    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Execute a `train` artifact: (seed, tokens, labels, params) -> loss + grads.
+    pub fn train_step(
+        &self,
+        seed: u32,
+        tokens: &[i32],
+        labels: &[i32],
+        params: &[Vec<f32>],
+    ) -> Result<TrainOutput> {
+        anyhow::ensure!(self.artifact.kind == "train", "{} is not a train artifact", self.artifact.name);
+        self.check_params(params)?;
+        let tok_spec = &self.artifact.inputs[1];
+        anyhow::ensure!(tokens.len() == tok_spec.numel(), "tokens len");
+        anyhow::ensure!(labels.len() == tok_spec.numel(), "labels len");
+
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 + params.len());
+        inputs.push(xla::Literal::scalar(seed));
+        inputs.push(literal_i32(tokens, &tok_spec.shape)?);
+        inputs.push(literal_i32(labels, &tok_spec.shape)?);
+        for (p, spec) in params.iter().zip(&self.artifact.params) {
+            inputs.push(literal_f32(p, &spec.shape)?);
+        }
+        let outs = self.run(&inputs)?;
+        anyhow::ensure!(
+            outs.len() == 1 + params.len(),
+            "output arity: got {}, want {}",
+            outs.len(),
+            1 + params.len()
+        );
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let grads = outs[1..].iter().map(|l| l.to_vec::<f32>()).collect::<Result<Vec<_>, _>>()?;
+        Ok(TrainOutput { loss, grads })
+    }
+
+    /// Execute an `eval` artifact: (tokens, labels, params) -> loss.
+    pub fn eval_step(&self, tokens: &[i32], labels: &[i32], params: &[Vec<f32>]) -> Result<f32> {
+        anyhow::ensure!(self.artifact.kind == "eval", "{} is not an eval artifact", self.artifact.name);
+        self.check_params(params)?;
+        let tok_spec = &self.artifact.inputs[0];
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 + params.len());
+        inputs.push(literal_i32(tokens, &tok_spec.shape)?);
+        inputs.push(literal_i32(labels, &tok_spec.shape)?);
+        for (p, spec) in params.iter().zip(&self.artifact.params) {
+            inputs.push(literal_f32(p, &spec.shape)?);
+        }
+        let outs = self.run(&inputs)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+
+    /// Execute a `logits` artifact: (tokens, params) -> logits (B, T, V).
+    pub fn logits(&self, tokens: &[i32], params: &[Vec<f32>]) -> Result<Tensor> {
+        anyhow::ensure!(self.artifact.kind == "logits", "{} is not a logits artifact", self.artifact.name);
+        self.check_params(params)?;
+        let tok_spec = &self.artifact.inputs[0];
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(1 + params.len());
+        inputs.push(literal_i32(tokens, &tok_spec.shape)?);
+        for (p, spec) in params.iter().zip(&self.artifact.params) {
+            inputs.push(literal_f32(p, &spec.shape)?);
+        }
+        let outs = self.run(&inputs)?;
+        let spec: &TensorSpec = &self.artifact.outputs[0];
+        Ok(Tensor { name: spec.name.clone(), shape: spec.shape.clone(), data: outs[0].to_vec::<f32>()? })
+    }
+}
+
+/// Initialize a parameter store matching an artifact's ABI, GPT-2 style
+/// (N(0, 0.02), residual projections scaled by 1/sqrt(2L), LN gains at 1).
+/// Mirrors `model.init_params` — not bit-identical to jax's initializer
+/// (different RNG), statistically equivalent.
+pub fn init_params(artifact: &Artifact, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = crate::rng::Rng::seed(seed);
+    let resid_scale = 1.0 / ((2 * artifact.model.n_layers) as f32).sqrt();
+    artifact
+        .params
+        .iter()
+        .map(|spec| {
+            let mut v = vec![0.0f32; spec.numel()];
+            if spec.name.ends_with("_g") {
+                v.fill(1.0);
+            } else if spec.name.ends_with("_b") {
+                // zeros
+            } else {
+                let scale = if spec.name == "proj_w" || spec.name == "fc2_w" {
+                    0.02 * resid_scale
+                } else {
+                    0.02
+                };
+                rng.fill_normal(&mut v, scale);
+            }
+            v
+        })
+        .collect()
+}
+
+/// Sanity description of a dtype for error messages.
+pub fn dtype_name(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "f32",
+        DType::I32 => "i32",
+        DType::U32 => "u32",
+    }
+}

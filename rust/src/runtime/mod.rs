@@ -1,0 +1,19 @@
+//! PJRT runtime: load + execute AOT artifacts (HLO text) from rust.
+//!
+//! * `artifact` — registry over `artifacts/*.{hlo.txt,meta.json}`
+//! * `executor` — compile + run train/eval/logits steps
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Artifact, DType, Registry, TensorSpec};
+pub use executor::{Executor, Tensor, TrainOutput};
+
+/// Repo-root-relative default artifacts directory.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

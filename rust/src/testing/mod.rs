@@ -1,0 +1,121 @@
+//! Seeded property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property against many pseudo-random cases generated from
+//! a deterministic seed; on failure it reports the failing case index and
+//! seed so the case reproduces exactly. Generators are plain closures over
+//! `Rng`, composed in the test body — no macro magic, no shrinking, but
+//! deterministic replay which is what CI actually needs.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(case_rng)` for `cfg.cases` independently-seeded cases.
+/// Panics with the reproducing seed on the first failure.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seed(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Shorthand: property with default config.
+pub fn quick<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, Config::default(), prop);
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::Rng;
+
+    /// Random size in [lo, hi] that is a multiple of `align`.
+    pub fn aligned_size(rng: &mut Rng, lo: usize, hi: usize, align: usize) -> usize {
+        let lo_a = lo.div_ceil(align);
+        let hi_a = hi / align;
+        (lo_a + rng.below(hi_a - lo_a + 1)) * align
+    }
+
+    /// Gaussian vector with a random log-uniform scale in [2^-20, 2^20].
+    pub fn scaled_gaussian(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let scale = (2.0f32).powf(rng.range(-20.0, 20.0));
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, scale);
+        v
+    }
+
+    /// Fig. 2-style Gaussian with outliers.
+    pub fn gaussian_outliers(rng: &mut Rng, n: usize, p: f64, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        for x in &mut v {
+            *x = if (rng.uniform() as f64) < p { rng.normal() * sigma } else { rng.normal() };
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quick("tautology", |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        check("always-fails", Config { cases: 3, seed: 1 }, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen1 = Vec::new();
+        check("collect1", Config { cases: 5, seed: 9 }, |rng| {
+            seen1.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check("collect2", Config { cases: 5, seed: 9 }, |rng| {
+            seen2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+
+    #[test]
+    fn aligned_size_respects_bounds() {
+        let mut rng = crate::rng::Rng::seed(2);
+        for _ in 0..100 {
+            let n = gen::aligned_size(&mut rng, 32, 512, 32);
+            assert!(n % 32 == 0 && (32..=512).contains(&n));
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Supports `command --flag value --switch positional` grammars: the first
+//! non-flag token is the subcommand, `--key value` pairs become options,
+//! `--key` followed by another flag (or end) becomes a boolean switch,
+//! remaining bare tokens are positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (argv minus the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(key) = t.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.options.insert(key.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.switches.push(key.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // NB: a bare token right after `--verbose` would parse as its value
+        // (documented grammar) — switches must precede flags or end the line.
+        let a = parse("train --config small --verbose --steps 300");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("small"));
+        assert_eq!(a.get_usize("steps", 0), 300);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("bench --recipe=mxfp4_rht_sr --g=64");
+        assert_eq!(a.get("recipe"), Some("mxfp4_rht_sr"));
+        assert_eq!(a.get_usize("g", 0), 64);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("eval --fast");
+        assert!(a.has("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("mode", "dflt"), "dflt");
+        assert_eq!(a.get_f32("lr", 1e-3), 1e-3);
+    }
+}

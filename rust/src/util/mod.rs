@@ -1,0 +1,9 @@
+//! Offline-friendly substrates: JSON, CLI parsing, logging, threading,
+//! timing. Hand-rolled because the environment has no serde / clap /
+//! rayon / criterion (DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod threadpool;
+pub mod timer;

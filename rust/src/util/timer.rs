@@ -1,0 +1,99 @@
+//! Timing helpers for the bench harness and the coordinator's metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Online mean/min/max/count of durations (per-step latency tracking).
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn add(&mut self, secs: f64) {
+        if self.n == 0 {
+            self.min = secs;
+            self.max = secs;
+        } else {
+            self.min = self.min.min(secs);
+            self.max = self.max.max(secs);
+        }
+        self.n += 1;
+        self.sum += secs;
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Measure the median-of-means wall time of `f`, with warmup. Returns
+/// seconds per call. The bench harness's core primitive.
+pub fn bench_secs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let reps = 3usize;
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t.elapsed().as_secs_f64() / iters.max(1) as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[reps / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_track_extrema() {
+        let mut s = Stats::default();
+        for x in [3.0, 1.0, 2.0] {
+            s.add(x);
+        }
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_returns_positive() {
+        let t = bench_secs(1, 10, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Failure injection: the coordinator must fail loudly and cleanly on
+//! corrupted artifacts, truncated checkpoints, and ABI mismatches —
+//! never train on garbage.
+
+use std::path::PathBuf;
+
+use mxfp4_train::coordinator::checkpoint;
+use mxfp4_train::runtime::{executor, Artifact, Executor, Registry};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mxfp4_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn artifacts_dir() -> PathBuf {
+    mxfp4_train::runtime::default_artifacts_dir()
+}
+
+#[test]
+fn corrupted_meta_json_is_rejected() {
+    let d = tmp_dir("meta");
+    std::fs::write(d.join("bogus.meta.json"), "{ not json !!").unwrap();
+    let err = Registry::open(&d).unwrap_err();
+    assert!(err.contains("bogus.meta.json"), "{err}");
+}
+
+#[test]
+fn missing_hlo_text_is_rejected() {
+    let d = tmp_dir("nohlo");
+    // valid metadata, no .hlo.txt next to it
+    let src = artifacts_dir().join("test_bf16_train.meta.json");
+    std::fs::copy(src, d.join("test_bf16_train.meta.json")).unwrap();
+    let err = Registry::open(&d).unwrap_err();
+    assert!(err.contains("missing HLO text"), "{err}");
+}
+
+#[test]
+fn truncated_hlo_fails_compile_not_crash() {
+    let d = tmp_dir("trunc");
+    let reg = Registry::open(&artifacts_dir()).unwrap();
+    let art = reg.find("test", "bf16", "train").unwrap();
+    let text = std::fs::read_to_string(&art.hlo_path).unwrap();
+    std::fs::write(d.join("test_bf16_train.hlo.txt"), &text[..text.len() / 3]).unwrap();
+    std::fs::copy(
+        artifacts_dir().join("test_bf16_train.meta.json"),
+        d.join("test_bf16_train.meta.json"),
+    )
+    .unwrap();
+    let reg2 = Registry::open(&d).unwrap();
+    let art2 = reg2.find("test", "bf16", "train").unwrap();
+    assert!(Executor::compile_cpu(art2).is_err());
+}
+
+#[test]
+fn param_arity_mismatch_is_caught_before_pjrt() {
+    let reg = Registry::open(&artifacts_dir()).unwrap();
+    let art = reg.find("test", "bf16", "train").unwrap();
+    let exe = Executor::compile_cpu(art).unwrap();
+    let mut params = executor::init_params(art, 0);
+    params.pop();
+    let n = art.tokens_per_step();
+    let toks = vec![0i32; n];
+    let err = exe.train_step(0, &toks, &toks, &params).unwrap_err();
+    assert!(err.to_string().contains("param count mismatch"), "{err}");
+}
+
+#[test]
+fn param_shape_mismatch_is_caught() {
+    let reg = Registry::open(&artifacts_dir()).unwrap();
+    let art = reg.find("test", "bf16", "train").unwrap();
+    let exe = Executor::compile_cpu(art).unwrap();
+    let mut params = executor::init_params(art, 0);
+    params[3].truncate(7);
+    let n = art.tokens_per_step();
+    let toks = vec![0i32; n];
+    let err = exe.train_step(0, &toks, &toks, &params).unwrap_err();
+    assert!(err.to_string().contains("numel mismatch"), "{err}");
+}
+
+#[test]
+fn wrong_kind_rejected() {
+    let reg = Registry::open(&artifacts_dir()).unwrap();
+    let art = reg.find_fwd("test", "bf16", "eval").unwrap();
+    let exe = Executor::compile_cpu(art).unwrap();
+    let params = executor::init_params(art, 0);
+    let n = art.tokens_per_step();
+    let toks = vec![0i32; n];
+    let err = exe.train_step(0, &toks, &toks, &params).unwrap_err();
+    assert!(err.to_string().contains("not a train artifact"), "{err}");
+}
+
+#[test]
+fn truncated_checkpoint_is_rejected() {
+    let d = tmp_dir("ckpt");
+    let p = d.join("t.mxck");
+    checkpoint::save(&p, &["w".into()], &[vec![1.0f32; 100]]).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() - 13]).unwrap();
+    assert!(checkpoint::load(&p).is_err());
+}
+
+#[test]
+fn checkpoint_wrong_magic_rejected() {
+    let d = tmp_dir("magic");
+    let p = d.join("bad.mxck");
+    std::fs::write(&p, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+    let err = checkpoint::load(&p).unwrap_err();
+    assert!(err.to_string().contains("not a MXCK"), "{err}");
+}
+
+#[test]
+fn artifact_load_reports_bad_shape_types() {
+    let d = tmp_dir("types");
+    std::fs::write(
+        d.join("x.meta.json"),
+        r#"{"name": "x", "kind": "train", "batch": "not-a-number"}"#,
+    )
+    .unwrap();
+    // batch must be numeric
+    let err = Artifact::load(&d.join("x.meta.json")).unwrap_err();
+    assert!(err.contains("batch") || err.contains("missing"), "{err}");
+}

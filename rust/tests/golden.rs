@@ -1,0 +1,89 @@
+//! Cross-language bit-accuracy: rust `mx`/`hadamard` vs the jax oracle.
+//!
+//! `aot.py` emits `artifacts/golden.json` with inputs + expected outputs
+//! computed by `ref.py`; every comparison here is exact equality — the two
+//! implementations must agree bit-for-bit on deterministic paths (NR
+//! quantization, shared scales, RHT with a given sign vector) and on SR
+//! given identical dither noise.
+
+use mxfp4_train::hadamard;
+use mxfp4_train::mx::quant;
+use mxfp4_train::util::json;
+
+fn load_golden() -> json::Json {
+    let path = mxfp4_train::runtime::default_artifacts_dir().join("golden.json");
+    let text = std::fs::read_to_string(&path).expect("make artifacts first (golden.json)");
+    json::parse(&text).expect("golden.json parses")
+}
+
+#[test]
+fn quantize_nr_bit_identical_to_jax() {
+    let g = load_golden();
+    for (i, case) in g.get("quant_nr").as_arr().unwrap().iter().enumerate() {
+        let mut v = case.get("input").as_f32_vec().unwrap();
+        let want = case.get("qdq_nr").as_f32_vec().unwrap();
+        quant::qdq_nr(&mut v);
+        assert_eq!(v, want, "quant_nr case {i}");
+    }
+}
+
+#[test]
+fn shared_scales_bit_identical_to_jax() {
+    let g = load_golden();
+    for (i, case) in g.get("quant_nr").as_arr().unwrap().iter().enumerate() {
+        let v = case.get("input").as_f32_vec().unwrap();
+        let want = case.get("scales").as_f32_vec().unwrap();
+        let got = quant::block_scales(&v);
+        assert_eq!(got, want, "scales case {i}");
+    }
+}
+
+#[test]
+fn rht_matches_jax_within_float_noise() {
+    // The RHT is a dense matmul — product order differs between XLA and our
+    // loop, so allow an ulp-scale tolerance rather than exact equality.
+    let g = load_golden();
+    let case = g.get("rht");
+    let sign = case.get("sign").as_f32_vec().unwrap();
+    let mut v = case.get("input").as_f32_vec().unwrap();
+    let want = case.get("output").as_f32_vec().unwrap();
+    hadamard::rht_blockwise_dense(&mut v, &sign, 1);
+    for (i, (a, b)) in v.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "rht elem {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn quantize_sr_bit_identical_given_same_noise() {
+    let g = load_golden();
+    let case = g.get("quant_sr");
+    let mut v = case.get("input").as_f32_vec().unwrap();
+    let noise = case.get("noise").as_f32_vec().unwrap();
+    let want = case.get("qdq_sr").as_f32_vec().unwrap();
+    quant::qdq_sr_with_noise(&mut v, &noise);
+    assert_eq!(v, want, "quant_sr");
+}
+
+#[test]
+fn model_loss_matches_jax() {
+    // Model-level cross-language check: fixed params + batch executed via
+    // the PJRT runtime must reproduce the loss jax computed at AOT time.
+    let dir = mxfp4_train::runtime::default_artifacts_dir();
+    let doc = json::parse(&std::fs::read_to_string(dir.join("golden_model.json")).unwrap()).unwrap();
+    let tokens: Vec<i32> =
+        doc.get("tokens").as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect();
+    let labels: Vec<i32> =
+        doc.get("labels").as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect();
+    let want = doc.get("expected_loss").as_f64().unwrap() as f32;
+
+    let (_names, params) =
+        mxfp4_train::coordinator::checkpoint::load(&dir.join("golden_params.mxck")).unwrap();
+    let reg = mxfp4_train::runtime::Registry::open(&dir).unwrap();
+    let art = reg.find_fwd("test", "bf16", "eval").unwrap();
+    let exe = mxfp4_train::runtime::Executor::compile_cpu(art).unwrap();
+    let got = exe.eval_step(&tokens, &labels, &params).unwrap();
+    assert!(
+        (got - want).abs() < 1e-4,
+        "rust-executed loss {got} vs jax {want} — HLO round-trip corrupted?"
+    );
+}

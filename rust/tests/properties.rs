@@ -1,0 +1,287 @@
+//! Property-based tests (seeded harness in `testing::`) over the
+//! coordinator's invariants — routing/batching/state — and the numeric
+//! substrates under randomized shapes and scales.
+
+use mxfp4_train::data::{Batch, Dataset};
+use mxfp4_train::gemm::{matmul, mx_matmul, Mat, MxMode};
+use mxfp4_train::hadamard;
+use mxfp4_train::mx::{bf16, block::MxVec, fp4, quant, scale};
+use mxfp4_train::optim::{self, AdamW, CosineSchedule, ParamRounding};
+use mxfp4_train::rng::Rng;
+use mxfp4_train::testing::{check, gen, Config};
+use mxfp4_train::util::json;
+
+// ---------------------------------------------------------------------------
+// quantization invariants across random shapes/scales
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qdq_nr_idempotent_and_grid_valued() {
+    check("qdq-nr-idempotent", Config::default(), |rng| {
+        let n = gen::aligned_size(rng, 32, 1024, 32);
+        let mut v = gen::scaled_gaussian(rng, n);
+        let orig = v.clone();
+        quant::qdq_nr(&mut v);
+        let once = v.clone();
+        quant::qdq_nr(&mut v);
+        if once != v {
+            return Err("not idempotent".into());
+        }
+        for (block, oblock) in v.chunks(32).zip(orig.chunks(32)) {
+            let x = scale::block_scale(oblock);
+            for &e in block {
+                let r = (e / x).abs();
+                if !fp4::FP4_GRID.iter().any(|&g| (g - r).abs() < 1e-6 * r.max(1.0)) {
+                    return Err(format!("off grid: {r}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sr_bounded_by_neighbor_gap() {
+    check("sr-neighbor-gap", Config::default(), |rng| {
+        let n = gen::aligned_size(rng, 32, 512, 32);
+        let orig = gen::scaled_gaussian(rng, n);
+        let mut v = orig.clone();
+        quant::qdq_sr(&mut v, rng);
+        // each SR output is one of the two FP4 neighbors of 0.75*v/X
+        for (block, oblock) in v.chunks(32).zip(orig.chunks(32)) {
+            let x = scale::block_scale(oblock);
+            for (&q, &o) in block.iter().zip(oblock) {
+                let target = (0.75 * o / x).clamp(-6.0, 6.0);
+                let (f, c) = fp4::floor_ceil(target.abs());
+                let qn = (q / x).abs();
+                if (qn - f).abs() > 1e-5 && (qn - c).abs() > 1e-5 {
+                    return Err(format!("SR output {qn} not a neighbor of {target}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_equals_qdq() {
+    check("packed-vs-qdq", Config::default(), |rng| {
+        let n = gen::aligned_size(rng, 32, 512, 32);
+        let v = gen::gaussian_outliers(rng, n, 0.05, 8.0);
+        let mut qdq = v.clone();
+        quant::qdq_nr(&mut qdq);
+        if MxVec::quantize_nr(&v).dequantize() != qdq {
+            return Err("packed container diverges from qdq emulation".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// RHT invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rht_preserves_gemm() {
+    check("rht-gemm-invariance", Config { cases: 24, seed: 11 }, |rng| {
+        let g = [32usize, 64, 128][rng.below(3)];
+        let k = g * (1 + rng.below(3));
+        let a = Mat::gaussian(3, k, 1.0, rng);
+        let b = Mat::gaussian(k, 2, 1.0, rng);
+        let want = matmul(&a, &b, 1);
+        let sign = hadamard::sample_sign(g, rng);
+        let mut ta = a.clone();
+        let mut tbt = b.transpose();
+        hadamard::rht_blockwise_dense(&mut ta.data, &sign, 1);
+        hadamard::rht_blockwise_dense(&mut tbt.data, &sign, 1);
+        let got = matmul(&ta, &tbt.transpose(), 1);
+        for (x, y) in want.data.iter().zip(&got.data) {
+            if (x - y).abs() > 2e-3 * x.abs().max(1.0) {
+                return Err(format!("gemm changed: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fwht_equals_dense_operator() {
+    check("fwht-vs-dense", Config { cases: 16, seed: 12 }, |rng| {
+        let g = [32usize, 64, 256][rng.below(3)];
+        let sign = hadamard::sample_sign(g, rng);
+        let mut a = vec![0.0f32; g * 4];
+        rng.fill_normal(&mut a, 2.0);
+        let mut b = a.clone();
+        hadamard::rht_blockwise_dense(&mut a, &sign, 1);
+        hadamard::rht_blockwise_fwht(&mut b, &sign, 2);
+        for (x, y) in a.iter().zip(&b) {
+            if (x - y).abs() > 1e-3 {
+                return Err(format!("paths diverge: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// batching / data routing invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shard_partition_is_exact() {
+    check("shard-partition", Config { cases: 32, seed: 13 }, |rng| {
+        let workers = 1 + rng.below(4);
+        let rows = workers * (1 + rng.below(4));
+        let seq = 8 * (1 + rng.below(8));
+        let n = rows * seq;
+        let tokens: Vec<i32> = (0..n as i32).collect();
+        let labels: Vec<i32> = (1..=n as i32).collect();
+        let b = Batch { tokens: tokens.clone(), labels };
+        let shards = b.shard(workers, rows, seq);
+        let rejoined: Vec<i32> = shards.iter().flat_map(|s| s.tokens.clone()).collect();
+        if rejoined != tokens {
+            return Err("shards do not partition the batch".into());
+        }
+        if shards.iter().any(|s| s.tokens.len() != rows / workers * seq) {
+            return Err("uneven shard".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batches_are_valid_windows() {
+    let ds = Dataset::synthetic(30_000, 256, 5);
+    check("batch-windows", Config { cases: 16, seed: 14 }, |rng| {
+        let batch = 1 + rng.below(8);
+        let seq = 8 + rng.below(56);
+        let mut it = ds.train_batches(batch, seq, rng.next_u64());
+        let b = it.next_batch();
+        if b.tokens.len() != batch * seq || b.labels.len() != batch * seq {
+            return Err("wrong batch size".into());
+        }
+        for r in 0..batch {
+            for i in 0..seq - 1 {
+                if b.labels[r * seq + i] != b.tokens[r * seq + i + 1] {
+                    return Err("labels are not next-token shift".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// optimizer state invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_adamw_masters_stay_finite_and_compute_is_bf16() {
+    check("adamw-state", Config { cases: 12, seed: 15 }, |rng| {
+        let n = 16 + rng.below(256);
+        let params = vec![gen::scaled_gaussian(rng, n)];
+        let names = vec!["w".to_string()];
+        let mut opt = AdamW::new(&params, &names, 0.9, 0.95, 1e-8, 0.01, ParamRounding::Nearest, 1);
+        let mut compute = params.clone();
+        for s in 0..20 {
+            let grads = vec![gen::gaussian_outliers(rng, n, 0.01, 50.0)];
+            let mut g = grads;
+            optim::clip_global_norm(&mut g, 1.0, 2);
+            if optim::global_norm(&g) > 1.0 + 1e-4 {
+                return Err("clip failed".into());
+            }
+            opt.step(&g, 1e-3, &mut compute);
+            let _ = s;
+        }
+        for (&m, &c) in opt.master[0].iter().zip(&compute[0]) {
+            if !m.is_finite() {
+                return Err("master exploded".into());
+            }
+            if c != bf16::qdq(c) {
+                return Err("compute copy not bf16".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_bounded() {
+    check("lr-bounds", Config { cases: 32, seed: 16 }, |rng| {
+        let max_lr = rng.range(1e-5, 1e-2);
+        let min_lr = max_lr * rng.range(0.0, 0.5);
+        let steps = 10 + rng.below(100_000);
+        let s = CosineSchedule::new(max_lr, min_lr, rng.range(0.0, 0.2), steps);
+        for probe in [0usize, 1, steps / 2, steps - 1, steps, steps * 2] {
+            let lr = s.lr(probe);
+            if !(0.0..=max_lr * 1.0001).contains(&lr) {
+                return Err(format!("lr {lr} out of [0, {max_lr}] at {probe}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// GEMM mode invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_mx_gemm_relative_error_bounded() {
+    check("mx-gemm-error", Config { cases: 10, seed: 17 }, |rng| {
+        let k = 32 * (2 + rng.below(6));
+        let a = Mat::gaussian(4, k, 1.0, rng);
+        let b = Mat::gaussian(k, 4, 1.0, rng);
+        let exact = matmul(&a, &b, 1);
+        for mode in [MxMode::Nr, MxMode::RhtSr] {
+            let q = mx_matmul(&a, &b, mode, 32, rng, 1);
+            let err: f64 = exact
+                .data
+                .iter()
+                .zip(&q.data)
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let rel = err / exact.frob_norm().max(1e-9);
+            if rel > 1.5 {
+                return Err(format!("{mode:?} rel err {rel}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// json robustness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json-roundtrip", Config { cases: 64, seed: 18 }, |rng| {
+        // build a random document, print, reparse, compare
+        fn build(rng: &mut Rng, depth: usize) -> json::Json {
+            match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                0 => json::Json::Null,
+                1 => json::Json::Bool(rng.below(2) == 0),
+                2 => json::num((rng.normal() * 1000.0).round() as f64),
+                3 => json::s(&format!("s{}", rng.next_u32())),
+                4 => json::arr((0..rng.below(4)).map(|_| build(rng, depth + 1)).collect()),
+                _ => json::obj(
+                    (0..rng.below(4))
+                        .map(|i| {
+                            let v = build(rng, depth + 1);
+                            (["a", "b", "c", "d"][i], v)
+                        })
+                        .collect(),
+                ),
+            }
+        }
+        let doc = build(rng, 0);
+        let text = doc.to_string();
+        match json::parse(&text) {
+            Ok(parsed) if parsed == doc => Ok(()),
+            Ok(_) => Err(format!("roundtrip mismatch for {text}")),
+            Err(e) => Err(format!("reparse failed: {e} for {text}")),
+        }
+    });
+}
