@@ -9,7 +9,7 @@
 //!
 //!     cargo run --release --example throughput_table
 
-use mxfp4_train::gemm::{matmul, Mat};
+use mxfp4_train::gemm::{matmul, mx_gemm_packed, Mat};
 use mxfp4_train::hadamard;
 use mxfp4_train::mx::quant;
 use mxfp4_train::perfmodel::{self, LLAMA2_70B_LAYER};
@@ -77,5 +77,21 @@ fn main() -> anyhow::Result<()> {
     });
     println!("NR quantize: {:.2} ms; SR quantize: {:.2} ms; SR/NR = {:.2}x", t_nr * 1e3, t_sr * 1e3, t_sr / t_nr);
     println!("(hardware dithering makes SR ~free: <2% of a GEMM on Trainium, §4.2)");
+
+    // -- measured: the packed MXFP4 engine's operand footprint --
+    println!("\n=== measured: packed MXFP4 engine (512^3, pre-packed operands) ===");
+    let pa = a.pack_nr();
+    let pbt = b.transpose().pack_nr();
+    let t_packed = bench_secs(1, 3, || {
+        std::hint::black_box(mx_gemm_packed(&pa, &pbt, workers));
+    });
+    let f32_bytes = (a.data.len() + b.data.len()) * 4;
+    let mx_bytes = pa.packed_bytes() + pbt.packed_bytes();
+    println!(
+        "packed LUT GEMM: {:.2} ms; operand bytes {mx_bytes} vs f32 {f32_bytes} ({:.2}x smaller, 4.25 b/elem)",
+        t_packed * 1e3,
+        f32_bytes as f64 / mx_bytes as f64
+    );
+    println!("(quantize once per step via coordinator::mxcache, reuse across every GEMM)");
     Ok(())
 }

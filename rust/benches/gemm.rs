@@ -1,11 +1,14 @@
-//! Bench: the rust GEMM substrate (threaded scaling + MX-mode costs) and
-//! the packed MX dot product — supports the Fig. 2 / Table 5 harnesses.
+//! Bench: the rust GEMM substrate (threaded scaling + MX-mode costs), the
+//! packed MXFP4 tensor engine vs the seed per-block path, and the
+//! quantize-once weight-reuse win — supports the Fig. 2 / Table 5
+//! harnesses and the §1 "MXFP4 GEMMs are cheap" narrative.
 
 #[path = "harness.rs"]
 mod harness;
 
-use mxfp4_train::gemm::{matmul, mx_matmul, Mat, MxMode};
+use mxfp4_train::gemm::{matmul, mx_gemm_packed, mx_matmul, Mat, MxMode};
 use mxfp4_train::mx::block::MxVec;
+use mxfp4_train::mx::mat::MxMat;
 use mxfp4_train::rng::Rng;
 
 fn main() {
@@ -30,7 +33,7 @@ fn main() {
         })
     });
 
-    harness::header("MX GEMM modes (256x1024x256, g=64)");
+    harness::header("MX GEMM modes, qdq reference path (256x1024x256, g=64)");
     for (label, mode) in [
         ("exact", MxMode::Exact),
         ("nr", MxMode::Nr),
@@ -41,6 +44,64 @@ fn main() {
         });
     }
 
+    // ---------------------------------------------------------------
+    // The tentpole claim: the packed LUT engine vs the seed per-block
+    // MxVec::dot path, kernel against kernel at 1024^3 (1 worker each).
+    // ---------------------------------------------------------------
+    harness::header("packed LUT engine vs seed per-block path (1024^3, NR)");
+    let (m, n, k) = (1024usize, 1024usize, 1024usize);
+    let aw = Mat::gaussian(m, k, 1.0, &mut rng);
+    let bw = Mat::gaussian(n, k, 1.0, &mut rng); // already Bᵀ-shaped
+    let big_flops = 2.0 * (m * n * k) as f64;
+
+    let qa_rows: Vec<MxVec> = (0..m).map(|r| MxVec::quantize_nr(aw.row(r))).collect();
+    let qb_rows: Vec<MxVec> = (0..n).map(|r| MxVec::quantize_nr(bw.row(r))).collect();
+    let t_seed = harness::bench("seed MxVec::dot GEMM (1 worker)", big_flops, "flop", 0, 1, || {
+        let mut c = Mat::zeros(m, n);
+        for r in 0..m {
+            let qr = &qa_rows[r];
+            for (j, qj) in qb_rows.iter().enumerate() {
+                c.data[r * n + j] = qr.dot(qj);
+            }
+        }
+        std::hint::black_box(&c);
+    });
+
+    let pa = aw.pack_nr();
+    let pbt = bw.pack_nr();
+    let t_packed = harness::bench("mx_gemm_packed LUT (1 worker)", big_flops, "flop", 1, 1, || {
+        std::hint::black_box(mx_gemm_packed(&pa, &pbt, 1));
+    });
+    harness::bench("mx_gemm_packed LUT (8 workers)", big_flops, "flop", 0, 1, || {
+        std::hint::black_box(mx_gemm_packed(&pa, &pbt, 8));
+    });
+    let speedup = t_seed / t_packed;
+    println!("packed LUT speedup over per-block MxVec::dot at 1024^3: {speedup:.2}x (target >= 3x)");
+    assert!(speedup >= 3.0, "packed engine must beat the seed per-block path by >= 3x, got {speedup:.2}x");
+
+    // ---------------------------------------------------------------
+    // Quantize-once: one weight feeding several GEMMs per step. The qdq
+    // path re-quantizes W inside every call; the packed engine pays for
+    // W once and re-packs only the activations (coordinator::mxcache).
+    // ---------------------------------------------------------------
+    harness::header("quantize-once weight reuse (8 GEMMs over one weight, 256x1024x256)");
+    let reuse = 8usize;
+    let t_requant =
+        harness::bench("qdq mx_matmul x8 (re-quantizes W per GEMM)", reuse as f64 * flops, "flop", 0, 1, || {
+            for _ in 0..reuse {
+                std::hint::black_box(mx_matmul(&a, &b, MxMode::Nr, 64, &mut Rng::seed(1), 4));
+            }
+        });
+    let t_once =
+        harness::bench("pack W once + x8 (pack A + packed GEMM)", reuse as f64 * flops, "flop", 0, 1, || {
+            let pw = b.transpose().pack_nr(); // once per step
+            for _ in 0..reuse {
+                let pact = a.pack_nr(); // activations change per GEMM
+                std::hint::black_box(mx_gemm_packed(&pact, &pw, 4));
+            }
+        });
+    println!("quantize-once speedup over per-GEMM requantize: {:.2}x", t_requant / t_once);
+
     harness::header("packed MX dot product (32K elements)");
     let mut x = vec![0.0f32; 1 << 15];
     let mut y = vec![0.0f32; 1 << 15];
@@ -48,7 +109,12 @@ fn main() {
     rng.fill_normal(&mut y, 1.0);
     let qx = MxVec::quantize_nr(&x);
     let qy = MxVec::quantize_nr(&y);
-    harness::bench("MxVec::dot", x.len() as f64, "elem", 2, 20, || {
+    harness::bench("MxVec::dot (seed per-block)", x.len() as f64, "elem", 2, 20, || {
         std::hint::black_box(qx.dot(&qy));
+    });
+    let px = MxMat::quantize_nr(&x, 1, x.len());
+    let py = MxMat::quantize_nr(&y, 1, y.len());
+    harness::bench("MxMat::row_dot (LUT)", x.len() as f64, "elem", 2, 20, || {
+        std::hint::black_box(px.row_dot(0, &py, 0));
     });
 }

@@ -4,7 +4,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use mxfp4_train::mx::{block::MxVec, int4, quant};
+use mxfp4_train::mx::{block::MxVec, int4, mat::MxMat, quant};
 use mxfp4_train::rng::Rng;
 
 fn main() {
@@ -35,6 +35,18 @@ fn main() {
     let packed = MxVec::quantize_nr(&base);
     harness::bench("packed MxVec dequantize", elems, "elem", 1, 5, || {
         std::hint::black_box(packed.dequantize());
+    });
+
+    // the flat SoA engine container (1024x1024 matrix view of the buffer)
+    harness::bench("packed MxMat quantize (NR, SoA)", elems, "elem", 1, 5, || {
+        std::hint::black_box(MxMat::quantize_nr(&base, 1024, 1024));
+    });
+    harness::bench("packed MxMat quantize (SR, SoA)", elems, "elem", 1, 5, || {
+        std::hint::black_box(MxMat::quantize_sr(&base, 1024, 1024, &mut Rng::seed(2)));
+    });
+    let pm = MxMat::quantize_nr(&base, 1024, 1024);
+    harness::bench("packed MxMat dequantize", elems, "elem", 1, 5, || {
+        std::hint::black_box(pm.dequantize());
     });
 
     harness::header("MXINT4 extension: quantization cost + error vs MXFP4");

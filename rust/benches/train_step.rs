@@ -6,14 +6,78 @@
 #[path = "harness.rs"]
 mod harness;
 
+use mxfp4_train::coordinator::{MxWeightCache, Orientation};
+use mxfp4_train::gemm::{mx_gemm_packed, mx_matmul, Mat, MxMode};
 use mxfp4_train::optim::{self, AdamW, ParamRounding};
+use mxfp4_train::rng::Rng;
 use mxfp4_train::runtime::{executor, Executor, Registry};
 
+/// Rust-substrate emulation of the step-level weight path: one weight
+/// matrix feeding every microbatch GEMM of a step. Measures what the
+/// quantize-once cache (coordinator::mxcache) saves vs re-quantizing the
+/// weight per GEMM — runs without artifacts, so the BENCH trajectory
+/// captures the packed-engine win in any checkout.
+fn substrate_weight_cache_bench() {
+    // Small microbatches on purpose: the step is weight-dominated, like a
+    // decoder layer at inference-ish batch — exactly where re-quantizing
+    // W per GEMM hurts most.
+    harness::header("rust substrate: quantize-once weight cache (4 microbatches, 32x1024 @ 1024x1024)");
+    let mut rng = Rng::seed(7);
+    let w = Mat::gaussian(1024, 1024, 0.02, &mut rng);
+    let acts: Vec<Mat> = (0..4).map(|_| Mat::gaussian(32, 1024, 1.0, &mut rng)).collect();
+    let flops = 4.0 * 2.0 * 32.0 * 1024.0 * 1024.0;
+
+    let t_qdq = harness::bench("qdq mx_matmul x4 (re-quantizes W per GEMM)", flops, "flop", 0, 2, || {
+        for act in &acts {
+            std::hint::black_box(mx_matmul(act, &w, MxMode::Nr, 64, &mut Rng::seed(1), 4));
+        }
+    });
+
+    let t_nocache = harness::bench("packed engine, re-pack W per GEMM", flops, "flop", 0, 2, || {
+        for act in &acts {
+            let pw = w.transpose().pack_nr();
+            let pact = act.pack_nr();
+            std::hint::black_box(mx_gemm_packed(&pact, &pw, 4));
+        }
+    });
+
+    let mut cache = MxWeightCache::new(1);
+    let mut epoch = 0u64;
+    let t_cached = harness::bench("packed engine + MxWeightCache (pack W once/step)", flops, "flop", 0, 2, || {
+        epoch += 1;
+        cache.advance(epoch); // optimizer "updated" W: new step, one fresh pack
+        for act in &acts {
+            let pw = cache.pack_nr(0, &w.data, 1024, 1024, Orientation::Transposed);
+            let pact = act.pack_nr();
+            std::hint::black_box(mx_gemm_packed(&pact, pw, 4));
+        }
+    });
+
+    println!(
+        "cache accounting: {} packs, {} hits; step-level speedup over per-GEMM repack: {:.2}x \
+         (vs qdq requantize: {:.2}x)",
+        cache.packs,
+        cache.hits,
+        t_nocache / t_cached,
+        t_qdq / t_cached
+    );
+    assert!(
+        t_cached < t_nocache,
+        "weight cache must beat per-GEMM repacking: {t_cached} vs {t_nocache}"
+    );
+}
+
 fn main() {
+    substrate_weight_cache_bench();
+
+    if !executor::backend_available() {
+        println!("skipping PJRT train_step bench: stub xla backend (see rust/vendor/xla)");
+        return;
+    }
     let reg = match Registry::open(&mxfp4_train::runtime::default_artifacts_dir()) {
         Ok(r) => r,
         Err(e) => {
-            println!("skipping train_step bench: {e} (run `make artifacts`)");
+            println!("skipping PJRT train_step bench: {e} (run `make artifacts`)");
             return;
         }
     };

@@ -4,10 +4,14 @@
 //! * `dp` — leader/worker pool with per-thread PJRT executables
 //! * `metrics` — CSV + console logging (regenerates the paper's curves)
 //! * `checkpoint` — binary tensor snapshots
+//! * `mxcache` — quantize-once MXFP4 weight cache (packed `MxMat` views
+//!   of the compute weights, invalidated per optimizer step)
 
 pub mod checkpoint;
 pub mod dp;
 pub mod metrics;
+pub mod mxcache;
 pub mod trainer;
 
+pub use mxcache::{MxWeightCache, Orientation};
 pub use trainer::{RunSummary, Trainer};

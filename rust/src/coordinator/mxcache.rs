@@ -1,0 +1,249 @@
+//! Quantize-once MXFP4 weight cache — Algorithm 3 applied at the *step*
+//! level instead of the *GEMM* level.
+//!
+//! Within one optimizer step a weight matrix W participates in several
+//! GEMMs (forward `X @ W`, gradient `dY @ Wᵀ`, and once per microbatch
+//! under data parallelism), but the deterministic Algorithm 1 (nearest
+//! rounding) quantization of W is the same every time: re-quantizing per
+//! GEMM — what the qdq path `gemm::mx_matmul` does — is pure waste. This
+//! cache packs each weight into `mx::mat::MxMat` form at most once per
+//! step and orientation, and invalidates on the step boundary when the
+//! optimizer writes new values.
+//!
+//! The one place re-use is *forbidden* is Algorithm 2: stochastic
+//! rounding is only unbiased (Lemma 3.1) if every GEMM sees a fresh
+//! dither draw, so [`MxWeightCache::pack_sr`] never caches — it counts
+//! draws instead, making the NR-cached/SR-fresh split observable.
+//!
+//! This mirrors the quantize-once design of torchao's MX training path
+//! and QuTLASS's MXFP4 benchmarks (see PAPERS.md): keep weights in packed
+//! form, re-quantize only activations/gradients, which change per GEMM
+//! anyway.
+
+use crate::mx::mat::MxMat;
+use crate::rng::Rng;
+
+/// Which way a 2-D weight is blocked for a GEMM: `AsStored` blocks along
+/// the stored column dimension (the `dY @ Wᵀ` orientation for a (k, n)
+/// weight), `Transposed` packs Wᵀ (the forward `X @ W` orientation, where
+/// the reduction dim is W's stored rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Orientation {
+    AsStored,
+    Transposed,
+}
+
+/// Per-step packed-weight cache. One slot pair (orientation × param) per
+/// parameter tensor; slots empty out on [`MxWeightCache::advance`].
+#[derive(Debug)]
+pub struct MxWeightCache {
+    epoch: u64,
+    entries: Vec<[Option<MxMat>; 2]>,
+    /// Algorithm 1 packs actually performed (cache misses).
+    pub packs: usize,
+    /// Pack requests served from cache (the GEMMs that did *not* pay).
+    pub hits: usize,
+    /// Algorithm 2 packs — always fresh, never cached.
+    pub sr_draws: usize,
+}
+
+impl MxWeightCache {
+    /// Cache over `n_params` parameter slots, starting at epoch 0.
+    pub fn new(n_params: usize) -> MxWeightCache {
+        MxWeightCache {
+            epoch: 0,
+            entries: (0..n_params).map(|_| [None, None]).collect(),
+            packs: 0,
+            hits: 0,
+            sr_draws: 0,
+        }
+    }
+
+    /// Current epoch (typically the trainer step).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Move to a new epoch, dropping every cached pack. Call whenever the
+    /// underlying weights change (after each optimizer step). Idempotent
+    /// for the same epoch value.
+    pub fn advance(&mut self, epoch: u64) {
+        if epoch != self.epoch {
+            self.epoch = epoch;
+            for e in &mut self.entries {
+                *e = [None, None];
+            }
+        }
+    }
+
+    /// Unconditionally drop every cached pack *without* changing the
+    /// epoch — for out-of-band weight rewrites (checkpoint restore),
+    /// where reusing the step-based epoch numbering could collide with a
+    /// future [`advance`](Self::advance) and resurrect stale packs.
+    pub fn invalidate(&mut self) {
+        for e in &mut self.entries {
+            *e = [None, None];
+        }
+    }
+
+    /// Algorithm 1 (deterministic) pack of a row-major `rows × cols`
+    /// weight, cached until the next [`advance`](Self::advance). The
+    /// first call per (param, orientation, epoch) quantizes; later calls
+    /// are table lookups.
+    pub fn pack_nr(
+        &mut self,
+        idx: usize,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        orientation: Orientation,
+    ) -> &MxMat {
+        let slot = match orientation {
+            Orientation::AsStored => 0,
+            Orientation::Transposed => 1,
+        };
+        if self.entries[idx][slot].is_none() {
+            let m = match orientation {
+                Orientation::AsStored => MxMat::quantize_nr(data, rows, cols),
+                Orientation::Transposed => {
+                    MxMat::quantize_nr(&transpose_flat(data, rows, cols), cols, rows)
+                }
+            };
+            self.entries[idx][slot] = Some(m);
+            self.packs += 1;
+        } else {
+            self.hits += 1;
+        }
+        self.entries[idx][slot].as_ref().unwrap()
+    }
+
+    /// Algorithm 2 (stochastic) pack — **never cached**. Each call draws
+    /// fresh dither from `rng`, as Lemma 3.1's unbiasedness requires; the
+    /// cache only tallies the draw so step accounting stays complete.
+    pub fn pack_sr(
+        &mut self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        orientation: Orientation,
+        rng: &mut Rng,
+    ) -> MxMat {
+        self.sr_draws += 1;
+        match orientation {
+            Orientation::AsStored => MxMat::quantize_sr(data, rows, cols, rng),
+            Orientation::Transposed => {
+                MxMat::quantize_sr(&transpose_flat(data, rows, cols), cols, rows, rng)
+            }
+        }
+    }
+
+    /// Total packed bytes currently cached.
+    pub fn cached_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .flat_map(|pair| pair.iter())
+            .filter_map(|e| e.as_ref().map(MxMat::packed_bytes))
+            .sum()
+    }
+}
+
+/// Transpose a row-major `rows × cols` flat buffer.
+fn transpose_flat(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols);
+    let mut t = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = data[r * cols + c];
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weight(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; rows * cols];
+        Rng::seed(seed).fill_normal(&mut v, 0.5);
+        v
+    }
+
+    #[test]
+    fn nr_packs_once_per_epoch_per_orientation() {
+        let w = weight(64, 32, 1);
+        let mut cache = MxWeightCache::new(2);
+        let a = cache.pack_nr(0, &w, 64, 32, Orientation::AsStored).clone();
+        let b = cache.pack_nr(0, &w, 64, 32, Orientation::AsStored).clone();
+        assert_eq!(a, b);
+        assert_eq!((cache.packs, cache.hits), (1, 1));
+        // the other orientation is a distinct pack
+        cache.pack_nr(0, &w, 64, 32, Orientation::Transposed);
+        assert_eq!(cache.packs, 2);
+        // four more GEMMs in the same step: all hits
+        for _ in 0..4 {
+            cache.pack_nr(0, &w, 64, 32, Orientation::AsStored);
+        }
+        assert_eq!((cache.packs, cache.hits), (2, 5));
+    }
+
+    #[test]
+    fn advance_invalidates() {
+        let w = weight(32, 32, 2);
+        let mut cache = MxWeightCache::new(1);
+        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored);
+        cache.advance(1);
+        assert_eq!(cache.cached_bytes(), 0);
+        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored);
+        assert_eq!(cache.packs, 2);
+        // same-epoch advance is a no-op
+        let bytes = cache.cached_bytes();
+        cache.advance(1);
+        assert_eq!(cache.cached_bytes(), bytes);
+    }
+
+    #[test]
+    fn invalidate_clears_within_an_epoch() {
+        // checkpoint-restore scenario: weights rewritten mid-epoch; the
+        // next pack must re-quantize even though the epoch is unchanged
+        let w = weight(32, 32, 7);
+        let mut cache = MxWeightCache::new(1);
+        cache.advance(5);
+        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored);
+        cache.invalidate();
+        assert_eq!(cache.cached_bytes(), 0);
+        assert_eq!(cache.epoch(), 5, "invalidate must not disturb the epoch");
+        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored);
+        assert_eq!((cache.packs, cache.hits), (2, 0));
+        // and a later step-based advance still works normally
+        cache.advance(6);
+        assert_eq!(cache.cached_bytes(), 0);
+    }
+
+    #[test]
+    fn transposed_pack_equals_pack_of_transpose() {
+        let w = weight(16, 48, 3);
+        let mut cache = MxWeightCache::new(1);
+        let t = cache.pack_nr(0, &w, 16, 48, Orientation::Transposed).clone();
+        let manual = MxMat::quantize_nr(&transpose_flat(&w, 16, 48), 48, 16);
+        assert_eq!(t, manual);
+        assert_eq!((t.rows, t.cols), (48, 16));
+    }
+
+    #[test]
+    fn sr_packs_are_always_fresh() {
+        let w = weight(32, 64, 4);
+        let mut cache = MxWeightCache::new(1);
+        let mut rng = Rng::seed(5);
+        let a = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut rng);
+        let b = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut rng);
+        assert_eq!(cache.sr_draws, 2);
+        assert_eq!(cache.cached_bytes(), 0, "SR results must not be cached");
+        // consecutive draws differ somewhere (fresh dither)
+        assert_ne!(a.codes, b.codes);
+        // while the same seed reproduces exactly
+        let c = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut Rng::seed(5));
+        let d = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut Rng::seed(5));
+        assert_eq!(c, d);
+    }
+}

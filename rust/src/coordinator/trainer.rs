@@ -14,8 +14,10 @@ use anyhow::{Context, Result};
 
 use super::dp::DpPool;
 use super::metrics::{EvalRecord, Metrics, StepRecord};
+use super::mxcache::{MxWeightCache, Orientation};
 use crate::config::TrainConfig;
 use crate::data::Dataset;
+use crate::mx::mat::MxMat;
 use crate::optim::{self, AdamW, CosineSchedule, ParamRounding};
 use crate::rng::Rng;
 use crate::runtime::{executor, Executor, Registry};
@@ -40,6 +42,11 @@ pub struct Trainer {
     opt: AdamW,
     /// BF16 compute copies (what the artifact consumes), Arc-broadcast.
     compute: Vec<Vec<f32>>,
+    /// Quantize-once MXFP4 views of the compute weights; epoch = step.
+    mx_cache: MxWeightCache,
+    /// (rows, cols) for 2-D params; `None` for 1-D (LN gains/biases),
+    /// which are never fed to MX GEMMs and so are never packed.
+    weight_shapes: Vec<Option<(usize, usize)>>,
     param_names: Vec<String>,
     dataset: Dataset,
     schedule: CosineSchedule,
@@ -80,6 +87,16 @@ impl Trainer {
         let pool = DpPool::spawn(train_art, cfg.dp_workers)?;
         let eval_exe = Executor::compile_cpu(eval_art)?;
 
+        let weight_shapes: Vec<Option<(usize, usize)>> = train_art
+            .params
+            .iter()
+            .map(|p| match p.shape.as_slice() {
+                [rows, cols] => Some((*rows, *cols)),
+                _ => None,
+            })
+            .collect();
+        let mx_cache = MxWeightCache::new(weight_shapes.len());
+
         let masters = executor::init_params(train_art, cfg.seed);
         let param_names: Vec<String> =
             train_art.params.iter().map(|p| p.name.clone()).collect();
@@ -115,6 +132,8 @@ impl Trainer {
             eval_exe,
             opt,
             compute,
+            mx_cache,
+            weight_shapes,
             param_names,
             dataset,
             schedule,
@@ -159,6 +178,10 @@ impl Trainer {
             optim::clip_global_norm(&mut grads, self.cfg.grad_clip, crate::util::threadpool::default_workers());
         let lr = self.schedule.lr(self.step);
         self.opt.step(&grads, lr, &mut self.compute);
+        // The optimizer just rewrote the compute weights: every packed
+        // MXFP4 view is stale. Consumers re-pack lazily, at most once per
+        // (weight, orientation) until the next step — quantize-once.
+        self.mx_cache.advance((self.step + 1) as u64);
 
         self.metrics.record_step(StepRecord {
             step: self.step,
@@ -232,6 +255,9 @@ impl Trainer {
                 *cv = crate::mx::bf16::qdq(mv);
             }
         }
+        // Out-of-band weight rewrite: drop packed views so packed_weight
+        // never serves a pre-restore pack within the current step.
+        self.mx_cache.invalidate();
         Ok(())
     }
 
@@ -242,5 +268,35 @@ impl Trainer {
 
     pub fn param_names(&self) -> &[String] {
         &self.param_names
+    }
+
+    /// Packed MXFP4 view of 2-D weight `idx` (Algorithm 1 path), packed
+    /// at most once per step and orientation and cached until the next
+    /// optimizer update. Returns `None` for 1-D params (LN gains/biases),
+    /// which never enter MX GEMMs. This is the quantize-once weight path:
+    /// every GEMM consumer of the step shares one pack instead of
+    /// re-quantizing per call.
+    pub fn packed_weight(&mut self, idx: usize, orientation: Orientation) -> Option<&MxMat> {
+        let (rows, cols) = self.weight_shapes[idx]?;
+        Some(self.mx_cache.pack_nr(idx, &self.compute[idx], rows, cols, orientation))
+    }
+
+    /// Stochastically-rounded pack of weight `idx` — *never* cached:
+    /// Algorithm 2's unbiasedness (Lemma 3.1) requires fresh dither per
+    /// GEMM, so each call re-draws from `rng`.
+    pub fn packed_weight_sr(
+        &mut self,
+        idx: usize,
+        orientation: Orientation,
+        rng: &mut Rng,
+    ) -> Option<MxMat> {
+        let (rows, cols) = self.weight_shapes[idx]?;
+        Some(self.mx_cache.pack_sr(&self.compute[idx], rows, cols, orientation, rng))
+    }
+
+    /// (NR packs performed, cache hits, SR draws) since construction —
+    /// the observable quantize-once accounting.
+    pub fn mx_cache_stats(&self) -> (usize, usize, usize) {
+        (self.mx_cache.packs, self.mx_cache.hits, self.mx_cache.sr_draws)
     }
 }

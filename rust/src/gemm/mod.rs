@@ -1,16 +1,29 @@
-//! GEMM substrates: blocked f32 matmul + the emulated MXFP4 GEMM
+//! GEMM substrates: blocked f32 matmul + two MXFP4 GEMM paths
 //! (Algorithm 3's `MXFP4_GEMM`) used by the Fig. 2 variance study and the
 //! Table 5 / §4.2 overhead benches.
 //!
-//! Matrices are row-major `Mat { rows, cols, data }`. The MX GEMM groups
-//! both operands along the reduction dimension k (A by rows, B via its
-//! transpose), quantizes with Algorithm 1 or 2, multiplies in f32
-//! accumulation, and applies the 16/9 rescale for SR — mirroring
-//! `ref.mx_matmul` semantics.
+//! Matrices are row-major `Mat { rows, cols, data }`. Both MX paths group
+//! operands along the reduction dimension k (A by rows, B via its
+//! transpose), quantize with Algorithm 1 or 2, multiply in f32
+//! accumulation, and apply the 16/9 rescale for SR — mirroring
+//! `ref.mx_matmul` semantics:
+//!
+//! * [`mx_matmul`] — the **qdq reference oracle**: quantize-dequantize to
+//!   f32, then a plain f32 GEMM. Slow (it re-quantizes both operands on
+//!   every call and multiplies full-width floats) but transparently
+//!   correct; selected via [`MxMode`].
+//! * [`mx_gemm_packed`] / [`mx_matmul_packed`] — the **packed engine**:
+//!   operands live in [`MxMat`] form (flat 4-bit codes + E8M0 block
+//!   exponents) and the inner loop is FP4×FP4 LUT adds with one
+//!   power-of-two scale multiply per 32-block. Quantize once, reuse
+//!   across GEMMs (see `coordinator::mxcache`); bit-exact with a
+//!   per-block-accumulated qdq dot (`tests/packed_gemm.rs`).
 
 use crate::hadamard;
+use crate::mx::mat::MxMat;
 use crate::mx::quant;
 use crate::rng::Rng;
+use crate::util::threadpool;
 
 /// Row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,6 +94,18 @@ impl Mat {
     pub fn frob_norm(&self) -> f64 {
         self.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt()
     }
+
+    /// Pack into the MXFP4 SoA container with Algorithm 1 (nearest
+    /// rounding), blocks along the column (reduction) dimension.
+    pub fn pack_nr(&self) -> MxMat {
+        MxMat::quantize_nr(&self.data, self.rows, self.cols)
+    }
+
+    /// Pack with Algorithm 2 (3/4 pre-scale + SR); the decoded matrix
+    /// estimates (3/4)·self, so GEMM consumers rescale by 16/9.
+    pub fn pack_sr(&self, rng: &mut Rng) -> MxMat {
+        MxMat::quantize_sr(&self.data, self.rows, self.cols, rng)
+    }
 }
 
 /// C = A @ B, threaded f32 GEMM. B is taken *transposed*
@@ -148,12 +173,18 @@ impl MxMode {
     }
 }
 
-/// Emulated MXFP4 GEMM: C = A @ B with operands quantized along k.
-/// `g` is the RHT block size; `rng` drives SR dither + the sign vector.
-pub fn mx_matmul(a: &Mat, b: &Mat, mode: MxMode, g: usize, rng: &mut Rng, workers: usize) -> Mat {
-    if mode == MxMode::Exact {
-        return matmul(a, b, workers);
-    }
+/// Shared operand prep for both MX GEMM paths: clone A, transpose B, and
+/// for RHT modes apply the blockwise transform to both (drawing the sign
+/// vector from `rng` *first* — the stream-order contract the SR parity
+/// tests rely on).
+fn mx_prep_operands(
+    a: &Mat,
+    b: &Mat,
+    mode: MxMode,
+    g: usize,
+    rng: &mut Rng,
+    workers: usize,
+) -> (Mat, Mat) {
     let mut qa = a.clone();
     let mut qbt = b.transpose();
     if mode.uses_rht() {
@@ -162,18 +193,102 @@ pub fn mx_matmul(a: &Mat, b: &Mat, mode: MxMode, g: usize, rng: &mut Rng, worker
         hadamard::rht_blockwise_dense(&mut qa.data, &sign, workers);
         hadamard::rht_blockwise_dense(&mut qbt.data, &sign, workers);
     }
+    (qa, qbt)
+}
+
+/// Lemma 3.1's GEMM-side compensation for the two 0.75-pre-scaled SR
+/// operands: multiply accumulators by 16/9.
+fn rescale_sr_output(c: &mut Mat) {
+    for v in &mut c.data {
+        *v *= quant::GEMM_RESCALE;
+    }
+}
+
+/// Emulated MXFP4 GEMM (qdq reference path): C = A @ B with operands
+/// quantized along k, then multiplied as full-width f32. `g` is the RHT
+/// block size; `rng` drives SR dither + the sign vector. Blocks are laid
+/// along each operand row, so `k` need not be a multiple of 32 (a partial
+/// tail block per row is allowed); RHT modes still require `g | k`.
+pub fn mx_matmul(a: &Mat, b: &Mat, mode: MxMode, g: usize, rng: &mut Rng, workers: usize) -> Mat {
+    if mode == MxMode::Exact {
+        return matmul(a, b, workers);
+    }
+    let (mut qa, mut qbt) = mx_prep_operands(a, b, mode, g, rng, workers);
     if mode.uses_sr() {
-        quant::qdq_sr(&mut qa.data, rng);
-        quant::qdq_sr(&mut qbt.data, rng);
+        quant::qdq_sr_rows(&mut qa.data, qa.cols, rng);
+        quant::qdq_sr_rows(&mut qbt.data, qbt.cols, rng);
     } else {
-        quant::qdq_nr(&mut qa.data);
-        quant::qdq_nr(&mut qbt.data);
+        quant::qdq_nr_rows(&mut qa.data, qa.cols);
+        quant::qdq_nr_rows(&mut qbt.data, qbt.cols);
     }
     let mut c = matmul_bt(&qa, &qbt, workers);
     if mode.uses_sr() {
-        for v in &mut c.data {
-            *v *= quant::GEMM_RESCALE;
+        rescale_sr_output(&mut c);
+    }
+    c
+}
+
+/// Packed-LUT MXFP4 GEMM kernel: C = A @ Bᵀᵀ where both operands are
+/// *already* quantized into [`MxMat`] form along the shared reduction
+/// dimension (`a`: (m, k), `bt`: (n, k) = Bᵀ). This is the
+/// quantize-once-reuse-many half of Algorithm 3: quantization cost is
+/// paid by the caller (once per tensor per step — see
+/// `coordinator::mxcache`), and the kernel touches only packed bytes.
+///
+/// Parallelism: `scope_chunks` over contiguous row-chunks of C (chunk
+/// boundaries aligned to whole output rows). Determinism: each output
+/// element is one sequential `MxMat::row_dot`, so results are identical
+/// for any worker count.
+pub fn mx_gemm_packed(a: &MxMat, bt: &MxMat, workers: usize) -> Mat {
+    assert_eq!(a.cols, bt.cols, "reduction dims differ");
+    let (m, n) = (a.rows, bt.rows);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    crate::mx::mat::fp4_product_lut(); // warm the LUT outside the hot loop
+    let base = c.data.as_ptr() as usize;
+    threadpool::scope_chunks(&mut c.data, workers, n, |_, chunk| {
+        // Recover this chunk's first output row from its offset into C.
+        let row0 = (chunk.as_ptr() as usize - base) / std::mem::size_of::<f32>() / n;
+        for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+            let r = row0 + ri;
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv = a.row_dot(r, bt, j);
+            }
         }
+    });
+    c
+}
+
+/// Packed-engine MX GEMM mirroring [`mx_matmul`]'s quantize-and-multiply
+/// interface: pack both operands once, multiply through the FP4 LUT
+/// kernel, apply the 16/9 rescale for SR modes. Draws from `rng` in the
+/// same order as `mx_matmul` (RHT sign vector, then A's dither row-major,
+/// then Bᵀ's), so SR modes consume identical streams per seed. `k` need
+/// not be a multiple of 32; RHT modes require `g | k`.
+pub fn mx_matmul_packed(
+    a: &Mat,
+    b: &Mat,
+    mode: MxMode,
+    g: usize,
+    rng: &mut Rng,
+    workers: usize,
+) -> Mat {
+    if mode == MxMode::Exact {
+        return matmul(a, b, workers);
+    }
+    let (qa, qbt) = mx_prep_operands(a, b, mode, g, rng, workers);
+    let (pa, pbt) = if mode.uses_sr() {
+        let pa = qa.pack_sr(rng);
+        let pbt = qbt.pack_sr(rng);
+        (pa, pbt)
+    } else {
+        (qa.pack_nr(), qbt.pack_nr())
+    };
+    let mut c = mx_gemm_packed(&pa, &pbt, workers);
+    if mode.uses_sr() {
+        rescale_sr_output(&mut c);
     }
     c
 }
@@ -269,6 +384,65 @@ mod tests {
         let v_sr = var(MxMode::Sr);
         let v_rht_sr = var(MxMode::RhtSr);
         assert!(v_rht_sr < v_sr, "rht_sr {v_rht_sr} vs sr {v_sr}");
+    }
+
+    #[test]
+    fn mx_gemm_packed_threaded_matches_single() {
+        let mut rng = Rng::seed(30);
+        let a = Mat::gaussian(23, 95, 1.0, &mut rng).pack_nr();
+        let bt = Mat::gaussian(17, 95, 1.0, &mut rng).pack_nr();
+        let c1 = mx_gemm_packed(&a, &bt, 1);
+        let c4 = mx_gemm_packed(&a, &bt, 4);
+        assert_eq!(c1.data, c4.data);
+        assert_eq!((c1.rows, c1.cols), (23, 17));
+    }
+
+    #[test]
+    fn mx_matmul_packed_exact_mode_is_plain() {
+        let mut rng = Rng::seed(31);
+        let a = Mat::gaussian(6, 64, 1.0, &mut rng);
+        let b = Mat::gaussian(64, 5, 1.0, &mut rng);
+        let c1 = matmul(&a, &b, 1);
+        let c2 = mx_matmul_packed(&a, &b, MxMode::Exact, 32, &mut Rng::seed(1), 1);
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn packed_engine_tracks_qdq_reference_per_mode() {
+        // Same quantized operand values by construction; only the f32
+        // accumulation grouping differs (per-block vs running), so the
+        // two paths must agree to float-roundoff, not just 4-bit error.
+        let mut rng = Rng::seed(32);
+        let a = Mat::gaussian(9, 128, 1.0, &mut rng);
+        let b = Mat::gaussian(128, 7, 1.0, &mut rng);
+        for mode in [MxMode::Nr, MxMode::Sr, MxMode::Rht, MxMode::RhtSr] {
+            let q = mx_matmul(&a, &b, mode, 32, &mut Rng::seed(77), 1);
+            let p = mx_matmul_packed(&a, &b, mode, 32, &mut Rng::seed(77), 1);
+            for (i, (x, y)) in q.data.iter().zip(&p.data).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-4 * x.abs().max(1.0),
+                    "{mode:?} elem {i}: qdq {x} vs packed {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mx_matmul_handles_non_multiple_of_32_k() {
+        // row-aware qdq lifts the old k % 32 == 0 restriction
+        let mut rng = Rng::seed(33);
+        let a = Mat::gaussian(4, 50, 1.0, &mut rng);
+        let b = Mat::gaussian(50, 3, 1.0, &mut rng);
+        let exact = matmul(&a, &b, 1);
+        for c in [
+            mx_matmul(&a, &b, MxMode::Nr, 32, &mut Rng::seed(2), 1),
+            mx_matmul_packed(&a, &b, MxMode::Nr, 32, &mut Rng::seed(2), 1),
+        ] {
+            let num: f64 =
+                exact.data.iter().zip(&c.data).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+            let rel = num.sqrt() / exact.frob_norm().max(1e-9);
+            assert!(rel < 0.5, "rel {rel}");
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! # mxfp4-train
 //!
 //! Reproduction of **"Training LLMs with MXFP4"** (Tseng, Yu, Park —
-//! AISTATS 2025) as a three-layer rust + JAX + Pallas stack:
+//! arXiv:2502.20586) as a three-layer rust + JAX + Pallas stack:
 //!
 //! * **L1** (`python/compile/kernels/`): Pallas kernels for MXFP4
 //!   quantization (Algorithms 1 & 2) and the blockwise random Hadamard
@@ -12,12 +12,43 @@
 //! * **L3** (this crate): the training coordinator — PJRT runtime for the
 //!   AOT artifacts, data pipeline, AdamW + schedules, simulated
 //!   data-parallelism with gradient all-reduce, metrics, checkpoints —
-//!   plus bit-accurate rust substrates (`mx`, `hadamard`, `gemm`) that
-//!   power the paper's variance study (Fig. 2) and overhead/throughput
-//!   benches (Table 5, §4.2) and a roofline `perfmodel`.
+//!   plus bit-accurate rust substrates that power the paper's variance
+//!   study (Fig. 2) and overhead/throughput benches (Table 5, §4.2).
 //!
-//! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
-//! measured results.
+//! ## Module tree → paper map
+//!
+//! | module | paper anchor | what it holds |
+//! |---|---|---|
+//! | `mx::fp4` | Table 1, §2 | E2M1 codec; nearest + stochastic rounding to the FP4 grid |
+//! | `mx::scale` | §2, Alg. 1 line 1 | E8M0 shared block exponents (exact pow2 / floor-log2) |
+//! | `mx::quant` | Algorithms 1 & 2, §3.1 | qdq (de)quantization over f32 slices, flat and row-aware |
+//! | `mx::block` | §2 | per-block packed container (`MxVec`) — the reference layout |
+//! | `mx::mat` | §1, Table 5 | **packed tensor engine**: flat SoA `MxMat` + FP4×FP4 product LUT |
+//! | `gemm` | Algorithm 3 | qdq reference GEMM (`mx_matmul`) + packed LUT GEMM (`mx_gemm_packed`) |
+//! | `hadamard` | §3.2, Eq. 5 | blockwise RHT, dense and O(n log n) FWHT forms |
+//! | `coordinator` | §4 | trainer loop, DP pool, metrics, checkpoints, quantize-once `mxcache` |
+//! | `optim` | §4.1 | AdamW with FP32 masters + BF16 compute copies, cosine schedule |
+//! | `perfmodel` | Table 5, §4.2 | roofline model of the backward-pass speedups |
+//! | `runtime` | §4 | artifact registry + PJRT executor for the AOT HLO |
+//! | `data`, `eval` | §4.1, Table 3 | byte-level corpus, cloze eval, greedy generation |
+//! | `rng`, `testing`, `util` | — | xoshiro256++ streams, property harness, threadpool/json/cli |
+//!
+//! ## The two MXFP4 GEMM paths
+//!
+//! [`gemm::mx_matmul`] is the *qdq reference oracle*: quantize-dequantize
+//! both operands to f32 on every call, then multiply full-width. It is
+//! deliberately transparent and deliberately slow. [`gemm::mx_gemm_packed`]
+//! is the *packed engine*: operands are quantized once into
+//! [`mx::mat::MxMat`] (one flat `Vec<u8>` of 4-bit codes + a `Vec<i8>` of
+//! E8M0 exponents, reduction dim padded to 32) and the inner loop is a
+//! 256-entry FP4×FP4 product-LUT walk with one power-of-two scale
+//! multiply per block. The two paths are bit-exact under a per-block
+//! accumulation contract (see `tests/packed_gemm.rs`), and the
+//! quantize-once weight reuse lives in [`coordinator::mxcache`].
+//!
+//! See `README.md` for the quickstart and `docs/RECIPE.md` for the
+//! end-to-end training recipe (SR, the 0.75/16-9 scale pair, and why the
+//! RHT bounds SR variance).
 
 pub mod config;
 pub mod coordinator;

@@ -1,10 +1,13 @@
-//! Packed MX containers: the true 4.25-bit-per-element storage format.
+//! Packed MX containers: the true 4.25-bit-per-element storage format,
+//! one struct per block.
 //!
 //! `MxBlock` packs 32 FP4 codes into 16 bytes + an i16 shared exponent
 //! (E8M0 semantics). `MxVec` is a contiguous run of blocks with exact
-//! memory accounting — used by the rust-side MX GEMM (Fig. 2 / Table 5
-//! benches) and by property tests that the packed path decodes to exactly
-//! the qdq values.
+//! memory accounting. This is the *reference* layout: simple to audit,
+//! but the per-block structs and nibble-by-nibble `dot` make it the slow
+//! path. The GEMM engine uses the flat SoA layout in [`super::mat`]
+//! (`MxMat` + FP4×FP4 product LUT) instead; property tests pin the two
+//! containers to identical decoded values.
 
 use super::fp4;
 use super::quant::{MX_BLOCK, PRESCALE};

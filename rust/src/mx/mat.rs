@@ -1,0 +1,335 @@
+//! Packed MXFP4 matrices (`MxMat`) and the FP4×FP4 product LUT — the
+//! quantize-once tensor engine behind `gemm::mx_gemm_packed`.
+//!
+//! Where `block::MxVec` models one packed vector as a `Vec` of per-block
+//! structs (clear, but pointer-chasing and nibble-branching in the dot
+//! inner loop), `MxMat` stores a whole matrix as two flat SoA buffers:
+//!
+//! * `codes` — one contiguous `Vec<u8>` of 4-bit FP4 codes, two per byte
+//!   (element `i` of a block sits in byte `i/2`, low nibble first — the
+//!   same layout as `MxBlock` and OCP MX),
+//! * `exps`  — one `Vec<i8>` of E8M0 shared block exponents.
+//!
+//! Layout is row-major with the reduction dimension padded up to the
+//! 32-element MX block size; padding nibbles are zero codes, so they
+//! contribute exactly `0.0` to any dot product and tail blocks quantize
+//! identically to the unpadded slice (zeros never change a block max).
+//!
+//! The dot-product inner loop uses [`fp4_product_lut`]: a 256-entry table
+//! of all signed FP4×FP4 products, indexed by `(a_code << 4) | b_code`.
+//! One packed byte-pair (two element products) costs two table lookups
+//! and two adds — no decode, no sign branch, no per-element multiply —
+//! and each block finishes with a single exact power-of-two scale
+//! multiply. Because all FP4 grid products are exactly representable and
+//! E8M0 scales are powers of two, the packed dot is **bit-exact** with a
+//! per-block-accumulated dot over the qdq (dequantized f32) values; the
+//! property tests in `tests/packed_gemm.rs` pin this down.
+//!
+//! This is the software shape of the paper's claim that MXFP4 GEMMs are
+//! cheap (§1, Table 5): the operand bytes shrink 8× vs f32 and the inner
+//! loop does table adds instead of float decodes.
+
+use std::sync::OnceLock;
+
+use super::fp4;
+use super::quant::{MX_BLOCK, PRESCALE};
+use super::scale;
+use crate::rng::Rng;
+
+/// Bytes per packed 32-element MX block (two 4-bit codes per byte).
+pub const BLOCK_BYTES: usize = MX_BLOCK / 2;
+
+static FP4_PROD: OnceLock<[f32; 256]> = OnceLock::new();
+
+/// The 256-entry FP4×FP4 product table: entry `(a << 4) | b` holds
+/// `fp4::decode(a) * fp4::decode(b)` for 4-bit codes `a`, `b`. Every
+/// entry is an exact f32 (grid magnitudes have ≤ 2 mantissa bits, so
+/// products have ≤ 4), which is what makes the LUT GEMM bit-exact with
+/// the qdq reference.
+pub fn fp4_product_lut() -> &'static [f32; 256] {
+    FP4_PROD.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                t[((a << 4) | b) as usize] = fp4::decode(a) * fp4::decode(b);
+            }
+        }
+        t
+    })
+}
+
+/// A row-major MXFP4-quantized matrix in flat SoA form: `rows × cols`
+/// logical f32 values stored as 4-bit codes + per-block E8M0 exponents,
+/// blocked along the column (reduction) dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MxMat {
+    /// Logical row count.
+    pub rows: usize,
+    /// Logical column (reduction-dim) count — *not* padded.
+    pub cols: usize,
+    /// Blocks per row: `ceil(cols / 32)`.
+    pub kblocks: usize,
+    /// Packed FP4 codes, `rows * kblocks * BLOCK_BYTES` bytes; tail
+    /// padding inside the last block of each row is zero codes.
+    pub codes: Vec<u8>,
+    /// E8M0 shared exponents, `rows * kblocks` entries (scale `2^e`).
+    pub exps: Vec<i8>,
+}
+
+impl MxMat {
+    fn empty(rows: usize, cols: usize) -> MxMat {
+        let kblocks = cols.div_ceil(MX_BLOCK);
+        MxMat {
+            rows,
+            cols,
+            kblocks,
+            codes: vec![0u8; rows * kblocks * BLOCK_BYTES],
+            exps: vec![0i8; rows * kblocks],
+        }
+    }
+
+    /// Quantize a row-major `rows × cols` f32 buffer with Algorithm 1
+    /// (nearest rounding, shared E8M0 block scales along each row).
+    pub fn quantize_nr(data: &[f32], rows: usize, cols: usize) -> MxMat {
+        assert_eq!(data.len(), rows * cols, "data len != rows*cols");
+        let mut m = MxMat::empty(rows, cols);
+        // Throwaway Rng: the NR closure never draws from it; one shared
+        // row-quantizer keeps a single encode path for both algorithms.
+        let mut unused = Rng::seed(0);
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            m.quantize_row_with(r, row, &mut unused, &mut |v, x, _| {
+                fp4::nearest((v / x).clamp(-8.0, 8.0))
+            });
+        }
+        m
+    }
+
+    /// Quantize with Algorithm 2 (3/4 pre-scale + stochastic rounding).
+    /// Dither is drawn from `rng` once per *real* element in row-major
+    /// order — the identical stream `quant::qdq_sr_rows` consumes, so the
+    /// two paths agree bit-for-bit given the same seed. The decoded
+    /// matrix estimates `(3/4)·data`; GEMM consumers rescale by 16/9.
+    pub fn quantize_sr(data: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> MxMat {
+        assert_eq!(data.len(), rows * cols, "data len != rows*cols");
+        let mut m = MxMat::empty(rows, cols);
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            m.quantize_row_with(r, row, rng, &mut |v, x, rng| {
+                fp4::stochastic(v / x * PRESCALE, rng.uniform())
+            });
+        }
+        m
+    }
+
+    /// Quantize one logical row: per ≤32-element block, compute the
+    /// shared exponent over the real elements and encode codes via `f`.
+    fn quantize_row_with(
+        &mut self,
+        r: usize,
+        row: &[f32],
+        rng: &mut Rng,
+        f: &mut impl FnMut(f32, f32, &mut Rng) -> f32,
+    ) {
+        let kb = self.kblocks;
+        for (b, block) in row.chunks(MX_BLOCK).enumerate() {
+            let e = scale::shared_exp(block);
+            let x = scale::exact_pow2(e);
+            let at = (r * kb + b) * BLOCK_BYTES;
+            let bytes = &mut self.codes[at..at + BLOCK_BYTES];
+            for (i, &v) in block.iter().enumerate() {
+                let code = fp4::encode(f(v, x, rng));
+                if i % 2 == 0 {
+                    bytes[i / 2] |= code & 0x0F;
+                } else {
+                    bytes[i / 2] |= code << 4;
+                }
+            }
+            self.exps[r * kb + b] = e as i8;
+        }
+    }
+
+    /// Decode logical element `(r, c)`.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        let kb = c / MX_BLOCK;
+        let i = c % MX_BLOCK;
+        let byte = self.codes[(r * self.kblocks + kb) * BLOCK_BYTES + i / 2];
+        let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        fp4::decode(code) * scale::exact_pow2(self.exps[r * self.kblocks + kb] as i32)
+    }
+
+    /// Decode the whole matrix back to a row-major f32 buffer (padding
+    /// dropped). Equals the qdq emulation of the source values.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[r * self.cols + c] = self.get(r, c);
+            }
+        }
+        out
+    }
+
+    /// LUT dot product of row `ra` of `self` with row `rb` of `other`
+    /// (both blocked along their shared reduction dimension).
+    ///
+    /// Per packed byte: two table lookups + two adds; per block: one
+    /// exact power-of-two scale multiply.
+    ///
+    /// **Accumulation contract** (what "bit-exact" means here): each
+    /// block reduces through four independent f32 lanes — lane `j` sums
+    /// the block's elements with index ≡ j (mod 4), in order — combined
+    /// as `(l0 + l1) + (l2 + l3)`, scaled by the two block scales, and
+    /// block partials are added in block order. The four lanes are both
+    /// the tree-reduction shape HW dot-product units use and what breaks
+    /// the serial fadd dependency chain in software (one chain would be
+    /// latency-bound at ~4 cycles/element — as slow as the per-block
+    /// `MxVec::dot` path this engine replaces). The qdq reference in
+    /// `tests/packed_gemm.rs` mirrors the same lane structure.
+    #[inline]
+    pub fn row_dot(&self, ra: usize, other: &MxMat, rb: usize) -> f32 {
+        debug_assert_eq!(self.cols, other.cols, "reduction dims differ");
+        let kb = self.kblocks;
+        let lut = fp4_product_lut();
+        let ac = &self.codes[ra * kb * BLOCK_BYTES..(ra + 1) * kb * BLOCK_BYTES];
+        let bc = &other.codes[rb * kb * BLOCK_BYTES..(rb + 1) * kb * BLOCK_BYTES];
+        let ae = &self.exps[ra * kb..(ra + 1) * kb];
+        let be = &other.exps[rb * kb..(rb + 1) * kb];
+        let mut total = 0.0f32;
+        for k in 0..kb {
+            let xa = &ac[k * BLOCK_BYTES..(k + 1) * BLOCK_BYTES];
+            let xb = &bc[k * BLOCK_BYTES..(k + 1) * BLOCK_BYTES];
+            // four lanes: elements 4t, 4t+1, 4t+2, 4t+3 per iteration
+            let (mut l0, mut l1, mut l2, mut l3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut i = 0;
+            while i + 1 < BLOCK_BYTES {
+                let (a0, b0) = (xa[i], xb[i]);
+                let (a1, b1) = (xa[i + 1], xb[i + 1]);
+                l0 += lut[(((a0 & 0x0F) << 4) | (b0 & 0x0F)) as usize];
+                l1 += lut[((a0 & 0xF0) | (b0 >> 4)) as usize];
+                l2 += lut[(((a1 & 0x0F) << 4) | (b1 & 0x0F)) as usize];
+                l3 += lut[((a1 & 0xF0) | (b1 >> 4)) as usize];
+                i += 2;
+            }
+            let acc = (l0 + l1) + (l2 + l3);
+            total += acc * scale::exact_pow2(ae[k] as i32) * scale::exact_pow2(be[k] as i32);
+        }
+        total
+    }
+
+    /// Packed bytes held (codes + exponents) — the memory the engine
+    /// actually touches per GEMM operand.
+    pub fn packed_bytes(&self) -> usize {
+        self.codes.len() + self.exps.len()
+    }
+
+    /// Storage bits per logical element: 4.25 for multiple-of-32 rows,
+    /// slightly more when the tail block is padded.
+    pub fn bits_per_element(&self) -> f64 {
+        let bits = self.rows * self.kblocks * (BLOCK_BYTES * 8 + 8);
+        bits as f64 / (self.rows * self.cols).max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::quant;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; rows * cols];
+        Rng::seed(seed).fill_normal(&mut v, 2.0);
+        v
+    }
+
+    #[test]
+    fn lut_matches_decoded_products_exhaustively() {
+        let lut = fp4_product_lut();
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                let want = fp4::decode(a) * fp4::decode(b);
+                let got = lut[((a << 4) | b) as usize];
+                assert_eq!(got.to_bits(), want.to_bits(), "codes {a:#x} x {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn nr_dequantize_matches_row_aware_qdq() {
+        for cols in [32usize, 64, 33, 50, 1, 95] {
+            let v = gaussian(3, cols, 40 + cols as u64);
+            let mut qdq = v.clone();
+            quant::qdq_nr_rows(&mut qdq, cols);
+            let m = MxMat::quantize_nr(&v, 3, cols);
+            assert_eq!(m.dequantize(), qdq, "cols {cols}");
+        }
+    }
+
+    #[test]
+    fn sr_dequantize_matches_row_aware_qdq_same_stream() {
+        for cols in [32usize, 47, 96] {
+            let v = gaussian(2, cols, 50 + cols as u64);
+            let mut qdq = v.clone();
+            quant::qdq_sr_rows(&mut qdq, cols, &mut Rng::seed(7));
+            let m = MxMat::quantize_sr(&v, 2, cols, &mut Rng::seed(7));
+            assert_eq!(m.dequantize(), qdq, "cols {cols}");
+        }
+    }
+
+    #[test]
+    fn row_dot_matches_dequantized_blockwise_dot() {
+        let cols = 95; // non-multiple-of-32: exercises the padded tail
+        let a = MxMat::quantize_nr(&gaussian(2, cols, 60), 2, cols);
+        let b = MxMat::quantize_nr(&gaussian(4, cols, 61), 4, cols);
+        let da = a.dequantize();
+        let db = b.dequantize();
+        for ra in 0..2 {
+            for rb in 0..4 {
+                // per-block four-lane reference, same grouping as row_dot
+                let mut want = 0.0f32;
+                for lo in (0..cols).step_by(MX_BLOCK) {
+                    let hi = (lo + MX_BLOCK).min(cols);
+                    let mut lanes = [0.0f32; 4];
+                    for c in lo..hi {
+                        lanes[(c - lo) % 4] += da[ra * cols + c] * db[rb * cols + c];
+                    }
+                    want += (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+                }
+                let got = a.row_dot(ra, &b, rb);
+                assert_eq!(got.to_bits(), want.to_bits(), "rows ({ra},{rb})");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_contributes_nothing() {
+        // a row of all zeros dots to exactly zero against anything
+        let z = MxMat::quantize_nr(&vec![0.0f32; 33], 1, 33);
+        let x = MxMat::quantize_nr(&gaussian(1, 33, 62), 1, 33);
+        assert_eq!(z.row_dot(0, &x, 0), 0.0);
+    }
+
+    #[test]
+    fn bitrate_accounting() {
+        let m = MxMat::quantize_nr(&vec![1.0f32; 4 * 320], 4, 320);
+        assert!((m.bits_per_element() - 4.25).abs() < 1e-9);
+        assert_eq!(m.packed_bytes(), 4 * 10 * (BLOCK_BYTES + 1));
+        // padded tail costs extra bits per logical element
+        let t = MxMat::quantize_nr(&vec![1.0f32; 33], 1, 33);
+        assert!(t.bits_per_element() > 4.25);
+    }
+
+    #[test]
+    fn get_agrees_with_dequantize() {
+        let v = gaussian(3, 50, 63);
+        let m = MxMat::quantize_sr(&v, 3, 50, &mut Rng::seed(9));
+        let d = m.dequantize();
+        for r in 0..3 {
+            for c in 0..50 {
+                assert_eq!(m.get(r, c), d[r * 50 + c]);
+            }
+        }
+    }
+}

@@ -7,13 +7,17 @@
 //! * `bf16` — BF16 qdq + stochastic variant (optimizer copies)
 //! * `scale` — E8M0 shared exponents (exact pow2, exact floor-log2)
 //! * `quant` — Algorithms 1 & 2 over f32 slices (qdq emulation)
-//! * `block` — packed 4.25-bit MX containers + MX dot product
+//! * `block` — packed 4.25-bit MX containers + MX dot product (the
+//!   per-block reference layout)
+//! * `mat`   — flat SoA packed matrices (`MxMat`) + the FP4×FP4 product
+//!   LUT: the quantize-once engine behind `gemm::mx_gemm_packed`
 
 pub mod bf16;
 pub mod block;
 pub mod fp4;
 pub mod fp8;
 pub mod int4;
+pub mod mat;
 pub mod quant;
 pub mod scale;
 

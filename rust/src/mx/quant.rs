@@ -54,6 +54,48 @@ pub fn qdq_sr_with_noise(v: &mut [f32], noise: &[f32]) {
     }
 }
 
+/// Row-aware Algorithm 1: qdq a row-major `(len/row_len, row_len)` buffer
+/// with MX blocks along each row, allowing a final partial (<32-element)
+/// block per row. For `row_len % 32 == 0` this is identical to [`qdq_nr`]
+/// over the flat buffer; otherwise it matches zero-padding each row up to
+/// the block size (zeros never change a block max, hence never the shared
+/// scale) — the exact semantics of the packed `mx::mat::MxMat` container.
+pub fn qdq_nr_rows(v: &mut [f32], row_len: usize) {
+    if row_len == 0 {
+        assert!(v.is_empty(), "row_len 0 with non-empty buffer");
+        return;
+    }
+    assert_eq!(v.len() % row_len, 0, "len {} not a multiple of row_len {row_len}", v.len());
+    for row in v.chunks_mut(row_len) {
+        for block in row.chunks_mut(MX_BLOCK) {
+            let x = scale::block_scale(block);
+            for e in block {
+                *e = fp4::nearest((*e / x).clamp(-8.0, 8.0)) * x;
+            }
+        }
+    }
+}
+
+/// Row-aware Algorithm 2: like [`qdq_sr`] but blocked along rows of
+/// length `row_len` with partial tail blocks. Dither is drawn once per
+/// element in row-major order — the same stream `MxMat::quantize_sr`
+/// consumes, so packed and qdq paths agree bit-for-bit per seed.
+pub fn qdq_sr_rows(v: &mut [f32], row_len: usize, rng: &mut Rng) {
+    if row_len == 0 {
+        assert!(v.is_empty(), "row_len 0 with non-empty buffer");
+        return;
+    }
+    assert_eq!(v.len() % row_len, 0, "len {} not a multiple of row_len {row_len}", v.len());
+    for row in v.chunks_mut(row_len) {
+        for block in row.chunks_mut(MX_BLOCK) {
+            let x = scale::block_scale(block);
+            for e in block {
+                *e = fp4::stochastic(*e / x * PRESCALE, rng.uniform()) * x;
+            }
+        }
+    }
+}
+
 /// SR without the 3/4 pre-scale (the paper's "SR only" would still use the
 /// pre-scale; this variant exists to *measure* the clip bias it removes).
 pub fn qdq_sr_noprescale(v: &mut [f32], rng: &mut Rng) {
@@ -185,6 +227,39 @@ mod tests {
         let v = gaussian(1 << 18, 9, 1.0);
         let frac = clip_fraction(&v);
         assert!((0.01..0.08).contains(&frac), "clip frac {frac}");
+    }
+
+    #[test]
+    fn rows_variants_match_flat_when_aligned() {
+        let mut a = gaussian(256, 11, 2.0);
+        let mut b = a.clone();
+        qdq_nr(&mut a);
+        qdq_nr_rows(&mut b, 64);
+        assert_eq!(a, b);
+        let mut a = gaussian(256, 12, 2.0);
+        let mut b = a.clone();
+        qdq_sr(&mut a, &mut Rng::seed(3));
+        qdq_sr_rows(&mut b, 32, &mut Rng::seed(3));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rows_tail_block_quantizes_like_standalone_slice() {
+        // row_len 40: each row splits into blocks [0, 32) and [32, 40)
+        let v = gaussian(80, 13, 1.5);
+        let mut rows = v.clone();
+        qdq_nr_rows(&mut rows, 40);
+        for (r, row) in v.chunks(40).enumerate() {
+            let mut head = row[..32].to_vec();
+            qdq_nr(&mut head);
+            assert_eq!(&rows[r * 40..r * 40 + 32], &head[..], "row {r} head");
+            let tail = &row[32..40];
+            let x = scale::block_scale(tail);
+            for (i, &o) in tail.iter().enumerate() {
+                let want = fp4::nearest((o / x).clamp(-8.0, 8.0)) * x;
+                assert_eq!(rows[r * 40 + 32 + i], want, "row {r} tail elem {i}");
+            }
+        }
     }
 
     #[test]

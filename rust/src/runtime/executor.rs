@@ -177,6 +177,13 @@ pub fn init_params(artifact: &Artifact, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// True when a real PJRT backend is linked. The offline stub
+/// (`rust/vendor/xla`) fails client construction, so this returns false
+/// there; artifact-dependent tests use it to skip instead of panicking.
+pub fn backend_available() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}
+
 /// Sanity description of a dtype for error messages.
 pub fn dtype_name(d: DType) -> &'static str {
     match d {

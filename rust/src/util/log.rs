@@ -1,10 +1,9 @@
-//! Leveled stderr logger with wall-clock timestamps (log crate facade is
-//! available but a backend is not; this is the backend-free equivalent).
+//! Leveled stderr logger with wall-clock timestamps (no `log`-crate
+//! facade offline; this is the backend-free equivalent).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -15,7 +14,7 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -38,7 +37,7 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let tag = match level {
         Level::Debug => "DEBUG",
         Level::Info => "INFO ",

@@ -18,6 +18,29 @@ fn artifacts_dir() -> PathBuf {
     mxfp4_train::runtime::default_artifacts_dir()
 }
 
+/// `None` (skip, with a note) when `make artifacts` has not been run;
+/// the corruption tests that need a *valid* artifact to break are gated,
+/// the self-contained ones below are not.
+fn artifacts() -> Option<Registry> {
+    match Registry::open(&artifacts_dir()) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping failure-injection test: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Like [`artifacts`], but additionally requires a real PJRT backend —
+/// for tests that must *successfully* compile an artifact first.
+fn artifacts_with_backend() -> Option<Registry> {
+    if !executor::backend_available() {
+        eprintln!("skipping failure-injection test: stub xla backend (see rust/vendor/xla)");
+        return None;
+    }
+    artifacts()
+}
+
 #[test]
 fn corrupted_meta_json_is_rejected() {
     let d = tmp_dir("meta");
@@ -28,6 +51,9 @@ fn corrupted_meta_json_is_rejected() {
 
 #[test]
 fn missing_hlo_text_is_rejected() {
+    if artifacts().is_none() {
+        return;
+    }
     let d = tmp_dir("nohlo");
     // valid metadata, no .hlo.txt next to it
     let src = artifacts_dir().join("test_bf16_train.meta.json");
@@ -38,8 +64,8 @@ fn missing_hlo_text_is_rejected() {
 
 #[test]
 fn truncated_hlo_fails_compile_not_crash() {
+    let Some(reg) = artifacts() else { return };
     let d = tmp_dir("trunc");
-    let reg = Registry::open(&artifacts_dir()).unwrap();
     let art = reg.find("test", "bf16", "train").unwrap();
     let text = std::fs::read_to_string(&art.hlo_path).unwrap();
     std::fs::write(d.join("test_bf16_train.hlo.txt"), &text[..text.len() / 3]).unwrap();
@@ -55,7 +81,7 @@ fn truncated_hlo_fails_compile_not_crash() {
 
 #[test]
 fn param_arity_mismatch_is_caught_before_pjrt() {
-    let reg = Registry::open(&artifacts_dir()).unwrap();
+    let Some(reg) = artifacts_with_backend() else { return };
     let art = reg.find("test", "bf16", "train").unwrap();
     let exe = Executor::compile_cpu(art).unwrap();
     let mut params = executor::init_params(art, 0);
@@ -68,7 +94,7 @@ fn param_arity_mismatch_is_caught_before_pjrt() {
 
 #[test]
 fn param_shape_mismatch_is_caught() {
-    let reg = Registry::open(&artifacts_dir()).unwrap();
+    let Some(reg) = artifacts_with_backend() else { return };
     let art = reg.find("test", "bf16", "train").unwrap();
     let exe = Executor::compile_cpu(art).unwrap();
     let mut params = executor::init_params(art, 0);
@@ -81,7 +107,7 @@ fn param_shape_mismatch_is_caught() {
 
 #[test]
 fn wrong_kind_rejected() {
-    let reg = Registry::open(&artifacts_dir()).unwrap();
+    let Some(reg) = artifacts_with_backend() else { return };
     let art = reg.find_fwd("test", "bf16", "eval").unwrap();
     let exe = Executor::compile_cpu(art).unwrap();
     let params = executor::init_params(art, 0);

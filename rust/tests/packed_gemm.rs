@@ -1,0 +1,165 @@
+//! Packed-engine parity: `gemm::mx_gemm_packed` must be **bit-exact**
+//! with the qdq reference GEMM when the reference uses the same per-block
+//! accumulation structure the MX hardware contract implies: per
+//! 32-element block, four f32 lanes (lane j sums elements ≡ j mod 4, in
+//! order) combined as `(l0 + l1) + (l2 + l3)`, one shared-scale multiply
+//! per block, block partials summed in block order — the tree-reduction
+//! shape of `MxMat::row_dot`.
+//!
+//! Why bit-exactness is achievable at all: FP4 grid magnitudes have ≤ 2
+//! mantissa bits, so every FP4×FP4 product is exactly representable in
+//! f32, and E8M0 block scales are powers of two, so scaling distributes
+//! exactly over f32 addition. The packed LUT kernel and the dequantized
+//! reference therefore compute *identical* float sequences — any
+//! divergence is a packing/LUT/indexing bug, which is exactly what these
+//! properties hunt across random (including non-multiple-of-32) shapes.
+
+use mxfp4_train::gemm::{mx_gemm_packed, mx_matmul_packed, Mat, MxMode};
+use mxfp4_train::hadamard;
+use mxfp4_train::mx::quant::{self, MX_BLOCK};
+use mxfp4_train::rng::Rng;
+use mxfp4_train::testing::{check, Config};
+
+/// Reference MX GEMM over *already-quantized* (qdq) operands with the
+/// per-block four-lane f32 accumulation contract: qa is (m, k), qbt is
+/// (n, k).
+fn blockwise_reference(qa: &Mat, qbt: &Mat) -> Mat {
+    assert_eq!(qa.cols, qbt.cols);
+    let (m, n, k) = (qa.rows, qbt.rows, qa.cols);
+    let mut c = Mat::zeros(m, n);
+    for r in 0..m {
+        for j in 0..n {
+            let mut total = 0.0f32;
+            for lo in (0..k).step_by(MX_BLOCK) {
+                let hi = (lo + MX_BLOCK).min(k);
+                let mut lanes = [0.0f32; 4];
+                for kk in lo..hi {
+                    lanes[(kk - lo) % 4] += qa.at(r, kk) * qbt.at(j, kk);
+                }
+                total += (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+            }
+            c.data[r * n + j] = total;
+        }
+    }
+    c
+}
+
+fn assert_bit_exact(got: &Mat, want: &Mat, what: &str) -> Result<(), String> {
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        if g.to_bits() != w.to_bits() {
+            return Err(format!("{what}: elem {i} packed {g:?} != reference {w:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_packed_nr_bit_exact_with_qdq_reference() {
+    check("packed-nr-vs-qdq", Config { cases: 48, seed: 0xA11CE }, |rng| {
+        let m = 1 + rng.below(6);
+        let n = 1 + rng.below(6);
+        // deliberately spans non-multiples of 32: 1..=160
+        let k = 1 + rng.below(160);
+        let a = Mat::gaussian(m, k, 1.0, rng);
+        let b = Mat::gaussian(k, n, 1.0, rng);
+
+        let got = mx_matmul_packed(&a, &b, MxMode::Nr, 32, &mut Rng::seed(0), 1);
+
+        let mut qa = a.clone();
+        let mut qbt = b.transpose();
+        quant::qdq_nr_rows(&mut qa.data, qa.cols);
+        quant::qdq_nr_rows(&mut qbt.data, qbt.cols);
+        let want = blockwise_reference(&qa, &qbt);
+        assert_bit_exact(&got, &want, &format!("NR ({m}x{k}x{n})"))
+    });
+}
+
+#[test]
+fn prop_packed_sr_bit_exact_given_same_rng_stream() {
+    check("packed-sr-vs-qdq", Config { cases: 48, seed: 0xB0B }, |rng| {
+        let m = 1 + rng.below(5);
+        let n = 1 + rng.below(5);
+        let k = 1 + rng.below(130);
+        let a = Mat::gaussian(m, k, 1.0, rng);
+        let b = Mat::gaussian(k, n, 1.0, rng);
+        let seed = rng.next_u64();
+
+        let got = mx_matmul_packed(&a, &b, MxMode::Sr, 32, &mut Rng::seed(seed), 1);
+
+        // identical dither stream: A's elements row-major, then Bᵀ's
+        let mut oracle_rng = Rng::seed(seed);
+        let mut qa = a.clone();
+        let mut qbt = b.transpose();
+        quant::qdq_sr_rows(&mut qa.data, qa.cols, &mut oracle_rng);
+        quant::qdq_sr_rows(&mut qbt.data, qbt.cols, &mut oracle_rng);
+        let mut want = blockwise_reference(&qa, &qbt);
+        for v in &mut want.data {
+            *v *= quant::GEMM_RESCALE;
+        }
+        assert_bit_exact(&got, &want, &format!("SR ({m}x{k}x{n})"))
+    });
+}
+
+#[test]
+fn prop_packed_rht_sr_bit_exact_given_same_rng_stream() {
+    check("packed-rhtsr-vs-qdq", Config { cases: 24, seed: 0xC4B1E }, |rng| {
+        let g = 32;
+        let m = 1 + rng.below(4);
+        let n = 1 + rng.below(4);
+        let k = g * (1 + rng.below(4)); // RHT requires g | k
+        let a = Mat::gaussian(m, k, 1.0, rng);
+        let b = Mat::gaussian(k, n, 1.0, rng);
+        let seed = rng.next_u64();
+
+        let got = mx_matmul_packed(&a, &b, MxMode::RhtSr, g, &mut Rng::seed(seed), 1);
+
+        // same stream order: sign vector, then A dither, then Bᵀ dither
+        let mut oracle_rng = Rng::seed(seed);
+        let sign = hadamard::sample_sign(g, &mut oracle_rng);
+        let mut qa = a.clone();
+        let mut qbt = b.transpose();
+        hadamard::rht_blockwise_dense(&mut qa.data, &sign, 1);
+        hadamard::rht_blockwise_dense(&mut qbt.data, &sign, 1);
+        quant::qdq_sr_rows(&mut qa.data, qa.cols, &mut oracle_rng);
+        quant::qdq_sr_rows(&mut qbt.data, qbt.cols, &mut oracle_rng);
+        let mut want = blockwise_reference(&qa, &qbt);
+        for v in &mut want.data {
+            *v *= quant::GEMM_RESCALE;
+        }
+        assert_bit_exact(&got, &want, &format!("RHT+SR ({m}x{k}x{n})"))
+    });
+}
+
+#[test]
+fn prop_packed_gemm_deterministic_across_worker_counts() {
+    check("packed-thread-determinism", Config { cases: 16, seed: 0xD17 }, |rng| {
+        let m = 1 + rng.below(40);
+        let n = 1 + rng.below(40);
+        let k = 1 + rng.below(100);
+        let pa = Mat::gaussian(m, k, 1.0, rng).pack_nr();
+        let pbt = Mat::gaussian(n, k, 1.0, rng).pack_nr();
+        let c1 = mx_gemm_packed(&pa, &pbt, 1);
+        for workers in [2usize, 3, 8] {
+            let cw = mx_gemm_packed(&pa, &pbt, workers);
+            if c1.data != cw.data {
+                return Err(format!("workers {workers} diverge at {m}x{k}x{n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_roundtrip_through_dequantize_matches_mxvec_layout() {
+    // MxMat and the seed MxVec container must agree on what the packed
+    // values *are* (same codes, same scales) for multiple-of-32 rows.
+    use mxfp4_train::mx::block::MxVec;
+    let mut v = vec![0.0f32; 4 * 96];
+    Rng::seed(99).fill_normal(&mut v, 2.0);
+    let m = mxfp4_train::mx::mat::MxMat::quantize_nr(&v, 4, 96);
+    let mut flat = Vec::new();
+    for row in v.chunks(96) {
+        flat.extend(MxVec::quantize_nr(row).dequantize());
+    }
+    assert_eq!(m.dequantize(), flat);
+}

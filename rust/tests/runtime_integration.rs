@@ -1,16 +1,27 @@
 //! End-to-end runtime integration: load AOT artifacts, compile on the PJRT
 //! CPU client, execute train/eval/logits steps, check numeric sanity.
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and a real (non-stub) `xla` backend; skips
+//! cleanly when the artifacts directory is absent.
 
 use mxfp4_train::runtime::{executor, Executor, Registry};
 
-fn registry() -> Registry {
-    Registry::open(&mxfp4_train::runtime::default_artifacts_dir()).expect("make artifacts first")
+fn registry() -> Option<Registry> {
+    if !executor::backend_available() {
+        eprintln!("skipping runtime integration test: stub xla backend (see rust/vendor/xla)");
+        return None;
+    }
+    match Registry::open(&mxfp4_train::runtime::default_artifacts_dir()) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime integration test: {e} (run `make artifacts`)");
+            None
+        }
+    }
 }
 
 #[test]
 fn train_step_executes_and_loss_is_sane() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let a = reg.find("test", "bf16", "train").unwrap();
     let exe = Executor::compile_cpu(a).unwrap();
     let params = executor::init_params(a, 0);
@@ -29,7 +40,7 @@ fn train_step_executes_and_loss_is_sane() {
 
 #[test]
 fn mxfp4_rht_sr_train_step_executes() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let a = reg.find("test", "mxfp4_rht_sr", "train").unwrap();
     let exe = Executor::compile_cpu(a).unwrap();
     let params = executor::init_params(a, 0);
@@ -47,7 +58,7 @@ fn mxfp4_rht_sr_train_step_executes() {
 
 #[test]
 fn eval_and_logits_execute() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let ev = reg.find_fwd("test", "bf16", "eval").unwrap();
     let lg = reg.find_fwd("test", "bf16", "logits").unwrap();
     let exe_e = Executor::compile_cpu(ev).unwrap();

@@ -9,8 +9,25 @@ use mxfp4_train::coordinator::Trainer;
 use mxfp4_train::data::Dataset;
 use mxfp4_train::runtime::Registry;
 
-fn run(recipe: &str, steps: usize, dp: usize) -> mxfp4_train::coordinator::RunSummary {
-    let reg = Registry::open(&mxfp4_train::runtime::default_artifacts_dir()).unwrap();
+/// `None` (skip, with a note) when `make artifacts` has not been run or
+/// only the stub xla backend is linked — the full coordinator loop needs
+/// AOT artifacts *and* a real PJRT build.
+fn registry() -> Option<Registry> {
+    if !mxfp4_train::runtime::executor::backend_available() {
+        eprintln!("skipping trainer integration test: stub xla backend (see rust/vendor/xla)");
+        return None;
+    }
+    match Registry::open(&mxfp4_train::runtime::default_artifacts_dir()) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping trainer integration test: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn run(recipe: &str, steps: usize, dp: usize) -> Option<mxfp4_train::coordinator::RunSummary> {
+    let reg = registry()?;
     let mut cfg = TrainConfig::preset("test");
     cfg.recipe = recipe.into();
     cfg.steps = steps;
@@ -20,12 +37,12 @@ fn run(recipe: &str, steps: usize, dp: usize) -> mxfp4_train::coordinator::RunSu
     cfg.seed = 42;
     let ds = Dataset::synthetic(60_000, 256, 7);
     let mut t = Trainer::new(&reg, cfg, ds, None).unwrap();
-    t.run().unwrap()
+    Some(t.run().unwrap())
 }
 
 #[test]
 fn bf16_training_reduces_loss() {
-    let s = run("bf16", 300, 1);
+    let Some(s) = run("bf16", 300, 1) else { return };
     // random init: ln(256) = 5.55; 300 steps learns the unigram/bigram head
     assert!(s.final_train_loss < 4.8, "train loss {}", s.final_train_loss);
     assert!(s.final_val_loss < 5.0, "val loss {}", s.final_val_loss);
@@ -33,21 +50,21 @@ fn bf16_training_reduces_loss() {
 
 #[test]
 fn mxfp4_rht_sr_training_reduces_loss() {
-    let s = run("mxfp4_rht_sr", 300, 1);
+    let Some(s) = run("mxfp4_rht_sr", 300, 1) else { return };
     assert!(s.final_train_loss < 5.0, "train loss {}", s.final_train_loss);
     assert!(s.final_val_loss.is_finite());
 }
 
 #[test]
 fn data_parallel_two_workers_runs() {
-    let s = run("bf16", 10, 2);
+    let Some(s) = run("bf16", 10, 2) else { return };
     assert_eq!(s.tokens, 10 * 2 * 4 * 32); // steps * workers * batch * seq
     assert!(s.final_train_loss.is_finite());
 }
 
 #[test]
 fn checkpoint_roundtrip_through_trainer() {
-    let reg = Registry::open(&mxfp4_train::runtime::default_artifacts_dir()).unwrap();
+    let Some(reg) = registry() else { return };
     let mut cfg = TrainConfig::preset("test");
     cfg.recipe = "bf16".into();
     cfg.steps = 3;

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Pre-merge gate for mxfp4-train (documented in README.md).
+#
+# Runs, in order:
+#   1. cargo fmt --check   (formatting)
+#   2. cargo build --release
+#   3. cargo test -q       (tier-1: unit + property + gated integration)
+#   4. cargo doc           (rustdoc, warnings denied)
+#
+# Usage: ./scripts/ci.sh        (from the repo root; any extra args are
+#        passed through to `cargo test`)
+
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo fmt --check"
+# fmt requires the rustfmt component; skip with a notice if absent so the
+# gate still runs on minimal toolchains.
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "    (rustfmt unavailable; skipping format check)"
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q "$@"
+
+echo "==> cargo doc (deny warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "CI gate passed."
