@@ -14,12 +14,13 @@
 //! after fine-tuning (Table 3's "similar performance" result).
 //!
 //!     cargo run --release --example finetune_eval -- [--steps 200]
+//!         [--backend native|artifact|auto]
 
 use mxfp4_train::config::TrainConfig;
 use mxfp4_train::coordinator::Trainer;
 use mxfp4_train::data::Dataset;
 use mxfp4_train::eval::{build_cloze_suite, cloze_accuracy};
-use mxfp4_train::runtime::{Executor, Registry};
+use mxfp4_train::runtime::{BackendSpec, Registry};
 use mxfp4_train::util::cli::Args;
 
 struct Row {
@@ -37,13 +38,11 @@ fn main() -> anyhow::Result<()> {
     let steps = args.get_usize("steps", 200);
     let ft_steps = args.get_usize("ft-steps", 80);
 
-    let registry = Registry::open(&mxfp4_train::runtime::default_artifacts_dir())
-        .map_err(anyhow::Error::msg)?;
-    let lg = registry
-        .find_fwd(&config, "bf16", "logits")
-        .ok_or_else(|| anyhow::anyhow!("no logits artifact"))?;
-    let logits_exe = Executor::compile_cpu(lg)?;
-    let seq = lg.model.seq_len;
+    let registry = Registry::open(&mxfp4_train::runtime::default_artifacts_dir()).ok();
+    let choice = args.get_or("backend", "auto").to_string();
+    let lg = BackendSpec::resolve_fwd(&config, "bf16", "logits", &choice, registry.as_ref())?;
+    let mut logits_exe = lg.connect()?;
+    let seq = lg.seq_len();
 
     // corpus A (pretraining) and corpus B (the "Tulu" fine-tune corpus):
     // different generator seed => shifted topics + bigram table.
@@ -60,10 +59,21 @@ fn main() -> anyhow::Result<()> {
         cfg.steps = steps;
         cfg.eval_every = steps;
         cfg.seed = 42;
-        let mut tr = Trainer::new(&registry, cfg, corpus_a(), None)?;
+        cfg.backend = choice.clone();
+        let mut tr = Trainer::new(registry.as_ref(), cfg, corpus_a(), None)?;
+        // the cloze harness reuses tr.params(): the logits backend must
+        // share the trainer's parameter ABI — fail here, not after the
+        // pretrain, if a partial artifact set split the auto resolution
+        anyhow::ensure!(
+            lg.kind() == tr.backend_kind(),
+            "logits backend is {} but the trainer resolved to {}; pass --backend native \
+             or add the missing logits artifact",
+            lg.kind(),
+            tr.backend_kind()
+        );
         let base = tr.run()?;
         // 2. zero-shot analogue on held-out corpus-A cloze
-        let base_acc = cloze_accuracy(&logits_exe, tr.params(), &cloze_a)?;
+        let base_acc = cloze_accuracy(&mut *logits_exe, tr.params(), &cloze_a)?;
 
         // 3. fine-tune in BF16 (the paper fine-tunes in BF16/FP32 MP)
         let dir = std::env::temp_dir().join(format!("mxfp4_ft_{recipe}"));
@@ -74,11 +84,12 @@ fn main() -> anyhow::Result<()> {
         ft_cfg.eval_every = ft_steps;
         ft_cfg.lr = 5e-4; // fine-tune at reduced LR, as Tulu does
         ft_cfg.seed = 43;
-        let mut ft = Trainer::new(&registry, ft_cfg, corpus_b(), None)?;
+        ft_cfg.backend = choice.clone();
+        let mut ft = Trainer::new(registry.as_ref(), ft_cfg, corpus_b(), None)?;
         ft.load_params(&dir.join("master.mxck"))?;
         let ft_sum = ft.run()?;
         // 4. post-finetune eval on corpus-B cloze
-        let ft_acc = cloze_accuracy(&logits_exe, ft.params(), &cloze_b)?;
+        let ft_acc = cloze_accuracy(&mut *logits_exe, ft.params(), &cloze_b)?;
 
         rows.push(Row {
             name: if recipe == "bf16" { "BF16".into() } else { "MXFP4★".into() },

@@ -5,6 +5,7 @@
 //!
 //!     cargo run --release --example train_gpt -- [--config tiny]
 //!         [--steps 300] [--sweep recipes|blocksize|fp8] [--dp 1]
+//!         [--backend native|artifact|auto]
 //!
 //! Expected shape (the paper's Table 2 ordering at any scale):
 //!   bf16  ≈  mxfp4_rht_sr  ≈  mxfp4_sr  <  mxfp4_rht  <  mxfp4 (pure NR)
@@ -12,7 +13,7 @@
 use mxfp4_train::config::TrainConfig;
 use mxfp4_train::coordinator::Trainer;
 use mxfp4_train::data::Dataset;
-use mxfp4_train::runtime::Registry;
+use mxfp4_train::runtime::{BackendSpec, Registry};
 use mxfp4_train::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -30,16 +31,11 @@ fn main() -> anyhow::Result<()> {
         other => anyhow::bail!("unknown --sweep {other}"),
     };
 
-    let registry = Registry::open(&mxfp4_train::runtime::default_artifacts_dir())
-        .map_err(anyhow::Error::msg)?;
+    let registry = Registry::open(&mxfp4_train::runtime::default_artifacts_dir()).ok();
     let results = std::path::PathBuf::from("results");
 
     let mut rows = Vec::new();
     for recipe in &recipes {
-        if registry.find(&config, recipe, "train").is_none() {
-            eprintln!("skip {recipe}: no artifact for config {config} (see aot.py DEFAULT_PLAN)");
-            continue;
-        }
         let mut cfg = TrainConfig::preset(&config);
         cfg.recipe = recipe.to_string();
         cfg.steps = steps;
@@ -48,9 +44,13 @@ fn main() -> anyhow::Result<()> {
         cfg.apply_cli(&args);
         cfg.steps = steps;
         cfg.recipe = recipe.to_string();
+        if let Err(e) = BackendSpec::resolve_train(&cfg, registry.as_ref()) {
+            eprintln!("skip {recipe}: {e}");
+            continue;
+        }
         // identical data + init across recipes: only the backward precision differs
         let dataset = Dataset::synthetic(2_000_000, 256, 123);
-        let mut trainer = Trainer::new(&registry, cfg, dataset, Some(&results))?;
+        let mut trainer = Trainer::new(registry.as_ref(), cfg, dataset, Some(&results))?;
         rows.push(trainer.run()?);
     }
 

@@ -10,7 +10,7 @@ use mxfp4_train::coordinator::{MxWeightCache, Orientation};
 use mxfp4_train::gemm::{mx_gemm_packed, mx_matmul, Mat, MxMode};
 use mxfp4_train::optim::{self, AdamW, ParamRounding};
 use mxfp4_train::rng::Rng;
-use mxfp4_train::runtime::{executor, Executor, Registry};
+use mxfp4_train::runtime::{executor, Backend, BackendSpec, Executor, Registry};
 
 /// Rust-substrate emulation of the step-level weight path: one weight
 /// matrix feeding every microbatch GEMM of a step. Measures what the
@@ -67,8 +67,30 @@ fn substrate_weight_cache_bench() {
     );
 }
 
+/// Native-backend step latency per recipe: the end-to-end cost of the
+/// hand-written forward/backward with every linear GEMM routed through
+/// the MX engine — runs in any checkout (no artifacts, no PJRT).
+fn native_backend_bench() {
+    harness::header("native backend train step by recipe (test config, batch 4 x seq 32)");
+    for recipe in ["bf16", "mxfp4", "mxfp4_sr", "mxfp4_rht", "mxfp4_rht_sr"] {
+        let spec = BackendSpec::native("test", recipe, None).unwrap();
+        let mut backend = spec.connect().unwrap();
+        let params = executor::init_params_for(&spec.param_specs(), spec.n_layers(), 0);
+        let n = backend.tokens_per_step();
+        let v = backend.vocab() as i32;
+        let tokens: Vec<i32> = (0..n as i32).map(|i| i % v).collect();
+        let labels: Vec<i32> = (0..n as i32).map(|i| (i + 1) % v).collect();
+        let mut seed = 0u32;
+        harness::bench(&format!("native train_step [{recipe}]"), n as f64, "tok", 1, 5, || {
+            seed += 1;
+            std::hint::black_box(backend.train_step(seed, &tokens, &labels, &params).unwrap());
+        });
+    }
+}
+
 fn main() {
     substrate_weight_cache_bench();
+    native_backend_bench();
 
     if !executor::backend_available() {
         println!("skipping PJRT train_step bench: stub xla backend (see rust/vendor/xla)");

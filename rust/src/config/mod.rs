@@ -23,8 +23,17 @@ pub struct TrainConfig {
     pub beta2: f32,
     pub eps: f32,
     pub grad_clip: f32,
-    /// Data-parallel worker count (microbatch shards per step).
+    /// Execution backend: "native" (rust GPT, no artifacts), "artifact"
+    /// (PJRT over AOT HLO), or "auto" (artifact when available, else
+    /// native).
+    pub backend: String,
+    /// Data-parallel worker threads.
     pub dp_workers: usize,
+    /// Microbatch shards per optimizer step; 0 (default) means one per
+    /// DP worker. Shards are seeded by (step, shard index) and reduced
+    /// in shard order, so a fixed shard count gives byte-identical
+    /// gradients for any `dp_workers`.
+    pub microbatches: usize,
     /// Validation cadence (steps); 0 disables.
     pub eval_every: usize,
     /// Number of holdout batches per eval.
@@ -48,7 +57,9 @@ impl Default for TrainConfig {
             beta2: 0.95,
             eps: 1e-8,
             grad_clip: 1.0,
+            backend: "auto".into(),
             dp_workers: 1,
+            microbatches: 0,
             eval_every: 20,
             eval_batches: 4,
             seed: 0,
@@ -74,7 +85,9 @@ impl TrainConfig {
             "beta2" => self.beta2 = parse_f32(value)?,
             "eps" => self.eps = parse_f32(value)?,
             "grad_clip" => self.grad_clip = parse_f32(value)?,
+            "backend" => self.backend = value.into(),
             "dp_workers" => self.dp_workers = parse_usize(value)?,
+            "microbatches" => self.microbatches = parse_usize(value)?,
             "eval_every" => self.eval_every = parse_usize(value)?,
             "eval_batches" => self.eval_batches = parse_usize(value)?,
             "seed" => self.seed = value.parse().map_err(|e| format!("{key}: {e}"))?,
@@ -113,6 +126,10 @@ impl TrainConfig {
     pub fn preset(config: &str) -> TrainConfig {
         let mut c = TrainConfig { config: config.into(), ..TrainConfig::default() };
         match config {
+            "micro" => {
+                c.steps = 80;
+                c.lr = 3e-3;
+            }
             "test" => {
                 c.steps = 50;
                 c.lr = 2e-3;
@@ -139,9 +156,11 @@ impl TrainConfig {
         let mut m = BTreeMap::new();
         m.insert("config".into(), self.config.clone());
         m.insert("recipe".into(), self.recipe.clone());
+        m.insert("backend".into(), self.backend.clone());
         m.insert("steps".into(), self.steps.to_string());
         m.insert("lr".into(), format!("{}", self.lr));
         m.insert("dp_workers".into(), self.dp_workers.to_string());
+        m.insert("microbatches".into(), self.microbatches.to_string());
         m.insert("seed".into(), self.seed.to_string());
         m
     }
@@ -164,11 +183,22 @@ mod tests {
         c.set("lr", "0.002").unwrap();
         c.set("steps", "123").unwrap();
         c.set("recipe", "mxfp4").unwrap();
+        c.set("backend", "native").unwrap();
+        c.set("microbatches", "4").unwrap();
         assert_eq!(c.lr, 0.002);
         assert_eq!(c.steps, 123);
         assert_eq!(c.recipe, "mxfp4");
+        assert_eq!(c.backend, "native");
+        assert_eq!(c.microbatches, 4);
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("lr", "abc").is_err());
+    }
+
+    #[test]
+    fn backend_defaults_to_auto() {
+        let c = TrainConfig::default();
+        assert_eq!(c.backend, "auto");
+        assert_eq!(c.microbatches, 0, "0 = one shard per dp worker");
     }
 
     #[test]

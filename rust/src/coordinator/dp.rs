@@ -1,12 +1,23 @@
 //! Simulated data parallelism: a leader/worker pool with gradient
-//! all-reduce, the FSDP/ZeRO-style topology of §3.2's motivation.
+//! all-reduce, the FSDP/ZeRO-style topology of §3.2's motivation —
+//! backend-agnostic since the `runtime::Backend` refactor.
 //!
-//! PJRT handles are !Send, so each worker *thread* builds its own CPU
-//! client + compiled executable at startup and serves microbatch requests
-//! over channels for the whole run — exactly a leader process fanning out
-//! to device workers. The leader broadcasts a parameter snapshot
-//! (Arc-shared, zero-copy) and all-reduces (averages) the returned
-//! gradient shards.
+//! PJRT handles are !Send, so each worker *thread* connects its own
+//! backend from a `Send + Clone` [`BackendSpec`] at startup (its own CPU
+//! client + compiled executable on the artifact path; its own native GPT
+//! + quantize-once weight cache on the native path) and serves
+//! microbatch requests over channels for the whole run — exactly a
+//! leader process fanning out to device workers. The leader broadcasts a
+//! parameter snapshot (Arc-shared, zero-copy) and all-reduces (averages)
+//! the returned gradient shards.
+//!
+//! **Determinism.** A step is a list of S shards; shard `i` goes to
+//! worker `i % W` (each worker runs its shards in order) and the leader
+//! reduces responses *by shard index*, not arrival order. Every backend
+//! `train_step` is bitwise-deterministic per (seed, data, params), so
+//! the all-reduced gradient is byte-identical for any worker count W —
+//! worker count is pure scheduling. The SR rng-stream parity tests pin
+//! this down.
 //!
 //! Why this matters to the paper: Algorithm 3's *blockwise* RHT never
 //! mixes across the batch dimension, so sharding the batch across workers
@@ -20,10 +31,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::runtime::{Artifact, Executor};
+use crate::runtime::{Backend as _, BackendSpec};
 
 /// One microbatch of work for a worker.
 pub struct Request {
+    /// Shard index within the step — the leader's reduction slot.
+    pub shard: usize,
     pub seed: u32,
     pub tokens: Vec<i32>,
     pub labels: Vec<i32>,
@@ -32,13 +45,21 @@ pub struct Request {
 
 /// A worker's gradient contribution.
 pub struct Response {
+    pub shard: usize,
     pub worker: usize,
     pub loss: f32,
     pub grads: Vec<Vec<f32>>,
+    /// Cumulative `(nr_packs, cache_hits, sr_draws)` of the worker's
+    /// backend cache at response time.
+    pub cache_stats: (usize, usize, usize),
 }
 
 enum Ctl {
-    Work(Request),
+    Work(Box<Request>),
+    /// Weights were rewritten by optimizer step `epoch`: drop cached packs.
+    Advance(u64),
+    /// Out-of-band weight rewrite (checkpoint restore): drop cached packs.
+    Invalidate,
     Shutdown,
 }
 
@@ -48,12 +69,15 @@ pub struct DpPool {
     rx: mpsc::Receiver<Result<Response, String>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub workers: usize,
+    /// Latest cumulative cache stats per worker (for step aggregation).
+    worker_stats: Vec<(usize, usize, usize)>,
 }
 
 impl DpPool {
-    /// Spawn `workers` threads, each compiling `artifact` on its own
-    /// PJRT client. Blocks until all workers are ready (or one fails).
-    pub fn spawn(artifact: &Artifact, workers: usize) -> Result<DpPool> {
+    /// Spawn `workers` threads, each connecting its own backend from
+    /// `spec`. Blocks until all workers are ready (or one fails).
+    pub fn spawn(spec: &BackendSpec, workers: usize) -> Result<DpPool> {
+        let workers = workers.max(1);
         let (res_tx, rx) = mpsc::channel::<Result<Response, String>>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut txs = Vec::with_capacity(workers);
@@ -61,31 +85,50 @@ impl DpPool {
         for w in 0..workers {
             let (tx, work_rx) = mpsc::channel::<Ctl>();
             txs.push(tx);
-            let artifact = artifact.clone();
+            let spec = spec.clone();
             let res_tx = res_tx.clone();
             let ready_tx = ready_tx.clone();
+            // split the machine's cores across concurrent workers so
+            // each shard's internal GEMM threading doesn't oversubscribe
+            let gemm_workers =
+                (crate::util::threadpool::default_workers() / workers).max(1);
             handles.push(std::thread::spawn(move || {
-                let exe = match Executor::compile_cpu(&artifact) {
-                    Ok(e) => {
+                let mut backend = match spec.connect() {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        e
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(format!("worker {w}: {e}")));
                         return;
                     }
                 };
-                while let Ok(Ctl::Work(req)) = work_rx.recv() {
-                    let Request { seed, tokens, labels, params } = req;
-                    let out = exe
-                        .train_step(seed, &tokens, &labels, &params)
-                        .map(|o| Response { worker: w, loss: o.loss, grads: o.grads })
-                        .map_err(|e| format!("worker {w}: {e}"));
-                    // release the parameter snapshot *before* reporting, so
-                    // the leader can reclaim its Arc without cloning
-                    drop(params);
-                    if res_tx.send(out).is_err() {
-                        break;
+                backend.set_compute_workers(gemm_workers);
+                while let Ok(ctl) = work_rx.recv() {
+                    match ctl {
+                        Ctl::Work(req) => {
+                            let Request { shard, seed, tokens, labels, params } = *req;
+                            let out = backend
+                                .train_step(seed, &tokens, &labels, &params)
+                                .map(|o| Response {
+                                    shard,
+                                    worker: w,
+                                    loss: o.loss,
+                                    grads: o.grads,
+                                    cache_stats: backend.mx_cache_stats(),
+                                })
+                                .map_err(|e| format!("worker {w}: {e}"));
+                            // release the parameter snapshot *before*
+                            // reporting, so the leader can reclaim its Arc
+                            // without cloning
+                            drop(params);
+                            if res_tx.send(out).is_err() {
+                                break;
+                            }
+                        }
+                        Ctl::Advance(epoch) => backend.on_weights_updated(epoch),
+                        Ctl::Invalidate => backend.invalidate_cache(),
+                        Ctl::Shutdown => break,
                     }
                 }
             }));
@@ -93,26 +136,36 @@ impl DpPool {
         for _ in 0..workers {
             ready_rx.recv().expect("worker panicked during startup").map_err(anyhow::Error::msg)?;
         }
-        Ok(DpPool { txs, rx, handles, workers })
+        Ok(DpPool { txs, rx, handles, workers, worker_stats: vec![(0, 0, 0); workers] })
     }
 
-    /// Run one data-parallel step: send a shard to each worker, wait for
-    /// all, average losses and all-reduce (average) gradients.
+    /// Run one data-parallel step over `shards.len()` microbatches
+    /// (round-robin across workers), wait for all, average losses and
+    /// all-reduce (average) gradients **in shard-index order**.
     pub fn step(
-        &self,
+        &mut self,
         shards: Vec<(u32, Vec<i32>, Vec<i32>)>,
         params: &Arc<Vec<Vec<f32>>>,
     ) -> Result<(f32, Vec<Vec<f32>>)> {
-        assert_eq!(shards.len(), self.workers);
-        for (tx, (seed, tokens, labels)) in self.txs.iter().zip(shards) {
-            tx.send(Ctl::Work(Request { seed, tokens, labels, params: Arc::clone(params) }))
+        let count = shards.len();
+        assert!(count > 0, "a step needs at least one shard");
+        for (i, (seed, tokens, labels)) in shards.into_iter().enumerate() {
+            let req = Request { shard: i, seed, tokens, labels, params: Arc::clone(params) };
+            self.txs[i % self.workers]
+                .send(Ctl::Work(Box::new(req)))
                 .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        }
+        let mut slots: Vec<Option<Response>> = (0..count).map(|_| None).collect();
+        for _ in 0..count {
+            let resp = self.rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))?;
+            let resp = resp.map_err(anyhow::Error::msg)?;
+            self.worker_stats[resp.worker] = resp.cache_stats;
+            slots[resp.shard] = Some(resp);
         }
         let mut total_loss = 0.0f64;
         let mut acc: Option<Vec<Vec<f32>>> = None;
-        for _ in 0..self.workers {
-            let resp = self.rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))?;
-            let resp = resp.map_err(anyhow::Error::msg)?;
+        for slot in slots {
+            let resp = slot.expect("every shard produced a response");
             total_loss += resp.loss as f64;
             match &mut acc {
                 None => acc = Some(resp.grads),
@@ -126,13 +179,36 @@ impl DpPool {
             }
         }
         let mut grads = acc.unwrap();
-        let inv = 1.0 / self.workers as f32;
+        let inv = 1.0 / count as f32;
         for g in &mut grads {
             for v in g.iter_mut() {
                 *v *= inv;
             }
         }
-        Ok(((total_loss / self.workers as f64) as f32, grads))
+        Ok(((total_loss / count as f64) as f32, grads))
+    }
+
+    /// Broadcast a weight-epoch advance (after each optimizer step).
+    pub fn advance(&self, epoch: u64) {
+        for tx in &self.txs {
+            let _ = tx.send(Ctl::Advance(epoch));
+        }
+    }
+
+    /// Broadcast an out-of-band cache invalidation (checkpoint restore).
+    pub fn invalidate(&self) {
+        for tx in &self.txs {
+            let _ = tx.send(Ctl::Invalidate);
+        }
+    }
+
+    /// Summed `(nr_packs, cache_hits, sr_draws)` across all workers'
+    /// backend caches, as of each worker's latest response — the
+    /// observable quantize-once accounting of the whole pool.
+    pub fn cache_stats(&self) -> (usize, usize, usize) {
+        self.worker_stats.iter().fold((0, 0, 0), |(p, h, s), &(wp, wh, ws)| {
+            (p + wp, h + wh, s + ws)
+        })
     }
 }
 

@@ -20,13 +20,18 @@
 //! form, re-quantize only activations/gradients, which change per GEMM
 //! anyway.
 
+use crate::gemm::transpose_flat;
 use crate::mx::mat::MxMat;
 use crate::rng::Rng;
 
 /// Which way a 2-D weight is blocked for a GEMM: `AsStored` blocks along
-/// the stored column dimension (the `dY @ Wᵀ` orientation for a (k, n)
-/// weight), `Transposed` packs Wᵀ (the forward `X @ W` orientation, where
-/// the reduction dim is W's stored rows).
+/// the stored column dimension, `Transposed` packs Wᵀ (reduction over
+/// W's stored rows). Which GEMM each orientation serves depends on the
+/// storage convention: for a `(k, n)` weight with `y = x @ W`,
+/// `AsStored` is the dgrad `dY @ Wᵀ` orientation and `Transposed` the
+/// forward; for the native model's `(out, in)` weights with
+/// `y = x @ Wᵀ`, it is exactly the other way around (`AsStored` feeds
+/// the forward, `Transposed` feeds dgrad — see `model::gpt`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Orientation {
     AsStored,
@@ -145,18 +150,6 @@ impl MxWeightCache {
             .filter_map(|e| e.as_ref().map(MxMat::packed_bytes))
             .sum()
     }
-}
-
-/// Transpose a row-major `rows × cols` flat buffer.
-fn transpose_flat(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    assert_eq!(data.len(), rows * cols);
-    let mut t = vec![0.0f32; rows * cols];
-    for r in 0..rows {
-        for c in 0..cols {
-            t[c * rows + r] = data[r * cols + c];
-        }
-    }
-    t
 }
 
 #[cfg(test)]

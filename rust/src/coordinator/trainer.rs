@@ -1,11 +1,19 @@
 //! The training coordinator: wires data pipeline → data-parallel workers
-//! (PJRT train-step artifacts) → gradient all-reduce → clip → AdamW with
-//! FP32 masters → BF16 compute copies → metrics/eval/checkpoints.
+//! (pluggable `runtime::Backend`s) → gradient all-reduce → clip → AdamW
+//! with FP32 masters → BF16 compute copies → metrics/eval/checkpoints.
 //!
-//! This is the Megatron-role of the stack; the paper's contribution (the
-//! MXFP4 backward pass) lives *inside* the artifact, selected by
-//! `TrainConfig::recipe`, so recipe sweeps (Table 2/4, Fig 3-9) are pure
-//! coordinator-level loops over compiled artifacts.
+//! This is the Megatron-role of the stack. The paper's contribution (the
+//! MXFP4 backward pass) lives *inside* the backend — selected by
+//! `TrainConfig::recipe` and executed either by a PJRT artifact or by
+//! the native GPT engine (`TrainConfig::backend`: `native | artifact |
+//! auto`) — so recipe sweeps (Table 2/4, Fig 3-9) are pure
+//! coordinator-level loops, artifacts or not.
+//!
+//! **Shards vs workers.** A step processes `microbatches` shards (default:
+//! one per DP worker); `dp_workers` only sets the thread count that
+//! executes them. Shard seeds derive from (step, shard index) and the
+//! all-reduce folds in shard order, so gradients are byte-identical for
+//! any worker count — see `coordinator::dp`.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -20,7 +28,7 @@ use crate::data::Dataset;
 use crate::mx::mat::MxMat;
 use crate::optim::{self, AdamW, CosineSchedule, ParamRounding};
 use crate::rng::Rng;
-use crate::runtime::{executor, Executor, Registry};
+use crate::runtime::{executor, Backend, BackendSpec, Registry};
 use crate::util::timer::Timer;
 
 /// Summary returned by a finished run (Table 2 row material).
@@ -38,11 +46,13 @@ pub struct Trainer {
     pub cfg: TrainConfig,
     pub metrics: Metrics,
     pool: DpPool,
-    eval_exe: Executor,
+    eval_backend: Box<dyn Backend>,
     opt: AdamW,
-    /// BF16 compute copies (what the artifact consumes), Arc-broadcast.
+    /// BF16 compute copies (what the backend consumes), Arc-broadcast.
     compute: Vec<Vec<f32>>,
     /// Quantize-once MXFP4 views of the compute weights; epoch = step.
+    /// (The leader-side cache behind [`Trainer::packed_weight`]; each
+    /// pool worker's backend additionally keeps its own.)
     mx_cache: MxWeightCache,
     /// (rows, cols) for 2-D params; `None` for 1-D (LN gains/biases),
     /// which are never fed to MX GEMMs and so are never packed.
@@ -52,43 +62,51 @@ pub struct Trainer {
     schedule: CosineSchedule,
     batch: usize,
     seq: usize,
+    /// Microbatch shards per optimizer step (fixed, worker-independent).
+    shards: usize,
+    backend_kind: &'static str,
     step: usize,
+    /// Drives per-step data-order seeds (one draw per step).
     rng: Rng,
 }
 
 impl Trainer {
-    /// Build a trainer: find artifacts for (config, recipe), spawn the DP
-    /// pool, initialize parameters and optimizer state.
+    /// Build a trainer: resolve the backend pair for (config, recipe,
+    /// backend choice), spawn the DP pool, initialize parameters and
+    /// optimizer state. `registry = None` means "no artifacts directory"
+    /// — the auto backend then always picks native.
     pub fn new(
-        registry: &Registry,
+        registry: Option<&Registry>,
         cfg: TrainConfig,
         dataset: Dataset,
         results_dir: Option<&Path>,
     ) -> Result<Trainer> {
-        let train_art = registry
-            .find(&cfg.config, &cfg.recipe, "train")
-            .with_context(|| format!("no artifact {}_{}_train (run `make artifacts`)", cfg.config, cfg.recipe))?;
-        let fwd = &train_art.recipe.fwd;
-        let eval_art = registry
-            .find_fwd(&cfg.config, fwd, "eval")
-            .with_context(|| format!("no eval artifact for config {} fwd {fwd}", cfg.config))?;
-
+        let (train_spec, eval_spec) = BackendSpec::resolve_train(&cfg, registry)?;
         let run_name = format!("{}_{}", cfg.config, cfg.recipe);
+        let shards = if cfg.microbatches > 0 { cfg.microbatches } else { cfg.dp_workers.max(1) };
+        // per-shard seeds are step*1000 + shard + 1: the shard index must
+        // stay below the stride or seeds would repeat across steps,
+        // breaking SR unbiasedness (fresh dither per GEMM, Lemma 3.1)
+        anyhow::ensure!(
+            shards < 1000,
+            "microbatches must be < 1000 (per-shard seed stride); got {shards}"
+        );
         crate::info!(
-            "trainer: {} ({} params, batch {} x seq {}, {} dp workers, recipe {})",
+            "trainer: {} via {} ({} params, batch {} x seq {}, {} dp workers x {} shards)",
             run_name,
-            train_art.param_count,
-            train_art.batch,
-            train_art.model.seq_len,
-            cfg.dp_workers,
-            train_art.recipe.name,
+            train_spec.describe(),
+            train_spec.param_count(),
+            train_spec.batch(),
+            train_spec.seq_len(),
+            cfg.dp_workers.max(1),
+            shards,
         );
 
-        let pool = DpPool::spawn(train_art, cfg.dp_workers)?;
-        let eval_exe = Executor::compile_cpu(eval_art)?;
+        let specs = train_spec.param_specs();
+        let pool = DpPool::spawn(&train_spec, cfg.dp_workers)?;
+        let eval_backend = eval_spec.connect()?;
 
-        let weight_shapes: Vec<Option<(usize, usize)>> = train_art
-            .params
+        let weight_shapes: Vec<Option<(usize, usize)>> = specs
             .iter()
             .map(|p| match p.shape.as_slice() {
                 [rows, cols] => Some((*rows, *cols)),
@@ -97,9 +115,8 @@ impl Trainer {
             .collect();
         let mx_cache = MxWeightCache::new(weight_shapes.len());
 
-        let masters = executor::init_params(train_art, cfg.seed);
-        let param_names: Vec<String> =
-            train_art.params.iter().map(|p| p.name.clone()).collect();
+        let masters = executor::init_params_for(&specs, train_spec.n_layers(), cfg.seed);
+        let param_names: Vec<String> = specs.iter().map(|p| p.name.clone()).collect();
         let rounding = ParamRounding::parse(&cfg.param_rounding)
             .with_context(|| format!("bad param_rounding {:?}", cfg.param_rounding))?;
         let opt = AdamW::new(
@@ -122,14 +139,15 @@ impl Trainer {
 
         let schedule = CosineSchedule::new(cfg.lr, cfg.min_lr, cfg.warmup_frac, cfg.steps);
         let metrics = Metrics::new(&run_name, results_dir)?;
-        let batch = train_art.batch;
-        let seq = train_art.model.seq_len;
+        let batch = train_spec.batch();
+        let seq = train_spec.seq_len();
+        let backend_kind = train_spec.kind();
         let seed = cfg.seed;
         Ok(Trainer {
             cfg,
             metrics,
             pool,
-            eval_exe,
+            eval_backend,
             opt,
             compute,
             mx_cache,
@@ -139,6 +157,8 @@ impl Trainer {
             schedule,
             batch,
             seq,
+            shards,
+            backend_kind,
             step: 0,
             rng: Rng::fold_in(seed, 0xDA7A),
         })
@@ -146,27 +166,26 @@ impl Trainer {
 
     /// Tokens consumed per optimizer step (all DP shards).
     pub fn tokens_per_step(&self) -> usize {
-        self.batch * self.seq * self.pool.workers
+        self.batch * self.seq * self.shards
     }
 
-    /// One optimizer step: W independent microbatches → all-reduce → clip
+    /// One optimizer step: S independent microbatches → all-reduce → clip
     /// → AdamW. Returns the averaged loss.
     pub fn train_step(&mut self) -> Result<f32> {
         let t = Timer::start();
-        let mut it = self.dataset.train_batches(
-            self.batch,
-            self.seq,
-            self.cfg.seed ^ ((self.step as u64) << 16),
-        );
-        let shards: Vec<(u32, Vec<i32>, Vec<i32>)> = (0..self.pool.workers)
-            .map(|w| {
+        // the trainer rng drives data order: one fresh stream per step,
+        // independent of worker count and resumable from `cfg.seed`
+        let data_seed = self.rng.next_u64();
+        let mut it = self.dataset.train_batches(self.batch, self.seq, data_seed);
+        let shards: Vec<(u32, Vec<i32>, Vec<i32>)> = (0..self.shards)
+            .map(|s| {
                 let b = it.next_batch();
-                // per-(step, worker) SR/RHT seed — never reused
-                let seed = (self.step * 1000 + w + 1) as u32;
+                // per-(step, shard) SR/RHT seed — never reused (shard
+                // count is validated < 1000, the stride, at construction)
+                let seed = (self.step * 1000 + s + 1) as u32;
                 (seed, b.tokens, b.labels)
             })
             .collect();
-        let _ = &mut self.rng; // reserved for future data order shuffling
 
         let params = Arc::new(std::mem::take(&mut self.compute));
         let (loss, mut grads) = self.pool.step(shards, &params)?;
@@ -180,8 +199,13 @@ impl Trainer {
         self.opt.step(&grads, lr, &mut self.compute);
         // The optimizer just rewrote the compute weights: every packed
         // MXFP4 view is stale. Consumers re-pack lazily, at most once per
-        // (weight, orientation) until the next step — quantize-once.
-        self.mx_cache.advance((self.step + 1) as u64);
+        // (weight, orientation) until the next step — quantize-once. The
+        // epoch advance fans out to the leader cache, every pool worker's
+        // backend, and the eval backend.
+        let epoch = (self.step + 1) as u64;
+        self.mx_cache.advance(epoch);
+        self.pool.advance(epoch);
+        self.eval_backend.on_weights_updated(epoch);
 
         self.metrics.record_step(StepRecord {
             step: self.step,
@@ -200,7 +224,7 @@ impl Trainer {
         let batches = self.dataset.val_batches(self.batch, self.seq, self.cfg.eval_batches);
         let mut total = 0.0f64;
         for b in &batches {
-            total += self.eval_exe.eval_step(&b.tokens, &b.labels, &self.compute)? as f64;
+            total += self.eval_backend.eval_step(&b.tokens, &b.labels, &self.compute)? as f64;
         }
         let loss = (total / batches.len().max(1) as f64) as f32;
         self.metrics.record_eval(EvalRecord { step: self.step, val_loss: loss });
@@ -255,10 +279,21 @@ impl Trainer {
                 *cv = crate::mx::bf16::qdq(mv);
             }
         }
-        // Out-of-band weight rewrite: drop packed views so packed_weight
-        // never serves a pre-restore pack within the current step.
+        // Out-of-band weight rewrite: drop packed views (leader cache,
+        // pool workers, eval backend) so no consumer serves a
+        // pre-restore pack within the current step.
         self.mx_cache.invalidate();
+        self.pool.invalidate();
+        self.eval_backend.invalidate_cache();
         Ok(())
+    }
+
+    /// Which backend implementation this trainer resolved to
+    /// (`"native"` or `"artifact"`) — lets callers check that companion
+    /// backends (e.g. a logits executor for the eval harness) share the
+    /// same parameter ABI *before* spending a training run.
+    pub fn backend_kind(&self) -> &'static str {
+        self.backend_kind
     }
 
     /// Borrow the current compute parameters (e.g. for the eval harness).
@@ -294,9 +329,16 @@ impl Trainer {
         Some(self.mx_cache.pack_sr(&self.compute[idx], rows, cols, orientation, rng))
     }
 
-    /// (NR packs performed, cache hits, SR draws) since construction —
-    /// the observable quantize-once accounting.
+    /// (NR packs performed, cache hits, SR draws) of the *leader-side*
+    /// cache behind [`Trainer::packed_weight`].
     pub fn mx_cache_stats(&self) -> (usize, usize, usize) {
         (self.mx_cache.packs, self.mx_cache.hits, self.mx_cache.sr_draws)
+    }
+
+    /// Summed (NR packs, cache hits, SR draws) across the DP workers'
+    /// backend caches — the native path's quantize-once accounting (the
+    /// artifact backend reports zeros; its cache lives inside the HLO).
+    pub fn backend_cache_stats(&self) -> (usize, usize, usize) {
+        self.pool.cache_stats()
     }
 }

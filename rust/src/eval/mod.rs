@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::rng::Rng;
-use crate::runtime::Executor;
+use crate::runtime::Backend;
 
 /// One cloze item: a context window and K candidate next tokens
 /// (candidates[answer] is the true continuation).
@@ -55,12 +55,14 @@ pub fn build_cloze_suite(ds: &Dataset, n: usize, seq: usize, k: usize, seed: u64
     items
 }
 
-/// Score the suite with a `logits` artifact: fraction of items where the
-/// true continuation outranks every distractor.
-pub fn cloze_accuracy(exe: &Executor, params: &[Vec<f32>], items: &[ClozeItem]) -> Result<f64> {
-    let a = &exe.artifact;
-    anyhow::ensure!(a.kind == "logits", "need a logits artifact");
-    let (b, t, v) = (a.batch, a.model.seq_len, a.model.vocab);
+/// Score the suite with a logits-capable [`Backend`]: fraction of items
+/// where the true continuation outranks every distractor.
+pub fn cloze_accuracy(
+    backend: &mut dyn Backend,
+    params: &[Vec<f32>],
+    items: &[ClozeItem],
+) -> Result<f64> {
+    let (b, t, v) = (backend.batch(), backend.seq_len(), backend.vocab());
     let mut correct = 0usize;
     for chunk in items.chunks(b) {
         // pack up to `b` contexts; pad by repeating the first
@@ -70,7 +72,7 @@ pub fn cloze_accuracy(exe: &Executor, params: &[Vec<f32>], items: &[ClozeItem]) 
             anyhow::ensure!(item.context.len() == t, "context length mismatch");
             tokens.extend_from_slice(&item.context);
         }
-        let out = exe.logits(&tokens, params)?;
+        let out = backend.logits(&tokens, params)?;
         for (i, item) in chunk.iter().enumerate() {
             // next-token logits at the last position of row i
             let base = i * t * v + (t - 1) * v;
@@ -92,16 +94,15 @@ pub fn cloze_accuracy(exe: &Executor, params: &[Vec<f32>], items: &[ClozeItem]) 
     Ok(correct as f64 / items.len().max(1) as f64)
 }
 
-/// Greedy generation with the logits artifact (demo / smoke tool).
-/// Feeds back one token at a time inside a fixed-length window.
+/// Greedy generation with a logits-capable [`Backend`] (demo / smoke
+/// tool). Feeds back one token at a time inside a fixed-length window.
 pub fn generate_greedy(
-    exe: &Executor,
+    backend: &mut dyn Backend,
     params: &[Vec<f32>],
     prompt: &[i32],
     n_new: usize,
 ) -> Result<Vec<i32>> {
-    let a = &exe.artifact;
-    let (b, t, v) = (a.batch, a.model.seq_len, a.model.vocab);
+    let (b, t, v) = (backend.batch(), backend.seq_len(), backend.vocab());
     let mut window: Vec<i32> = prompt.to_vec();
     anyhow::ensure!(window.len() <= t, "prompt longer than context");
     let mut out = Vec::with_capacity(n_new);
@@ -109,7 +110,7 @@ pub fn generate_greedy(
         let pos = window.len() - 1;
         let mut tokens = vec![0i32; b * t];
         tokens[..window.len()].copy_from_slice(&window);
-        let logits = exe.logits(&tokens, params)?;
+        let logits = backend.logits(&tokens, params)?;
         let row = &logits.data[pos * v..(pos + 1) * v];
         let next = row
             .iter()
@@ -145,6 +146,24 @@ mod tests {
             c.dedup();
             assert_eq!(c.len(), 4);
         }
+    }
+
+    #[test]
+    fn cloze_and_generate_run_on_the_native_backend() {
+        // pre-Backend, this harness was only exercisable with artifacts
+        let spec = crate::runtime::BackendSpec::native("micro", "bf16", None).unwrap();
+        let mut b = spec.connect().unwrap();
+        let params =
+            crate::runtime::executor::init_params_for(b.param_specs(), b.n_layers(), 0);
+        let ds = Dataset::synthetic(20_000, b.vocab(), 1);
+        let items = build_cloze_suite(&ds, 9, b.seq_len(), 4, 2);
+        let acc = cloze_accuracy(&mut *b, &params, &items).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        let prompt: Vec<i32> = ds.val[..8].to_vec();
+        let out = generate_greedy(&mut *b, &params, &prompt, 5).unwrap();
+        assert_eq!(out.len(), 5);
+        let v = b.vocab() as i32;
+        assert!(out.iter().all(|&t| (0..v).contains(&t)));
     }
 
     #[test]

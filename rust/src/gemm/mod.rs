@@ -81,14 +81,12 @@ impl Mat {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Cache-blocked transpose — on the hot path of every dgrad/wgrad
+    /// GEMM (both `matmul` and the MX paths feed B through its
+    /// transpose), so it walks 32×32 tiles instead of striding a full
+    /// column per element.
     pub fn transpose(&self) -> Mat {
-        let mut t = Mat::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t.data[c * self.rows + r] = self.data[r * self.cols + c];
-            }
-        }
-        t
+        Mat { rows: self.cols, cols: self.rows, data: transpose_flat(&self.data, self.rows, self.cols) }
     }
 
     pub fn frob_norm(&self) -> f64 {
@@ -108,35 +106,67 @@ impl Mat {
     }
 }
 
+/// Cache-blocked transpose of a row-major `rows × cols` flat buffer:
+/// 32×32 tiles keep both the reads and the writes inside a few cache
+/// lines. Shared by [`Mat::transpose`], the native backend's dgrad/wgrad
+/// prep, and `coordinator::mxcache`'s transposed weight packs.
+pub fn transpose_flat(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols, "data len != rows*cols");
+    const TILE: usize = 32;
+    let mut t = vec![0.0f32; rows * cols];
+    for rb in (0..rows).step_by(TILE) {
+        let r_hi = (rb + TILE).min(rows);
+        for cb in (0..cols).step_by(TILE) {
+            let c_hi = (cb + TILE).min(cols);
+            for r in rb..r_hi {
+                for c in cb..c_hi {
+                    t[c * rows + r] = data[r * cols + c];
+                }
+            }
+        }
+    }
+    t
+}
+
+/// C = A @ B over raw row-major slices: `a` is `(m, k)`, `bt` is `(n, k)`
+/// (B *transposed*, so both inner loops stream contiguously). This is
+/// the allocation-free entry the native backend feeds weight slices
+/// into; [`matmul_bt`] wraps it for `Mat` operands.
+///
+/// Parallelism: `scope_chunks` over whole output rows of C — the one
+/// parallelism idiom used repo-wide (same shape as [`mx_gemm_packed`]).
+/// Each output element is one sequential dot product, so results are
+/// identical for any worker count.
+pub fn matmul_bt_raw(a: &[f32], bt: &[f32], m: usize, n: usize, k: usize, workers: usize) -> Mat {
+    assert_eq!(a.len(), m * k, "A len != m*k");
+    assert_eq!(bt.len(), n * k, "Bt len != n*k");
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let base = c.data.as_ptr() as usize;
+    threadpool::scope_chunks(&mut c.data, workers, n, |_, chunk| {
+        let row0 = (chunk.as_ptr() as usize - base) / std::mem::size_of::<f32>() / n;
+        for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + ri) * k..(row0 + ri + 1) * k];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &bt[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                *cv = acc;
+            }
+        }
+    });
+    c
+}
+
 /// C = A @ B, threaded f32 GEMM. B is taken *transposed*
 /// (bt: (n, k) for B: (k, n)) so both inner loops stream contiguously.
 pub fn matmul_bt(a: &Mat, bt: &Mat, workers: usize) -> Mat {
     assert_eq!(a.cols, bt.cols, "reduction dims differ");
-    let (m, n, k) = (a.rows, bt.rows, a.cols);
-    let mut c = Mat::zeros(m, n);
-    let workers = workers.max(1).min(m.max(1));
-    let rows_per = m.div_ceil(workers);
-    std::thread::scope(|s| {
-        for (wi, out_rows) in c.data.chunks_mut(rows_per * n).enumerate() {
-            let a = &a;
-            let bt = &bt;
-            s.spawn(move || {
-                let row0 = wi * rows_per;
-                for (ri, crow) in out_rows.chunks_mut(n).enumerate() {
-                    let arow = a.row(row0 + ri);
-                    for (j, cv) in crow.iter_mut().enumerate() {
-                        let brow = bt.row(j);
-                        let mut acc = 0.0f32;
-                        for kk in 0..k {
-                            acc += arow[kk] * brow[kk];
-                        }
-                        *cv = acc;
-                    }
-                }
-            });
-        }
-    });
-    c
+    matmul_bt_raw(&a.data, &bt.data, a.rows, bt.rows, a.cols, workers)
 }
 
 /// Plain C = A @ B (transposes B internally).
@@ -320,6 +350,30 @@ mod tests {
         let mut rng = Rng::seed(2);
         let a = Mat::gaussian(13, 7, 1.0, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn blocked_transpose_matches_naive_across_tile_boundaries() {
+        let mut rng = Rng::seed(21);
+        for (r, c) in [(1usize, 1usize), (32, 32), (33, 31), (70, 37), (5, 128)] {
+            let a = Mat::gaussian(r, c, 1.0, &mut rng);
+            let t = transpose_flat(&a.data, r, c);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t[j * r + i], a.data[i * c + j], "({r},{c}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bt_raw_matches_mat_wrapper() {
+        let mut rng = Rng::seed(22);
+        let a = Mat::gaussian(9, 41, 1.0, &mut rng);
+        let bt = Mat::gaussian(6, 41, 1.0, &mut rng);
+        let c1 = matmul_bt(&a, &bt, 3);
+        let c2 = matmul_bt_raw(&a.data, &bt.data, 9, 6, 41, 1);
+        assert_eq!(c1.data, c2.data);
     }
 
     #[test]

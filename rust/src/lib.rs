@@ -26,10 +26,11 @@
 //! | `mx::mat` | §1, Table 5 | **packed tensor engine**: flat SoA `MxMat` + FP4×FP4 product LUT |
 //! | `gemm` | Algorithm 3 | qdq reference GEMM (`mx_matmul`) + packed LUT GEMM (`mx_gemm_packed`) |
 //! | `hadamard` | §3.2, Eq. 5 | blockwise RHT, dense and O(n log n) FWHT forms |
+//! | `model` | §4, Alg. 3 | **native GPT with manual backprop**: every linear GEMM (fwd/dgrad/wgrad) routed through the MX engine per recipe |
 //! | `coordinator` | §4 | trainer loop, DP pool, metrics, checkpoints, quantize-once `mxcache` |
 //! | `optim` | §4.1 | AdamW with FP32 masters + BF16 compute copies, cosine schedule |
 //! | `perfmodel` | Table 5, §4.2 | roofline model of the backward-pass speedups |
-//! | `runtime` | §4 | artifact registry + PJRT executor for the AOT HLO |
+//! | `runtime` | §4 | the pluggable `Backend` trait: native GPT or PJRT executor over AOT artifacts |
 //! | `data`, `eval` | §4.1, Table 3 | byte-level corpus, cloze eval, greedy generation |
 //! | `rng`, `testing`, `util` | — | xoshiro256++ streams, property harness, threadpool/json/cli |
 //!
@@ -46,9 +47,21 @@
 //! accumulation contract (see `tests/packed_gemm.rs`), and the
 //! quantize-once weight reuse lives in [`coordinator::mxcache`].
 //!
+//! ## The two execution backends
+//!
+//! Training runs through the [`runtime::Backend`] trait. The **native**
+//! backend ([`model::NativeBackend`]) is a self-contained rust GPT with
+//! hand-written backprop: `mxfp4-train train --backend native --recipe
+//! mxfp4_rht_sr` exercises the paper's full recipe (NR forward, RHT+SR
+//! backward GEMMs with the 16/9 rescale) end-to-end with zero artifact
+//! or PJRT dependency. The **artifact** backend executes AOT-lowered
+//! HLO from the python layer through PJRT. `--backend auto` (default)
+//! prefers artifacts when present and falls back to native.
+//!
 //! See `README.md` for the quickstart and `docs/RECIPE.md` for the
-//! end-to-end training recipe (SR, the 0.75/16-9 scale pair, and why the
-//! RHT bounds SR variance).
+//! end-to-end training recipe (SR, the 0.75/16-9 scale pair, why the
+//! RHT bounds SR variance, and which of the three GEMMs per linear
+//! layer each recipe quantizes).
 
 pub mod config;
 pub mod coordinator;
@@ -56,6 +69,7 @@ pub mod data;
 pub mod eval;
 pub mod gemm;
 pub mod hadamard;
+pub mod model;
 pub mod mx;
 pub mod optim;
 pub mod perfmodel;

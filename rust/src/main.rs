@@ -10,6 +10,9 @@
 //!   formats     print Table 1 (FP datatype zoo)
 //!   artifacts   list discovered AOT artifacts
 //!
+//! Every training/eval subcommand takes `--backend native|artifact|auto`
+//! (default auto: artifacts when discovered, else the native rust GPT —
+//! so a fresh checkout trains with zero artifact/PJRT dependency).
 //! Run `mxfp4-train <cmd> --help-keys` for per-command options.
 
 use std::path::PathBuf;
@@ -19,7 +22,7 @@ use anyhow::{Context, Result};
 use mxfp4_train::config::TrainConfig;
 use mxfp4_train::coordinator::Trainer;
 use mxfp4_train::data::Dataset;
-use mxfp4_train::runtime::{executor, Executor, Registry};
+use mxfp4_train::runtime::{executor, Backend, BackendSpec, Registry};
 use mxfp4_train::util::cli::Args;
 use mxfp4_train::{eval, gemm, hadamard, info, mx, perfmodel, rng::Rng};
 
@@ -44,12 +47,23 @@ fn main() -> Result<()> {
     }
 }
 
-fn registry(args: &Args) -> Result<Registry> {
-    let dir = args
-        .get("artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(mxfp4_train::runtime::default_artifacts_dir);
-    Registry::open(&dir).map_err(anyhow::Error::msg)
+/// Open the artifacts registry if one exists; `Ok(None)` sends the auto
+/// backend down the native path. An *explicitly passed* `--artifacts`
+/// path that fails to open is a hard error — the user named it, so
+/// silently training on a different execution engine would be wrong.
+fn registry(args: &Args) -> Result<Option<Registry>> {
+    match args.get("artifacts") {
+        Some(dir) => Registry::open(&PathBuf::from(dir))
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("--artifacts {dir}: {e}")),
+        None => match Registry::open(&mxfp4_train::runtime::default_artifacts_dir()) {
+            Ok(reg) => Ok(Some(reg)),
+            Err(e) => {
+                info!("no artifacts registry ({e}); native backend only");
+                Ok(None)
+            }
+        },
+    }
 }
 
 fn dataset(args: &Args, seed: u64) -> Result<Dataset> {
@@ -75,7 +89,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let reg = registry(args)?;
     let ds = dataset(args, cfg.seed)?;
     let rd = results_dir(args);
-    let mut trainer = Trainer::new(&reg, cfg, ds, Some(&rd))?;
+    let mut trainer = Trainer::new(reg.as_ref(), cfg, ds, Some(&rd))?;
     let summary = trainer.run()?;
     if args.has("save") || args.get("checkpoint-dir").is_some() {
         let dir = PathBuf::from(args.get_or("checkpoint-dir", "results"))
@@ -115,12 +129,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let mut cfg = TrainConfig::preset(args.get_or("config", "tiny"));
         cfg.apply_cli(args);
         cfg.recipe = recipe.to_string();
-        if reg.find(&cfg.config, recipe, "train").is_none() {
-            info!("skipping {recipe}: no artifact for config {}", cfg.config);
+        if let Err(e) = BackendSpec::resolve_train(&cfg, reg.as_ref()) {
+            info!("skipping {recipe}: {e}");
             continue;
         }
         let ds = dataset(args, cfg.seed)?;
-        let mut trainer = Trainer::new(&reg, cfg, ds, Some(&rd))?;
+        let mut trainer = Trainer::new(reg.as_ref(), cfg, ds, Some(&rd))?;
         let s = trainer.run()?;
         rows.push(s);
     }
@@ -143,13 +157,23 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let reg = registry(args)?;
     let config = args.get_or("config", "tiny");
     let fwd = args.get_or("fwd", "bf16");
+    let choice = args.get_or("backend", "auto");
     let ckpt = args.get("checkpoint").context("--checkpoint <master.mxck> required")?;
     let ds = dataset(args, 1)?;
 
-    let ev = reg.find_fwd(config, fwd, "eval").context("no eval artifact")?;
-    let lg = reg.find_fwd(config, fwd, "logits").context("no logits artifact")?;
-    let exe_e = Executor::compile_cpu(ev)?;
-    let exe_l = Executor::compile_cpu(lg)?;
+    let ev = BackendSpec::resolve_fwd(config, fwd, "eval", choice, reg.as_ref())?;
+    let lg = BackendSpec::resolve_fwd(config, fwd, "logits", choice, reg.as_ref())?;
+    // both consume the same checkpoint: a partial artifact set must not
+    // split the auto resolution across two parameter ABIs
+    anyhow::ensure!(
+        ev.kind() == lg.kind(),
+        "eval backend is {} but logits backend is {}; pass --backend native|artifact",
+        ev.kind(),
+        lg.kind()
+    );
+    info!("eval via {}", ev.describe());
+    let mut exe_e = ev.connect()?;
+    let mut exe_l = lg.connect()?;
 
     let (_names, mut params) = mxfp4_train::coordinator::checkpoint::load(std::path::Path::new(ckpt))?;
     for t in &mut params {
@@ -158,14 +182,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
         }
     }
 
-    let batches = ds.val_batches(ev.batch, ev.model.seq_len, args.get_usize("eval-batches", 8));
+    let batches = ds.val_batches(ev.batch(), ev.seq_len(), args.get_usize("eval-batches", 8));
     let mut total = 0.0;
     for b in &batches {
         total += exe_e.eval_step(&b.tokens, &b.labels, &params)? as f64;
     }
     let loss = total / batches.len() as f64;
-    let items = eval::build_cloze_suite(&ds, args.get_usize("cloze-items", 128), lg.model.seq_len, 4, 99);
-    let acc = eval::cloze_accuracy(&exe_l, &params, &items)?;
+    let items = eval::build_cloze_suite(&ds, args.get_usize("cloze-items", 128), lg.seq_len(), 4, 99);
+    let acc = eval::cloze_accuracy(&mut *exe_l, &params, &items)?;
     println!("val loss {loss:.4} (ppl {:.2}); cloze@4 accuracy {:.3} (chance 0.25)", loss.exp(), acc);
     Ok(())
 }
@@ -173,13 +197,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_generate(args: &Args) -> Result<()> {
     let reg = registry(args)?;
     let config = args.get_or("config", "tiny");
+    let choice = args.get_or("backend", "auto");
     let ckpt = args.get("checkpoint").context("--checkpoint <master.mxck> required")?;
-    let lg = reg.find_fwd(config, "bf16", "logits").context("no logits artifact")?;
-    let exe = Executor::compile_cpu(lg)?;
+    let lg = BackendSpec::resolve_fwd(config, "bf16", "logits", choice, reg.as_ref())?;
+    let mut exe = lg.connect()?;
     let (_names, params) = mxfp4_train::coordinator::checkpoint::load(std::path::Path::new(ckpt))?;
     let ds = dataset(args, 1)?;
     let prompt: Vec<i32> = ds.val[..16].to_vec();
-    let out = eval::generate_greedy(&exe, &params, &prompt, args.get_usize("tokens", 32))?;
+    let out = eval::generate_greedy(&mut *exe, &params, &prompt, args.get_usize("tokens", 32))?;
     println!("prompt tokens: {prompt:?}");
     println!("generated:     {out:?}");
     Ok(())
@@ -253,7 +278,10 @@ fn cmd_formats() -> Result<()> {
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {
-    let reg = registry(args)?;
+    let Some(reg) = registry(args)? else {
+        println!("no artifacts discovered (run `make artifacts`); `--backend native` needs none");
+        return Ok(());
+    };
     println!("{:<40} {:>8} {:>8} {:>12} {:>8}", "artifact", "kind", "batch", "params", "recipe");
     for a in &reg.artifacts {
         println!(

@@ -1,0 +1,799 @@
+//! The native GPT engine: hand-written forward + backward in which every
+//! linear-layer GEMM (forward, dgrad, wgrad) routes through the packed
+//! MXFP4 engine per the active [`NativeRecipe`].
+//!
+//! Architecture (mirrors `python/compile/model.py`): tied token
+//! embedding / LM head, learned positional embeddings, pre-LN blocks of
+//! causal MHA + GELU MLP, mean autoregressive cross-entropy. Attention
+//! internals (scores, softmax, probs @ V), LayerNorm, GELU and residuals
+//! stay in f32 — the paper quantizes only the *decoder linear layers*;
+//! everything the recipe touches goes through `gemm`'s MX paths.
+//!
+//! ## The three GEMMs per linear layer
+//!
+//! For `y = x @ Wᵀ` with `W` stored `(out, in)` row-major:
+//!
+//! * **forward** `X @ Wᵀ` — reduction over `in` = W's stored columns, so
+//!   the weight pack is [`Orientation::AsStored`], served by the
+//!   quantize-once [`MxWeightCache`];
+//! * **dgrad** `G @ W` — reduction over `out` = W's stored rows, i.e.
+//!   the [`Orientation::Transposed`] pack (cached for NR, fresh for SR);
+//! * **wgrad** `Gᵀ @ X` — both operands are per-step activations,
+//!   quantized fresh each GEMM.
+//!
+//! ## Determinism contract
+//!
+//! One [`Rng`] stream derives from the `train_step` seed and is consumed
+//! in a fixed order (head backward first, then layers in reverse; per
+//! linear: dgrad sign/dither, then wgrad). Every GEMM substrate is
+//! bitwise-deterministic for any worker count, so the same `(seed,
+//! tokens, labels, params)` produce byte-identical grads no matter how
+//! the data-parallel pool schedules shards — the rng-stream parity the
+//! integration tests pin down.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::mxcache::{MxWeightCache, Orientation};
+use crate::gemm::{self, Mat, MxMode};
+use crate::mx::mat::MxMat;
+use crate::mx::quant;
+use crate::rng::Rng;
+use crate::runtime::backend::Backend;
+use crate::runtime::executor::{Tensor, TrainOutput};
+use crate::runtime::TensorSpec;
+use crate::util::threadpool;
+
+use super::{layer_base, lnf_base, GPTConfig, NativeRecipe, POS_EMB, TOK_EMB};
+
+const LN_EPS: f32 = 1e-5;
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+const GELU_C: f32 = 0.044_715;
+
+/// The native-backprop GPT backend: owns the architecture, the recipe,
+/// and the quantize-once weight cache. Parameters are *external* (the
+/// trainer's compute copies), passed into every call in
+/// [`GPTConfig::param_specs`] order.
+///
+/// Cache discipline: packed NR weight views are reused until
+/// [`Backend::on_weights_updated`] (or `invalidate_cache`) is called —
+/// the caller must signal every weight rewrite, exactly as `Trainer`
+/// does after each optimizer step.
+pub struct NativeBackend {
+    cfg: GPTConfig,
+    recipe: NativeRecipe,
+    batch: usize,
+    specs: Vec<TensorSpec>,
+    cache: MxWeightCache,
+    workers: usize,
+}
+
+impl NativeBackend {
+    /// Build a backend for `batch` sequences of `cfg.seq_len` tokens.
+    pub fn new(cfg: GPTConfig, recipe: NativeRecipe, batch: usize) -> NativeBackend {
+        assert!(batch > 0, "batch must be positive");
+        if recipe.bwd.uses_rht() {
+            // wgrad reduces over batch*seq; blockwise RHT needs 32 | k
+            assert!(
+                (batch * cfg.seq_len) % 32 == 0,
+                "RHT recipes need 32 | batch*seq (got {} * {})",
+                batch,
+                cfg.seq_len
+            );
+        }
+        let specs = cfg.param_specs();
+        NativeBackend {
+            cache: MxWeightCache::new(specs.len()),
+            specs,
+            batch,
+            cfg,
+            recipe,
+            workers: threadpool::default_workers(),
+        }
+    }
+
+    pub fn config(&self) -> &GPTConfig {
+        &self.cfg
+    }
+
+    pub fn recipe(&self) -> &NativeRecipe {
+        &self.recipe
+    }
+
+    fn weight_dims(&self, idx: usize) -> (usize, usize) {
+        match self.specs[idx].shape.as_slice() {
+            [m, n] => (*m, *n),
+            s => panic!("param {} is not 2-D: {s:?}", self.specs[idx].name),
+        }
+    }
+
+    fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        ensure!(
+            params.len() == self.specs.len(),
+            "param count mismatch: got {}, native model wants {}",
+            params.len(),
+            self.specs.len()
+        );
+        for (p, spec) in params.iter().zip(&self.specs) {
+            ensure!(
+                p.len() == spec.numel(),
+                "param {} numel mismatch: got {}, want {}",
+                spec.name,
+                p.len(),
+                spec.numel()
+            );
+        }
+        Ok(())
+    }
+
+    // -- the three recipe-routed GEMMs -----------------------------------
+
+    /// Forward `y = x2 @ Wᵀ`: NR-quantized through the packed engine (the
+    /// weight pack cached per step via `Orientation::AsStored`), or the
+    /// plain f32 GEMM for the `bf16` baseline.
+    fn linear_fwd(&mut self, x2: &Mat, widx: usize, w: &[f32]) -> Mat {
+        let (m, n) = self.weight_dims(widx);
+        debug_assert_eq!(x2.cols, n, "fwd reduction dim");
+        if self.recipe.quantize_fwd {
+            let pa = MxMat::quantize_nr(&x2.data, x2.rows, x2.cols);
+            let pw = self.cache.pack_nr(widx, w, m, n, Orientation::AsStored);
+            gemm::mx_gemm_packed(&pa, pw, self.workers)
+        } else {
+            gemm::matmul_bt_raw(&x2.data, w, x2.rows, m, n, self.workers)
+        }
+    }
+
+    /// dgrad `dx = g2 @ W` (reduction over W's stored rows). NR weight
+    /// packs come from the cache (`Orientation::Transposed`); SR packs
+    /// are drawn fresh per GEMM as Lemma 3.1 requires; RHT modes go
+    /// through the full `mx_matmul_packed` pipeline (the sign vector
+    /// must touch both operands, so a cached pack cannot serve them).
+    fn linear_dgrad(&mut self, g2: &Mat, widx: usize, w: &[f32], rng: &mut Rng) -> Mat {
+        let (m, n) = self.weight_dims(widx);
+        debug_assert_eq!(g2.cols, m, "dgrad reduction dim");
+        match self.recipe.bwd {
+            MxMode::Exact => {
+                let wt = gemm::transpose_flat(w, m, n);
+                gemm::matmul_bt_raw(&g2.data, &wt, g2.rows, n, m, self.workers)
+            }
+            MxMode::Nr => {
+                let pa = MxMat::quantize_nr(&g2.data, g2.rows, g2.cols);
+                let pw = self.cache.pack_nr(widx, w, m, n, Orientation::Transposed);
+                gemm::mx_gemm_packed(&pa, pw, self.workers)
+            }
+            MxMode::Sr => {
+                let pa = MxMat::quantize_sr(&g2.data, g2.rows, g2.cols, rng);
+                let pw = self.cache.pack_sr(w, m, n, Orientation::Transposed, rng);
+                let mut c = gemm::mx_gemm_packed(&pa, &pw, self.workers);
+                for v in &mut c.data {
+                    *v *= quant::GEMM_RESCALE;
+                }
+                c
+            }
+            mode => {
+                let wm = Mat { rows: m, cols: n, data: w.to_vec() };
+                gemm::mx_matmul_packed(g2, &wm, mode, g_eff(self.recipe.g, m), rng, self.workers)
+            }
+        }
+    }
+
+    /// wgrad `dW = g2ᵀ @ x2` (reduction over the batch·seq dim). Both
+    /// operands are activations/gradients of this step — never cached.
+    fn linear_wgrad(&mut self, g2: &Mat, x2: &Mat, rng: &mut Rng) -> Mat {
+        debug_assert_eq!(g2.rows, x2.rows, "wgrad reduction dim");
+        let gt = g2.transpose();
+        match self.recipe.bwd {
+            MxMode::Exact => {
+                let xt = gemm::transpose_flat(&x2.data, x2.rows, x2.cols);
+                gemm::matmul_bt_raw(&gt.data, &xt, gt.rows, x2.cols, x2.rows, self.workers)
+            }
+            mode => {
+                // only RHT modes constrain the block size; NR/SR tolerate
+                // any reduction dim (row-aware tail blocks)
+                let g = if mode.uses_rht() { g_eff(self.recipe.g, g2.rows) } else { self.recipe.g };
+                gemm::mx_matmul_packed(&gt, x2, mode, g, rng, self.workers)
+            }
+        }
+    }
+
+    // -- forward ---------------------------------------------------------
+
+    fn forward(&mut self, tokens: &[i32], params: &[Vec<f32>], keep: bool) -> Result<Fwd> {
+        let (d, t, heads) = (self.cfg.d_model, self.cfg.seq_len, self.cfg.n_heads);
+        let n = tokens.len();
+        ensure!(n == self.batch * t, "tokens len {} != batch {} * seq {}", n, self.batch, t);
+        let vocab = self.cfg.vocab as i32;
+
+        // embeddings: x = tok_emb[token] + pos_emb[position]
+        let mut x = Mat::zeros(n, d);
+        for (i, &tk) in tokens.iter().enumerate() {
+            ensure!((0..vocab).contains(&tk), "token {tk} out of vocab range 0..{vocab}");
+            let te = &params[TOK_EMB][tk as usize * d..(tk as usize + 1) * d];
+            let pe = &params[POS_EMB][(i % t) * d..(i % t + 1) * d];
+            let xrow = &mut x.data[i * d..(i + 1) * d];
+            for c in 0..d {
+                xrow[c] = te[c] + pe[c];
+            }
+        }
+
+        let mut layers = Vec::with_capacity(if keep { self.cfg.n_layers } else { 0 });
+        for l in 0..self.cfg.n_layers {
+            let base = layer_base(l);
+            let (h1, ln1) = ln_fwd(&x, &params[base], &params[base + 1]);
+            let qkv = self.linear_fwd(&h1, base + 2, &params[base + 2]);
+            let (attn, probs) = attn_fwd(&qkv, self.batch, t, heads);
+            let proj = self.linear_fwd(&attn, base + 3, &params[base + 3]);
+            let x_mid = add(&x, &proj);
+            let (h2, ln2) = ln_fwd(&x_mid, &params[base + 4], &params[base + 5]);
+            let f1 = self.linear_fwd(&h2, base + 6, &params[base + 6]);
+            let mut a1 = f1.clone();
+            for v in &mut a1.data {
+                *v = gelu(*v);
+            }
+            let f2 = self.linear_fwd(&a1, base + 7, &params[base + 7]);
+            x = add(&x_mid, &f2);
+            if keep {
+                layers.push(LayerStash { ln1, h1, qkv, probs, attn, ln2, h2, f1, a1 });
+            }
+        }
+        let lb = lnf_base(self.cfg.n_layers);
+        let (xf, lnf) = ln_fwd(&x, &params[lb], &params[lb + 1]);
+        let logits = self.linear_fwd(&xf, TOK_EMB, &params[TOK_EMB]);
+        Ok(Fwd { layers, lnf, xf, logits })
+    }
+}
+
+/// Per-layer forward activations the backward pass consumes.
+struct LayerStash {
+    ln1: LnStash,
+    h1: Mat,
+    qkv: Mat,
+    probs: Vec<f32>,
+    attn: Mat,
+    ln2: LnStash,
+    h2: Mat,
+    f1: Mat,
+    a1: Mat,
+}
+
+struct Fwd {
+    layers: Vec<LayerStash>,
+    lnf: LnStash,
+    xf: Mat,
+    logits: Mat,
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "native gpt {}L d{} ({}: {})",
+            self.cfg.n_layers,
+            self.cfg.d_model,
+            self.recipe.name,
+            self.recipe.describe()
+        )
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn n_layers(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    fn param_specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    fn train_step(
+        &mut self,
+        seed: u32,
+        tokens: &[i32],
+        labels: &[i32],
+        params: &[Vec<f32>],
+    ) -> Result<TrainOutput> {
+        self.check_params(params)?;
+        ensure!(labels.len() == tokens.len(), "labels len != tokens len");
+        let mut rng = Rng::fold_in(seed as u64, 0x4E47_5241_4453); // "NGRADS"
+        let (d, t, heads, nl) = (
+            self.cfg.d_model,
+            self.cfg.seq_len,
+            self.cfg.n_heads,
+            self.cfg.n_layers,
+        );
+
+        let fwd = self.forward(tokens, params, true)?;
+        let (loss, dlogits) = ce_loss_and_grad(&fwd.logits, labels)?;
+
+        let mut grads: Vec<Vec<f32>> =
+            self.specs.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+
+        // tied head: dxf = G @ tok_emb, d(tok_emb) += Gᵀ @ xf
+        let dxf = self.linear_dgrad(&dlogits, TOK_EMB, &params[TOK_EMB], &mut rng);
+        let dhead = self.linear_wgrad(&dlogits, &fwd.xf, &mut rng);
+        add_assign(&mut grads[TOK_EMB], &dhead.data);
+
+        let lb = lnf_base(nl);
+        let (mut dx, dgf, dbf) = ln_bwd(&dxf, &fwd.lnf, &params[lb]);
+        grads[lb] = dgf;
+        grads[lb + 1] = dbf;
+
+        for l in (0..nl).rev() {
+            let base = layer_base(l);
+            let st = &fwd.layers[l];
+            // x_out = x_mid + f2(a1(f1(h2(x_mid))))
+            let da1 = self.linear_dgrad(&dx, base + 7, &params[base + 7], &mut rng);
+            let dwfc2 = self.linear_wgrad(&dx, &st.a1, &mut rng);
+            grads[base + 7] = dwfc2.data;
+            let mut df1 = da1;
+            for (v, &f) in df1.data.iter_mut().zip(&st.f1.data) {
+                *v *= gelu_grad(f);
+            }
+            let dh2 = self.linear_dgrad(&df1, base + 6, &params[base + 6], &mut rng);
+            let dwfc1 = self.linear_wgrad(&df1, &st.h2, &mut rng);
+            grads[base + 6] = dwfc1.data;
+            let (dxm, dg2, db2) = ln_bwd(&dh2, &st.ln2, &params[base + 4]);
+            grads[base + 4] = dg2;
+            grads[base + 5] = db2;
+            let mut dx_mid = dx;
+            add_assign_mat(&mut dx_mid, &dxm);
+
+            // x_mid = x_in + proj(attn(qkv(h1(x_in))))
+            let dattn = self.linear_dgrad(&dx_mid, base + 3, &params[base + 3], &mut rng);
+            let dwproj = self.linear_wgrad(&dx_mid, &st.attn, &mut rng);
+            grads[base + 3] = dwproj.data;
+            let dqkv = attn_bwd(&dattn, &st.qkv, &st.probs, self.batch, t, heads);
+            let dh1 = self.linear_dgrad(&dqkv, base + 2, &params[base + 2], &mut rng);
+            let dwqkv = self.linear_wgrad(&dqkv, &st.h1, &mut rng);
+            grads[base + 2] = dwqkv.data;
+            let (dxi, dg1, db1) = ln_bwd(&dh1, &st.ln1, &params[base]);
+            grads[base] = dg1;
+            grads[base + 1] = db1;
+            add_assign_mat(&mut dx_mid, &dxi);
+            dx = dx_mid;
+        }
+
+        // embedding scatter (tok_emb accumulates on top of the head wgrad)
+        for (i, &tk) in tokens.iter().enumerate() {
+            let dxr = dx.row(i);
+            let te = &mut grads[TOK_EMB][tk as usize * d..(tk as usize + 1) * d];
+            for c in 0..d {
+                te[c] += dxr[c];
+            }
+            let pe = &mut grads[POS_EMB][(i % t) * d..(i % t + 1) * d];
+            for c in 0..d {
+                pe[c] += dxr[c];
+            }
+        }
+
+        Ok(TrainOutput { loss, grads })
+    }
+
+    fn eval_step(&mut self, tokens: &[i32], labels: &[i32], params: &[Vec<f32>]) -> Result<f32> {
+        self.check_params(params)?;
+        ensure!(labels.len() == tokens.len(), "labels len != tokens len");
+        let fwd = self.forward(tokens, params, false)?;
+        Ok(ce_loss(&fwd.logits, labels)?)
+    }
+
+    fn logits(&mut self, tokens: &[i32], params: &[Vec<f32>]) -> Result<Tensor> {
+        self.check_params(params)?;
+        let fwd = self.forward(tokens, params, false)?;
+        Ok(Tensor {
+            name: "logits".to_string(),
+            shape: vec![self.batch, self.cfg.seq_len, self.cfg.vocab],
+            data: fwd.logits.data,
+        })
+    }
+
+    fn set_compute_workers(&mut self, n: usize) {
+        self.workers = n.max(1);
+    }
+
+    fn on_weights_updated(&mut self, epoch: u64) {
+        self.cache.advance(epoch);
+    }
+
+    fn invalidate_cache(&mut self) {
+        self.cache.invalidate();
+    }
+
+    fn mx_cache_stats(&self) -> (usize, usize, usize) {
+        (self.cache.packs, self.cache.hits, self.cache.sr_draws)
+    }
+}
+
+/// Largest RHT block size `<= g` that divides the reduction dim `k`
+/// (power-of-two halving, floor 32). Small wgrad shards (k = batch·seq)
+/// legitimately need a tighter block than the recipe's default.
+fn g_eff(g: usize, k: usize) -> usize {
+    let mut ge = g;
+    while ge > 32 && k % ge != 0 {
+        ge /= 2;
+    }
+    assert!(k % ge == 0, "RHT reduction dim {k} is not a multiple of 32");
+    ge
+}
+
+// -- elementwise helpers -------------------------------------------------
+
+fn add(a: &Mat, b: &Mat) -> Mat {
+    debug_assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut c = a.clone();
+    for (v, &w) in c.data.iter_mut().zip(&b.data) {
+        *v += w;
+    }
+    c
+}
+
+fn add_assign_mat(a: &mut Mat, b: &Mat) {
+    debug_assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    add_assign(&mut a.data, &b.data);
+}
+
+fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (v, &w) in a.iter_mut().zip(b) {
+        *v += w;
+    }
+}
+
+// -- layer norm ----------------------------------------------------------
+
+struct LnStash {
+    rstd: Vec<f32>,
+    xhat: Mat,
+}
+
+fn ln_fwd(x: &Mat, g: &[f32], b: &[f32]) -> (Mat, LnStash) {
+    let (rows, d) = (x.rows, x.cols);
+    let mut y = Mat::zeros(rows, d);
+    let mut xhat = Mat::zeros(rows, d);
+    let mut rstd = vec![0.0f32; rows];
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let xr = x.row(r);
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu *= inv_d;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var *= inv_d;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        let xh = &mut xhat.data[r * d..(r + 1) * d];
+        let yr = &mut y.data[r * d..(r + 1) * d];
+        for c in 0..d {
+            xh[c] = (xr[c] - mu) * rs;
+            yr[c] = xh[c] * g[c] + b[c];
+        }
+    }
+    (y, LnStash { rstd, xhat })
+}
+
+fn ln_bwd(dy: &Mat, st: &LnStash, g: &[f32]) -> (Mat, Vec<f32>, Vec<f32>) {
+    let (rows, d) = (dy.rows, dy.cols);
+    let mut dx = Mat::zeros(rows, d);
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let dyr = dy.row(r);
+        let xhr = st.xhat.row(r);
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for c in 0..d {
+            dg[c] += dyr[c] * xhr[c];
+            db[c] += dyr[c];
+            let dxh = dyr[c] * g[c];
+            m1 += dxh;
+            m2 += dxh * xhr[c];
+        }
+        m1 *= inv_d;
+        m2 *= inv_d;
+        let dxr = &mut dx.data[r * d..(r + 1) * d];
+        for c in 0..d {
+            let dxh = dyr[c] * g[c];
+            dxr[c] = st.rstd[r] * (dxh - m1 - xhr[c] * m2);
+        }
+    }
+    (dx, dg, db)
+}
+
+// -- gelu (tanh approximation, matching jax.nn.gelu's default) -----------
+
+fn gelu(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + GELU_C * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    let x2 = x * x;
+    let u = SQRT_2_OVER_PI * (x + GELU_C * x * x2);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x2)
+}
+
+// -- causal multi-head attention -----------------------------------------
+
+/// Forward causal MHA over packed `qkv` rows `[q | k | v]` (each
+/// `d_model` wide). Returns the concatenated head outputs `(N, d_model)`
+/// and the attention probabilities `(batch, heads, T, T)` (zero above
+/// the diagonal) for the backward pass.
+fn attn_fwd(qkv: &Mat, batch: usize, t: usize, heads: usize) -> (Mat, Vec<f32>) {
+    let d = qkv.cols / 3;
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Mat::zeros(qkv.rows, d);
+    let mut probs = vec![0.0f32; batch * heads * t * t];
+    let mut srow = vec![0.0f32; t];
+    for b in 0..batch {
+        for h in 0..heads {
+            let pbase = (b * heads + h) * t * t;
+            let (qo, ko, vo) = (h * hd, d + h * hd, 2 * d + h * hd);
+            for i in 0..t {
+                let qi = &qkv.row(b * t + i)[qo..qo + hd];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, s) in srow.iter_mut().enumerate().take(i + 1) {
+                    let kj = &qkv.row(b * t + j)[ko..ko + hd];
+                    let mut acc = 0.0f32;
+                    for c in 0..hd {
+                        acc += qi[c] * kj[c];
+                    }
+                    *s = acc * scale;
+                    if *s > mx {
+                        mx = *s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for s in srow.iter_mut().take(i + 1) {
+                    *s = (*s - mx).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom;
+                for j in 0..=i {
+                    let p = srow[j] * inv;
+                    probs[pbase + i * t + j] = p;
+                    let vj = &qkv.row(b * t + j)[vo..vo + hd];
+                    let o0 = (b * t + i) * d + h * hd;
+                    for c in 0..hd {
+                        out.data[o0 + c] += p * vj[c];
+                    }
+                }
+            }
+        }
+    }
+    (out, probs)
+}
+
+/// Backward of [`attn_fwd`]: `dout (N, d_model)` → `dqkv (N, 3*d_model)`.
+fn attn_bwd(
+    dout: &Mat,
+    qkv: &Mat,
+    probs: &[f32],
+    batch: usize,
+    t: usize,
+    heads: usize,
+) -> Mat {
+    let d = qkv.cols / 3;
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dqkv = Mat::zeros(qkv.rows, qkv.cols);
+    let mut dprow = vec![0.0f32; t];
+    for b in 0..batch {
+        for h in 0..heads {
+            let pbase = (b * heads + h) * t * t;
+            let (qo, ko, vo) = (h * hd, d + h * hd, 2 * d + h * hd);
+            for i in 0..t {
+                let doi = &dout.row(b * t + i)[h * hd..(h + 1) * hd];
+                // dprobs[j] = dout_i · v_j; s = Σ_j dprobs[j] * probs[i][j]
+                let mut s = 0.0f32;
+                for (j, dp) in dprow.iter_mut().enumerate().take(i + 1) {
+                    let vj = &qkv.row(b * t + j)[vo..vo + hd];
+                    let mut acc = 0.0f32;
+                    for c in 0..hd {
+                        acc += doi[c] * vj[c];
+                    }
+                    *dp = acc;
+                    s += acc * probs[pbase + i * t + j];
+                }
+                for j in 0..=i {
+                    let p = probs[pbase + i * t + j];
+                    // dv_j += p * dout_i
+                    let dv0 = (b * t + j) * 3 * d + vo;
+                    for c in 0..hd {
+                        dqkv.data[dv0 + c] += p * doi[c];
+                    }
+                    // softmax backward, pre-scaled by 1/sqrt(hd)
+                    let ds = p * (dprow[j] - s) * scale;
+                    let kj0 = (b * t + j) * 3 * d;
+                    let qi0 = (b * t + i) * 3 * d;
+                    for c in 0..hd {
+                        // dq_i += ds * k_j ; dk_j += ds * q_i
+                        dqkv.data[qi0 + qo + c] += ds * qkv.data[kj0 + ko + c];
+                        dqkv.data[kj0 + ko + c] += ds * qkv.data[qi0 + qo + c];
+                    }
+                }
+            }
+        }
+    }
+    dqkv
+}
+
+// -- cross-entropy -------------------------------------------------------
+
+fn ce_loss(logits: &Mat, labels: &[i32]) -> Result<f32> {
+    let mut total = 0.0f64;
+    for r in 0..logits.rows {
+        let row = logits.row(r);
+        let lab = labels[r] as usize;
+        ensure!(lab < logits.cols, "label {lab} out of vocab range 0..{}", logits.cols);
+        total += lse_f64(row) - row[lab] as f64;
+    }
+    Ok((total / logits.rows.max(1) as f64) as f32)
+}
+
+/// Loss + `dL/dlogits` = `(softmax - onehot) / N` in one pass.
+fn ce_loss_and_grad(logits: &Mat, labels: &[i32]) -> Result<(f32, Mat)> {
+    let (n, v) = (logits.rows, logits.cols);
+    let mut d = Mat::zeros(n, v);
+    let mut total = 0.0f64;
+    let inv_n = 1.0 / n as f32;
+    for r in 0..n {
+        let row = logits.row(r);
+        let lab = labels[r] as usize;
+        ensure!(lab < v, "label {lab} out of vocab range 0..{v}");
+        let lse = lse_f64(row);
+        total += lse - row[lab] as f64;
+        let drow = &mut d.data[r * v..(r + 1) * v];
+        for (c, &x) in row.iter().enumerate() {
+            drow[c] = (x as f64 - lse).exp() as f32 * inv_n;
+        }
+        drow[lab] -= inv_n;
+    }
+    Ok(((total / n as f64) as f32, d))
+}
+
+/// Numerically-stable log-sum-exp of one logits row (f64 accumulation).
+fn lse_f64(row: &[f32]) -> f64 {
+    let mut mx = f32::NEG_INFINITY;
+    for &x in row {
+        if x > mx {
+            mx = x;
+        }
+    }
+    let mut denom = 0.0f64;
+    for &x in row {
+        denom += ((x - mx) as f64).exp();
+    }
+    mx as f64 + denom.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::executor::init_params_for;
+
+    fn backend(recipe: &str) -> NativeBackend {
+        let (cfg, batch) = GPTConfig::preset("micro").unwrap();
+        NativeBackend::new(cfg, NativeRecipe::parse(recipe).unwrap(), batch)
+    }
+
+    fn tokens_for(b: &NativeBackend, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let n = b.batch() * b.seq_len();
+        let v = b.vocab() as u64;
+        let mut rng = Rng::seed(seed);
+        let toks: Vec<i32> = (0..n).map(|_| (rng.next_u64() % v) as i32).collect();
+        let labs: Vec<i32> = (0..n).map(|_| (rng.next_u64() % v) as i32).collect();
+        (toks, labs)
+    }
+
+    #[test]
+    fn initial_loss_near_log_vocab() {
+        for recipe in ["bf16", "mxfp4_rht_sr"] {
+            let mut b = backend(recipe);
+            let params = init_params_for(b.param_specs(), b.n_layers(), 0);
+            let (toks, labs) = tokens_for(&b, 1);
+            let out = b.train_step(7, &toks, &labs, &params).unwrap();
+            let ln_v = (b.vocab() as f32).ln();
+            assert!(
+                (out.loss - ln_v).abs() < 0.7,
+                "{recipe}: loss {} vs ln(V) {ln_v}",
+                out.loss
+            );
+            assert_eq!(out.grads.len(), params.len());
+            assert!(out.grads.iter().flatten().all(|g| g.is_finite()));
+            // gradients flow to every tensor class
+            let gnorm = |i: usize| -> f64 {
+                out.grads[i].iter().map(|&g| (g as f64).powi(2)).sum()
+            };
+            assert!(gnorm(TOK_EMB) > 0.0, "tok_emb grad");
+            assert!(gnorm(POS_EMB) > 0.0, "pos_emb grad");
+            assert!(gnorm(layer_base(0) + 2) > 0.0, "qkv grad");
+        }
+    }
+
+    #[test]
+    fn train_step_is_seed_deterministic() {
+        let mut b = backend("mxfp4_rht_sr");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 3);
+        let (toks, labs) = tokens_for(&b, 2);
+        let o1 = b.train_step(11, &toks, &labs, &params).unwrap();
+        let o2 = b.train_step(11, &toks, &labs, &params).unwrap();
+        let o3 = b.train_step(12, &toks, &labs, &params).unwrap();
+        assert_eq!(o1.loss, o2.loss);
+        for (a, c) in o1.grads.iter().zip(&o2.grads) {
+            assert_eq!(a, c, "same seed must give byte-identical grads");
+        }
+        assert_ne!(o1.grads[TOK_EMB], o3.grads[TOK_EMB], "different seed, different dither");
+    }
+
+    #[test]
+    fn eval_matches_train_loss_in_exact_mode() {
+        let mut b = backend("bf16");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 5);
+        let (toks, labs) = tokens_for(&b, 6);
+        let out = b.train_step(1, &toks, &labs, &params).unwrap();
+        let ev = b.eval_step(&toks, &labs, &params).unwrap();
+        assert_eq!(out.loss, ev, "identical forward path must give identical loss");
+    }
+
+    #[test]
+    fn logits_shape_and_finiteness() {
+        let mut b = backend("mxfp4");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 7);
+        let (toks, _) = tokens_for(&b, 8);
+        let t = b.logits(&toks, &params).unwrap();
+        assert_eq!(t.shape, vec![b.batch(), b.seq_len(), b.vocab()]);
+        assert_eq!(t.data.len(), t.shape.iter().product::<usize>());
+        assert!(t.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_tokens_and_bad_params() {
+        let mut b = backend("bf16");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 0);
+        let (mut toks, labs) = tokens_for(&b, 9);
+        toks[0] = b.vocab() as i32; // out of range
+        assert!(b.train_step(1, &toks, &labs, &params).is_err());
+        let short = vec![vec![0.0f32; 3]];
+        let (toks, labs) = tokens_for(&b, 9);
+        assert!(b.train_step(1, &toks, &labs, &short).is_err());
+    }
+
+    #[test]
+    fn g_eff_halves_to_fit() {
+        assert_eq!(g_eff(64, 128), 64);
+        assert_eq!(g_eff(64, 96), 32);
+        assert_eq!(g_eff(64, 32), 32);
+        assert_eq!(g_eff(128, 64), 64);
+        assert_eq!(g_eff(32, 320), 32);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for i in -40..40 {
+            let x = i as f32 * 0.2;
+            let e = 1e-3f32;
+            let fd = (gelu(x + e) - gelu(x - e)) / (2.0 * e);
+            assert!((gelu_grad(x) - fd).abs() < 2e-3, "x {x}: {} vs {fd}", gelu_grad(x));
+        }
+    }
+}

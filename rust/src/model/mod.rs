@@ -1,0 +1,177 @@
+//! Native GPT model: architecture config, parameter ABI, and the
+//! hand-written forward/backward engine behind `runtime::Backend`'s
+//! native implementation.
+//!
+//! This is the rust mirror of `python/compile/model.py` — same
+//! architecture (tied-embedding pre-LN GPT-2 decoder: causal MHA + GELU
+//! MLP), same init, same loss — but with *manual* backprop in which every
+//! linear-layer GEMM (forward, dgrad, wgrad) routes through the packed
+//! MXFP4 engine according to a [`NativeRecipe`]. Where the python model
+//! stacks layer parameters on a leading axis for `jax.lax.scan`, the
+//! native ABI flattens them with per-layer prefixes (`l0_qkv_w`,
+//! `l3_proj_w`, ...) — which is why `runtime::executor::init_params_for`
+//! matches initializer rules with `ends_with`, not string equality.
+//!
+//! * [`recipe`] — which of the three GEMMs each recipe quantizes
+//! * [`gpt`] — the forward/backward engine ([`NativeBackend`])
+
+pub mod gpt;
+pub mod recipe;
+
+pub use gpt::NativeBackend;
+pub use recipe::NativeRecipe;
+
+use crate::runtime::{DType, TensorSpec};
+
+/// Architecture hyperparameters — mirrors `model.GPTConfig` (python) and
+/// the named sizes of `runtime::artifact::ModelMeta`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GPTConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub d_ff: usize,
+}
+
+impl GPTConfig {
+    /// Validated constructor; `d_ff = 0` means `4 * d_model`.
+    pub fn new(
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        seq_len: usize,
+        d_ff: usize,
+    ) -> GPTConfig {
+        let d_ff = if d_ff == 0 { 4 * d_model } else { d_ff };
+        assert!(d_model % n_heads == 0, "d_model {d_model} % n_heads {n_heads} != 0");
+        assert!(d_model % 32 == 0, "MX blocks must tile d_model ({d_model})");
+        assert!(d_ff % 32 == 0, "MX blocks must tile d_ff ({d_ff})");
+        assert!(vocab % 32 == 0, "MX blocks must tile the vocab ({vocab})");
+        GPTConfig { vocab, d_model, n_layers, n_heads, seq_len, d_ff }
+    }
+
+    /// Named sizes used across examples/tests, with their default batch.
+    /// `micro` is native-only (fast enough for debug-mode `cargo test`);
+    /// the rest mirror `model.CONFIGS` + `aot.DEFAULT_BATCHES`.
+    pub fn preset(name: &str) -> Option<(GPTConfig, usize)> {
+        Some(match name {
+            "micro" => (GPTConfig::new(64, 32, 1, 2, 16, 64), 2),
+            "test" => (GPTConfig::new(256, 64, 2, 2, 32, 0), 4),
+            "tiny" => (GPTConfig::new(256, 128, 4, 4, 64, 0), 8),
+            "small" => (GPTConfig::new(256, 256, 6, 8, 128, 0), 8),
+            "base" => (GPTConfig::new(256, 512, 8, 8, 256, 0), 8),
+            _ => return None,
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// The native parameter ABI: flat `TensorSpec` list in storage order.
+    /// Layer tensors carry an `l{i}_` prefix instead of the artifact
+    /// ABI's stacked leading axis; 2-D weights are stored `(out, in)`
+    /// row-major, matching `y = x @ Wᵀ`.
+    pub fn param_specs(&self) -> Vec<TensorSpec> {
+        let (d, f) = (self.d_model, self.d_ff);
+        let mut specs = vec![
+            spec("tok_emb", vec![self.vocab, d]),
+            spec("pos_emb", vec![self.seq_len, d]),
+        ];
+        for l in 0..self.n_layers {
+            specs.push(spec(&format!("l{l}_ln1_g"), vec![d]));
+            specs.push(spec(&format!("l{l}_ln1_b"), vec![d]));
+            specs.push(spec(&format!("l{l}_qkv_w"), vec![3 * d, d]));
+            specs.push(spec(&format!("l{l}_proj_w"), vec![d, d]));
+            specs.push(spec(&format!("l{l}_ln2_g"), vec![d]));
+            specs.push(spec(&format!("l{l}_ln2_b"), vec![d]));
+            specs.push(spec(&format!("l{l}_fc1_w"), vec![f, d]));
+            specs.push(spec(&format!("l{l}_fc2_w"), vec![d, f]));
+        }
+        specs.push(spec("lnf_g", vec![d]));
+        specs.push(spec("lnf_b", vec![d]));
+        specs
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_specs().iter().map(TensorSpec::numel).sum()
+    }
+}
+
+fn spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape, dtype: DType::F32 }
+}
+
+/// Parameter indices into the [`GPTConfig::param_specs`] order.
+pub(crate) const TOK_EMB: usize = 0;
+pub(crate) const POS_EMB: usize = 1;
+pub(crate) const PER_LAYER: usize = 8;
+
+/// Offset of layer `l`'s first tensor (`ln1_g`).
+pub(crate) fn layer_base(l: usize) -> usize {
+    2 + l * PER_LAYER
+}
+
+/// Index of `lnf_g` (followed by `lnf_b`).
+pub(crate) fn lnf_base(n_layers: usize) -> usize {
+    2 + n_layers * PER_LAYER
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist_and_validate() {
+        for name in ["micro", "test", "tiny", "small", "base"] {
+            let (cfg, batch) = GPTConfig::preset(name).unwrap();
+            assert!(batch > 0);
+            assert_eq!(cfg.d_model % cfg.n_heads, 0);
+            assert_eq!(cfg.d_ff % 32, 0);
+        }
+        assert!(GPTConfig::preset("huge").is_none());
+    }
+
+    #[test]
+    fn test_preset_matches_artifact_abi_dims() {
+        // keep native "test" congruent with the AOT test artifact dims
+        let (cfg, batch) = GPTConfig::preset("test").unwrap();
+        assert_eq!((cfg.vocab, cfg.d_model, cfg.n_layers), (256, 64, 2));
+        assert_eq!((cfg.n_heads, cfg.seq_len, cfg.d_ff), (2, 32, 256));
+        assert_eq!(batch, 4);
+    }
+
+    #[test]
+    fn param_specs_layout_and_count() {
+        let (cfg, _) = GPTConfig::preset("micro").unwrap();
+        let specs = cfg.param_specs();
+        assert_eq!(specs.len(), 2 + cfg.n_layers * PER_LAYER + 2);
+        assert_eq!(specs[TOK_EMB].name, "tok_emb");
+        assert_eq!(specs[POS_EMB].shape, vec![cfg.seq_len, cfg.d_model]);
+        assert_eq!(specs[layer_base(0) + 2].name, "l0_qkv_w");
+        assert_eq!(specs[layer_base(0) + 2].shape, vec![3 * cfg.d_model, cfg.d_model]);
+        assert_eq!(specs[lnf_base(cfg.n_layers)].name, "lnf_g");
+        // hand-count: V*D + T*D + L*(2D + 2D + 3D*D + D*D + F*D + D*F) + 2D
+        let (v, d, t, f, l) = (cfg.vocab, cfg.d_model, cfg.seq_len, cfg.d_ff, cfg.n_layers);
+        let want = v * d + t * d + l * (4 * d + 4 * d * d + 2 * f * d) + 2 * d;
+        assert_eq!(cfg.param_count(), want);
+    }
+
+    #[test]
+    fn per_layer_prefixes_hit_endswith_init_rules() {
+        // the satellite fix: `l3_proj_w` must be recognized as a residual
+        // projection by ends_with matching (exact equality missed it)
+        let (cfg, _) = GPTConfig::preset("test").unwrap();
+        let specs = cfg.param_specs();
+        let prefixed: Vec<&str> = specs
+            .iter()
+            .map(|s| s.name.as_str())
+            .filter(|n| n.ends_with("proj_w") || n.ends_with("fc2_w"))
+            .collect();
+        assert_eq!(prefixed.len(), 2 * cfg.n_layers);
+        assert!(prefixed.iter().all(|n| *n != "proj_w" && *n != "fc2_w"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Native precision recipes: which of the three GEMMs per linear layer
+//! (forward, dgrad, wgrad) run through the MXFP4 engine, and how.
+//!
+//! The artifact path bakes its recipe into the AOT HLO
+//! (`python/compile/recipes.py`); the native backend makes the same axes
+//! a runtime value. Following Quartet (arXiv:2505.14669) and FP4 All the
+//! Way (arXiv:2505.19115), the native recipes quantize *all three* GEMMs
+//! of every decoder linear layer — forward with deterministic nearest
+//! rounding (Algorithm 1, safe for activations), backward per the
+//! Table 2 ablation axis:
+//!
+//! | recipe            | forward       | dgrad `G @ W`      | wgrad `Gᵀ @ X`     |
+//! |-------------------|---------------|--------------------|--------------------|
+//! | `bf16`            | exact (BF16)  | exact              | exact              |
+//! | `mxfp4`           | MXFP4 NR      | MXFP4 NR           | MXFP4 NR           |
+//! | `mxfp4_sr`        | MXFP4 NR      | MXFP4 SR + 16/9    | MXFP4 SR + 16/9    |
+//! | `mxfp4_rht`       | MXFP4 NR      | RHT + NR           | RHT + NR           |
+//! | `mxfp4_rht_sr`    | MXFP4 NR      | RHT + SR + 16/9    | RHT + SR + 16/9    |
+//!
+//! ("exact" = plain f32 GEMM over the BF16-rounded compute weights —
+//! the mixed-precision baseline.) `mxfp4_rht_sr` is Algorithm 3: NR
+//! forward, RHT + stochastic rounding on both backward GEMMs with the
+//! 16/9 rescale compensating the two 0.75 pre-scales (Lemma 3.1).
+//! `_g{32,64,128,256}` suffixes select the RHT block size (Table 4).
+
+use crate::gemm::MxMode;
+
+/// Parsed native recipe: forward quantization switch + backward GEMM
+/// mode + RHT block size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NativeRecipe {
+    /// Recipe name as parsed (e.g. "mxfp4_rht_sr_g32").
+    pub name: String,
+    /// Quantize the forward GEMM operands with Algorithm 1 (NR). False
+    /// only for the `bf16` baseline, whose forward is the plain GEMM
+    /// over BF16-rounded weights/activations.
+    pub quantize_fwd: bool,
+    /// Mode for both backward GEMMs (dgrad and wgrad).
+    pub bwd: MxMode,
+    /// RHT block size `g` (power of two, 32..=256). Ignored by non-RHT
+    /// modes.
+    pub g: usize,
+}
+
+impl NativeRecipe {
+    /// Parse a recipe name as used by `TrainConfig::recipe` and the
+    /// artifact registry: `bf16 | mxfp4 | mxfp4_sr | mxfp4_rht[_gN] |
+    /// mxfp4_rht_sr[_gN]`.
+    pub fn parse(name: &str) -> Result<NativeRecipe, String> {
+        let (base, g) = match name.rsplit_once("_g") {
+            Some((head, suffix)) if suffix.chars().all(|c| c.is_ascii_digit()) => {
+                let g: usize = suffix.parse().map_err(|e| format!("{name}: bad g: {e}"))?;
+                if !g.is_power_of_two() || !(32..=256).contains(&g) {
+                    return Err(format!(
+                        "{name}: RHT block size g={g} must be a power of two in 32..=256"
+                    ));
+                }
+                (head, g)
+            }
+            _ => (name, 64),
+        };
+        let (quantize_fwd, bwd) = match base {
+            "bf16" => (false, MxMode::Exact),
+            "mxfp4" => (true, MxMode::Nr),
+            "mxfp4_sr" => (true, MxMode::Sr),
+            "mxfp4_rht" => (true, MxMode::Rht),
+            "mxfp4_rht_sr" => (true, MxMode::RhtSr),
+            other => {
+                return Err(format!(
+                    "unknown native recipe {other:?} (bf16|mxfp4|mxfp4_sr|mxfp4_rht|mxfp4_rht_sr[_gN])"
+                ))
+            }
+        };
+        if !bwd.uses_rht() && base != name {
+            return Err(format!("{name}: _g suffix only applies to RHT recipes"));
+        }
+        Ok(NativeRecipe { name: name.to_string(), quantize_fwd, bwd, g })
+    }
+
+    /// Human-readable summary of the three GEMM precisions.
+    pub fn describe(&self) -> String {
+        let fwd = if self.quantize_fwd { "mxfp4-nr" } else { "exact" };
+        let bwd = match self.bwd {
+            MxMode::Exact => "exact".to_string(),
+            MxMode::Nr => "mxfp4-nr".to_string(),
+            MxMode::Sr => "mxfp4-sr".to_string(),
+            MxMode::Rht => format!("mxfp4-rht-nr(g={})", self.g),
+            MxMode::RhtSr => format!("mxfp4-rht-sr(g={})", self.g),
+        };
+        format!("fwd {fwd} / dgrad {bwd} / wgrad {bwd}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_table2_recipes() {
+        let r = NativeRecipe::parse("bf16").unwrap();
+        assert!(!r.quantize_fwd);
+        assert_eq!(r.bwd, MxMode::Exact);
+        let r = NativeRecipe::parse("mxfp4").unwrap();
+        assert!(r.quantize_fwd);
+        assert_eq!(r.bwd, MxMode::Nr);
+        assert_eq!(NativeRecipe::parse("mxfp4_sr").unwrap().bwd, MxMode::Sr);
+        assert_eq!(NativeRecipe::parse("mxfp4_rht").unwrap().bwd, MxMode::Rht);
+        let r = NativeRecipe::parse("mxfp4_rht_sr").unwrap();
+        assert_eq!((r.bwd, r.g), (MxMode::RhtSr, 64));
+    }
+
+    #[test]
+    fn parses_blocksize_suffix() {
+        let r = NativeRecipe::parse("mxfp4_rht_sr_g32").unwrap();
+        assert_eq!((r.bwd, r.g), (MxMode::RhtSr, 32));
+        let r = NativeRecipe::parse("mxfp4_rht_sr_g128").unwrap();
+        assert_eq!(r.g, 128);
+        assert!(NativeRecipe::parse("mxfp4_rht_sr_g48").is_err(), "non-power-of-two g");
+        assert!(NativeRecipe::parse("mxfp4_rht_sr_g512").is_err(), "g out of range");
+        assert!(NativeRecipe::parse("mxfp4_sr_g64").is_err(), "g on a non-RHT recipe");
+    }
+
+    #[test]
+    fn rejects_unknown_names() {
+        assert!(NativeRecipe::parse("fp8_fwd_mxfp4_rht_sr").is_err());
+        assert!(NativeRecipe::parse("").is_err());
+    }
+
+    #[test]
+    fn describe_names_all_three_gemms() {
+        let d = NativeRecipe::parse("mxfp4_rht_sr").unwrap().describe();
+        assert!(d.contains("fwd") && d.contains("dgrad") && d.contains("wgrad"), "{d}");
+    }
+}

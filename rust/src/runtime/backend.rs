@@ -1,0 +1,377 @@
+//! The pluggable execution layer: one [`Backend`] trait with two
+//! implementations —
+//!
+//! * [`ArtifactBackend`] — wraps the PJRT [`Executor`] over an AOT
+//!   artifact (the original path; needs `make artifacts` + a real XLA
+//!   build), and
+//! * [`crate::model::NativeBackend`] — the pure-rust GPT with manual
+//!   backprop through the packed MXFP4 engine (no artifacts, no PJRT).
+//!
+//! [`BackendSpec`] is the `Send + Clone` *recipe for building* a backend:
+//! PJRT handles are `!Send`, so the data-parallel pool ships specs to its
+//! worker threads and each thread connects its own backend — the same
+//! per-thread-executor topology the artifact path always used, now
+//! backend-agnostic. `BackendSpec::resolve_train` picks the
+//! implementation from `TrainConfig::backend` (`native | artifact |
+//! auto`), with native as the fallback whenever artifacts or the PJRT
+//! runtime are missing.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::model::{GPTConfig, NativeBackend, NativeRecipe};
+use crate::runtime::artifact::{Artifact, Registry, TensorSpec};
+use crate::runtime::executor::{self, Executor, Tensor, TrainOutput};
+
+/// A model execution engine: train/eval/logits steps over externally
+/// owned flat f32 parameters (the trainer's BF16 compute copies).
+///
+/// Contract: callers must announce every out-of-band weight rewrite —
+/// [`on_weights_updated`](Backend::on_weights_updated) after each
+/// optimizer step (epoch = step number), or
+/// [`invalidate_cache`](Backend::invalidate_cache) on checkpoint restore
+/// — so quantize-once backends never serve stale packed views.
+pub trait Backend {
+    /// Implementation tag: `"native"` or `"artifact"`.
+    fn kind(&self) -> &'static str;
+    /// Human-readable one-liner for logs.
+    fn describe(&self) -> String;
+    fn batch(&self) -> usize;
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn n_layers(&self) -> usize;
+    /// Parameter ABI, in the order `train_step` expects and returns.
+    fn param_specs(&self) -> &[TensorSpec];
+    /// One microbatch forward+backward: loss + per-parameter grads.
+    fn train_step(
+        &mut self,
+        seed: u32,
+        tokens: &[i32],
+        labels: &[i32],
+        params: &[Vec<f32>],
+    ) -> Result<TrainOutput>;
+    /// Forward-only mean loss.
+    fn eval_step(&mut self, tokens: &[i32], labels: &[i32], params: &[Vec<f32>]) -> Result<f32>;
+    /// Raw logits `(batch, seq, vocab)`.
+    fn logits(&mut self, tokens: &[i32], params: &[Vec<f32>]) -> Result<Tensor>;
+    /// Cap the backend's internal compute (GEMM) thread count. The DP
+    /// pool divides the machine's cores among its workers so concurrent
+    /// shards don't oversubscribe. Default: no-op (PJRT manages its own
+    /// threading).
+    fn set_compute_workers(&mut self, _n: usize) {}
+    /// The weights changed (optimizer step `epoch` completed); drop any
+    /// cached quantized views. Default: no-op (stateless backends).
+    fn on_weights_updated(&mut self, _epoch: u64) {}
+    /// Unconditionally drop cached views (out-of-band weight rewrite).
+    fn invalidate_cache(&mut self) {}
+    /// `(nr_packs, cache_hits, sr_draws)` of the backend's quantize-once
+    /// weight cache; zeros for backends without one.
+    fn mx_cache_stats(&self) -> (usize, usize, usize) {
+        (0, 0, 0)
+    }
+
+    /// Tokens consumed per `train_step` call.
+    fn tokens_per_step(&self) -> usize {
+        self.batch() * self.seq_len()
+    }
+}
+
+/// PJRT-executor backend over one compiled AOT artifact. `train`, `eval`
+/// and `logits` artifacts are separate compilations, so a full trainer
+/// uses one `ArtifactBackend` per kind (as the pre-Backend code did).
+pub struct ArtifactBackend {
+    exe: Executor,
+}
+
+impl ArtifactBackend {
+    pub fn compile_cpu(artifact: &Artifact) -> Result<ArtifactBackend> {
+        Ok(ArtifactBackend { exe: Executor::compile_cpu(artifact)? })
+    }
+}
+
+impl Backend for ArtifactBackend {
+    fn kind(&self) -> &'static str {
+        "artifact"
+    }
+
+    fn describe(&self) -> String {
+        let a = &self.exe.artifact;
+        format!("artifact {} ({}, recipe {})", a.name, a.kind, a.recipe.name)
+    }
+
+    fn batch(&self) -> usize {
+        self.exe.artifact.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.exe.artifact.model.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.exe.artifact.model.vocab
+    }
+
+    fn n_layers(&self) -> usize {
+        self.exe.artifact.model.n_layers
+    }
+
+    fn param_specs(&self) -> &[TensorSpec] {
+        &self.exe.artifact.params
+    }
+
+    fn train_step(
+        &mut self,
+        seed: u32,
+        tokens: &[i32],
+        labels: &[i32],
+        params: &[Vec<f32>],
+    ) -> Result<TrainOutput> {
+        self.exe.train_step(seed, tokens, labels, params)
+    }
+
+    fn eval_step(&mut self, tokens: &[i32], labels: &[i32], params: &[Vec<f32>]) -> Result<f32> {
+        self.exe.eval_step(tokens, labels, params)
+    }
+
+    fn logits(&mut self, tokens: &[i32], params: &[Vec<f32>]) -> Result<Tensor> {
+        self.exe.logits(tokens, params)
+    }
+}
+
+/// `Send + Clone` description of a backend, connected per worker thread.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Compile this AOT artifact on a fresh PJRT CPU client.
+    Artifact(Artifact),
+    /// Build a native GPT for `(cfg, recipe, batch)`.
+    Native { cfg: GPTConfig, recipe: NativeRecipe, batch: usize },
+}
+
+impl BackendSpec {
+    /// Native spec for a named config preset + recipe.
+    pub fn native(config: &str, recipe: &str, batch: Option<usize>) -> Result<BackendSpec> {
+        let (cfg, default_batch) = GPTConfig::preset(config)
+            .with_context(|| format!("unknown model config {config:?} (micro|test|tiny|small|base)"))?;
+        let recipe = NativeRecipe::parse(recipe).map_err(anyhow::Error::msg)?;
+        Ok(BackendSpec::Native { cfg, recipe, batch: batch.unwrap_or(default_batch) })
+    }
+
+    /// Instantiate the backend (compiles the artifact / builds the model).
+    /// Invalid combinations surface as `Err`, not panics — this runs on
+    /// DP pool worker threads, where a panic would abort the leader with
+    /// an opaque "worker panicked during startup".
+    pub fn connect(&self) -> Result<Box<dyn Backend>> {
+        Ok(match self {
+            BackendSpec::Artifact(a) => Box::new(ArtifactBackend::compile_cpu(a)?),
+            BackendSpec::Native { cfg, recipe, batch } => {
+                anyhow::ensure!(*batch > 0, "native backend needs a positive batch");
+                anyhow::ensure!(
+                    !recipe.bwd.uses_rht() || (batch * cfg.seq_len) % 32 == 0,
+                    "recipe {} needs 32 | batch*seq for the wgrad RHT (got {} * {})",
+                    recipe.name,
+                    batch,
+                    cfg.seq_len
+                );
+                Box::new(NativeBackend::new(cfg.clone(), recipe.clone(), *batch))
+            }
+        })
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BackendSpec::Artifact(_) => "artifact",
+            BackendSpec::Native { .. } => "native",
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        match self {
+            BackendSpec::Artifact(a) => a.batch,
+            BackendSpec::Native { batch, .. } => *batch,
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        match self {
+            BackendSpec::Artifact(a) => a.model.seq_len,
+            BackendSpec::Native { cfg, .. } => cfg.seq_len,
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        match self {
+            BackendSpec::Artifact(a) => a.model.vocab,
+            BackendSpec::Native { cfg, .. } => cfg.vocab,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        match self {
+            BackendSpec::Artifact(a) => a.model.n_layers,
+            BackendSpec::Native { cfg, .. } => cfg.n_layers,
+        }
+    }
+
+    pub fn param_specs(&self) -> Vec<TensorSpec> {
+        match self {
+            BackendSpec::Artifact(a) => a.params.clone(),
+            BackendSpec::Native { cfg, .. } => cfg.param_specs(),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_specs().iter().map(TensorSpec::numel).sum()
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            BackendSpec::Artifact(a) => format!("artifact {}", a.name),
+            BackendSpec::Native { cfg, recipe, batch } => format!(
+                "native gpt {}L d{} batch {} ({}: {})",
+                cfg.n_layers, cfg.d_model, batch, recipe.name, recipe.describe()
+            ),
+        }
+    }
+
+    /// Pick the `(train, eval)` backend pair for a run, honoring
+    /// `TrainConfig::backend`:
+    ///
+    /// * `"artifact"` — require a registry with a matching train artifact
+    ///   (and a real PJRT build); error otherwise.
+    /// * `"native"` — always the native GPT.
+    /// * `"auto"` (default) — artifact when one matches *and* the PJRT
+    ///   backend is linked, else fall back to native. This is what makes
+    ///   `mxfp4-train train` work in a checkout with zero artifacts.
+    pub fn resolve_train(
+        cfg: &TrainConfig,
+        registry: Option<&Registry>,
+    ) -> Result<(BackendSpec, BackendSpec)> {
+        match cfg.backend.as_str() {
+            "native" => Self::native_pair(cfg),
+            "artifact" => {
+                let reg = registry.context("--backend artifact needs an artifacts directory")?;
+                Self::artifact_pair(cfg, reg)
+            }
+            "auto" | "" => {
+                if let Some(reg) = registry {
+                    if executor::backend_available() {
+                        if let Ok(pair) = Self::artifact_pair(cfg, reg) {
+                            return Ok(pair);
+                        }
+                        crate::info!(
+                            "backend auto: no artifact for {}/{}; falling back to native",
+                            cfg.config,
+                            cfg.recipe
+                        );
+                    } else {
+                        crate::info!("backend auto: PJRT unavailable (stub xla); using native");
+                    }
+                } else {
+                    crate::info!("backend auto: no artifacts directory; using native");
+                }
+                Self::native_pair(cfg)
+            }
+            other => bail!("unknown backend {other:?} (native|artifact|auto)"),
+        }
+    }
+
+    /// Resolve a forward-only (`eval` / `logits`) backend the same way.
+    /// For the artifact path `fwd` selects the forward precision
+    /// (`Registry::find_fwd`); for native it must name a parseable
+    /// recipe (`bf16` being the exact-forward baseline).
+    pub fn resolve_fwd(
+        config: &str,
+        fwd: &str,
+        kind: &str,
+        choice: &str,
+        registry: Option<&Registry>,
+    ) -> Result<BackendSpec> {
+        let artifact = |reg: &Registry| -> Result<BackendSpec> {
+            reg.find_fwd(config, fwd, kind)
+                .cloned()
+                .map(BackendSpec::Artifact)
+                .with_context(|| format!("no {kind} artifact for config {config} fwd {fwd}"))
+        };
+        match choice {
+            "native" => Self::native(config, fwd, None),
+            "artifact" => artifact(registry.context("--backend artifact needs artifacts")?),
+            "auto" | "" => {
+                if let Some(reg) = registry {
+                    if executor::backend_available() {
+                        if let Ok(spec) = artifact(reg) {
+                            return Ok(spec);
+                        }
+                    }
+                }
+                Self::native(config, fwd, None)
+            }
+            other => bail!("unknown backend {other:?} (native|artifact|auto)"),
+        }
+    }
+
+    fn native_pair(cfg: &TrainConfig) -> Result<(BackendSpec, BackendSpec)> {
+        let spec = Self::native(&cfg.config, &cfg.recipe, None)?;
+        // native eval_step is forward-only on the same model: one spec
+        // serves both roles (each side still connects its own instance).
+        Ok((spec.clone(), spec))
+    }
+
+    fn artifact_pair(cfg: &TrainConfig, reg: &Registry) -> Result<(BackendSpec, BackendSpec)> {
+        let train = reg.find(&cfg.config, &cfg.recipe, "train").with_context(|| {
+            format!("no artifact {}_{}_train (run `make artifacts`)", cfg.config, cfg.recipe)
+        })?;
+        let fwd = &train.recipe.fwd;
+        let eval = reg
+            .find_fwd(&cfg.config, fwd, "eval")
+            .with_context(|| format!("no eval artifact for config {} fwd {fwd}", cfg.config))?;
+        Ok((BackendSpec::Artifact(train.clone()), BackendSpec::Artifact(eval.clone())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_spec_connects_and_reports_abi() {
+        let spec = BackendSpec::native("micro", "mxfp4_rht_sr", None).unwrap();
+        assert_eq!(spec.kind(), "native");
+        assert_eq!(spec.batch(), 2);
+        assert_eq!(spec.param_count(), spec.param_specs().iter().map(|s| s.numel()).sum());
+        let b = spec.connect().unwrap();
+        assert_eq!(b.kind(), "native");
+        assert_eq!(b.param_specs().len(), spec.param_specs().len());
+        assert_eq!(b.tokens_per_step(), spec.batch() * spec.seq_len());
+    }
+
+    #[test]
+    fn native_spec_rejects_unknowns() {
+        assert!(BackendSpec::native("nope", "bf16", None).is_err());
+        assert!(BackendSpec::native("micro", "fp8_fwd_mxfp4_rht_sr", None).is_err());
+    }
+
+    #[test]
+    fn resolve_train_auto_falls_back_to_native_without_artifacts() {
+        let cfg = TrainConfig { config: "micro".into(), ..TrainConfig::default() };
+        let (train, eval) = BackendSpec::resolve_train(&cfg, None).unwrap();
+        assert_eq!(train.kind(), "native");
+        assert_eq!(eval.kind(), "native");
+    }
+
+    #[test]
+    fn resolve_train_honors_explicit_choice() {
+        let mut cfg = TrainConfig { config: "micro".into(), ..TrainConfig::default() };
+        cfg.backend = "native".into();
+        assert!(BackendSpec::resolve_train(&cfg, None).is_ok());
+        cfg.backend = "artifact".into();
+        assert!(BackendSpec::resolve_train(&cfg, None).is_err(), "artifact needs a registry");
+        cfg.backend = "tpu".into();
+        assert!(BackendSpec::resolve_train(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn resolve_fwd_native_fallback() {
+        let spec = BackendSpec::resolve_fwd("micro", "bf16", "logits", "auto", None).unwrap();
+        assert_eq!(spec.kind(), "native");
+    }
+}

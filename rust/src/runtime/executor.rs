@@ -148,15 +148,19 @@ impl Executor {
     }
 }
 
-/// Initialize a parameter store matching an artifact's ABI, GPT-2 style
-/// (N(0, 0.02), residual projections scaled by 1/sqrt(2L), LN gains at 1).
+/// Initialize a parameter store for any spec list, GPT-2 style
+/// (N(0, 0.02), residual projections scaled by 1/sqrt(2L), LN gains at
+/// 1, biases/embedding-positions at their conventional values). Shared
+/// by both backends: the artifact ABI uses bare names (`proj_w`) while
+/// the native ABI prefixes per layer (`l3_proj_w`), so every rule
+/// matches with `ends_with` — exact string equality silently skipped
+/// the residual 1/sqrt(2L) scale for prefixed names.
 /// Mirrors `model.init_params` — not bit-identical to jax's initializer
 /// (different RNG), statistically equivalent.
-pub fn init_params(artifact: &Artifact, seed: u64) -> Vec<Vec<f32>> {
+pub fn init_params_for(specs: &[TensorSpec], n_layers: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = crate::rng::Rng::seed(seed);
-    let resid_scale = 1.0 / ((2 * artifact.model.n_layers) as f32).sqrt();
-    artifact
-        .params
+    let resid_scale = 1.0 / ((2 * n_layers.max(1)) as f32).sqrt();
+    specs
         .iter()
         .map(|spec| {
             let mut v = vec![0.0f32; spec.numel()];
@@ -165,7 +169,7 @@ pub fn init_params(artifact: &Artifact, seed: u64) -> Vec<Vec<f32>> {
             } else if spec.name.ends_with("_b") {
                 // zeros
             } else {
-                let scale = if spec.name == "proj_w" || spec.name == "fc2_w" {
+                let scale = if spec.name.ends_with("proj_w") || spec.name.ends_with("fc2_w") {
                     0.02 * resid_scale
                 } else {
                     0.02
@@ -175,6 +179,11 @@ pub fn init_params(artifact: &Artifact, seed: u64) -> Vec<Vec<f32>> {
             v
         })
         .collect()
+}
+
+/// [`init_params_for`] over an artifact's parameter ABI.
+pub fn init_params(artifact: &Artifact, seed: u64) -> Vec<Vec<f32>> {
+    init_params_for(&artifact.params, artifact.model.n_layers, seed)
 }
 
 /// True when a real PJRT backend is linked. The offline stub
@@ -190,5 +199,54 @@ pub fn dtype_name(d: DType) -> &'static str {
         DType::F32 => "f32",
         DType::I32 => "i32",
         DType::U32 => "u32",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, numel: usize) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: vec![numel], dtype: DType::F32 }
+    }
+
+    fn std(v: &[f32]) -> f64 {
+        let n = v.len() as f64;
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+        (v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n).sqrt()
+    }
+
+    #[test]
+    fn init_rules_match_by_suffix_not_equality() {
+        // the satellite fix: per-layer-prefixed residual projections
+        // (native ABI) must receive the same 1/sqrt(2L) scale as the
+        // bare artifact-ABI names.
+        let n_layers = 8;
+        let specs = vec![
+            spec("proj_w", 4096),
+            spec("l3_proj_w", 4096),
+            spec("l7_fc2_w", 4096),
+            spec("qkv_w", 4096),
+            spec("l0_ln1_g", 64),
+            spec("l0_ln1_b", 64),
+            spec("pos_emb", 4096),
+        ];
+        let p = init_params_for(&specs, n_layers, 0);
+        let resid = 0.02f64 / ((2 * n_layers) as f64).sqrt();
+        assert!((std(&p[0]) - resid).abs() < 0.2 * resid, "bare proj_w std {}", std(&p[0]));
+        assert!((std(&p[1]) - resid).abs() < 0.2 * resid, "l3_proj_w std {}", std(&p[1]));
+        assert!((std(&p[2]) - resid).abs() < 0.2 * resid, "l7_fc2_w std {}", std(&p[2]));
+        assert!((std(&p[3]) - 0.02).abs() < 0.2 * 0.02, "qkv_w std {}", std(&p[3]));
+        assert!(p[4].iter().all(|&v| v == 1.0), "LN gain init");
+        assert!(p[5].iter().all(|&v| v == 0.0), "LN bias init");
+        // pos_emb ends in "b" but not "_b": it must be random, not zero
+        assert!(std(&p[6]) > 0.01, "pos_emb must be randomly initialized");
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let specs = vec![spec("tok_emb", 512), spec("l0_qkv_w", 256)];
+        assert_eq!(init_params_for(&specs, 2, 7), init_params_for(&specs, 2, 7));
+        assert_ne!(init_params_for(&specs, 2, 7)[0], init_params_for(&specs, 2, 8)[0]);
     }
 }

@@ -1,16 +1,24 @@
-//! PJRT runtime: load + execute AOT artifacts (HLO text) from rust.
+//! The execution layer: the pluggable [`Backend`] trait plus its two
+//! implementations' plumbing.
 //!
+//! * `backend` — the `Backend` trait, [`ArtifactBackend`], and the
+//!   `Send + Clone` [`BackendSpec`] the data-parallel pool ships to its
+//!   worker threads (`native | artifact | auto` resolution)
 //! * `artifact` — registry over `artifacts/*.{hlo.txt,meta.json}`
-//! * `executor` — compile + run train/eval/logits steps
+//! * `executor` — PJRT compile + run of train/eval/logits artifacts,
+//!   and the shared parameter initializer both backends use
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`.
+//! The PJRT pattern follows /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. The
+//! native implementation of `Backend` lives in [`crate::model`].
 
 pub mod artifact;
+pub mod backend;
 pub mod executor;
 
 pub use artifact::{Artifact, DType, Registry, TensorSpec};
+pub use backend::{ArtifactBackend, Backend, BackendSpec};
 pub use executor::{Executor, Tensor, TrainOutput};
 
 /// Repo-root-relative default artifacts directory.

@@ -1,27 +1,132 @@
-//! End-to-end runtime integration: load AOT artifacts, compile on the PJRT
-//! CPU client, execute train/eval/logits steps, check numeric sanity.
-//! Requires `make artifacts` and a real (non-stub) `xla` backend; skips
-//! cleanly when the artifacts directory is absent.
+//! End-to-end runtime integration over the `runtime::Backend` trait.
+//!
+//! The native half always runs: it builds the rust GPT through
+//! `BackendSpec` and executes train/eval/logits steps with zero
+//! artifact/PJRT dependency. The artifact half additionally runs when
+//! `make artifacts` has been done on a real (non-stub) `xla` backend;
+//! it skips cleanly otherwise.
 
-use mxfp4_train::runtime::{executor, Executor, Registry};
+use mxfp4_train::runtime::{executor, Backend, BackendSpec, Executor, Registry};
 
-fn registry() -> Option<Registry> {
+// ---------------------------------------------------------------------------
+// native backend: always executes
+// ---------------------------------------------------------------------------
+
+fn native(recipe: &str) -> (Box<dyn Backend>, Vec<Vec<f32>>) {
+    let spec = BackendSpec::native("micro", recipe, None).unwrap();
+    let backend = spec.connect().unwrap();
+    let params = executor::init_params_for(&spec.param_specs(), spec.n_layers(), 0);
+    (backend, params)
+}
+
+fn ramp_tokens(backend: &dyn Backend) -> (Vec<i32>, Vec<i32>) {
+    let n = backend.tokens_per_step() as i32;
+    let v = backend.vocab() as i32;
+    let tokens: Vec<i32> = (0..n).map(|i| (i * 7) % v).collect();
+    let labels: Vec<i32> = (0..n).map(|i| (i * 7 + 1) % v).collect();
+    (tokens, labels)
+}
+
+#[test]
+fn native_train_step_executes_and_loss_is_sane() {
+    let (mut b, params) = native("bf16");
+    let (tokens, labels) = ramp_tokens(&*b);
+    let out = b.train_step(7, &tokens, &labels, &params).unwrap();
+    // random init: loss ~ ln(vocab)
+    let ln_v = (b.vocab() as f32).ln();
+    assert!((out.loss - ln_v).abs() < 1.0, "loss {} vs ln V {ln_v}", out.loss);
+    assert_eq!(out.grads.len(), params.len());
+    let gnorm: f64 = out.grads[0].iter().map(|&g| (g as f64).powi(2)).sum();
+    assert!(gnorm > 0.0, "embedding grad must flow");
+    assert!(out.grads.iter().flatten().all(|g| g.is_finite()));
+}
+
+#[test]
+fn native_mxfp4_rht_sr_train_step_executes() {
+    let (mut b, params) = native("mxfp4_rht_sr");
+    let (tokens, labels) = ramp_tokens(&*b);
+    let o1 = b.train_step(1, &tokens, &labels, &params).unwrap();
+    let o2 = b.train_step(1, &tokens, &labels, &params).unwrap();
+    let o3 = b.train_step(2, &tokens, &labels, &params).unwrap();
+    assert!(o1.loss.is_finite());
+    // same seed -> bit-identical grads; different seed -> different SR draws
+    assert_eq!(o1.grads[0], o2.grads[0], "SR must be seed-deterministic");
+    assert_ne!(o1.grads[0], o3.grads[0], "different seeds must dither differently");
+}
+
+#[test]
+fn native_eval_and_logits_execute() {
+    let (mut b, params) = native("bf16");
+    let n = b.tokens_per_step();
+    let tokens: Vec<i32> = vec![1; n];
+    let labels: Vec<i32> = vec![2; n];
+    let loss = b.eval_step(&tokens, &labels, &params).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    let t = b.logits(&tokens, &params).unwrap();
+    assert_eq!(t.data.len(), t.shape.iter().product::<usize>());
+    assert_eq!(t.shape, vec![b.batch(), b.seq_len(), b.vocab()]);
+    assert!(t.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn native_weight_cache_serves_the_second_consumer() {
+    // NR recipe: forward packs AsStored, dgrad packs Transposed — one
+    // pack each per 2-D GEMM weight on the first step-shard, all hits on
+    // the second shard of the same epoch (the quantize-once acceptance).
+    let (mut b, params) = native("mxfp4");
+    let (tokens, labels) = ramp_tokens(&*b);
+    b.train_step(1, &tokens, &labels, &params).unwrap();
+    let (packs1, hits1, sr1) = b.mx_cache_stats();
+    // GEMM weights: qkv/proj/fc1/fc2 per layer + the tied head, 2
+    // orientations each (pos_emb is 2-D but never enters a GEMM)
+    let gemm_weights = 4 * b.n_layers() + 1;
+    assert_eq!(packs1, 2 * gemm_weights, "packs after first shard");
+    assert_eq!(hits1, 0, "first consumer pays every pack");
+    assert_eq!(sr1, 0, "NR recipe draws no SR packs");
+    b.train_step(2, &tokens, &labels, &params).unwrap();
+    let (packs2, hits2, _) = b.mx_cache_stats();
+    assert_eq!(packs2, packs1, "second shard re-packs nothing");
+    assert_eq!(hits2, 2 * gemm_weights, "second shard hits every pack");
+    // weights updated -> epoch advance -> packs are paid again
+    b.on_weights_updated(1);
+    b.train_step(3, &tokens, &labels, &params).unwrap();
+    let (packs3, _, _) = b.mx_cache_stats();
+    assert_eq!(packs3, 2 * packs1, "new epoch re-packs once per weight");
+}
+
+#[test]
+fn native_eval_reuses_the_train_forward_packs() {
+    let (mut b, params) = native("mxfp4");
+    let (tokens, labels) = ramp_tokens(&*b);
+    b.train_step(1, &tokens, &labels, &params).unwrap();
+    let (packs, hits0, _) = b.mx_cache_stats();
+    b.eval_step(&tokens, &labels, &params).unwrap();
+    let (packs_after, hits1, _) = b.mx_cache_stats();
+    assert_eq!(packs, packs_after, "eval must not re-pack weights");
+    assert!(hits1 > hits0, "eval forward must hit the cached fwd packs");
+}
+
+// ---------------------------------------------------------------------------
+// artifact backend: runs with `make artifacts` + real PJRT, skips otherwise
+// ---------------------------------------------------------------------------
+
+fn artifact_registry() -> Option<Registry> {
     if !executor::backend_available() {
-        eprintln!("skipping runtime integration test: stub xla backend (see rust/vendor/xla)");
+        eprintln!("skipping artifact integration test: stub xla backend (see rust/vendor/xla)");
         return None;
     }
     match Registry::open(&mxfp4_train::runtime::default_artifacts_dir()) {
         Ok(r) => Some(r),
         Err(e) => {
-            eprintln!("skipping runtime integration test: {e} (run `make artifacts`)");
+            eprintln!("skipping artifact integration test: {e} (run `make artifacts`)");
             None
         }
     }
 }
 
 #[test]
-fn train_step_executes_and_loss_is_sane() {
-    let Some(reg) = registry() else { return };
+fn artifact_train_step_executes_and_loss_is_sane() {
+    let Some(reg) = artifact_registry() else { return };
     let a = reg.find("test", "bf16", "train").unwrap();
     let exe = Executor::compile_cpu(a).unwrap();
     let params = executor::init_params(a, 0);
@@ -32,15 +137,14 @@ fn train_step_executes_and_loss_is_sane() {
     // random init, vocab 256: loss ~ ln(256) = 5.55
     assert!(out.loss > 4.0 && out.loss < 7.0, "loss {}", out.loss);
     assert_eq!(out.grads.len(), params.len());
-    // gradients flow: at least the embedding grad is nonzero
     let gnorm: f64 = out.grads[0].iter().map(|&g| (g as f64).powi(2)).sum();
     assert!(gnorm > 0.0);
     assert!(out.grads.iter().flatten().all(|g| g.is_finite()));
 }
 
 #[test]
-fn mxfp4_rht_sr_train_step_executes() {
-    let Some(reg) = registry() else { return };
+fn artifact_mxfp4_rht_sr_train_step_executes() {
+    let Some(reg) = artifact_registry() else { return };
     let a = reg.find("test", "mxfp4_rht_sr", "train").unwrap();
     let exe = Executor::compile_cpu(a).unwrap();
     let params = executor::init_params(a, 0);
@@ -51,14 +155,13 @@ fn mxfp4_rht_sr_train_step_executes() {
     let o2 = exe.train_step(1, &tokens, &labels, &params).unwrap();
     let o3 = exe.train_step(2, &tokens, &labels, &params).unwrap();
     assert!(o1.loss.is_finite());
-    // same seed -> bit-identical grads; different seed -> different SR draws
     assert_eq!(o1.grads[0], o2.grads[0], "SR must be seed-deterministic");
     assert_ne!(o1.grads[0], o3.grads[0], "different seeds must dither differently");
 }
 
 #[test]
-fn eval_and_logits_execute() {
-    let Some(reg) = registry() else { return };
+fn artifact_eval_and_logits_execute() {
+    let Some(reg) = artifact_registry() else { return };
     let ev = reg.find_fwd("test", "bf16", "eval").unwrap();
     let lg = reg.find_fwd("test", "bf16", "logits").unwrap();
     let exe_e = Executor::compile_cpu(ev).unwrap();

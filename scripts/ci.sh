@@ -5,7 +5,10 @@
 #   1. cargo fmt --check   (formatting)
 #   2. cargo build --release
 #   3. cargo test -q       (tier-1: unit + property + gated integration)
-#   4. cargo doc           (rustdoc, warnings denied)
+#   4. compile-check every bench and example target
+#   5. quickstart on the native backend: a real 20-step train whose loss
+#      must decrease (the example exits nonzero otherwise)
+#   6. cargo doc           (rustdoc, warnings denied)
 #
 # Usage: ./scripts/ci.sh        (from the repo root; any extra args are
 #        passed through to `cargo test`)
@@ -28,6 +31,12 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q "$@"
+
+echo "==> compile benches + examples"
+cargo build --release --benches --examples
+
+echo "==> quickstart (native-capable 20-step train, loss must decrease)"
+cargo run --release --example quickstart
 
 echo "==> cargo doc (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
