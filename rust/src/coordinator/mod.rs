@@ -5,7 +5,8 @@
 //! * `metrics` — CSV + console logging (regenerates the paper's curves)
 //! * `checkpoint` — binary tensor snapshots
 //! * `mxcache` — quantize-once MXFP4 weight cache (packed `MxMat` views
-//!   of the compute weights, invalidated per optimizer step)
+//!   of the compute weights, invalidated per optimizer step) plus the
+//!   per-epoch f32 `PrepCache` for deterministic dgrad weight prep
 
 pub mod checkpoint;
 pub mod dp;
@@ -13,5 +14,5 @@ pub mod metrics;
 pub mod mxcache;
 pub mod trainer;
 
-pub use mxcache::{MxWeightCache, Orientation};
+pub use mxcache::{MxWeightCache, Orientation, PrepCache};
 pub use trainer::{RunSummary, Trainer};

@@ -20,7 +20,7 @@
 //! form, re-quantize only activations/gradients, which change per GEMM
 //! anyway.
 
-use crate::gemm::transpose_flat;
+use crate::gemm::{transpose_flat, Mat};
 use crate::mx::mat::MxMat;
 use crate::rng::Rng;
 
@@ -122,6 +122,20 @@ impl MxWeightCache {
         self.entries[idx][slot].as_ref().unwrap()
     }
 
+    /// Read-only view of an already-packed NR slot — `None` until
+    /// [`pack_nr`](Self::pack_nr) has populated it this epoch. This is
+    /// the serving path: `serve::ServeModel` packs every forward weight
+    /// exactly once at checkpoint load, then shares the cache immutably
+    /// (`Arc`) across all decode sessions, which read through here
+    /// without touching the hit counters (no `&mut` at serve time).
+    pub fn get_nr(&self, idx: usize, orientation: Orientation) -> Option<&MxMat> {
+        let slot = match orientation {
+            Orientation::AsStored => 0,
+            Orientation::Transposed => 1,
+        };
+        self.entries[idx][slot].as_ref()
+    }
+
     /// Algorithm 2 (stochastic) pack — **never cached**. Each call draws
     /// fresh dither from `rng`, as Lemma 3.1's unbiasedness requires; the
     /// cache only tallies the draw so step accounting stays complete.
@@ -149,6 +163,68 @@ impl MxWeightCache {
             .flat_map(|pair| pair.iter())
             .filter_map(|e| e.as_ref().map(MxMat::packed_bytes))
             .sum()
+    }
+}
+
+/// Per-epoch f32 weight-prep cache — the deterministic *unquantized*
+/// sibling of [`MxWeightCache`].
+///
+/// The packed NR recipes already pay weight prep once per step, but two
+/// dgrad arms re-did theirs on every GEMM: the `bf16` baseline
+/// re-transposed each weight (`transpose_flat` per shard per step), and
+/// the RHT arm cloned the weight so `mx_matmul_packed` could transpose
+/// it internally. Both preps are pure functions of the weight bytes, so
+/// this cache holds the transposed f32 weight per parameter and
+/// invalidates on the same epoch boundary as the packed cache. (The RHT
+/// sign transform itself is *not* cacheable — it draws fresh per GEMM —
+/// which is why the cached artifact is the transpose, not the
+/// transformed operand.)
+#[derive(Debug)]
+pub struct PrepCache {
+    epoch: u64,
+    entries: Vec<Option<Mat>>,
+    /// Transposes actually performed (cache misses).
+    pub builds: usize,
+    /// Requests served from cache.
+    pub hits: usize,
+}
+
+impl PrepCache {
+    /// Cache over `n_params` parameter slots, starting at epoch 0.
+    pub fn new(n_params: usize) -> PrepCache {
+        PrepCache { epoch: 0, entries: (0..n_params).map(|_| None).collect(), builds: 0, hits: 0 }
+    }
+
+    /// Move to a new epoch, dropping every cached prep. Idempotent for
+    /// the same epoch value (mirrors [`MxWeightCache::advance`]).
+    pub fn advance(&mut self, epoch: u64) {
+        if epoch != self.epoch {
+            self.epoch = epoch;
+            for e in &mut self.entries {
+                *e = None;
+            }
+        }
+    }
+
+    /// Unconditionally drop every cached prep without changing the epoch
+    /// (out-of-band weight rewrite; mirrors [`MxWeightCache::invalidate`]).
+    pub fn invalidate(&mut self) {
+        for e in &mut self.entries {
+            *e = None;
+        }
+    }
+
+    /// The transpose of row-major `rows × cols` weight `idx` as a
+    /// `(cols, rows)` [`Mat`], built at most once per epoch.
+    pub fn transposed(&mut self, idx: usize, data: &[f32], rows: usize, cols: usize) -> &Mat {
+        if self.entries[idx].is_none() {
+            self.entries[idx] =
+                Some(Mat { rows: cols, cols: rows, data: transpose_flat(data, rows, cols) });
+            self.builds += 1;
+        } else {
+            self.hits += 1;
+        }
+        self.entries[idx].as_ref().unwrap()
     }
 }
 
@@ -221,6 +297,42 @@ mod tests {
         let manual = MxMat::quantize_nr(&transpose_flat(&w, 16, 48), 48, 16);
         assert_eq!(t, manual);
         assert_eq!((t.rows, t.cols), (48, 16));
+    }
+
+    #[test]
+    fn get_nr_reads_without_counting() {
+        let w = weight(32, 64, 6);
+        let mut cache = MxWeightCache::new(1);
+        assert!(cache.get_nr(0, Orientation::AsStored).is_none(), "empty until packed");
+        let packed = cache.pack_nr(0, &w, 32, 64, Orientation::AsStored).clone();
+        let (packs, hits) = (cache.packs, cache.hits);
+        let seen = cache.get_nr(0, Orientation::AsStored).unwrap();
+        assert_eq!(*seen, packed);
+        assert_eq!((cache.packs, cache.hits), (packs, hits), "read path must not count");
+        assert!(cache.get_nr(0, Orientation::Transposed).is_none());
+    }
+
+    #[test]
+    fn prep_cache_transposes_once_per_epoch() {
+        let w = weight(16, 48, 8);
+        let mut prep = PrepCache::new(2);
+        let t1 = prep.transposed(0, &w, 16, 48).clone();
+        assert_eq!((t1.rows, t1.cols), (48, 16));
+        assert_eq!(t1.data, transpose_flat(&w, 16, 48));
+        let t2 = prep.transposed(0, &w, 16, 48).clone();
+        assert_eq!(t1, t2);
+        assert_eq!((prep.builds, prep.hits), (1, 1));
+        // new epoch drops the prep; same-epoch advance is a no-op
+        prep.advance(1);
+        prep.transposed(0, &w, 16, 48);
+        assert_eq!(prep.builds, 2);
+        prep.advance(1);
+        prep.transposed(0, &w, 16, 48);
+        assert_eq!((prep.builds, prep.hits), (2, 2));
+        // invalidate clears within the epoch
+        prep.invalidate();
+        prep.transposed(0, &w, 16, 48);
+        assert_eq!(prep.builds, 3);
     }
 
     #[test]

@@ -94,37 +94,26 @@ pub fn cloze_accuracy(
     Ok(correct as f64 / items.len().max(1) as f64)
 }
 
-/// Greedy generation with a logits-capable [`Backend`] (demo / smoke
-/// tool). Feeds back one token at a time inside a fixed-length window.
+/// Greedy generation with any [`Backend`] (demo / smoke tool) — the
+/// `temperature == 0` point of [`crate::serve::generate`], kept as a
+/// thin wrapper for existing callers. Where this used to recompute the
+/// whole window per token, it now runs the KV-cached incremental
+/// decoder (one `decode_step` per token; full recompute only on
+/// backends without a KV cache), producing the identical token stream.
 pub fn generate_greedy(
     backend: &mut dyn Backend,
     params: &[Vec<f32>],
     prompt: &[i32],
     n_new: usize,
 ) -> Result<Vec<i32>> {
-    let (b, t, v) = (backend.batch(), backend.seq_len(), backend.vocab());
-    let mut window: Vec<i32> = prompt.to_vec();
-    anyhow::ensure!(window.len() <= t, "prompt longer than context");
-    let mut out = Vec::with_capacity(n_new);
-    for _ in 0..n_new {
-        let pos = window.len() - 1;
-        let mut tokens = vec![0i32; b * t];
-        tokens[..window.len()].copy_from_slice(&window);
-        let logits = backend.logits(&tokens, params)?;
-        let row = &logits.data[pos * v..(pos + 1) * v];
-        let next = row
-            .iter()
-            .enumerate()
-            .max_by(|(_, x), (_, y)| x.partial_cmp(y).unwrap())
-            .map(|(i, _)| i as i32)
-            .unwrap();
-        out.push(next);
-        if window.len() == t {
-            window.remove(0);
-        }
-        window.push(next);
-    }
-    Ok(out)
+    crate::serve::generate(
+        backend,
+        params,
+        prompt,
+        n_new,
+        &crate::serve::SamplingParams::greedy(),
+        0,
+    )
 }
 
 #[cfg(test)]

@@ -308,7 +308,51 @@ pub fn mx_matmul_packed(
     if mode == MxMode::Exact {
         return matmul(a, b, workers);
     }
-    let (qa, qbt) = mx_prep_operands(a, b, mode, g, rng, workers);
+    mx_packed_pipeline(a.clone(), b.transpose(), mode, g, rng, workers)
+}
+
+/// [`mx_matmul_packed`] with B supplied *already transposed* (`bt`:
+/// `(n, k)` for `B: (k, n)`) — the entry point for callers that cache the
+/// deterministic transpose across GEMMs (`coordinator::mxcache::PrepCache`
+/// feeding the native dgrad). Both entries share [`mx_packed_pipeline`]
+/// and therefore the same rng draw order (RHT sign vector, then A's
+/// dither, then Bᵀ's), so for equal operands and seed they are
+/// bit-identical; only the per-call transpose is skipped.
+pub fn mx_matmul_packed_bt(
+    a: &Mat,
+    bt: &Mat,
+    mode: MxMode,
+    g: usize,
+    rng: &mut Rng,
+    workers: usize,
+) -> Mat {
+    assert_eq!(a.cols, bt.cols, "reduction dims differ");
+    if mode == MxMode::Exact {
+        return matmul_bt(a, bt, workers);
+    }
+    mx_packed_pipeline(a.clone(), bt.clone(), mode, g, rng, workers)
+}
+
+/// The shared non-exact packed pipeline over owned, reduction-aligned
+/// operands (`qa`: `(m, k)`, `qbt`: `(n, k)`): blockwise RHT (one sign
+/// vector touching both operands), SR or NR pack, LUT GEMM, 16/9 SR
+/// rescale. Draw order — sign vector, A's dither, Bᵀ's dither — is the
+/// invariant the SR parity tests and the cached-prep dgrad rely on.
+fn mx_packed_pipeline(
+    mut qa: Mat,
+    mut qbt: Mat,
+    mode: MxMode,
+    g: usize,
+    rng: &mut Rng,
+    workers: usize,
+) -> Mat {
+    debug_assert_ne!(mode, MxMode::Exact, "exact mode never packs");
+    if mode.uses_rht() {
+        assert_eq!(qa.cols % g, 0, "k {} not a multiple of g {g}", qa.cols);
+        let sign = hadamard::sample_sign(g, rng);
+        hadamard::rht_blockwise_dense(&mut qa.data, &sign, workers);
+        hadamard::rht_blockwise_dense(&mut qbt.data, &sign, workers);
+    }
     let (pa, pbt) = if mode.uses_sr() {
         let pa = qa.pack_sr(rng);
         let pbt = qbt.pack_sr(rng);
@@ -478,6 +522,22 @@ mod tests {
                     "{mode:?} elem {i}: qdq {x} vs packed {y}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn packed_bt_entry_is_bit_identical_to_packed() {
+        // PrepCache feeds mx_matmul_packed_bt a cached transpose; the two
+        // entries must agree byte-for-byte per mode and seed, or cached
+        // dgrad prep would silently change gradients.
+        let mut rng = Rng::seed(40);
+        let a = Mat::gaussian(7, 64, 1.0, &mut rng);
+        let b = Mat::gaussian(64, 9, 1.0, &mut rng);
+        let bt = b.transpose();
+        for mode in [MxMode::Exact, MxMode::Nr, MxMode::Sr, MxMode::Rht, MxMode::RhtSr] {
+            let c1 = mx_matmul_packed(&a, &b, mode, 32, &mut Rng::seed(88), 2);
+            let c2 = mx_matmul_packed_bt(&a, &bt, mode, 32, &mut Rng::seed(88), 2);
+            assert_eq!(c1.data, c2.data, "{mode:?}");
         }
     }
 

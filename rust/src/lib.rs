@@ -26,8 +26,9 @@
 //! | `mx::mat` | §1, Table 5 | **packed tensor engine**: flat SoA `MxMat` + FP4×FP4 product LUT |
 //! | `gemm` | Algorithm 3 | qdq reference GEMM (`mx_matmul`) + packed LUT GEMM (`mx_gemm_packed`) |
 //! | `hadamard` | §3.2, Eq. 5 | blockwise RHT, dense and O(n log n) FWHT forms |
-//! | `model` | §4, Alg. 3 | **native GPT with manual backprop**: every linear GEMM (fwd/dgrad/wgrad) routed through the MX engine per recipe |
-//! | `coordinator` | §4 | trainer loop, DP pool, metrics, checkpoints, quantize-once `mxcache` |
+//! | `model` | §4, Alg. 3 | **native GPT with manual backprop**: every linear GEMM (fwd/dgrad/wgrad) routed through the MX engine per recipe; KV-cached incremental decoder |
+//! | `serve` | §1, §4 | **serving subsystem**: pack-once `ServeModel`, continuous-batching `Engine`, seeded sampling (`docs/SERVING.md`) |
+//! | `coordinator` | §4 | trainer loop, DP pool, metrics, checkpoints, quantize-once `mxcache` + dgrad `PrepCache` |
 //! | `optim` | §4.1 | AdamW with FP32 masters + BF16 compute copies, cosine schedule |
 //! | `perfmodel` | Table 5, §4.2 | roofline model of the backward-pass speedups |
 //! | `runtime` | §4 | the pluggable `Backend` trait: native GPT or PJRT executor over AOT artifacts |
@@ -75,5 +76,6 @@ pub mod optim;
 pub mod perfmodel;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;

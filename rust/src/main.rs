@@ -5,6 +5,8 @@
 //!   sweep       run the Table 2 / Table 4 recipe sweeps
 //!   eval        validation perplexity + cloze accuracy for a checkpoint
 //!   generate    greedy generation demo from a checkpoint
+//!   serve       continuous-batching KV-cached decode server (one-shot
+//!               --prompt, --stdin line/JSON protocol, or --demo N)
 //!   variance    Fig. 2 variance study (rust substrates)
 //!   table5      roofline throughput table (perfmodel)
 //!   formats     print Table 1 (FP datatype zoo)
@@ -23,7 +25,9 @@ use mxfp4_train::config::TrainConfig;
 use mxfp4_train::coordinator::Trainer;
 use mxfp4_train::data::Dataset;
 use mxfp4_train::runtime::{executor, Backend, BackendSpec, Registry};
+use mxfp4_train::serve;
 use mxfp4_train::util::cli::Args;
+use mxfp4_train::util::json::{self, Json};
 use mxfp4_train::{eval, gemm, hadamard, info, mx, perfmodel, rng::Rng};
 
 fn main() -> Result<()> {
@@ -34,13 +38,14 @@ fn main() -> Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("eval") => cmd_eval(&args),
         Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
         Some("variance") => cmd_variance(&args),
         Some("table5") => cmd_table5(&args),
         Some("formats") => cmd_formats(),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: mxfp4-train <train|sweep|eval|generate|variance|table5|formats|artifacts> [--key value ...]"
+                "usage: mxfp4-train <train|sweep|eval|generate|serve|variance|table5|formats|artifacts> [--key value ...]"
             );
             Ok(())
         }
@@ -208,6 +213,187 @@ fn cmd_generate(args: &Args) -> Result<()> {
     println!("prompt tokens: {prompt:?}");
     println!("generated:     {out:?}");
     Ok(())
+}
+
+/// Continuous-batching serve loop over the packed MXFP4 engine.
+///
+/// Input modes (first match wins):
+///   --prompt "1,2,3"   one-shot: a single request, print its completion
+///   --stdin            line protocol: one request per line, either bare
+///                      token ids (`12 7 33`) or JSON
+///                      (`{"id":1,"prompt":[12,7],"max_new":8,
+///                        "temperature":0.8,"top_k":4,"seed":3}`);
+///                      responses stream back as JSON lines
+///   --demo N           N staggered requests from the (synthetic) corpus
+///
+/// Shared knobs: --config, --recipe (forward precision), --backend
+/// native|artifact|auto, --checkpoint (absent = random init demo
+/// weights), --tokens (default max_new), --temperature, --top-k, --seed,
+/// --max-batch. Weights are packed once at load and shared (`Arc`)
+/// across every session; a tokens/sec + occupancy summary prints at exit.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    let config = args.get_or("config", "tiny");
+    let recipe = args.get_or("recipe", "mxfp4");
+    let choice = args.get_or("backend", "auto");
+    let spec = BackendSpec::resolve_fwd(config, recipe, "logits", choice, reg.as_ref())?;
+    let params = match args.get("checkpoint") {
+        Some(ckpt) => {
+            mxfp4_train::coordinator::checkpoint::load(std::path::Path::new(ckpt))?.1
+        }
+        None => {
+            info!("no --checkpoint: serving randomly-initialized weights (demo/smoke mode)");
+            executor::init_params_for(
+                &spec.param_specs(),
+                spec.n_layers(),
+                args.get_u64("seed", 0),
+            )
+        }
+    };
+    let backend: Box<dyn serve::ServeBackend> = match &spec {
+        BackendSpec::Native { cfg, recipe, .. } => {
+            // the native fast path: pack once, share across sessions
+            let model = serve::ServeModel::new(cfg.clone(), recipe.clone(), params)?;
+            info!("packed {} bytes of MXFP4 weight views once for this checkpoint", model.packed_bytes());
+            Box::new(std::sync::Arc::new(model))
+        }
+        BackendSpec::Artifact(_) => Box::new(serve::BackendServe::new(spec.connect()?, params)),
+    };
+    info!("serving via {}", backend.describe());
+    let max_batch = args.get_usize("max-batch", 8);
+    let mut engine = serve::Engine::new(backend, serve::EngineConfig { max_batch });
+
+    let defaults = serve::Request {
+        id: 0,
+        prompt: vec![],
+        max_new: args.get_usize("tokens", 32),
+        sampling: serve::SamplingParams {
+            temperature: args.get_f32("temperature", 0.0),
+            top_k: args.get_usize("top-k", 0),
+        },
+        seed: args.get_u64("seed", 0),
+    };
+
+    if let Some(p) = args.get("prompt") {
+        let prompt = parse_prompt_tokens(p)?;
+        engine.submit(serve::Request { prompt, ..defaults });
+        for c in engine.run()? {
+            print_completion(&c);
+        }
+    } else if args.has("stdin") {
+        for (i, line) in std::io::stdin().lines().enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            // a malformed line gets an error response; it must not take
+            // down the queued and in-flight sessions with it
+            match parse_request_line(&line, i as u64, &defaults) {
+                Ok(req) => engine.submit(req),
+                Err(e) => {
+                    let doc = json::obj(vec![
+                        ("id", Json::Num(i as f64)),
+                        ("error", json::s(&e.to_string())),
+                    ]);
+                    println!("{doc}");
+                }
+            }
+            // tick between submissions so admissions interleave with
+            // decode — the continuous part of continuous batching
+            engine.step()?;
+            for c in engine.take_completed() {
+                print_completion(&c);
+            }
+        }
+        for c in engine.run()? {
+            print_completion(&c);
+        }
+    } else {
+        let n = args.get_usize("demo", 4);
+        let ds = dataset(args, 1)?;
+        anyhow::ensure!(ds.val.len() > 16, "demo mode needs a validation split > 16 tokens");
+        for i in 0..n {
+            let len = 4 + (i * 3) % 9;
+            let start = (i * 131) % (ds.val.len() - len);
+            engine.submit(serve::Request {
+                id: i as u64,
+                prompt: ds.val[start..start + len].to_vec(),
+                seed: defaults.seed ^ i as u64,
+                ..defaults.clone()
+            });
+        }
+        for c in engine.run()? {
+            print_completion(&c);
+        }
+    }
+
+    let st = engine.stats().clone();
+    println!(
+        "served {} request(s): {} prompt tokens prefilled, {} tokens generated in {:.3}s \
+         ({:.0} tok/s), mean batch occupancy {:.2} over {} decode steps",
+        st.completed,
+        st.prefill_tokens,
+        st.generated_tokens,
+        st.secs,
+        st.tokens_per_sec(),
+        st.occupancy(max_batch),
+        st.decode_steps,
+    );
+    Ok(())
+}
+
+/// `"1,2,3"` or `"1 2 3"` → token ids.
+fn parse_prompt_tokens(s: &str) -> Result<Vec<i32>> {
+    s.split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<i32>().with_context(|| format!("bad prompt token {t:?}")))
+        .collect()
+}
+
+/// One `--stdin` request line: JSON object or bare token ids; missing
+/// fields fall back to the CLI-level defaults.
+fn parse_request_line(line: &str, line_no: u64, defaults: &serve::Request) -> Result<serve::Request> {
+    let mut req = serve::Request { id: line_no, ..defaults.clone() };
+    if line.trim_start().starts_with('{') {
+        let doc = json::parse(line).map_err(|e| anyhow::anyhow!("request line {line_no}: {e}"))?;
+        if let Some(id) = doc.get("id").as_i64() {
+            req.id = id as u64;
+        }
+        req.prompt = doc
+            .get("prompt")
+            .as_arr()
+            .context("request needs a \"prompt\" array of token ids")?
+            .iter()
+            .map(|v| v.as_i64().map(|t| t as i32))
+            .collect::<Option<Vec<i32>>>()
+            .context("prompt must hold integers")?;
+        if let Some(n) = doc.get("max_new").as_usize() {
+            req.max_new = n;
+        }
+        if let Some(t) = doc.get("temperature").as_f64() {
+            req.sampling.temperature = t as f32;
+        }
+        if let Some(k) = doc.get("top_k").as_usize() {
+            req.sampling.top_k = k;
+        }
+        if let Some(s) = doc.get("seed").as_i64() {
+            req.seed = s as u64;
+        }
+    } else {
+        req.prompt = parse_prompt_tokens(line)?;
+    }
+    Ok(req)
+}
+
+/// One completion as a JSON response line.
+fn print_completion(c: &serve::Completion) {
+    let doc = json::obj(vec![
+        ("id", Json::Num(c.id as f64)),
+        ("prompt_len", Json::Num(c.prompt_len as f64)),
+        ("tokens", json::arr(c.tokens.iter().map(|&t| Json::Num(t as f64)).collect())),
+        ("finish", json::s(c.finish.as_str())),
+    ]);
+    println!("{doc}");
 }
 
 /// Fig. 2: mean variance of Q(A)^T Q(B) with and without the RHT.

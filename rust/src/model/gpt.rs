@@ -33,7 +33,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::mxcache::{MxWeightCache, Orientation};
+use crate::coordinator::mxcache::{MxWeightCache, Orientation, PrepCache};
 use crate::gemm::{self, Mat, MxMode};
 use crate::mx::mat::MxMat;
 use crate::mx::quant;
@@ -64,6 +64,9 @@ pub struct NativeBackend {
     batch: usize,
     specs: Vec<TensorSpec>,
     cache: MxWeightCache,
+    /// Deterministic f32 dgrad prep (bf16 transpose / RHT transpose),
+    /// paid once per epoch like the packed NR recipes' weight packs.
+    prep: PrepCache,
     workers: usize,
 }
 
@@ -83,6 +86,7 @@ impl NativeBackend {
         let specs = cfg.param_specs();
         NativeBackend {
             cache: MxWeightCache::new(specs.len()),
+            prep: PrepCache::new(specs.len()),
             specs,
             batch,
             cfg,
@@ -97,6 +101,13 @@ impl NativeBackend {
 
     pub fn recipe(&self) -> &NativeRecipe {
         &self.recipe
+    }
+
+    /// (transposes built, requests served from cache) of the per-epoch
+    /// dgrad weight-prep cache — the `bf16`/RHT analogue of
+    /// [`Backend::mx_cache_stats`]'s quantize-once accounting.
+    pub fn prep_stats(&self) -> (usize, usize) {
+        (self.prep.builds, self.prep.hits)
     }
 
     fn weight_dims(&self, idx: usize) -> (usize, usize) {
@@ -144,16 +155,20 @@ impl NativeBackend {
 
     /// dgrad `dx = g2 @ W` (reduction over W's stored rows). NR weight
     /// packs come from the cache (`Orientation::Transposed`); SR packs
-    /// are drawn fresh per GEMM as Lemma 3.1 requires; RHT modes go
-    /// through the full `mx_matmul_packed` pipeline (the sign vector
-    /// must touch both operands, so a cached pack cannot serve them).
+    /// are drawn fresh per GEMM as Lemma 3.1 requires; RHT modes run the
+    /// full quantize pipeline per GEMM (the fresh sign vector must touch
+    /// both operands, so a cached *pack* cannot serve them) but read the
+    /// deterministic weight transpose from the per-epoch [`PrepCache`].
+    /// The `bf16` baseline reads the same cached transpose.
     fn linear_dgrad(&mut self, g2: &Mat, widx: usize, w: &[f32], rng: &mut Rng) -> Mat {
         let (m, n) = self.weight_dims(widx);
         debug_assert_eq!(g2.cols, m, "dgrad reduction dim");
         match self.recipe.bwd {
             MxMode::Exact => {
-                let wt = gemm::transpose_flat(w, m, n);
-                gemm::matmul_bt_raw(&g2.data, &wt, g2.rows, n, m, self.workers)
+                // per-epoch prep cache: the transpose is a pure function
+                // of the weight bytes, so microbatch shards 2..S reuse it
+                let wt = self.prep.transposed(widx, w, m, n);
+                gemm::matmul_bt_raw(&g2.data, &wt.data, g2.rows, n, m, self.workers)
             }
             MxMode::Nr => {
                 let pa = MxMat::quantize_nr(&g2.data, g2.rows, g2.cols);
@@ -170,8 +185,12 @@ impl NativeBackend {
                 c
             }
             mode => {
-                let wm = Mat { rows: m, cols: n, data: w.to_vec() };
-                gemm::mx_matmul_packed(g2, &wm, mode, g_eff(self.recipe.g, m), rng, self.workers)
+                // RHT sign draws are fresh per GEMM, but the transpose
+                // underneath is deterministic — serve it from the prep
+                // cache and feed the `_bt` entry (bit-identical results,
+                // no per-GEMM clone+transpose of the weight)
+                let wt = self.prep.transposed(widx, w, m, n);
+                gemm::mx_matmul_packed_bt(g2, wt, mode, g_eff(self.recipe.g, m), rng, self.workers)
             }
         }
     }
@@ -260,6 +279,250 @@ struct Fwd {
     lnf: LnStash,
     xf: Mat,
     logits: Mat,
+}
+
+// -- KV-cached incremental decode ----------------------------------------
+
+/// Per-layer key/value rows cached by the incremental decoder. Row `i`
+/// of `k` (resp. `v`) is position `i`'s key (value) projection —
+/// `d_model` wide, the middle (last) third of that position's qkv row.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    d: usize,
+    layers: Vec<LayerKv>,
+}
+
+#[derive(Debug, Clone)]
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    fn new(n_layers: usize, d: usize, capacity: usize) -> KvCache {
+        KvCache {
+            d,
+            layers: (0..n_layers)
+                .map(|_| LayerKv {
+                    k: Vec::with_capacity(capacity * d),
+                    v: Vec::with_capacity(capacity * d),
+                })
+                .collect(),
+        }
+    }
+
+    /// Cached positions (rows per layer).
+    pub fn len(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.k.len() / self.d.max(1))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One generation session's decoder state: the absorbed token window
+/// plus, for KV-capable backends, the per-layer key/value rows. States
+/// are backend-specific — feed one back only to the backend (or the
+/// `serve::ServeModel` built from the same checkpoint) that produced it.
+#[derive(Debug, Clone)]
+pub struct DecodeState {
+    /// Tokens absorbed so far, oldest first (prompt + fed-back samples).
+    /// `tokens.len()` is the next decode position.
+    pub tokens: Vec<i32>,
+    /// Per-layer K/V rows; `None` for backends that serve decode by
+    /// full-window recompute (the `Backend` trait default).
+    pub(crate) kv: Option<KvCache>,
+}
+
+impl DecodeState {
+    /// Window-only state for backends without a KV cache — the trait
+    /// default recomputes the full window per step from `tokens`.
+    pub fn window(tokens: Vec<i32>) -> DecodeState {
+        DecodeState { tokens, kv: None }
+    }
+
+    /// Positions absorbed so far (== the next decode position).
+    pub fn pos(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// Forward over a single prompt sequence (`1..=seq_len` rows), stashing
+/// every layer's K/V rows. `linear` is the recipe-routed forward GEMM
+/// `y = x @ Wᵀ` for parameter `idx` — the native backend passes its
+/// cache-backed [`NativeBackend::linear_fwd`], `serve::ServeModel` its
+/// read-only packed checkpoint. Returns logits for *all* prompt rows.
+///
+/// Every op here is row-local or (for attention) causal with the same
+/// accumulation order as [`attn_fwd`], so row `i` of the result is
+/// bit-identical to row `i` of the full-window forward over any window
+/// that starts with the same tokens.
+pub(crate) fn prefill_rows(
+    cfg: &GPTConfig,
+    params: &[Vec<f32>],
+    linear: &mut dyn FnMut(&Mat, usize) -> Mat,
+    tokens: &[i32],
+) -> Result<(KvCache, Mat)> {
+    let (d, t, heads) = (cfg.d_model, cfg.seq_len, cfg.n_heads);
+    let n = tokens.len();
+    ensure!(n >= 1 && n <= t, "prefill wants 1..={t} tokens, got {n}");
+    let vocab = cfg.vocab as i32;
+    let mut x = Mat::zeros(n, d);
+    for (i, &tk) in tokens.iter().enumerate() {
+        ensure!((0..vocab).contains(&tk), "token {tk} out of vocab range 0..{vocab}");
+        let te = &params[TOK_EMB][tk as usize * d..(tk as usize + 1) * d];
+        let pe = &params[POS_EMB][i * d..(i + 1) * d];
+        let xrow = &mut x.data[i * d..(i + 1) * d];
+        for c in 0..d {
+            xrow[c] = te[c] + pe[c];
+        }
+    }
+    let mut kv = KvCache::new(cfg.n_layers, d, t);
+    for l in 0..cfg.n_layers {
+        let base = layer_base(l);
+        let (h1, _) = ln_fwd(&x, &params[base], &params[base + 1]);
+        let qkv = linear(&h1, base + 2);
+        let lkv = &mut kv.layers[l];
+        for r in 0..n {
+            let row = qkv.row(r);
+            lkv.k.extend_from_slice(&row[d..2 * d]);
+            lkv.v.extend_from_slice(&row[2 * d..3 * d]);
+        }
+        let (attn, _) = attn_fwd(&qkv, 1, n, heads);
+        let proj = linear(&attn, base + 3);
+        let x_mid = add(&x, &proj);
+        let (h2, _) = ln_fwd(&x_mid, &params[base + 4], &params[base + 5]);
+        let f1 = linear(&h2, base + 6);
+        let mut a1 = f1;
+        for v in &mut a1.data {
+            *v = gelu(*v);
+        }
+        let f2 = linear(&a1, base + 7);
+        x = add(&x_mid, &f2);
+    }
+    let lb = lnf_base(cfg.n_layers);
+    let (xf, _) = ln_fwd(&x, &params[lb], &params[lb + 1]);
+    let logits = linear(&xf, TOK_EMB);
+    Ok((kv, logits))
+}
+
+/// One incremental decode step for a *batch of sessions*: row `s` of the
+/// step is session `s`'s new token. Appends each session's K/V rows and
+/// returns one logits row per session. This is the continuous-batching
+/// hot path: all per-token linear GEMMs run as one `(n_sessions × d)`
+/// GEMM per layer, and because both GEMM paths quantize and reduce per
+/// row, batched logits are bit-identical to running each session alone.
+pub(crate) fn decode_rows(
+    cfg: &GPTConfig,
+    params: &[Vec<f32>],
+    linear: &mut dyn FnMut(&Mat, usize) -> Mat,
+    states: &mut [&mut DecodeState],
+    tokens: &[i32],
+) -> Result<Mat> {
+    let (d, t, heads) = (cfg.d_model, cfg.seq_len, cfg.n_heads);
+    let ns = states.len();
+    ensure!(ns > 0, "decode wants at least one session");
+    ensure!(tokens.len() == ns, "one token per session: got {} for {ns}", tokens.len());
+    let vocab = cfg.vocab as i32;
+    let mut x = Mat::zeros(ns, d);
+    for (s, st) in states.iter().enumerate() {
+        let tk = tokens[s];
+        let pos = st.tokens.len();
+        ensure!(pos < t, "context window exhausted (position {pos} of {t})");
+        ensure!((0..vocab).contains(&tk), "token {tk} out of vocab range 0..{vocab}");
+        let kv = st.kv.as_ref();
+        ensure!(
+            kv.is_some_and(|kv| kv.len() == pos),
+            "decode state has no KV rows for position {pos} (built by prefill?)"
+        );
+        let te = &params[TOK_EMB][tk as usize * d..(tk as usize + 1) * d];
+        let pe = &params[POS_EMB][pos * d..(pos + 1) * d];
+        let xrow = &mut x.data[s * d..(s + 1) * d];
+        for c in 0..d {
+            xrow[c] = te[c] + pe[c];
+        }
+    }
+    for l in 0..cfg.n_layers {
+        let base = layer_base(l);
+        let (h1, _) = ln_fwd(&x, &params[base], &params[base + 1]);
+        let qkv = linear(&h1, base + 2);
+        let mut attn = Mat::zeros(ns, d);
+        for (s, st) in states.iter_mut().enumerate() {
+            let pos = st.tokens.len();
+            let lkv = &mut st.kv.as_mut().unwrap().layers[l];
+            let row = qkv.row(s);
+            lkv.k.extend_from_slice(&row[d..2 * d]);
+            lkv.v.extend_from_slice(&row[2 * d..3 * d]);
+            attn_decode_row(row, &lkv.k, &lkv.v, pos, d, heads, &mut attn.data[s * d..(s + 1) * d]);
+        }
+        let proj = linear(&attn, base + 3);
+        let x_mid = add(&x, &proj);
+        let (h2, _) = ln_fwd(&x_mid, &params[base + 4], &params[base + 5]);
+        let f1 = linear(&h2, base + 6);
+        let mut a1 = f1;
+        for v in &mut a1.data {
+            *v = gelu(*v);
+        }
+        let f2 = linear(&a1, base + 7);
+        x = add(&x_mid, &f2);
+    }
+    let lb = lnf_base(cfg.n_layers);
+    let (xf, _) = ln_fwd(&x, &params[lb], &params[lb + 1]);
+    let logits = linear(&xf, TOK_EMB);
+    for (st, &tk) in states.iter_mut().zip(tokens) {
+        st.tokens.push(tk);
+    }
+    Ok(logits)
+}
+
+/// Attention output for one new row at position `pos`, over the layer's
+/// cached K/V rows `0..=pos` (the new row already appended). This is
+/// operation-for-operation the `i = pos` body of [`attn_fwd`] — same
+/// score order, same running max, same softmax and accumulation order —
+/// which is what keeps incremental logits bit-identical to the
+/// full-window forward.
+fn attn_decode_row(
+    qkv_row: &[f32],
+    k: &[f32],
+    v: &[f32],
+    pos: usize,
+    d: usize,
+    heads: usize,
+    out: &mut [f32],
+) {
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut srow = vec![0.0f32; pos + 1];
+    for h in 0..heads {
+        let q = &qkv_row[h * hd..(h + 1) * hd];
+        let mut mx = f32::NEG_INFINITY;
+        for (j, s) in srow.iter_mut().enumerate() {
+            let kj = &k[j * d + h * hd..j * d + (h + 1) * hd];
+            let mut acc = 0.0f32;
+            for c in 0..hd {
+                acc += q[c] * kj[c];
+            }
+            *s = acc * scale;
+            if *s > mx {
+                mx = *s;
+            }
+        }
+        let mut denom = 0.0f32;
+        for s in srow.iter_mut() {
+            *s = (*s - mx).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        for (j, &sj) in srow.iter().enumerate() {
+            let p = sj * inv;
+            let vj = &v[j * d + h * hd..j * d + (h + 1) * hd];
+            let orow = &mut out[h * hd..(h + 1) * hd];
+            for c in 0..hd {
+                orow[c] += p * vj[c];
+            }
+        }
+    }
 }
 
 impl Backend for NativeBackend {
@@ -398,16 +661,55 @@ impl Backend for NativeBackend {
         })
     }
 
+    /// KV-cached prefill: one full-width forward over the prompt rows,
+    /// stashing every layer's K/V projections. Single-sequence GEMM rows
+    /// are quantized and reduced exactly as the full-window forward
+    /// quantizes and reduces them (per row, per 32-block), so the
+    /// returned logits are bit-identical to [`Backend::logits`] at the
+    /// same positions — the parity contract `tests/serve.rs` pins down.
+    fn prefill(&mut self, tokens: &[i32], params: &[Vec<f32>]) -> Result<(DecodeState, Vec<f32>)> {
+        self.check_params(params)?;
+        let cfg = self.cfg.clone();
+        let (kv, logits) = {
+            let mut linear = |x: &Mat, idx: usize| self.linear_fwd(x, idx, &params[idx]);
+            prefill_rows(&cfg, params, &mut linear, tokens)?
+        };
+        let v = cfg.vocab;
+        let n = tokens.len();
+        let last = logits.data[(n - 1) * v..n * v].to_vec();
+        Ok((DecodeState { tokens: tokens.to_vec(), kv: Some(kv) }, last))
+    }
+
+    /// One KV-cached decode step: single-row attention + MLP GEMMs
+    /// against the cached K/V, through the same recipe-routed forward
+    /// linears (NR weight packs served by the quantize-once cache).
+    fn decode_step(
+        &mut self,
+        state: &mut DecodeState,
+        token: i32,
+        params: &[Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        self.check_params(params)?;
+        let cfg = self.cfg.clone();
+        let logits = {
+            let mut linear = |x: &Mat, idx: usize| self.linear_fwd(x, idx, &params[idx]);
+            decode_rows(&cfg, params, &mut linear, &mut [state], &[token])?
+        };
+        Ok(logits.data)
+    }
+
     fn set_compute_workers(&mut self, n: usize) {
         self.workers = n.max(1);
     }
 
     fn on_weights_updated(&mut self, epoch: u64) {
         self.cache.advance(epoch);
+        self.prep.advance(epoch);
     }
 
     fn invalidate_cache(&mut self) {
         self.cache.invalidate();
+        self.prep.invalidate();
     }
 
     fn mx_cache_stats(&self) -> (usize, usize, usize) {
@@ -785,6 +1087,70 @@ mod tests {
         assert_eq!(g_eff(64, 32), 32);
         assert_eq!(g_eff(128, 64), 64);
         assert_eq!(g_eff(32, 320), 32);
+    }
+
+    #[test]
+    fn kv_decode_matches_full_window_logits() {
+        // quick in-module parity check (the full per-recipe suite lives
+        // in tests/serve.rs): prefill + decode_step logits must be
+        // bit-identical to the full-window forward at every position
+        let mut b = backend("mxfp4");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 21);
+        let (t, v) = (b.seq_len(), b.vocab());
+        let mut rng = Rng::seed(22);
+        let seq: Vec<i32> = (0..t).map(|_| (rng.next_u64() % v as u64) as i32).collect();
+        let mut window = vec![0i32; b.batch() * t];
+        window[..t].copy_from_slice(&seq);
+        let full = b.logits(&window, &params).unwrap();
+
+        let (mut state, first) = b.prefill(&seq[..1], &params).unwrap();
+        assert_eq!(first, full.data[..v].to_vec(), "prefill row 0");
+        for (i, &tk) in seq.iter().enumerate().skip(1) {
+            let row = b.decode_step(&mut state, tk, &params).unwrap();
+            assert_eq!(row, full.data[i * v..(i + 1) * v].to_vec(), "decode row {i}");
+        }
+        assert_eq!(state.pos(), t);
+        assert!(b.decode_step(&mut state, 0, &params).is_err(), "window exhausted");
+    }
+
+    #[test]
+    fn prefill_of_longer_prompt_matches_stepwise() {
+        let mut b = backend("bf16");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 23);
+        let seq = [3i32, 1, 4, 1, 5, 9, 2, 6];
+        let (_, batched_last) = b.prefill(&seq, &params).unwrap();
+        let (mut state, mut row) = b.prefill(&seq[..1], &params).unwrap();
+        for &tk in &seq[1..] {
+            row = b.decode_step(&mut state, tk, &params).unwrap();
+        }
+        assert_eq!(batched_last, row, "multi-row prefill vs token-at-a-time");
+    }
+
+    #[test]
+    fn prep_cache_pays_dgrad_transpose_once_per_epoch() {
+        // bf16: one transpose per 2-D weight on the dgrad path (qkv,
+        // proj, fc1, fc2 per layer + tied head), then hits until the
+        // weights change
+        let mut b = backend("bf16");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 31);
+        let (toks, labs) = tokens_for(&b, 32);
+        let dgrads = 4 * b.n_layers() + 1;
+        b.train_step(1, &toks, &labs, &params).unwrap();
+        assert_eq!(b.prep_stats(), (dgrads, 0), "first step builds each prep once");
+        b.train_step(2, &toks, &labs, &params).unwrap();
+        assert_eq!(b.prep_stats(), (dgrads, dgrads), "same epoch: all hits");
+        b.on_weights_updated(1);
+        b.train_step(3, &toks, &labs, &params).unwrap();
+        assert_eq!(b.prep_stats(), (2 * dgrads, dgrads), "new epoch re-preps");
+        // the RHT arm shares the same cache; NR/SR arms never touch it
+        let mut r = backend("mxfp4_rht");
+        let (toks, labs) = tokens_for(&r, 33);
+        r.train_step(1, &toks, &labs, &params).unwrap();
+        assert_eq!(r.prep_stats().0, dgrads, "RHT dgrad preps via the cache");
+        let mut nr = backend("mxfp4");
+        let (toks, labs) = tokens_for(&nr, 34);
+        nr.train_step(1, &toks, &labs, &params).unwrap();
+        assert_eq!(nr.prep_stats(), (0, 0), "NR dgrad uses packed cache, not prep");
     }
 
     #[test]

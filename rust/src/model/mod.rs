@@ -13,12 +13,15 @@
 //! matches initializer rules with `ends_with`, not string equality.
 //!
 //! * [`recipe`] — which of the three GEMMs each recipe quantizes
-//! * [`gpt`] — the forward/backward engine ([`NativeBackend`])
+//! * [`gpt`] — the forward/backward engine ([`NativeBackend`]) plus the
+//!   KV-cached incremental decoder ([`DecodeState`], `prefill_rows` /
+//!   `decode_rows`) behind `Backend::prefill` / `Backend::decode_step`
+//!   and the `serve` subsystem
 
 pub mod gpt;
 pub mod recipe;
 
-pub use gpt::NativeBackend;
+pub use gpt::{DecodeState, KvCache, NativeBackend};
 pub use recipe::NativeRecipe;
 
 use crate::runtime::{DType, TensorSpec};

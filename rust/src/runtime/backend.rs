@@ -19,7 +19,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
-use crate::model::{GPTConfig, NativeBackend, NativeRecipe};
+use crate::model::{DecodeState, GPTConfig, NativeBackend, NativeRecipe};
 use crate::runtime::artifact::{Artifact, Registry, TensorSpec};
 use crate::runtime::executor::{self, Executor, Tensor, TrainOutput};
 
@@ -54,6 +54,46 @@ pub trait Backend {
     fn eval_step(&mut self, tokens: &[i32], labels: &[i32], params: &[Vec<f32>]) -> Result<f32>;
     /// Raw logits `(batch, seq, vocab)`.
     fn logits(&mut self, tokens: &[i32], params: &[Vec<f32>]) -> Result<Tensor>;
+    /// Absorb a prompt (`1..=seq_len` tokens) into a fresh
+    /// [`DecodeState`] and return the next-token logits row at its last
+    /// position. The default recomputes through [`logits`](Self::logits)
+    /// — correct for any backend (the artifact path serves this way);
+    /// KV-capable backends override with an incremental prefill.
+    fn prefill(&mut self, tokens: &[i32], params: &[Vec<f32>]) -> Result<(DecodeState, Vec<f32>)> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill wants a non-empty prompt");
+        anyhow::ensure!(
+            tokens.len() <= self.seq_len(),
+            "prompt length {} exceeds the context window {}",
+            tokens.len(),
+            self.seq_len()
+        );
+        let mut state = DecodeState::window(tokens[..tokens.len() - 1].to_vec());
+        let row = self.decode_step(&mut state, tokens[tokens.len() - 1], params)?;
+        Ok((state, row))
+    }
+    /// Feed one generated token into `state` and return the logits row
+    /// for the next position. The default pads the absorbed window into
+    /// a full `(batch, seq)` call to [`logits`](Self::logits) — the
+    /// full-recompute cost the KV-cached override exists to avoid.
+    fn decode_step(
+        &mut self,
+        state: &mut DecodeState,
+        token: i32,
+        params: &[Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        let (b, t, v) = (self.batch(), self.seq_len(), self.vocab());
+        anyhow::ensure!(
+            state.tokens.len() < t,
+            "context window exhausted (position {} of {t})",
+            state.tokens.len()
+        );
+        state.tokens.push(token);
+        let mut window = vec![0i32; b * t];
+        window[..state.tokens.len()].copy_from_slice(&state.tokens);
+        let logits = self.logits(&window, params)?;
+        let pos = state.tokens.len() - 1;
+        Ok(logits.data[pos * v..(pos + 1) * v].to_vec())
+    }
     /// Cap the backend's internal compute (GEMM) thread count. The DP
     /// pool divides the machine's cores among its workers so concurrent
     /// shards don't oversubscribe. Default: no-op (PJRT manages its own

@@ -21,6 +21,10 @@ pub use artifact::{Artifact, DType, Registry, TensorSpec};
 pub use backend::{ArtifactBackend, Backend, BackendSpec};
 pub use executor::{Executor, Tensor, TrainOutput};
 
+// Decoder state for `Backend::prefill` / `Backend::decode_step` (defined
+// next to the native engine that implements the KV-cached fast path).
+pub use crate::model::DecodeState;
+
 /// Repo-root-relative default artifacts directory.
 pub fn default_artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")

@@ -1,0 +1,407 @@
+//! The continuous-batching scheduler: a request queue + engine loop that
+//! admits and retires sequences *mid-batch*.
+//!
+//! Static batching pads every request to the slowest member of its
+//! batch; continuous batching instead re-forms the batch every decode
+//! tick. Each [`Engine::step`]:
+//!
+//! 1. **admit** — pop queued requests into free slots (up to
+//!    `max_batch`), prefill each prompt, and sample its first token;
+//! 2. **decode** — one batched tick: every active session's last token
+//!    goes through a single `(n_active × d)` GEMM per layer
+//!    ([`ServeBackend::decode`]), and each session samples its next
+//!    token from its own row with its own rng stream;
+//! 3. **retire** — sessions that hit `max_new` or the context window
+//!    leave immediately, freeing their slot for the next queued request
+//!    on the following tick.
+//!
+//! Because decode rows are bit-identical to batch-of-one calls and
+//! sampling streams are per-request, any admit/retire schedule produces
+//! exactly the tokens of running each request alone — the scheduler
+//! changes *throughput and occupancy*, never *outputs*.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::gemm::Mat;
+use crate::model::DecodeState;
+use crate::runtime::Backend;
+use crate::util::timer::Timer;
+
+use super::model::ServeModel;
+use super::sample::sample;
+use super::session::{Completion, FinishReason, Request, Session};
+
+/// What the engine needs from a model: prefill one prompt, decode one
+/// batched tick. Implemented by `Arc<ServeModel>` (packed native fast
+/// path, weights shared across sessions) and [`BackendServe`] (any
+/// [`Backend`], e.g. the artifact path via its full-window fallback).
+pub trait ServeBackend {
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn describe(&self) -> String;
+    /// Absorb a prompt; return the state + last-position logits row.
+    fn prefill(&mut self, tokens: &[i32]) -> Result<(DecodeState, Vec<f32>)>;
+    /// Append `tokens[s]` to `states[s]`; return one logits row per
+    /// session, in session order.
+    fn decode(&mut self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat>;
+}
+
+impl ServeBackend for Arc<ServeModel> {
+    fn seq_len(&self) -> usize {
+        ServeModel::seq_len(&**self)
+    }
+
+    fn vocab(&self) -> usize {
+        ServeModel::vocab(&**self)
+    }
+
+    fn describe(&self) -> String {
+        ServeModel::describe(&**self)
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<(DecodeState, Vec<f32>)> {
+        ServeModel::prefill(&**self, tokens)
+    }
+
+    fn decode(&mut self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat> {
+        ServeModel::decode_batch(&**self, states, tokens)
+    }
+}
+
+/// Serve any [`Backend`] through the engine: decode loops the sessions
+/// through `Backend::decode_step` one row at a time — no cross-session
+/// GEMM batching, but identical scheduler semantics and outputs. This is
+/// how the artifact path serves (its decode is the full-window
+/// recompute fallback); native callers should prefer `Arc<ServeModel>`.
+pub struct BackendServe {
+    backend: Box<dyn Backend>,
+    params: Vec<Vec<f32>>,
+}
+
+impl BackendServe {
+    pub fn new(backend: Box<dyn Backend>, params: Vec<Vec<f32>>) -> BackendServe {
+        BackendServe { backend, params }
+    }
+}
+
+impl ServeBackend for BackendServe {
+    fn seq_len(&self) -> usize {
+        self.backend.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.backend.vocab()
+    }
+
+    fn describe(&self) -> String {
+        format!("{} (per-session decode)", self.backend.describe())
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<(DecodeState, Vec<f32>)> {
+        self.backend.prefill(tokens, &self.params)
+    }
+
+    fn decode(&mut self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat> {
+        let v = self.backend.vocab();
+        let mut out = Mat::zeros(states.len(), v);
+        for (s, st) in states.iter_mut().enumerate() {
+            let row = self.backend.decode_step(st, tokens[s], &self.params)?;
+            out.data[s * v..(s + 1) * v].copy_from_slice(&row);
+        }
+        Ok(out)
+    }
+}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Max concurrent sessions per decode tick.
+    pub max_batch: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { max_batch: 8 }
+    }
+}
+
+/// Aggregate serving counters.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Batched decode ticks executed.
+    pub decode_steps: usize,
+    /// Prompt tokens absorbed by prefill.
+    pub prefill_tokens: usize,
+    /// Tokens sampled (prefill-sampled firsts + decode ticks).
+    pub generated_tokens: usize,
+    /// Requests retired (any finish reason).
+    pub completed: usize,
+    /// Σ active sessions over decode ticks (occupancy numerator).
+    pub occupancy_sum: usize,
+    /// Wall seconds inside [`Engine::step`].
+    pub secs: f64,
+}
+
+impl EngineStats {
+    /// Generated tokens per wall second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.generated_tokens as f64 / self.secs.max(1e-9)
+    }
+
+    /// Mean fraction of the batch occupied during decode ticks.
+    pub fn occupancy(&self, max_batch: usize) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / (self.decode_steps * max_batch.max(1)) as f64
+        }
+    }
+}
+
+/// The continuous-batching engine. See the module docs for the loop.
+pub struct Engine {
+    backend: Box<dyn ServeBackend>,
+    cfg: EngineConfig,
+    queue: VecDeque<Request>,
+    active: Vec<Session>,
+    done: Vec<Completion>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    pub fn new(backend: Box<dyn ServeBackend>, cfg: EngineConfig) -> Engine {
+        Engine {
+            backend,
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Enqueue a request (admitted when a batch slot frees up).
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    /// Requests not yet completed (queued + in flight).
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.cfg.max_batch.max(1)
+    }
+
+    pub fn describe(&self) -> String {
+        format!("{} / max batch {}", self.backend.describe(), self.max_batch())
+    }
+
+    /// Drain completions finished so far.
+    pub fn take_completed(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Run until every submitted request completes; returns all
+    /// completions not yet drained.
+    pub fn run(&mut self) -> Result<Vec<Completion>> {
+        while self.pending() > 0 {
+            self.step()?;
+        }
+        Ok(self.take_completed())
+    }
+
+    /// One scheduler tick (admit → batched decode → retire). Returns the
+    /// number of requests that completed during the tick.
+    pub fn step(&mut self) -> Result<usize> {
+        let timer = Timer::start();
+        let before = self.done.len();
+        while self.active.len() < self.max_batch() {
+            let Some(req) = self.queue.pop_front() else { break };
+            self.admit(req)?;
+        }
+        if !self.active.is_empty() {
+            self.stats.decode_steps += 1;
+            self.stats.occupancy_sum += self.active.len();
+            let tokens: Vec<i32> =
+                self.active.iter().map(|s| *s.generated.last().unwrap()).collect();
+            let logits = {
+                let mut states: Vec<&mut DecodeState> =
+                    self.active.iter_mut().map(|s| &mut s.state).collect();
+                self.backend.decode(&mut states, &tokens)?
+            };
+            let v = self.backend.vocab();
+            for (s, sess) in self.active.iter_mut().enumerate() {
+                let row = &logits.data[s * v..(s + 1) * v];
+                let next = sample(row, &sess.req.sampling, &mut sess.rng);
+                sess.generated.push(next);
+                self.stats.generated_tokens += 1;
+            }
+            let window = self.backend.seq_len();
+            let done = &mut self.done;
+            let stats = &mut self.stats;
+            self.active.retain_mut(|sess| match finish_of(sess, window) {
+                Some(f) => {
+                    stats.completed += 1;
+                    done.push(sess.complete(f));
+                    false
+                }
+                None => true,
+            });
+        }
+        self.stats.secs += timer.secs();
+        Ok(self.done.len() - before)
+    }
+
+    /// Prefill one request into an active session (or complete it
+    /// immediately: invalid prompt, one-token budget, or a prompt that
+    /// already fills the window).
+    fn admit(&mut self, mut req: Request) -> Result<()> {
+        let t = self.backend.seq_len();
+        let v = self.backend.vocab() as i32;
+        req.max_new = req.max_new.max(1);
+        if req.prompt.len() > t {
+            // keep the newest window of an over-long prompt
+            req.prompt.drain(..req.prompt.len() - t);
+        }
+        if req.prompt.is_empty() || req.prompt.iter().any(|tk| !(0..v).contains(tk)) {
+            self.stats.completed += 1;
+            self.done.push(Completion {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: vec![],
+                finish: FinishReason::Invalid,
+            });
+            return Ok(());
+        }
+        let (state, logits) = self.backend.prefill(&req.prompt)?;
+        self.stats.prefill_tokens += req.prompt.len();
+        let mut rng = Session::sampling_rng(req.seed);
+        let first = sample(&logits, &req.sampling, &mut rng);
+        self.stats.generated_tokens += 1;
+        let mut sess = Session::start(req, state, first, rng);
+        match finish_of(&sess, t) {
+            Some(f) => {
+                self.stats.completed += 1;
+                let c = sess.complete(f);
+                self.done.push(c);
+            }
+            None => self.active.push(sess),
+        }
+        Ok(())
+    }
+}
+
+/// Retirement check: budget exhausted, or no window room to absorb the
+/// last sampled token (which would be the next decode's input).
+///
+/// Deliberate divergence from [`super::sample::generate`]: the engine
+/// retires at the context window (`FinishReason::Window`, possibly
+/// under `max_new` tokens) where the single-stream generator slides the
+/// window and re-prefills. Under continuous batching a batch slot is
+/// better spent on queued traffic than on an ever-sliding session, and
+/// a slide would silently discard the oldest prompt tokens mid-request.
+fn finish_of(sess: &Session, window: usize) -> Option<FinishReason> {
+    if sess.generated.len() >= sess.req.max_new {
+        Some(FinishReason::Length)
+    } else if sess.state.tokens.len() >= window {
+        Some(FinishReason::Window)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GPTConfig, NativeRecipe};
+    use crate::runtime::executor::init_params_for;
+    use crate::serve::session::SamplingParams;
+
+    fn engine(max_batch: usize) -> Engine {
+        let (cfg, _) = GPTConfig::preset("micro").unwrap();
+        let params = init_params_for(&cfg.param_specs(), cfg.n_layers, 7);
+        let model =
+            ServeModel::new(cfg, NativeRecipe::parse("mxfp4").unwrap(), params).unwrap();
+        Engine::new(Box::new(Arc::new(model)), EngineConfig { max_batch })
+    }
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+        Request { id, prompt, max_new, sampling: SamplingParams::greedy(), seed: id }
+    }
+
+    #[test]
+    fn serves_a_single_request_to_length() {
+        let mut e = engine(4);
+        e.submit(req(1, vec![1, 2, 3], 5));
+        let done = e.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].tokens.len(), 5);
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert_eq!(e.stats().generated_tokens, 5);
+        assert_eq!(e.stats().prefill_tokens, 3);
+        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn queue_overflow_is_admitted_as_slots_free() {
+        // 3 requests, 2 slots: the third must wait, then get admitted
+        // mid-run — and every request still completes in full
+        let mut e = engine(2);
+        for i in 0..3 {
+            e.submit(req(i, vec![1 + i as i32, 2], 4));
+        }
+        let done = e.run().unwrap();
+        assert_eq!(done.len(), 3);
+        assert!(done.iter().all(|c| c.tokens.len() == 4));
+        // with 2 slots and 3 requests, some tick ran below full batch
+        let st = e.stats();
+        assert!(st.decode_steps >= 4, "staggered admits need extra ticks");
+        assert!(st.occupancy(2) > 0.0 && st.occupancy(2) <= 1.0);
+    }
+
+    #[test]
+    fn window_exhaustion_retires_early() {
+        // micro seq_len is 16: a 14-token prompt leaves room for the
+        // prefill-sampled token + 2 absorbed ⇒ 3 generated, not 8
+        let mut e = engine(2);
+        let prompt: Vec<i32> = (0..14).collect();
+        e.submit(req(5, prompt, 8));
+        let done = e.run().unwrap();
+        assert_eq!(done[0].finish, FinishReason::Window);
+        assert_eq!(done[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn invalid_and_overlong_prompts() {
+        let mut e = engine(2);
+        e.submit(req(1, vec![], 4)); // empty → invalid
+        e.submit(req(2, vec![1, 999], 4)); // out of vocab → invalid
+        let long: Vec<i32> = (0..40).map(|i| i % 10).collect(); // truncated to window
+        e.submit(req(3, long, 2));
+        let done = e.run().unwrap();
+        let by_id = |id: u64| done.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(by_id(1).finish, FinishReason::Invalid);
+        assert_eq!(by_id(2).finish, FinishReason::Invalid);
+        assert_eq!(by_id(3).prompt_len, 16, "kept the newest window");
+        assert!(!by_id(3).tokens.is_empty());
+    }
+
+    #[test]
+    fn max_new_zero_clamps_to_one() {
+        let mut e = engine(1);
+        e.submit(req(9, vec![4, 5], 0));
+        let done = e.run().unwrap();
+        assert_eq!(done[0].tokens.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Length);
+    }
+}

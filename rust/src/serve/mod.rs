@@ -1,0 +1,46 @@
+//! Serving subsystem: KV-cached incremental decode + continuous
+//! batching over the packed MXFP4 engine — the "millions of users" leg
+//! of the roadmap.
+//!
+//! Training amortizes one weight pack over the handful of GEMMs in a
+//! step; serving is the extreme case of the paper's quantize-once
+//! economics (arXiv:2502.20586 §4): one pack per *checkpoint*, reused
+//! across every token of every request. The pieces:
+//!
+//! * [`model`] — [`ServeModel`]: an immutable packed checkpoint. All 2-D
+//!   forward weights are NR-quantized into `MxMat` form exactly once at
+//!   load (through the same `MxWeightCache` the trainer uses, so the
+//!   pack/hit accounting stays observable), then shared read-only
+//!   (`Arc`) by every session. Decode batches the per-token linear GEMMs
+//!   of all active sessions into one `(batch × d)` GEMM per layer.
+//! * [`engine`] — [`Engine`]: the continuous-batching scheduler. A FIFO
+//!   request queue feeds up to `max_batch` concurrent sessions;
+//!   sequences are admitted and retired *mid-batch* (a finishing request
+//!   frees its slot for the next queued one on the very next tick), so
+//!   batch occupancy stays high under staggered traffic. Works over any
+//!   [`ServeBackend`]: the packed native model, or any
+//!   [`runtime::Backend`](crate::runtime::Backend) via [`BackendServe`]
+//!   (the artifact path serves through its full-window fallback).
+//! * [`session`] — [`Request`] / `Session` / [`Completion`] lifecycle
+//!   types and [`SamplingParams`].
+//! * [`sample`] — seeded greedy / temperature / top-k sampling plus
+//!   [`generate`], the single-stream generator behind
+//!   `eval::generate_greedy`.
+//!
+//! ## Determinism
+//!
+//! Batched decode rows are quantized and reduced per row, so a session's
+//! logits are bit-identical whether it runs alone or packed into a batch
+//! with any other traffic — scheduling never changes outputs. Sampling
+//! draws from a per-request rng stream (`fold_in(seed, SAMPLE_STREAM)`),
+//! independent of admission order. `tests/serve.rs` pins both down.
+
+pub mod engine;
+pub mod model;
+pub mod sample;
+pub mod session;
+
+pub use engine::{BackendServe, Engine, EngineConfig, EngineStats, ServeBackend};
+pub use model::ServeModel;
+pub use sample::{generate, sample};
+pub use session::{Completion, FinishReason, Request, SamplingParams};

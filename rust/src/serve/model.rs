@@ -1,0 +1,246 @@
+//! [`ServeModel`]: an immutable, pack-once GPT checkpoint for serving.
+//!
+//! Where [`NativeBackend`](crate::model::NativeBackend) owns a mutable
+//! per-step weight cache (training rewrites weights every step), a
+//! `ServeModel` freezes one checkpoint: every 2-D weight on the forward
+//! path (`qkv`, `proj`, `fc1`, `fc2` per layer + the tied head) is
+//! NR-quantized into packed [`MxMat`] form exactly once at construction
+//! — through a [`MxWeightCache`], so the quantize-once accounting
+//! (`packs` never grows after load) stays observable — and every method
+//! takes `&self`. That makes the model `Send + Sync`: wrap it in an
+//! [`Arc`](std::sync::Arc) and every session, thread, and engine shares
+//! the same packed bytes.
+//!
+//! The forward math itself is the native engine's: `prefill` /
+//! `decode_batch` delegate to `model::gpt`'s row-exact incremental
+//! forward, so logits are bit-identical to `NativeBackend::logits` at
+//! every position (the `tests/serve.rs` parity contract).
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::mxcache::{MxWeightCache, Orientation};
+use crate::gemm::{self, Mat};
+use crate::model::gpt::{decode_rows, prefill_rows};
+use crate::model::{layer_base, DecodeState, GPTConfig, NativeRecipe, TOK_EMB};
+use crate::mx::mat::MxMat;
+use crate::util::threadpool;
+
+/// A packed, read-only checkpoint ready to serve. See the module docs.
+pub struct ServeModel {
+    cfg: GPTConfig,
+    recipe: NativeRecipe,
+    params: Vec<Vec<f32>>,
+    /// Pack-once NR weight views (`Orientation::AsStored`), populated at
+    /// construction for quantized-forward recipes and never mutated.
+    cache: MxWeightCache,
+    /// (rows, cols) per parameter; `None` for 1-D tensors.
+    shapes: Vec<Option<(usize, usize)>>,
+    workers: usize,
+}
+
+impl ServeModel {
+    /// Freeze `params` (in [`GPTConfig::param_specs`] order) into a
+    /// servable checkpoint, packing every forward weight once. Only the
+    /// recipe's *forward* leg matters at serve time; backward modes are
+    /// ignored.
+    pub fn new(cfg: GPTConfig, recipe: NativeRecipe, params: Vec<Vec<f32>>) -> Result<ServeModel> {
+        let specs = cfg.param_specs();
+        ensure!(
+            params.len() == specs.len(),
+            "param count mismatch: got {}, model wants {}",
+            params.len(),
+            specs.len()
+        );
+        for (p, spec) in params.iter().zip(&specs) {
+            ensure!(
+                p.len() == spec.numel(),
+                "param {} numel mismatch: got {}, want {}",
+                spec.name,
+                p.len(),
+                spec.numel()
+            );
+        }
+        let shapes: Vec<Option<(usize, usize)>> = specs
+            .iter()
+            .map(|s| match s.shape.as_slice() {
+                [r, c] => Some((*r, *c)),
+                _ => None,
+            })
+            .collect();
+        let mut cache = MxWeightCache::new(specs.len());
+        if recipe.quantize_fwd {
+            for idx in fwd_weight_indices(&cfg) {
+                let (r, c) = shapes[idx].expect("forward weights are 2-D");
+                cache.pack_nr(idx, &params[idx], r, c, Orientation::AsStored);
+            }
+        }
+        Ok(ServeModel {
+            workers: threadpool::default_workers(),
+            cfg,
+            recipe,
+            params,
+            cache,
+            shapes,
+        })
+    }
+
+    pub fn config(&self) -> &GPTConfig {
+        &self.cfg
+    }
+
+    pub fn recipe(&self) -> &NativeRecipe {
+        &self.recipe
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    /// Cap the GEMM thread count (construction defaults to all cores).
+    pub fn set_workers(&mut self, n: usize) {
+        self.workers = n.max(1);
+    }
+
+    /// `(nr_packs, cache_hits, sr_draws)` of the pack-once cache. After
+    /// construction `packs` must never grow — the acceptance criterion
+    /// "weights are packed exactly once per served checkpoint".
+    pub fn mx_cache_stats(&self) -> (usize, usize, usize) {
+        (self.cache.packs, self.cache.hits, self.cache.sr_draws)
+    }
+
+    /// Packed bytes resident for the checkpoint's weight views.
+    pub fn packed_bytes(&self) -> usize {
+        self.cache.cached_bytes()
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "serve gpt {}L d{} seq {} ({}: fwd {})",
+            self.cfg.n_layers,
+            self.cfg.d_model,
+            self.cfg.seq_len,
+            self.recipe.name,
+            if self.recipe.quantize_fwd { "mxfp4-nr packed" } else { "exact" }
+        )
+    }
+
+    /// Recipe-routed forward GEMM `y = x @ Wᵀ` against the frozen packs.
+    fn linear(&self, x: &Mat, idx: usize) -> Mat {
+        let (m, n) = self.shapes[idx].expect("forward weights are 2-D");
+        debug_assert_eq!(x.cols, n, "fwd reduction dim");
+        if self.recipe.quantize_fwd {
+            let pa = MxMat::quantize_nr(&x.data, x.rows, x.cols);
+            let pw = self
+                .cache
+                .get_nr(idx, Orientation::AsStored)
+                .expect("every forward weight is packed at load");
+            gemm::mx_gemm_packed(&pa, pw, self.workers)
+        } else {
+            gemm::matmul_bt_raw(&x.data, &self.params[idx], x.rows, m, n, self.workers)
+        }
+    }
+
+    /// Absorb a prompt into a fresh [`DecodeState`], returning the
+    /// next-token logits row at its last position.
+    pub fn prefill(&self, tokens: &[i32]) -> Result<(DecodeState, Vec<f32>)> {
+        let mut linear = |x: &Mat, idx: usize| self.linear(x, idx);
+        let (kv, logits) = prefill_rows(&self.cfg, &self.params, &mut linear, tokens)?;
+        let v = self.cfg.vocab;
+        let n = tokens.len();
+        let last = logits.data[(n - 1) * v..n * v].to_vec();
+        Ok((DecodeState { tokens: tokens.to_vec(), kv: Some(kv) }, last))
+    }
+
+    /// One continuous-batching decode tick: append `tokens[s]` to
+    /// `states[s]` and return one logits row per session, with all
+    /// per-token linear GEMMs batched into one `(n_sessions × d)` GEMM
+    /// per layer. Row-wise quantization/reduction makes each row
+    /// bit-identical to a batch-of-one call.
+    pub fn decode_batch(&self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat> {
+        let mut linear = |x: &Mat, idx: usize| self.linear(x, idx);
+        decode_rows(&self.cfg, &self.params, &mut linear, states, tokens)
+    }
+
+    /// Single-session convenience wrapper over [`decode_batch`](Self::decode_batch).
+    pub fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<Vec<f32>> {
+        let logits = self.decode_batch(&mut [state], &[token])?;
+        Ok(logits.data)
+    }
+}
+
+/// Parameter indices of the 2-D weights the forward pass GEMMs: the
+/// tied head plus `qkv`/`proj`/`fc1`/`fc2` per layer. (`pos_emb` is 2-D
+/// but only ever gathered, never multiplied.)
+fn fwd_weight_indices(cfg: &GPTConfig) -> Vec<usize> {
+    let mut idxs = vec![TOK_EMB];
+    for l in 0..cfg.n_layers {
+        let base = layer_base(l);
+        idxs.extend([base + 2, base + 3, base + 6, base + 7]);
+    }
+    idxs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::executor::init_params_for;
+
+    fn model(recipe: &str) -> ServeModel {
+        let (cfg, _) = GPTConfig::preset("micro").unwrap();
+        let params = init_params_for(&cfg.param_specs(), cfg.n_layers, 5);
+        ServeModel::new(cfg, NativeRecipe::parse(recipe).unwrap(), params).unwrap()
+    }
+
+    #[test]
+    fn packs_every_forward_weight_exactly_once_at_load() {
+        let m = model("mxfp4");
+        let want = 1 + 4 * m.config().n_layers;
+        assert_eq!(m.mx_cache_stats(), (want, 0, 0));
+        assert!(m.packed_bytes() > 0);
+        // serving reads must not repack: prefill + decode, then recheck
+        let (mut st, _) = m.prefill(&[1, 2, 3]).unwrap();
+        m.decode_step(&mut st, 4).unwrap();
+        assert_eq!(m.mx_cache_stats(), (want, 0, 0), "read-only at serve time");
+    }
+
+    #[test]
+    fn bf16_recipe_packs_nothing() {
+        let m = model("bf16");
+        assert_eq!(m.mx_cache_stats(), (0, 0, 0));
+        let (mut st, _) = m.prefill(&[1, 2]).unwrap();
+        let row = m.decode_step(&mut st, 3).unwrap();
+        assert_eq!(row.len(), m.vocab());
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rejects_mismatched_params() {
+        let (cfg, _) = GPTConfig::preset("micro").unwrap();
+        let recipe = NativeRecipe::parse("mxfp4").unwrap();
+        assert!(ServeModel::new(cfg.clone(), recipe.clone(), vec![]).is_err());
+        let mut params = init_params_for(&cfg.param_specs(), cfg.n_layers, 5);
+        params[0].pop();
+        assert!(ServeModel::new(cfg, recipe, params).is_err());
+    }
+
+    #[test]
+    fn decode_batch_rows_match_batch_of_one() {
+        // the continuous-batching bit-exactness premise, at unit level
+        let m = model("mxfp4");
+        let (mut a1, _) = m.prefill(&[1, 2, 3]).unwrap();
+        let (mut b1, _) = m.prefill(&[9, 8]).unwrap();
+        let mut a2 = a1.clone();
+        let mut b2 = b1.clone();
+        let batched = m.decode_batch(&mut [&mut a1, &mut b1], &[4, 7]).unwrap();
+        let ra = m.decode_step(&mut a2, 4).unwrap();
+        let rb = m.decode_step(&mut b2, 7).unwrap();
+        let v = m.vocab();
+        assert_eq!(batched.data[..v], ra[..]);
+        assert_eq!(batched.data[v..2 * v], rb[..]);
+        assert_eq!(a1.tokens, a2.tokens);
+    }
+}

@@ -1,0 +1,172 @@
+//! Seeded token sampling (greedy / temperature / top-k) and the
+//! single-stream generator behind `eval::generate_greedy`.
+//!
+//! Greedy is the `temperature == 0` point of one sampler, with the same
+//! argmax tie-breaking the old full-recompute generator used (last
+//! maximum wins), so the rewrite is behavior-preserving. Temperature
+//! sampling is a numerically-stable softmax over `logits / T` with an
+//! optional top-k support restriction; every draw comes from the
+//! caller's [`Rng`], so a `(seed, logits)` pair always yields the same
+//! token.
+
+use anyhow::Result;
+
+use crate::rng::Rng;
+use crate::runtime::Backend;
+
+use super::session::SamplingParams;
+
+/// Stream tag folded into every sampling rng derivation ("SAMPLE")
+/// — shared by [`generate`] and the engine's per-request streams.
+pub(crate) const SAMPLE_STREAM: u64 = 0x53_41_4D_50_4C_45;
+
+/// Draw one token from a logits row.
+pub fn sample(logits: &[f32], p: &SamplingParams, rng: &mut Rng) -> i32 {
+    debug_assert!(!logits.is_empty());
+    if p.temperature <= 0.0 {
+        // greedy: last maximum wins, matching the pre-serve generator
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|(_, x), (_, y)| x.partial_cmp(y).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+    }
+    // stable softmax over logits / T
+    let inv_t = 1.0 / p.temperature;
+    let scaled: Vec<f32> = logits.iter().map(|&x| x * inv_t).collect();
+    // top-k support restriction: k-th largest value as the floor (ties
+    // at the threshold all stay in, so the support can slightly exceed k)
+    let floor = if p.top_k > 0 && p.top_k < scaled.len() {
+        let mut sorted = scaled.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        sorted[p.top_k - 1]
+    } else {
+        f32::NEG_INFINITY
+    };
+    let mx = scaled.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut weights = vec![0.0f32; scaled.len()];
+    let mut total = 0.0f32;
+    for (w, &x) in weights.iter_mut().zip(&scaled) {
+        if x >= floor {
+            *w = (x - mx).exp();
+            total += *w;
+        }
+    }
+    // one uniform draw, walked through the cumulative mass
+    let mut u = rng.uniform() * total;
+    let mut last = 0;
+    for (i, &w) in weights.iter().enumerate() {
+        if w > 0.0 {
+            last = i;
+            if u < w {
+                return i as i32;
+            }
+            u -= w;
+        }
+    }
+    last as i32 // roundoff fell off the end: the last in-support token
+}
+
+/// Generate `n_new` tokens from `prompt` through any [`Backend`] using
+/// the incremental decoder: one prefill, then one `decode_step` per
+/// token. When the window fills, the oldest position is dropped and the
+/// remainder re-prefilled — the same fixed-window semantics the old
+/// full-recompute generator had, now paid only at the window edge.
+/// Greedy (`temperature == 0`) reproduces the old `generate_greedy`
+/// token-for-token.
+pub fn generate(
+    backend: &mut dyn Backend,
+    params: &[Vec<f32>],
+    prompt: &[i32],
+    n_new: usize,
+    sampling: &SamplingParams,
+    seed: u64,
+) -> Result<Vec<i32>> {
+    let t = backend.seq_len();
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    anyhow::ensure!(prompt.len() <= t, "prompt longer than context");
+    let mut out = Vec::with_capacity(n_new);
+    if n_new == 0 {
+        return Ok(out);
+    }
+    let mut rng = Rng::fold_in(seed, SAMPLE_STREAM);
+    let (mut state, mut logits) = backend.prefill(prompt, params)?;
+    loop {
+        let next = sample(&logits, sampling, &mut rng);
+        out.push(next);
+        if out.len() == n_new {
+            return Ok(out);
+        }
+        if state.tokens.len() == t {
+            // window full: slide by one and re-prefill
+            let mut window = state.tokens[1..].to_vec();
+            window.push(next);
+            let (s, l) = backend.prefill(&window, params)?;
+            state = s;
+            logits = l;
+        } else {
+            logits = backend.decode_step(&mut state, next, params)?;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_takes_last_maximum() {
+        let p = SamplingParams::greedy();
+        let mut rng = Rng::seed(1);
+        assert_eq!(sample(&[0.0, 3.0, 1.0], &p, &mut rng), 1);
+        // tie: last max wins (the old generator's max_by semantics)
+        assert_eq!(sample(&[2.0, 5.0, 5.0, 0.0], &p, &mut rng), 2);
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let p = SamplingParams { temperature: 0.8, top_k: 0 };
+        let a: Vec<i32> = {
+            let mut rng = Rng::seed(9);
+            (0..32).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut rng = Rng::seed(9);
+            (0..32).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+        // high temperature over near-uniform logits covers > 1 token
+        let mut rng = Rng::seed(10);
+        let distinct: std::collections::BTreeSet<i32> =
+            (0..64).map(|_| sample(&logits, &p, &mut rng)).collect();
+        assert!(distinct.len() > 1, "sampling collapsed to one token");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        // token 0 has by far the lowest logit; with top_k = 2 it must
+        // never be drawn, while both top tokens appear
+        let logits = [-10.0f32, 1.0, 1.2, -9.0];
+        let p = SamplingParams { temperature: 5.0, top_k: 2 };
+        let mut rng = Rng::seed(3);
+        let mut seen = [0usize; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, &p, &mut rng) as usize] += 1;
+        }
+        assert_eq!(seen[0], 0, "out-of-top-k token drawn");
+        assert_eq!(seen[3], 0, "out-of-top-k token drawn");
+        assert!(seen[1] > 0 && seen[2] > 0, "support should cover the top-2: {seen:?}");
+    }
+
+    #[test]
+    fn top_k_one_is_argmax() {
+        let logits = [0.4f32, 2.5, -1.0, 2.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 1 };
+        for s in 0..8 {
+            let mut rng = Rng::seed(s);
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+    }
+}

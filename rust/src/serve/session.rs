@@ -1,0 +1,119 @@
+//! Request / session / completion lifecycle types for the serving
+//! engine.
+//!
+//! A [`Request`] is what a client submits: prompt tokens, a generation
+//! budget, [`SamplingParams`], and a seed. The engine turns an admitted
+//! request into a `Session` (decode state + per-request sampling rng +
+//! generated tokens) and retires it as a [`Completion`]. Sampling
+//! randomness is a pure function of the request seed — never of
+//! admission order or batch composition — which is what makes staggered
+//! continuous batching reproduce solo runs token-for-token.
+
+use crate::model::DecodeState;
+use crate::rng::Rng;
+
+use super::sample::SAMPLE_STREAM;
+
+/// How to turn a logits row into a token.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0` selects greedy argmax (and consumes
+    /// no randomness).
+    pub temperature: f32,
+    /// Restrict sampling to the `top_k` highest-logit tokens; `0`
+    /// disables the filter. Ignored under greedy.
+    pub top_k: usize,
+}
+
+impl SamplingParams {
+    /// Deterministic argmax decoding — temperature 0.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0 }
+    }
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams::greedy()
+    }
+}
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Caller-chosen id, echoed on the completion.
+    pub id: u64,
+    /// Prompt token ids. Longer than the context window ⇒ the engine
+    /// keeps the newest `seq_len` tokens.
+    pub prompt: Vec<i32>,
+    /// Tokens to generate (min 1; the engine clamps 0 up).
+    pub max_new: usize,
+    pub sampling: SamplingParams,
+    /// Seed of the request's private sampling stream.
+    pub seed: u64,
+}
+
+/// Why a session retired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new` tokens.
+    Length,
+    /// Ran out of context window before `max_new`.
+    Window,
+    /// Rejected at admission (empty prompt or out-of-vocab token).
+    Invalid,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Window => "window",
+            FinishReason::Invalid => "invalid",
+        }
+    }
+}
+
+/// A finished request: the generated tokens plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    /// Prompt length actually absorbed (after window truncation).
+    pub prompt_len: usize,
+    /// Generated tokens, oldest first.
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+}
+
+/// An in-flight request: decode state + sampling stream + output so far.
+pub(crate) struct Session {
+    pub req: Request,
+    pub state: DecodeState,
+    pub rng: Rng,
+    pub generated: Vec<i32>,
+}
+
+impl Session {
+    /// Start a session from its prefilled state; `first` is the token
+    /// sampled from the prefill logits.
+    pub fn start(req: Request, state: DecodeState, first: i32, rng: Rng) -> Session {
+        Session { req, state, rng, generated: vec![first] }
+    }
+
+    /// The per-request sampling stream (shared derivation with
+    /// [`super::sample::generate`], so engine runs and single-stream
+    /// generation agree token-for-token).
+    pub fn sampling_rng(seed: u64) -> Rng {
+        Rng::fold_in(seed, SAMPLE_STREAM)
+    }
+
+    /// Retire into a [`Completion`].
+    pub fn complete(&mut self, finish: FinishReason) -> Completion {
+        Completion {
+            id: self.req.id,
+            prompt_len: self.req.prompt.len(),
+            tokens: std::mem::take(&mut self.generated),
+            finish,
+        }
+    }
+}

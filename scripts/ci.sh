@@ -8,7 +8,9 @@
 #   4. compile-check every bench and example target
 #   5. quickstart on the native backend: a real 20-step train whose loss
 #      must decrease (the example exits nonzero otherwise)
-#   6. cargo doc           (rustdoc, warnings denied)
+#   6. serve smoke: a 16-token native KV-cached decode that must echo a
+#      completion and exit 0
+#   7. cargo doc           (rustdoc, warnings denied)
 #
 # Usage: ./scripts/ci.sh        (from the repo root; any extra args are
 #        passed through to `cargo test`)
@@ -37,6 +39,23 @@ cargo build --release --benches --examples
 
 echo "==> quickstart (native-capable 20-step train, loss must decrease)"
 cargo run --release --example quickstart
+
+echo "==> serve smoke (16-token native KV-cached decode, test config)"
+# must echo a completion (a JSON response line with generated tokens)
+# and the tokens/sec summary, and exit 0. test config (seq 32) leaves
+# window room for all 16 tokens — the engine retires at the context
+# window instead of sliding (see docs/SERVING.md).
+serve_out=$(cargo run --release -- serve --backend native --config test \
+    --recipe mxfp4 --prompt 1,2,3,4 --tokens 16)
+echo "$serve_out"
+echo "$serve_out" | grep -q '"tokens":' || {
+    echo "serve smoke: no completion echoed" >&2
+    exit 1
+}
+echo "$serve_out" | grep -q 'tok/s' || {
+    echo "serve smoke: no throughput summary" >&2
+    exit 1
+}
 
 echo "==> cargo doc (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
