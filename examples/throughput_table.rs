@@ -11,6 +11,7 @@
 
 use mxfp4_train::gemm::{matmul, mx_gemm_packed, Mat};
 use mxfp4_train::hadamard;
+use mxfp4_train::mx::pipeline::PackPipeline;
 use mxfp4_train::mx::quant;
 use mxfp4_train::perfmodel::{self, LLAMA2_70B_LAYER};
 use mxfp4_train::rng::Rng;
@@ -81,7 +82,7 @@ fn main() -> anyhow::Result<()> {
     // -- measured: the packed MXFP4 engine's operand footprint --
     println!("\n=== measured: packed MXFP4 engine (512^3, pre-packed operands) ===");
     let pa = a.pack_nr();
-    let pbt = b.transpose().pack_nr();
+    let pbt = PackPipeline::transposed(&b.data, 512, 512).pack_nr(workers);
     let t_packed = bench_secs(1, 3, || {
         std::hint::black_box(mx_gemm_packed(&pa, &pbt, workers));
     });

@@ -9,6 +9,7 @@ mod harness;
 use mxfp4_train::gemm::{matmul, mx_gemm_packed, mx_matmul, Mat, MxMode};
 use mxfp4_train::mx::block::MxVec;
 use mxfp4_train::mx::mat::MxMat;
+use mxfp4_train::mx::pipeline::PackPipeline;
 use mxfp4_train::rng::Rng;
 
 fn main() {
@@ -94,7 +95,7 @@ fn main() {
         });
     let t_once =
         harness::bench("pack W once + x8 (pack A + packed GEMM)", reuse as f64 * flops, "flop", 0, 1, || {
-            let pw = b.transpose().pack_nr(); // once per step
+            let pw = PackPipeline::transposed(&b.data, 256, 1024).pack_nr(4); // once per step
             for _ in 0..reuse {
                 let pact = a.pack_nr(); // activations change per GEMM
                 std::hint::black_box(mx_gemm_packed(&pact, &pw, 4));

@@ -1,0 +1,149 @@
+//! Bench: fused operand-prep pipeline vs. the old materialize-then-
+//! quantize path (ISSUE 4 / ROADMAP "Fused RHT-in-pack").
+//!
+//! Two assertions, both load-bearing:
+//!
+//! 1. **Zero intermediate matrices.** A counting global allocator tracks
+//!    every allocation at least half the source-matrix size during the
+//!    fused pack. The old path makes two (the clone/transpose scratch
+//!    and, on the qdq path, nothing smaller); the pipeline must make
+//!    *none* — its only large allocation is the packed output itself,
+//!    which at 4.25 bits/element sits far below the threshold.
+//! 2. **The fused RHT pack wins.** Same transform, same rounding, same
+//!    bytes out — strictly less memory traffic (one pass, no scratch
+//!    matrix), so fused must beat materialized at equal worker count,
+//!    and scale with workers on top (the old quantize loop was
+//!    single-threaded).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use mxfp4_train::gemm::{transpose_flat, Mat};
+use mxfp4_train::hadamard;
+use mxfp4_train::mx::mat::MxMat;
+use mxfp4_train::mx::pipeline::PackPipeline;
+use mxfp4_train::rng::Rng;
+
+/// System allocator wrapper that counts allocations of at least
+/// `THRESHOLD` bytes — cheap enough to leave on for the whole bench.
+struct CountingAlloc;
+
+static LARGE_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static THRESHOLD: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if layout.size() >= THRESHOLD.load(Ordering::Relaxed) {
+            LARGE_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` while counting allocations of >= `threshold` bytes.
+fn count_large_allocs(threshold: usize, f: impl FnOnce()) -> usize {
+    THRESHOLD.store(threshold, Ordering::Relaxed);
+    LARGE_ALLOCS.store(0, Ordering::Relaxed);
+    f();
+    let n = LARGE_ALLOCS.load(Ordering::Relaxed);
+    THRESHOLD.store(usize::MAX, Ordering::Relaxed);
+    n
+}
+
+fn main() {
+    const N: usize = 1024;
+    let mut rng = Rng::seed(3);
+    let w = Mat::gaussian(N, N, 1.0, &mut rng);
+    let sign = hadamard::sample_sign(32, &mut rng);
+    let elems = (N * N) as f64;
+    let matrix_bytes = N * N * std::mem::size_of::<f32>();
+
+    // -- allocation accounting -------------------------------------------
+    harness::header("operand-prep allocations (>= half a 1024x1024 f32 matrix counts)");
+    let thresh = matrix_bytes / 2;
+    let mat_allocs = count_large_allocs(thresh, || {
+        // the old path: materialize Wᵀ, transform it, quantize the copy
+        let mut wt = transpose_flat(&w.data, N, N);
+        hadamard::rht_blockwise_dense(&mut wt, &sign, 4);
+        std::hint::black_box(MxMat::quantize_nr(&wt, N, N));
+    });
+    let fused_allocs = count_large_allocs(thresh, || {
+        std::hint::black_box(
+            PackPipeline::transposed(&w.data, N, N).with_rht(&sign).pack_nr(4),
+        );
+    });
+    println!("materialized prep: {mat_allocs} matrix-sized allocations; fused: {fused_allocs}");
+    assert!(mat_allocs >= 1, "reference path should materialize at least one matrix");
+    assert_eq!(fused_allocs, 0, "fused pipeline must allocate no intermediate matrix");
+
+    // -- fused vs materialized timing ------------------------------------
+    harness::header("fused RHT pack vs materialized prep (1024x1024, Transposed + RHT g=32)");
+    let t_mat = harness::bench("materialized: transpose + RHT + quantize", elems, "elem", 1, 3, || {
+        let mut wt = transpose_flat(&w.data, N, N);
+        hadamard::rht_blockwise_dense(&mut wt, &sign, 1);
+        std::hint::black_box(MxMat::quantize_nr(&wt, N, N));
+    });
+    let t_fused_1 = harness::bench("fused PackPipeline (1 worker)", elems, "elem", 1, 3, || {
+        std::hint::black_box(
+            PackPipeline::transposed(&w.data, N, N).with_rht(&sign).pack_nr(1),
+        );
+    });
+    let t_fused_4 = harness::bench("fused PackPipeline (4 workers)", elems, "elem", 1, 3, || {
+        std::hint::black_box(
+            PackPipeline::transposed(&w.data, N, N).with_rht(&sign).pack_nr(4),
+        );
+    });
+    println!(
+        "fused speedup over materialized prep: {:.2}x (1 worker), {:.2}x (4 workers)",
+        t_mat / t_fused_1,
+        t_mat / t_fused_4
+    );
+    assert!(
+        t_fused_1 < t_mat,
+        "fused RHT pack must beat materialized prep at equal workers: {t_fused_1} vs {t_mat}"
+    );
+
+    // -- SR: fast-forward stream split cost ------------------------------
+    harness::header("SR pack (dither fast-forward split), 1024x1024 AsStored");
+    let sr_mat_label = "materialized: clone + RHT + quantize_sr";
+    let t_sr_mat = harness::bench(sr_mat_label, elems, "elem", 1, 3, || {
+        let mut c = w.data.clone();
+        hadamard::rht_blockwise_dense(&mut c, &sign, 1);
+        std::hint::black_box(MxMat::quantize_sr(&c, N, N, &mut Rng::seed(5)));
+    });
+    let t_sr_1 = harness::bench("fused pack_sr (1 worker)", elems, "elem", 1, 3, || {
+        let mut r = Rng::seed(5);
+        std::hint::black_box(PackPipeline::new(&w.data, N, N).with_rht(&sign).pack_sr(&mut r, 1));
+    });
+    let t_sr_8 = harness::bench("fused pack_sr (8 workers)", elems, "elem", 1, 3, || {
+        let mut r = Rng::seed(5);
+        std::hint::black_box(PackPipeline::new(&w.data, N, N).with_rht(&sign).pack_sr(&mut r, 8));
+    });
+    println!(
+        "fused SR speedup over materialized prep: {:.2}x (1 worker), {:.2}x (8 workers)",
+        t_sr_mat / t_sr_1,
+        t_sr_mat / t_sr_8
+    );
+    assert!(
+        t_sr_1 < t_sr_mat,
+        "fused SR pack must beat materialized prep at 1 worker: {t_sr_1} vs {t_sr_mat}"
+    );
+
+    // byte-parity spot check under bench shapes (the full matrix lives in
+    // tests/packed_gemm.rs)
+    let mut wt = transpose_flat(&w.data, N, N);
+    hadamard::rht_blockwise_dense(&mut wt, &sign, 1);
+    let want = MxMat::quantize_sr(&wt, N, N, &mut Rng::seed(9));
+    let got = PackPipeline::transposed(&w.data, N, N).with_rht(&sign).pack_sr(&mut Rng::seed(9), 8);
+    assert_eq!(got, want, "fused and materialized packs must be byte-identical");
+    println!("byte parity: fused == materialized at 1024x1024 (RHT+SR, 8 workers)");
+}

@@ -9,6 +9,7 @@
 mod harness;
 
 use mxfp4_train::gemm::{mx_gemm_packed, mx_matmul, Mat, MxMode};
+use mxfp4_train::mx::pipeline::PackPipeline;
 use mxfp4_train::perfmodel::{self, BwConfig, RhtStyle, LLAMA2_70B_LAYER};
 use mxfp4_train::rng::Rng;
 
@@ -54,7 +55,7 @@ fn main() {
         std::hint::black_box(mx_matmul(&a, &b, MxMode::Nr, 64, &mut Rng::seed(1), 4));
     });
     let pa = a.pack_nr();
-    let pbt = b.transpose().pack_nr();
+    let pbt = PackPipeline::transposed(&b.data, 512, 1024).pack_nr(4);
     let t_packed = harness::bench("mx_gemm_packed (pre-packed operands)", flops, "flop", 0, 2, || {
         std::hint::black_box(mx_gemm_packed(&pa, &pbt, 4));
     });

@@ -22,21 +22,13 @@
 
 use crate::gemm::{transpose_flat, Mat};
 use crate::mx::mat::MxMat;
+use crate::mx::pipeline::PackPipeline;
 use crate::rng::Rng;
 
-/// Which way a 2-D weight is blocked for a GEMM: `AsStored` blocks along
-/// the stored column dimension, `Transposed` packs Wᵀ (reduction over
-/// W's stored rows). Which GEMM each orientation serves depends on the
-/// storage convention: for a `(k, n)` weight with `y = x @ W`,
-/// `AsStored` is the dgrad `dY @ Wᵀ` orientation and `Transposed` the
-/// forward; for the native model's `(out, in)` weights with
-/// `y = x @ Wᵀ`, it is exactly the other way around (`AsStored` feeds
-/// the forward, `Transposed` feeds dgrad — see `model::gpt`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Orientation {
-    AsStored,
-    Transposed,
-}
+// `Orientation` moved into the pipeline layer (the pipeline is what
+// gathers either way); re-exported here so cache call sites keep their
+// `coordinator::mxcache::Orientation` imports.
+pub use crate::mx::pipeline::Orientation;
 
 /// Per-step packed-weight cache. One slot pair (orientation × param) per
 /// parameter tensor; slots empty out on [`MxWeightCache::advance`].
@@ -93,8 +85,10 @@ impl MxWeightCache {
 
     /// Algorithm 1 (deterministic) pack of a row-major `rows × cols`
     /// weight, cached until the next [`advance`](Self::advance). The
-    /// first call per (param, orientation, epoch) quantizes; later calls
-    /// are table lookups.
+    /// first call per (param, orientation, epoch) streams the weight
+    /// through the fused [`PackPipeline`] with `workers` threads
+    /// (`Transposed` gathers on the fly — no transposed copy is ever
+    /// built); later calls are table lookups.
     pub fn pack_nr(
         &mut self,
         idx: usize,
@@ -102,18 +96,18 @@ impl MxWeightCache {
         rows: usize,
         cols: usize,
         orientation: Orientation,
+        workers: usize,
     ) -> &MxMat {
         let slot = match orientation {
             Orientation::AsStored => 0,
             Orientation::Transposed => 1,
         };
         if self.entries[idx][slot].is_none() {
-            let m = match orientation {
-                Orientation::AsStored => MxMat::quantize_nr(data, rows, cols),
-                Orientation::Transposed => {
-                    MxMat::quantize_nr(&transpose_flat(data, rows, cols), cols, rows)
-                }
+            let (prows, pcols) = match orientation {
+                Orientation::AsStored => (rows, cols),
+                Orientation::Transposed => (cols, rows),
             };
+            let m = PackPipeline::oriented(data, prows, pcols, orientation).pack_nr(workers);
             self.entries[idx][slot] = Some(m);
             self.packs += 1;
         } else {
@@ -139,6 +133,9 @@ impl MxWeightCache {
     /// Algorithm 2 (stochastic) pack — **never cached**. Each call draws
     /// fresh dither from `rng`, as Lemma 3.1's unbiasedness requires; the
     /// cache only tallies the draw so step accounting stays complete.
+    /// Streams through the fused [`PackPipeline`] like
+    /// [`pack_nr`](Self::pack_nr) (fast-forward-split dither stream, so
+    /// bytes are identical for any `workers`).
     pub fn pack_sr(
         &mut self,
         data: &[f32],
@@ -146,14 +143,14 @@ impl MxWeightCache {
         cols: usize,
         orientation: Orientation,
         rng: &mut Rng,
+        workers: usize,
     ) -> MxMat {
         self.sr_draws += 1;
-        match orientation {
-            Orientation::AsStored => MxMat::quantize_sr(data, rows, cols, rng),
-            Orientation::Transposed => {
-                MxMat::quantize_sr(&transpose_flat(data, rows, cols), cols, rows, rng)
-            }
-        }
+        let (prows, pcols) = match orientation {
+            Orientation::AsStored => (rows, cols),
+            Orientation::Transposed => (cols, rows),
+        };
+        PackPipeline::oriented(data, prows, pcols, orientation).pack_sr(rng, workers)
     }
 
     /// Total packed bytes currently cached.
@@ -169,16 +166,23 @@ impl MxWeightCache {
 /// Per-epoch f32 weight-prep cache — the deterministic *unquantized*
 /// sibling of [`MxWeightCache`].
 ///
-/// The packed NR recipes already pay weight prep once per step, but two
-/// dgrad arms re-did theirs on every GEMM: the `bf16` baseline
-/// re-transposed each weight (`transpose_flat` per shard per step), and
-/// the RHT arm cloned the weight so `mx_matmul_packed` could transpose
-/// it internally. Both preps are pure functions of the weight bytes, so
-/// this cache holds the transposed f32 weight per parameter and
-/// invalidates on the same epoch boundary as the packed cache. (The RHT
-/// sign transform itself is *not* cacheable — it draws fresh per GEMM —
-/// which is why the cached artifact is the transpose, not the
-/// transformed operand.)
+/// The packed NR recipes already pay weight prep once per step, but
+/// three dgrad arms re-did theirs on every GEMM: the `bf16` baseline
+/// re-transposed each weight (`transpose_flat` per shard per step), the
+/// RHT arm cloned the weight so the old packed path could transpose it
+/// internally, and the SR arm transposed inside its per-GEMM `pack_sr`.
+/// All three preps are pure functions of the weight bytes, so this
+/// cache holds the transposed f32 weight per parameter and invalidates
+/// on the same epoch boundary as the packed cache: `bf16` feeds the
+/// cached transpose to the exact GEMM, and the RHT **and SR** dgrads
+/// feed it to the fused pipeline in `AsStored` orientation (contiguous
+/// reads per shard instead of a tile gather per GEMM — [`builds`]/
+/// [`hits`](Self::hits) count all three consumers). (The RHT sign
+/// transform and SR dither are *not* cacheable — they draw fresh per
+/// GEMM, as Lemma 3.1 requires — which is why the cached artifact is
+/// the transpose, never the transformed or packed operand.)
+///
+/// [`builds`]: Self::builds
 #[derive(Debug)]
 pub struct PrepCache {
     epoch: u64,
@@ -242,16 +246,16 @@ mod tests {
     fn nr_packs_once_per_epoch_per_orientation() {
         let w = weight(64, 32, 1);
         let mut cache = MxWeightCache::new(2);
-        let a = cache.pack_nr(0, &w, 64, 32, Orientation::AsStored).clone();
-        let b = cache.pack_nr(0, &w, 64, 32, Orientation::AsStored).clone();
+        let a = cache.pack_nr(0, &w, 64, 32, Orientation::AsStored, 1).clone();
+        let b = cache.pack_nr(0, &w, 64, 32, Orientation::AsStored, 1).clone();
         assert_eq!(a, b);
         assert_eq!((cache.packs, cache.hits), (1, 1));
         // the other orientation is a distinct pack
-        cache.pack_nr(0, &w, 64, 32, Orientation::Transposed);
+        cache.pack_nr(0, &w, 64, 32, Orientation::Transposed, 1);
         assert_eq!(cache.packs, 2);
         // four more GEMMs in the same step: all hits
         for _ in 0..4 {
-            cache.pack_nr(0, &w, 64, 32, Orientation::AsStored);
+            cache.pack_nr(0, &w, 64, 32, Orientation::AsStored, 1);
         }
         assert_eq!((cache.packs, cache.hits), (2, 5));
     }
@@ -260,10 +264,10 @@ mod tests {
     fn advance_invalidates() {
         let w = weight(32, 32, 2);
         let mut cache = MxWeightCache::new(1);
-        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored);
+        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored, 1);
         cache.advance(1);
         assert_eq!(cache.cached_bytes(), 0);
-        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored);
+        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored, 1);
         assert_eq!(cache.packs, 2);
         // same-epoch advance is a no-op
         let bytes = cache.cached_bytes();
@@ -278,11 +282,11 @@ mod tests {
         let w = weight(32, 32, 7);
         let mut cache = MxWeightCache::new(1);
         cache.advance(5);
-        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored);
+        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored, 1);
         cache.invalidate();
         assert_eq!(cache.cached_bytes(), 0);
         assert_eq!(cache.epoch(), 5, "invalidate must not disturb the epoch");
-        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored);
+        cache.pack_nr(0, &w, 32, 32, Orientation::AsStored, 1);
         assert_eq!((cache.packs, cache.hits), (2, 0));
         // and a later step-based advance still works normally
         cache.advance(6);
@@ -293,7 +297,7 @@ mod tests {
     fn transposed_pack_equals_pack_of_transpose() {
         let w = weight(16, 48, 3);
         let mut cache = MxWeightCache::new(1);
-        let t = cache.pack_nr(0, &w, 16, 48, Orientation::Transposed).clone();
+        let t = cache.pack_nr(0, &w, 16, 48, Orientation::Transposed, 1).clone();
         let manual = MxMat::quantize_nr(&transpose_flat(&w, 16, 48), 48, 16);
         assert_eq!(t, manual);
         assert_eq!((t.rows, t.cols), (48, 16));
@@ -304,7 +308,7 @@ mod tests {
         let w = weight(32, 64, 6);
         let mut cache = MxWeightCache::new(1);
         assert!(cache.get_nr(0, Orientation::AsStored).is_none(), "empty until packed");
-        let packed = cache.pack_nr(0, &w, 32, 64, Orientation::AsStored).clone();
+        let packed = cache.pack_nr(0, &w, 32, 64, Orientation::AsStored, 1).clone();
         let (packs, hits) = (cache.packs, cache.hits);
         let seen = cache.get_nr(0, Orientation::AsStored).unwrap();
         assert_eq!(*seen, packed);
@@ -340,15 +344,15 @@ mod tests {
         let w = weight(32, 64, 4);
         let mut cache = MxWeightCache::new(1);
         let mut rng = Rng::seed(5);
-        let a = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut rng);
-        let b = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut rng);
+        let a = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut rng, 1);
+        let b = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut rng, 1);
         assert_eq!(cache.sr_draws, 2);
         assert_eq!(cache.cached_bytes(), 0, "SR results must not be cached");
         // consecutive draws differ somewhere (fresh dither)
         assert_ne!(a.codes, b.codes);
         // while the same seed reproduces exactly
-        let c = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut Rng::seed(5));
-        let d = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut Rng::seed(5));
+        let c = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut Rng::seed(5), 1);
+        let d = cache.pack_sr(&w, 32, 64, Orientation::AsStored, &mut Rng::seed(5), 1);
         assert_eq!(c, d);
     }
 }

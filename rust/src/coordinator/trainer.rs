@@ -313,7 +313,8 @@ impl Trainer {
     /// re-quantizing per call.
     pub fn packed_weight(&mut self, idx: usize, orientation: Orientation) -> Option<&MxMat> {
         let (rows, cols) = self.weight_shapes[idx]?;
-        Some(self.mx_cache.pack_nr(idx, &self.compute[idx], rows, cols, orientation))
+        let workers = crate::util::threadpool::default_workers();
+        Some(self.mx_cache.pack_nr(idx, &self.compute[idx], rows, cols, orientation, workers))
     }
 
     /// Stochastically-rounded pack of weight `idx` — *never* cached:
@@ -326,7 +327,8 @@ impl Trainer {
         rng: &mut Rng,
     ) -> Option<MxMat> {
         let (rows, cols) = self.weight_shapes[idx]?;
-        Some(self.mx_cache.pack_sr(&self.compute[idx], rows, cols, orientation, rng))
+        let workers = crate::util::threadpool::default_workers();
+        Some(self.mx_cache.pack_sr(&self.compute[idx], rows, cols, orientation, rng, workers))
     }
 
     /// (NR packs performed, cache hits, SR draws) of the *leader-side*

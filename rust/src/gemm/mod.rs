@@ -21,6 +21,7 @@
 
 use crate::hadamard;
 use crate::mx::mat::MxMat;
+use crate::mx::pipeline::PackPipeline;
 use crate::mx::quant;
 use crate::rng::Rng;
 use crate::util::threadpool;
@@ -94,15 +95,19 @@ impl Mat {
     }
 
     /// Pack into the MXFP4 SoA container with Algorithm 1 (nearest
-    /// rounding), blocks along the column (reduction) dimension.
+    /// rounding), blocks along the column (reduction) dimension. Routes
+    /// through the streaming [`PackPipeline`] (single worker; build the
+    /// pipeline directly for parallel or orientation-aware packs).
     pub fn pack_nr(&self) -> MxMat {
-        MxMat::quantize_nr(&self.data, self.rows, self.cols)
+        PackPipeline::new(&self.data, self.rows, self.cols).pack_nr(1)
     }
 
     /// Pack with Algorithm 2 (3/4 pre-scale + SR); the decoded matrix
-    /// estimates (3/4)·self, so GEMM consumers rescale by 16/9.
+    /// estimates (3/4)·self, so GEMM consumers rescale by 16/9. Same
+    /// [`PackPipeline`] routing (and dither-stream contract) as
+    /// [`pack_nr`](Self::pack_nr).
     pub fn pack_sr(&self, rng: &mut Rng) -> MxMat {
-        MxMat::quantize_sr(&self.data, self.rows, self.cols, rng)
+        PackPipeline::new(&self.data, self.rows, self.cols).pack_sr(rng, 1)
     }
 }
 
@@ -203,29 +208,6 @@ impl MxMode {
     }
 }
 
-/// Shared operand prep for both MX GEMM paths: clone A, transpose B, and
-/// for RHT modes apply the blockwise transform to both (drawing the sign
-/// vector from `rng` *first* — the stream-order contract the SR parity
-/// tests rely on).
-fn mx_prep_operands(
-    a: &Mat,
-    b: &Mat,
-    mode: MxMode,
-    g: usize,
-    rng: &mut Rng,
-    workers: usize,
-) -> (Mat, Mat) {
-    let mut qa = a.clone();
-    let mut qbt = b.transpose();
-    if mode.uses_rht() {
-        assert_eq!(a.cols % g, 0, "k {} not a multiple of g {g}", a.cols);
-        let sign = hadamard::sample_sign(g, rng);
-        hadamard::rht_blockwise_dense(&mut qa.data, &sign, workers);
-        hadamard::rht_blockwise_dense(&mut qbt.data, &sign, workers);
-    }
-    (qa, qbt)
-}
-
 /// Lemma 3.1's GEMM-side compensation for the two 0.75-pre-scaled SR
 /// operands: multiply accumulators by 16/9.
 fn rescale_sr_output(c: &mut Mat) {
@@ -234,23 +216,66 @@ fn rescale_sr_output(c: &mut Mat) {
     }
 }
 
+/// Pack both GEMM operands through the streaming [`PackPipeline`] for a
+/// non-exact `mode`, preserving the engine-wide rng draw order: RHT sign
+/// vector first (one vector touching both operands), then A's dither
+/// row-major, then Bᵀ's — the stream contract the SR parity tests and
+/// every cached-prep call site rely on. The operands arrive as pipeline
+/// views (`a`: logical `(m, k)`, `bt`: logical `(n, k)` = Bᵀ) with any
+/// orientation, so no caller clones, transposes, or RHT-transforms a
+/// matrix — gather, transform, and encode all happen inside the fused
+/// pass.
+fn mx_pack_pair(
+    a: PackPipeline<'_>,
+    bt: PackPipeline<'_>,
+    mode: MxMode,
+    g: usize,
+    rng: &mut Rng,
+    workers: usize,
+) -> (MxMat, MxMat) {
+    debug_assert_ne!(mode, MxMode::Exact, "exact mode never packs");
+    assert_eq!(a.cols(), bt.cols(), "reduction dims differ");
+    let sign_store;
+    let (a, bt) = if mode.uses_rht() {
+        assert_eq!(a.cols() % g, 0, "k {} not a multiple of g {g}", a.cols());
+        sign_store = hadamard::sample_sign(g, rng);
+        (a.with_rht(&sign_store), bt.with_rht(&sign_store))
+    } else {
+        (a, bt)
+    };
+    if mode.uses_sr() {
+        let pa = a.pack_sr(rng, workers);
+        let pbt = bt.pack_sr(rng, workers);
+        (pa, pbt)
+    } else {
+        (a.pack_nr(workers), bt.pack_nr(workers))
+    }
+}
+
 /// Emulated MXFP4 GEMM (qdq reference path): C = A @ B with operands
 /// quantized along k, then multiplied as full-width f32. `g` is the RHT
 /// block size; `rng` drives SR dither + the sign vector. Blocks are laid
 /// along each operand row, so `k` need not be a multiple of 32 (a partial
 /// tail block per row is allowed); RHT modes still require `g | k`.
+///
+/// Operand prep goes through the same fused [`PackPipeline`] as the
+/// packed engine (pack, then decode back to f32 — encode/decode of
+/// on-grid values is exact, so the qdq values are unchanged); only the
+/// multiply differs: full-width f32 instead of the FP4 LUT.
 pub fn mx_matmul(a: &Mat, b: &Mat, mode: MxMode, g: usize, rng: &mut Rng, workers: usize) -> Mat {
     if mode == MxMode::Exact {
         return matmul(a, b, workers);
     }
-    let (mut qa, mut qbt) = mx_prep_operands(a, b, mode, g, rng, workers);
-    if mode.uses_sr() {
-        quant::qdq_sr_rows(&mut qa.data, qa.cols, rng);
-        quant::qdq_sr_rows(&mut qbt.data, qbt.cols, rng);
-    } else {
-        quant::qdq_nr_rows(&mut qa.data, qa.cols);
-        quant::qdq_nr_rows(&mut qbt.data, qbt.cols);
-    }
+    let (pa, pbt) = mx_pack_pair(
+        PackPipeline::new(&a.data, a.rows, a.cols),
+        PackPipeline::transposed(&b.data, b.cols, b.rows),
+        mode,
+        g,
+        rng,
+        workers,
+    );
+    let qa = Mat { rows: pa.rows, cols: pa.cols, data: pa.dequantize() };
+    let qbt = Mat { rows: pbt.rows, cols: pbt.cols, data: pbt.dequantize() };
     let mut c = matmul_bt(&qa, &qbt, workers);
     if mode.uses_sr() {
         rescale_sr_output(&mut c);
@@ -292,11 +317,13 @@ pub fn mx_gemm_packed(a: &MxMat, bt: &MxMat, workers: usize) -> Mat {
 }
 
 /// Packed-engine MX GEMM mirroring [`mx_matmul`]'s quantize-and-multiply
-/// interface: pack both operands once, multiply through the FP4 LUT
-/// kernel, apply the 16/9 rescale for SR modes. Draws from `rng` in the
-/// same order as `mx_matmul` (RHT sign vector, then A's dither row-major,
-/// then Bᵀ's), so SR modes consume identical streams per seed. `k` need
-/// not be a multiple of 32; RHT modes require `g | k`.
+/// interface: stream both operands through the fused [`PackPipeline`]
+/// (B gathered in `Transposed` orientation — no `Bᵀ` is ever
+/// materialized), multiply through the FP4 LUT kernel, apply the 16/9
+/// rescale for SR modes. Draws from `rng` in the same order as
+/// `mx_matmul` (RHT sign vector, then A's dither row-major, then Bᵀ's),
+/// so SR modes consume identical streams per seed. `k` need not be a
+/// multiple of 32; RHT modes require `g | k`.
 pub fn mx_matmul_packed(
     a: &Mat,
     b: &Mat,
@@ -308,16 +335,23 @@ pub fn mx_matmul_packed(
     if mode == MxMode::Exact {
         return matmul(a, b, workers);
     }
-    mx_packed_pipeline(a.clone(), b.transpose(), mode, g, rng, workers)
+    mx_matmul_pipelined(
+        PackPipeline::new(&a.data, a.rows, a.cols),
+        PackPipeline::transposed(&b.data, b.cols, b.rows),
+        mode,
+        g,
+        rng,
+        workers,
+    )
 }
 
 /// [`mx_matmul_packed`] with B supplied *already transposed* (`bt`:
 /// `(n, k)` for `B: (k, n)`) — the entry point for callers that cache the
 /// deterministic transpose across GEMMs (`coordinator::mxcache::PrepCache`
-/// feeding the native dgrad). Both entries share [`mx_packed_pipeline`]
-/// and therefore the same rng draw order (RHT sign vector, then A's
-/// dither, then Bᵀ's), so for equal operands and seed they are
-/// bit-identical; only the per-call transpose is skipped.
+/// feeding the native dgrad). Both entries share the same fused pack and
+/// rng draw order (RHT sign vector, then A's dither, then Bᵀ's), so for
+/// equal operands and seed they are bit-identical; they differ only in
+/// how Bᵀ's rows are gathered (contiguously here, tile-strided there).
 pub fn mx_matmul_packed_bt(
     a: &Mat,
     bt: &Mat,
@@ -330,36 +364,34 @@ pub fn mx_matmul_packed_bt(
     if mode == MxMode::Exact {
         return matmul_bt(a, bt, workers);
     }
-    mx_packed_pipeline(a.clone(), bt.clone(), mode, g, rng, workers)
+    mx_matmul_pipelined(
+        PackPipeline::new(&a.data, a.rows, a.cols),
+        PackPipeline::new(&bt.data, bt.rows, bt.cols),
+        mode,
+        g,
+        rng,
+        workers,
+    )
 }
 
-/// The shared non-exact packed pipeline over owned, reduction-aligned
-/// operands (`qa`: `(m, k)`, `qbt`: `(n, k)`): blockwise RHT (one sign
-/// vector touching both operands), SR or NR pack, LUT GEMM, 16/9 SR
-/// rescale. Draw order — sign vector, A's dither, Bᵀ's dither — is the
-/// invariant the SR parity tests and the cached-prep dgrad rely on.
-fn mx_packed_pipeline(
-    mut qa: Mat,
-    mut qbt: Mat,
+/// The general packed-engine entry over two [`PackPipeline`] operand
+/// views (`a`: logical `(m, k)`, `bt`: logical `(n, k)` = Bᵀ, either
+/// orientation): fused pack (the shared RHT sign vector is drawn and
+/// attached to both views per `mode`), LUT GEMM, 16/9 SR rescale. This
+/// is what call sites with pre-transposed or to-be-gathered operands use
+/// directly — e.g. the native wgrad `Gᵀ @ X`, whose *both* operands are
+/// `Transposed` views, with zero materialized transposes. `mode` must
+/// not be `Exact` (exact GEMMs have no packed form — use [`matmul`]).
+pub fn mx_matmul_pipelined(
+    a: PackPipeline<'_>,
+    bt: PackPipeline<'_>,
     mode: MxMode,
     g: usize,
     rng: &mut Rng,
     workers: usize,
 ) -> Mat {
-    debug_assert_ne!(mode, MxMode::Exact, "exact mode never packs");
-    if mode.uses_rht() {
-        assert_eq!(qa.cols % g, 0, "k {} not a multiple of g {g}", qa.cols);
-        let sign = hadamard::sample_sign(g, rng);
-        hadamard::rht_blockwise_dense(&mut qa.data, &sign, workers);
-        hadamard::rht_blockwise_dense(&mut qbt.data, &sign, workers);
-    }
-    let (pa, pbt) = if mode.uses_sr() {
-        let pa = qa.pack_sr(rng);
-        let pbt = qbt.pack_sr(rng);
-        (pa, pbt)
-    } else {
-        (qa.pack_nr(), qbt.pack_nr())
-    };
+    assert_ne!(mode, MxMode::Exact, "exact mode never packs — use matmul/matmul_bt");
+    let (pa, pbt) = mx_pack_pair(a, bt, mode, g, rng, workers);
     let mut c = mx_gemm_packed(&pa, &pbt, workers);
     if mode.uses_sr() {
         rescale_sr_output(&mut c);

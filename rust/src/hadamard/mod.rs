@@ -77,6 +77,34 @@ pub fn fwht(chunk: &mut [f32]) {
     }
 }
 
+/// Apply the dense operator `m` (g×g, from [`rht_operator`]) to one
+/// g-length chunk in place: `row = row @ M`, accumulated element-by-
+/// element in `k` order with zero inputs skipped. `tmp` is g scratch.
+///
+/// This is the **bit-parity kernel** shared by [`rht_blockwise_dense`]
+/// and the fused pack pipeline (`mx::pipeline::PackPipeline`): both
+/// paths run the identical f32 operation sequence, so a fused
+/// RHT+quantize pack is bit-identical to transform-then-quantize.
+#[inline]
+pub fn apply_operator_row(row: &mut [f32], m: &[f32], tmp: &mut [f32]) {
+    let g = row.len();
+    debug_assert_eq!(m.len(), g * g, "operator is g x g");
+    debug_assert_eq!(tmp.len(), g, "tmp is g scratch");
+    // tmp = row @ M  (row vector times operator)
+    for t in tmp.iter_mut() {
+        *t = 0.0;
+    }
+    for (k, &rv) in row.iter().enumerate() {
+        if rv != 0.0 {
+            let mrow = &m[k * g..(k + 1) * g];
+            for (t, &mv) in tmp.iter_mut().zip(mrow) {
+                *t += rv * mv;
+            }
+        }
+    }
+    row.copy_from_slice(tmp);
+}
+
 /// Blockwise RHT over a flat buffer viewed as (len/g, g), using the dense
 /// operator (memory-bound for g <= 256, per §3.2). `workers` threads.
 pub fn rht_blockwise_dense(data: &mut [f32], sign: &[f32], workers: usize) {
@@ -86,19 +114,7 @@ pub fn rht_blockwise_dense(data: &mut [f32], sign: &[f32], workers: usize) {
     threadpool::scope_chunks(data, workers, g, |_, chunk| {
         let mut tmp = vec![0.0f32; g];
         for row in chunk.chunks_mut(g) {
-            // tmp = row @ M  (row vector times operator)
-            for t in tmp.iter_mut() {
-                *t = 0.0;
-            }
-            for (k, &rv) in row.iter().enumerate() {
-                if rv != 0.0 {
-                    let mrow = &m[k * g..(k + 1) * g];
-                    for (t, &mv) in tmp.iter_mut().zip(mrow) {
-                        *t += rv * mv;
-                    }
-                }
-            }
-            row.copy_from_slice(&tmp);
+            apply_operator_row(row, &m, &mut tmp);
         }
     });
 }

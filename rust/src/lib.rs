@@ -24,6 +24,7 @@
 //! | `mx::quant` | Algorithms 1 & 2, §3.1 | qdq (de)quantization over f32 slices, flat and row-aware |
 //! | `mx::block` | §2 | per-block packed container (`MxVec`) — the reference layout |
 //! | `mx::mat` | §1, Table 5 | **packed tensor engine**: flat SoA `MxMat` + FP4×FP4 product LUT |
+//! | `mx::pipeline` | §4.2, Alg. 3 | **streaming operand prep** (`PackPipeline`): fused gather + RHT + quantize + pack, orientation-aware, parallel |
 //! | `gemm` | Algorithm 3 | qdq reference GEMM (`mx_matmul`) + packed LUT GEMM (`mx_gemm_packed`) |
 //! | `hadamard` | §3.2, Eq. 5 | blockwise RHT, dense and O(n log n) FWHT forms |
 //! | `model` | §4, Alg. 3 | **native GPT with manual backprop**: every linear GEMM (fwd/dgrad/wgrad) routed through the MX engine per recipe; KV-cached incremental decoder |
@@ -45,8 +46,13 @@
 //! E8M0 exponents, reduction dim padded to 32) and the inner loop is a
 //! 256-entry FP4×FP4 product-LUT walk with one power-of-two scale
 //! multiply per block. The two paths are bit-exact under a per-block
-//! accumulation contract (see `tests/packed_gemm.rs`), and the
-//! quantize-once weight reuse lives in [`coordinator::mxcache`].
+//! accumulation contract (see `tests/packed_gemm.rs`), the
+//! quantize-once weight reuse lives in [`coordinator::mxcache`], and
+//! *every* operand — either path, either orientation, with or without
+//! the RHT — is prepared by the fused streaming
+//! [`mx::pipeline::PackPipeline`] (one pass from the source buffer into
+//! packed form; no operand is ever cloned, transposed, or transformed
+//! into a scratch matrix first).
 //!
 //! ## The two execution backends
 //!

@@ -35,7 +35,7 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::mxcache::{MxWeightCache, Orientation, PrepCache};
 use crate::gemm::{self, Mat, MxMode};
-use crate::mx::mat::MxMat;
+use crate::mx::pipeline::PackPipeline;
 use crate::mx::quant;
 use crate::rng::Rng;
 use crate::runtime::backend::Backend;
@@ -139,14 +139,15 @@ impl NativeBackend {
     // -- the three recipe-routed GEMMs -----------------------------------
 
     /// Forward `y = x2 @ Wᵀ`: NR-quantized through the packed engine (the
-    /// weight pack cached per step via `Orientation::AsStored`), or the
-    /// plain f32 GEMM for the `bf16` baseline.
+    /// weight pack cached per step via `Orientation::AsStored`, the
+    /// activations streamed through the fused [`PackPipeline`] per GEMM),
+    /// or the plain f32 GEMM for the `bf16` baseline.
     fn linear_fwd(&mut self, x2: &Mat, widx: usize, w: &[f32]) -> Mat {
         let (m, n) = self.weight_dims(widx);
         debug_assert_eq!(x2.cols, n, "fwd reduction dim");
         if self.recipe.quantize_fwd {
-            let pa = MxMat::quantize_nr(&x2.data, x2.rows, x2.cols);
-            let pw = self.cache.pack_nr(widx, w, m, n, Orientation::AsStored);
+            let pa = PackPipeline::new(&x2.data, x2.rows, x2.cols).pack_nr(self.workers);
+            let pw = self.cache.pack_nr(widx, w, m, n, Orientation::AsStored, self.workers);
             gemm::mx_gemm_packed(&pa, pw, self.workers)
         } else {
             gemm::matmul_bt_raw(&x2.data, w, x2.rows, m, n, self.workers)
@@ -171,13 +172,21 @@ impl NativeBackend {
                 gemm::matmul_bt_raw(&g2.data, &wt.data, g2.rows, n, m, self.workers)
             }
             MxMode::Nr => {
-                let pa = MxMat::quantize_nr(&g2.data, g2.rows, g2.cols);
-                let pw = self.cache.pack_nr(widx, w, m, n, Orientation::Transposed);
+                let pa = PackPipeline::new(&g2.data, g2.rows, g2.cols).pack_nr(self.workers);
+                let pw = self.cache.pack_nr(widx, w, m, n, Orientation::Transposed, self.workers);
                 gemm::mx_gemm_packed(&pa, pw, self.workers)
             }
             MxMode::Sr => {
-                let pa = MxMat::quantize_sr(&g2.data, g2.rows, g2.cols, rng);
-                let pw = self.cache.pack_sr(w, m, n, Orientation::Transposed, rng);
+                // fresh dither per GEMM (Lemma 3.1), but the weight
+                // transpose underneath is deterministic — hoisted into
+                // the per-epoch prep cache instead of re-materializing
+                // per GEMM; the fused pipeline packs the cached Wᵀ with
+                // contiguous (`AsStored`) reads. Draw order is
+                // unchanged: g2's dither first, then Wᵀ's.
+                let pa = PackPipeline::new(&g2.data, g2.rows, g2.cols).pack_sr(rng, self.workers);
+                let wt = self.prep.transposed(widx, w, m, n);
+                let pw =
+                    self.cache.pack_sr(&wt.data, n, m, Orientation::AsStored, rng, self.workers);
                 let mut c = gemm::mx_gemm_packed(&pa, &pw, self.workers);
                 for v in &mut c.data {
                     *v *= quant::GEMM_RESCALE;
@@ -197,11 +206,15 @@ impl NativeBackend {
 
     /// wgrad `dW = g2ᵀ @ x2` (reduction over the batch·seq dim). Both
     /// operands are activations/gradients of this step — never cached.
+    /// The quantized arms feed *both* operands to the fused pipeline as
+    /// `Transposed` views (A = g2ᵀ, Bᵀ = x2ᵀ), so neither transpose is
+    /// ever materialized; only the exact baseline still builds its f32
+    /// transposes for the plain GEMM.
     fn linear_wgrad(&mut self, g2: &Mat, x2: &Mat, rng: &mut Rng) -> Mat {
         debug_assert_eq!(g2.rows, x2.rows, "wgrad reduction dim");
-        let gt = g2.transpose();
         match self.recipe.bwd {
             MxMode::Exact => {
+                let gt = g2.transpose();
                 let xt = gemm::transpose_flat(&x2.data, x2.rows, x2.cols);
                 gemm::matmul_bt_raw(&gt.data, &xt, gt.rows, x2.cols, x2.rows, self.workers)
             }
@@ -209,7 +222,14 @@ impl NativeBackend {
                 // only RHT modes constrain the block size; NR/SR tolerate
                 // any reduction dim (row-aware tail blocks)
                 let g = if mode.uses_rht() { g_eff(self.recipe.g, g2.rows) } else { self.recipe.g };
-                gemm::mx_matmul_packed(&gt, x2, mode, g, rng, self.workers)
+                gemm::mx_matmul_pipelined(
+                    PackPipeline::transposed(&g2.data, g2.cols, g2.rows),
+                    PackPipeline::transposed(&x2.data, x2.cols, x2.rows),
+                    mode,
+                    g,
+                    rng,
+                    self.workers,
+                )
             }
         }
     }
@@ -1142,11 +1162,20 @@ mod tests {
         b.on_weights_updated(1);
         b.train_step(3, &toks, &labs, &params).unwrap();
         assert_eq!(b.prep_stats(), (2 * dgrads, dgrads), "new epoch re-preps");
-        // the RHT arm shares the same cache; NR/SR arms never touch it
+        // the RHT and SR arms share the same cache (the SR dgrad's
+        // per-GEMM transpose is hoisted here — its fresh dither packs
+        // read the cached Wᵀ); the NR arm never touches it, since its
+        // transposed *pack* lives in MxWeightCache instead
         let mut r = backend("mxfp4_rht");
         let (toks, labs) = tokens_for(&r, 33);
         r.train_step(1, &toks, &labs, &params).unwrap();
         assert_eq!(r.prep_stats().0, dgrads, "RHT dgrad preps via the cache");
+        let mut sr = backend("mxfp4_sr");
+        let (toks, labs) = tokens_for(&sr, 35);
+        sr.train_step(1, &toks, &labs, &params).unwrap();
+        assert_eq!(sr.prep_stats().0, dgrads, "SR dgrad transposes once per weight per epoch");
+        sr.train_step(2, &toks, &labs, &params).unwrap();
+        assert_eq!(sr.prep_stats(), (dgrads, dgrads), "SR same epoch: transposes all hit");
         let mut nr = backend("mxfp4");
         let (toks, labs) = tokens_for(&nr, 34);
         nr.train_step(1, &toks, &labs, &params).unwrap();

@@ -76,8 +76,44 @@ pub struct MxMat {
     pub exps: Vec<i8>,
 }
 
+/// Encode one logical row into its packed slices: per ≤32-element block
+/// of `row`, compute the shared E8M0 exponent over the real elements and
+/// write two 4-bit codes per byte via the rounding closure `f(v, x)`
+/// (which sees each value and the block scale; SR closures capture their
+/// rng and draw one dither per element, in element order). `codes` must
+/// be the row's `kblocks * BLOCK_BYTES` zeroed bytes and `exps` its
+/// `kblocks` exponent slots.
+///
+/// This is the single encode path shared by the sequential references
+/// ([`MxMat::quantize_nr`] / [`MxMat::quantize_sr`]) and the fused
+/// parallel pipeline (`mx::pipeline::PackPipeline`) — one source of
+/// truth, so the two can only differ in how rows are scheduled, never in
+/// what bytes a row produces.
+pub(crate) fn encode_row(
+    row: &[f32],
+    codes: &mut [u8],
+    exps: &mut [i8],
+    f: &mut impl FnMut(f32, f32) -> f32,
+) {
+    debug_assert_eq!(codes.len(), row.chunks(MX_BLOCK).count() * BLOCK_BYTES);
+    for (b, block) in row.chunks(MX_BLOCK).enumerate() {
+        let e = scale::shared_exp(block);
+        let x = scale::exact_pow2(e);
+        let bytes = &mut codes[b * BLOCK_BYTES..(b + 1) * BLOCK_BYTES];
+        for (i, &v) in block.iter().enumerate() {
+            let code = fp4::encode(f(v, x));
+            if i % 2 == 0 {
+                bytes[i / 2] |= code & 0x0F;
+            } else {
+                bytes[i / 2] |= code << 4;
+            }
+        }
+        exps[b] = e as i8;
+    }
+}
+
 impl MxMat {
-    fn empty(rows: usize, cols: usize) -> MxMat {
+    pub(crate) fn empty(rows: usize, cols: usize) -> MxMat {
         let kblocks = cols.div_ceil(MX_BLOCK);
         MxMat {
             rows,
@@ -90,17 +126,21 @@ impl MxMat {
 
     /// Quantize a row-major `rows × cols` f32 buffer with Algorithm 1
     /// (nearest rounding, shared E8M0 block scales along each row).
+    ///
+    /// This is the **sequential reference** encoder; the fused parallel
+    /// path (`mx::pipeline::PackPipeline::pack_nr`) produces bit-
+    /// identical output for any worker count (same `encode_row`).
     pub fn quantize_nr(data: &[f32], rows: usize, cols: usize) -> MxMat {
         assert_eq!(data.len(), rows * cols, "data len != rows*cols");
         let mut m = MxMat::empty(rows, cols);
-        // Throwaway Rng: the NR closure never draws from it; one shared
-        // row-quantizer keeps a single encode path for both algorithms.
-        let mut unused = Rng::seed(0);
+        let kb = m.kblocks;
         for r in 0..rows {
-            let row = &data[r * cols..(r + 1) * cols];
-            m.quantize_row_with(r, row, &mut unused, &mut |v, x, _| {
-                fp4::nearest((v / x).clamp(-8.0, 8.0))
-            });
+            encode_row(
+                &data[r * cols..(r + 1) * cols],
+                &mut m.codes[r * kb * BLOCK_BYTES..(r + 1) * kb * BLOCK_BYTES],
+                &mut m.exps[r * kb..(r + 1) * kb],
+                &mut |v, x| fp4::nearest((v / x).clamp(-8.0, 8.0)),
+            );
         }
         m
     }
@@ -110,43 +150,24 @@ impl MxMat {
     /// order — the identical stream `quant::qdq_sr_rows` consumes, so the
     /// two paths agree bit-for-bit given the same seed. The decoded
     /// matrix estimates `(3/4)·data`; GEMM consumers rescale by 16/9.
+    ///
+    /// This is the **sequential reference** for the dither-stream
+    /// contract: `PackPipeline::pack_sr` splits the same stream by exact
+    /// fast-forward, so its bytes equal this function's for any worker
+    /// count and it leaves `rng` in the same end state.
     pub fn quantize_sr(data: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> MxMat {
         assert_eq!(data.len(), rows * cols, "data len != rows*cols");
         let mut m = MxMat::empty(rows, cols);
+        let kb = m.kblocks;
         for r in 0..rows {
-            let row = &data[r * cols..(r + 1) * cols];
-            m.quantize_row_with(r, row, rng, &mut |v, x, rng| {
-                fp4::stochastic(v / x * PRESCALE, rng.uniform())
-            });
+            encode_row(
+                &data[r * cols..(r + 1) * cols],
+                &mut m.codes[r * kb * BLOCK_BYTES..(r + 1) * kb * BLOCK_BYTES],
+                &mut m.exps[r * kb..(r + 1) * kb],
+                &mut |v, x| fp4::stochastic(v / x * PRESCALE, rng.uniform()),
+            );
         }
         m
-    }
-
-    /// Quantize one logical row: per ≤32-element block, compute the
-    /// shared exponent over the real elements and encode codes via `f`.
-    fn quantize_row_with(
-        &mut self,
-        r: usize,
-        row: &[f32],
-        rng: &mut Rng,
-        f: &mut impl FnMut(f32, f32, &mut Rng) -> f32,
-    ) {
-        let kb = self.kblocks;
-        for (b, block) in row.chunks(MX_BLOCK).enumerate() {
-            let e = scale::shared_exp(block);
-            let x = scale::exact_pow2(e);
-            let at = (r * kb + b) * BLOCK_BYTES;
-            let bytes = &mut self.codes[at..at + BLOCK_BYTES];
-            for (i, &v) in block.iter().enumerate() {
-                let code = fp4::encode(f(v, x, rng));
-                if i % 2 == 0 {
-                    bytes[i / 2] |= code & 0x0F;
-                } else {
-                    bytes[i / 2] |= code << 4;
-                }
-            }
-            self.exps[r * kb + b] = e as i8;
-        }
     }
 
     /// Decode logical element `(r, c)`.
@@ -162,11 +183,26 @@ impl MxMat {
 
     /// Decode the whole matrix back to a row-major f32 buffer (padding
     /// dropped). Equals the qdq emulation of the source values.
+    /// Walks packed blocks directly — one exponent lookup per 32-block
+    /// instead of [`get`](Self::get)'s per-element index math — since
+    /// this sits on the qdq oracle's per-GEMM path (`gemm::mx_matmul`).
     pub fn dequantize(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.rows * self.cols];
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out[r * self.cols + c] = self.get(r, c);
+        if self.cols == 0 {
+            return out;
+        }
+        let (kb, cols) = (self.kblocks, self.cols);
+        for (r, orow) in out.chunks_mut(cols).enumerate() {
+            let crow = &self.codes[r * kb * BLOCK_BYTES..(r + 1) * kb * BLOCK_BYTES];
+            let erow = &self.exps[r * kb..(r + 1) * kb];
+            for (b, (dst, &e)) in orow.chunks_mut(MX_BLOCK).zip(erow).enumerate() {
+                let x = scale::exact_pow2(e as i32);
+                let bytes = &crow[b * BLOCK_BYTES..(b + 1) * BLOCK_BYTES];
+                for (i, d) in dst.iter_mut().enumerate() {
+                    let byte = bytes[i / 2];
+                    let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                    *d = fp4::decode(code) * x;
+                }
             }
         }
         out

@@ -11,6 +11,9 @@
 //!   per-block reference layout)
 //! * `mat`   — flat SoA packed matrices (`MxMat`) + the FP4×FP4 product
 //!   LUT: the quantize-once engine behind `gemm::mx_gemm_packed`
+//! * `pipeline` — the streaming operand-prep pipeline (`PackPipeline`):
+//!   fused gather + blockwise RHT + quantize + pack, orientation-aware
+//!   and parallel — every GEMM operand is prepared through it
 
 pub mod bf16;
 pub mod block;
@@ -18,6 +21,7 @@ pub mod fp4;
 pub mod fp8;
 pub mod int4;
 pub mod mat;
+pub mod pipeline;
 pub mod quant;
 pub mod scale;
 

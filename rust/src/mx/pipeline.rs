@@ -1,0 +1,503 @@
+//! [`PackPipeline`] — the streaming operand-prep pipeline: fused
+//! gather + blockwise RHT + quantize + pack, in one pass from the source
+//! f32 buffer straight into the [`MxMat`] SoA.
+//!
+//! The paper budgets the random Hadamard transform at <5% of step time
+//! (§4.2), which only holds if operand prep is *one* pass. The old prep
+//! path paid three: clone (or materialize the transpose of) the source
+//! matrix, run `hadamard::rht_blockwise_*` over the scratch copy, then
+//! walk it again in a single-threaded quantize loop — two matrix-sized
+//! allocations and three memory sweeps per quantized GEMM, on the
+//! hottest path of every recipe. Quartet (arXiv:2505.14669) and FP4
+//! All-the-Way (arXiv:2505.19115) both fuse the transform into the
+//! quantization kernel; this module is that fusion in the rust engine.
+//!
+//! ## Pipeline stages (per 32-row group, per worker)
+//!
+//! 1. **Gather** — read up to 32 logical rows straight from the *source*
+//!    buffer: contiguously for [`Orientation::AsStored`], or via the
+//!    32-wide tile gather idiom of `gemm::transpose_flat` for
+//!    [`Orientation::Transposed`] (reads are ≤32-element contiguous runs
+//!    of the stored matrix; no transposed copy ever exists).
+//! 2. **Transform** — if an RHT sign vector is attached, apply the dense
+//!    blockwise operator to each g-chunk of the gathered rows with
+//!    [`hadamard::apply_operator_row`] — the *same* kernel
+//!    `rht_blockwise_dense` runs, so fused output is bit-identical to
+//!    transform-then-quantize.
+//! 3. **Encode** — compute each 32-block's shared E8M0 exponent and
+//!    round (NR, or SR with the dither-stream contract below) via the
+//!    crate-shared `mat::encode_row`, writing nibbles directly into the
+//!    output [`MxMat`]'s `codes`/`exps`.
+//!
+//! Only stage 1 touches the source matrix and only stage 3 writes the
+//! output; the working set in between is one ≤32-row scratch per worker
+//! (skipped entirely for untransformed `AsStored` packs, which encode
+//! straight from the source slice). No intermediate matrix is ever
+//! allocated — `benches/pack.rs` pins that down with a counting
+//! allocator.
+//!
+//! ## Worker-split and dither-stream contracts
+//!
+//! Work is split over row groups of [`PACK_GROUP`] = 32 rows
+//! (`util::threadpool::scope_chunks_pair`, chunk boundaries aligned to
+//! whole groups). NR packs are trivially worker-count-invariant: no row
+//! depends on any other.
+//!
+//! SR packs draw dither noise "once per real element in row-major
+//! order" — the contract [`MxMat::quantize_sr`] and `quant::qdq_sr_rows`
+//! share. To parallelize *without changing a single byte*, the caller's
+//! stream is split by **exact fast-forward**: one serial pre-pass clones
+//! the rng at each 32-row group boundary and steps it by that group's
+//! `rows_in_group × cols` draws (a few ns per element — an order of
+//! magnitude cheaper than encoding). Each worker then replays its
+//! groups' clones. The concatenation of the per-group streams *is* the
+//! sequential stream, so:
+//!
+//! * any worker count produces byte-identical packs,
+//! * the 1-worker (and every-worker) output equals
+//!   [`MxMat::quantize_sr`] for the same seed, and
+//! * the caller's `rng` is left exactly `rows × cols` draws ahead —
+//!   packing the second GEMM operand continues the stream precisely
+//!   where the sequential path would.
+//!
+//! When the pack would run single-threaded anyway (one worker, or an
+//! operand under the spawn threshold), the pre-pass is skipped and the
+//! caller's stream is consumed directly — same bytes, no extra rng
+//! stepping on small per-GEMM SR packs. (`Rng::fold_in`-style splitting
+//! would be cheaper to derive but would change the stream per worker
+//! layout; fast-forward keeps the packed engine bit-compatible with the
+//! qdq oracle `gemm::mx_matmul` and with every pre-pipeline
+//! checkpoint.) `tests/packed_gemm.rs` holds the
+//! parity matrix: fused vs. materialized reference across all `MxMode`s
+//! × both orientations × odd shapes × worker counts.
+
+use super::fp4;
+use super::mat::{self, MxMat, BLOCK_BYTES};
+use super::quant::PRESCALE;
+use crate::hadamard;
+use crate::rng::Rng;
+use crate::util::threadpool;
+
+/// Rows per gather/rng group — one tile of the `transpose_flat` idiom,
+/// and the granularity of the SR stream split (worker chunks are
+/// multiples of this, so chunking never moves a group's stream).
+pub const PACK_GROUP: usize = 32;
+
+/// Which way a 2-D operand is read for packing: `AsStored` blocks along
+/// the stored column dimension; `Transposed` packs the transpose of the
+/// stored matrix (reduction over its stored rows), gathering on the fly
+/// — the stored buffer is never copied or transposed. Which GEMM each
+/// orientation serves depends on the storage convention: for a `(k, n)`
+/// weight with `y = x @ W`, `AsStored` is the dgrad `dY @ Wᵀ`
+/// orientation and `Transposed` the forward; for the native model's
+/// `(out, in)` weights with `y = x @ Wᵀ` it is exactly the other way
+/// around (see `model::gpt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Orientation {
+    AsStored,
+    Transposed,
+}
+
+/// A borrowed view of one GEMM operand, ready to stream into packed
+/// [`MxMat`] form: logical `rows × cols` (cols = the reduction dim the
+/// 32-blocks lie along), read from `src` in either [`Orientation`],
+/// optionally through a blockwise RHT. See the module docs for the
+/// stage-by-stage contract.
+#[derive(Debug, Clone, Copy)]
+pub struct PackPipeline<'a> {
+    src: &'a [f32],
+    /// Logical rows of the packed output.
+    rows: usize,
+    /// Logical cols (reduction dimension) of the packed output.
+    cols: usize,
+    orientation: Orientation,
+    /// RHT sign vector (length g, g | cols); `None` = no transform.
+    sign: Option<&'a [f32]>,
+}
+
+impl<'a> PackPipeline<'a> {
+    /// Pack `src` as the row-major `rows × cols` matrix it stores.
+    pub fn new(src: &'a [f32], rows: usize, cols: usize) -> PackPipeline<'a> {
+        assert_eq!(src.len(), rows * cols, "src len != rows*cols");
+        PackPipeline { src, rows, cols, orientation: Orientation::AsStored, sign: None }
+    }
+
+    /// Pack the *transpose* of what `src` stores: the output is logical
+    /// `rows × cols`, gathered from a stored `cols × rows` row-major
+    /// buffer (element `(r, c)` reads `src[c * rows + r]`).
+    pub fn transposed(src: &'a [f32], rows: usize, cols: usize) -> PackPipeline<'a> {
+        assert_eq!(src.len(), rows * cols, "src len != rows*cols");
+        PackPipeline { src, rows, cols, orientation: Orientation::Transposed, sign: None }
+    }
+
+    /// View an existing operand with an explicit [`Orientation`]
+    /// (`AsStored` ⇒ [`new`](Self::new), `Transposed` ⇒
+    /// [`transposed`](Self::transposed); `rows`/`cols` are always the
+    /// *logical* dims of the packed output).
+    pub fn oriented(
+        src: &'a [f32],
+        rows: usize,
+        cols: usize,
+        orientation: Orientation,
+    ) -> PackPipeline<'a> {
+        match orientation {
+            Orientation::AsStored => PackPipeline::new(src, rows, cols),
+            Orientation::Transposed => PackPipeline::transposed(src, rows, cols),
+        }
+    }
+
+    /// Fuse the blockwise RHT `diag(S)·H_g` into the pack: every g-chunk
+    /// of every logical row is transformed in-scratch before encoding,
+    /// bit-identically to `hadamard::rht_blockwise_dense` over a
+    /// materialized operand. Requires `g | cols` and g a power of two.
+    pub fn with_rht(mut self, sign: &'a [f32]) -> PackPipeline<'a> {
+        let g = sign.len();
+        assert!(g.is_power_of_two(), "RHT block size g = {g} must be a power of two");
+        assert_eq!(self.cols % g, 0, "k {} not a multiple of g {g}", self.cols);
+        self.sign = Some(sign);
+        self
+    }
+
+    /// Logical rows of the packed output.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical cols (reduction dim) of the packed output.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Whether an RHT sign vector is attached.
+    pub fn has_rht(&self) -> bool {
+        self.sign.is_some()
+    }
+
+    /// Algorithm 1 (deterministic nearest rounding) in one fused pass,
+    /// parallel over row groups. Bit-identical to
+    /// [`MxMat::quantize_nr`] over the (possibly transposed, possibly
+    /// RHT-transformed) materialized operand, for any worker count.
+    pub fn pack_nr(&self, workers: usize) -> MxMat {
+        self.pack_impl(None, workers)
+    }
+
+    /// Algorithm 2 (3/4 pre-scale + stochastic rounding) in one fused
+    /// pass. Dither is drawn once per real element in row-major order
+    /// from `rng`'s stream; when the pack actually parallelizes, the
+    /// stream is split across workers by exact fast-forward (see module
+    /// docs), and when it would run single-threaded anyway (small
+    /// operands, `workers == 1`) the caller's stream is consumed
+    /// directly with no pre-pass. Either way the bytes are identical for
+    /// every worker count and equal to [`MxMat::quantize_sr`] over the
+    /// materialized operand, and `rng` advances exactly `rows × cols`
+    /// draws.
+    pub fn pack_sr(&self, rng: &mut Rng, workers: usize) -> MxMat {
+        if self.par_workers(workers) <= 1 {
+            return self.pack_seq(Some(rng));
+        }
+        let streams = split_streams_fast_forward(rng, self.rows, self.cols);
+        self.pack_impl(Some(&streams), workers)
+    }
+
+    /// Spawn-clamp work model, in the ~1 ns "items"
+    /// `threadpool::MIN_PER_WORKER` is calibrated for: per source
+    /// element the pipeline pays roughly one gather plus ~6 encode ops,
+    /// plus g dense-RHT MACs when the transform is fused.
+    fn work_items(&self) -> usize {
+        self.rows * self.cols * (7 + self.sign.map_or(0, <[f32]>::len))
+    }
+
+    /// The worker count the pack will actually use —
+    /// `threadpool::planned_workers`, the same clamp `scope_chunks_pair`
+    /// applies given [`Self::work_items`]. Predicting it lets
+    /// [`pack_sr`](Self::pack_sr) skip the fast-forward pre-pass when
+    /// the pack runs inline anyway.
+    fn par_workers(&self, workers: usize) -> usize {
+        threadpool::planned_workers(workers, self.rows, PACK_GROUP, self.work_items())
+    }
+
+    /// Sequential driver: groups in row order, one scratch, dither drawn
+    /// straight from `rng` (`None` for NR). Shares [`Self::pack_group`]
+    /// with the parallel driver, so the two cannot drift.
+    fn pack_seq(&self, mut rng: Option<&mut Rng>) -> MxMat {
+        let (rows, cols) = (self.rows, self.cols);
+        let mut out = MxMat::empty(rows, cols);
+        if rows == 0 || cols == 0 {
+            return out;
+        }
+        let kb = out.kblocks;
+        let op = self.sign.map(hadamard::rht_operator);
+        let g = self.sign.map_or(0, <[f32]>::len);
+        let staged = self.orientation == Orientation::Transposed || op.is_some();
+        let mut scratch = vec![0.0f32; if staged { PACK_GROUP.min(rows) * cols } else { 0 }];
+        let mut tmp = vec![0.0f32; g];
+        let cb = kb * BLOCK_BYTES;
+        for r0 in (0..rows).step_by(PACK_GROUP) {
+            let nr = PACK_GROUP.min(rows - r0);
+            let (codes, exps) = (
+                &mut out.codes[r0 * cb..(r0 + nr) * cb],
+                &mut out.exps[r0 * kb..(r0 + nr) * kb],
+            );
+            self.pack_group(
+                r0,
+                nr,
+                kb,
+                staged,
+                op.as_deref(),
+                &mut scratch,
+                &mut tmp,
+                codes,
+                exps,
+                rng.as_deref_mut(),
+            );
+        }
+        out
+    }
+
+    /// Parallel driver: `streams` holds one fast-forwarded rng per
+    /// [`PACK_GROUP`]-row group for SR, `None` for NR.
+    fn pack_impl(&self, streams: Option<&[Rng]>, workers: usize) -> MxMat {
+        let (rows, cols) = (self.rows, self.cols);
+        let mut out = MxMat::empty(rows, cols);
+        if rows == 0 || cols == 0 {
+            return out;
+        }
+        let kb = out.kblocks;
+        // The dense RHT operator (g × g) — the only per-pack allocation
+        // besides the output itself; shared read-only by all workers.
+        let op = self.sign.map(hadamard::rht_operator);
+        let g = self.sign.map_or(0, <[f32]>::len);
+        // Untransformed AsStored rows encode straight from `src`; the
+        // other shapes stage one ≤32-row group in per-worker scratch.
+        let staged = self.orientation == Orientation::Transposed || op.is_some();
+        let cb = kb * BLOCK_BYTES;
+        let MxMat { codes, exps, .. } = &mut out;
+        threadpool::scope_chunks_pair(
+            codes,
+            exps,
+            workers,
+            cb,
+            kb,
+            PACK_GROUP,
+            self.work_items(),
+            |row0, cchunk, echunk| {
+                let nrows = echunk.len() / kb;
+                let mut scratch = vec![0.0f32; if staged { PACK_GROUP * cols } else { 0 }];
+                let mut tmp = vec![0.0f32; g];
+                for goff in (0..nrows).step_by(PACK_GROUP) {
+                    let r0 = row0 + goff;
+                    let nr = PACK_GROUP.min(nrows - goff);
+                    // Chunk boundaries are group-aligned, so r0 is too:
+                    // this group's stream is r0/PACK_GROUP regardless of
+                    // how many workers the rows were dealt to.
+                    let mut rng = streams.map(|s| s[r0 / PACK_GROUP].clone());
+                    self.pack_group(
+                        r0,
+                        nr,
+                        kb,
+                        staged,
+                        op.as_deref(),
+                        &mut scratch,
+                        &mut tmp,
+                        &mut cchunk[goff * cb..(goff + nr) * cb],
+                        &mut echunk[goff * kb..(goff + nr) * kb],
+                        rng.as_mut(),
+                    );
+                }
+            },
+        );
+        out
+    }
+
+    /// Stage (gather + optional RHT) and encode one ≤[`PACK_GROUP`]-row
+    /// group starting at absolute row `r0`: the shared per-group body of
+    /// both drivers. `codes`/`exps` cover exactly this group's `nr`
+    /// rows; `rng` is the dither source positioned at the group's first
+    /// element (`None` for NR).
+    #[allow(clippy::too_many_arguments)]
+    fn pack_group(
+        &self,
+        r0: usize,
+        nr: usize,
+        kb: usize,
+        staged: bool,
+        op: Option<&[f32]>,
+        scratch: &mut [f32],
+        tmp: &mut [f32],
+        codes: &mut [u8],
+        exps: &mut [i8],
+        mut rng: Option<&mut Rng>,
+    ) {
+        let (rows, cols) = (self.rows, self.cols);
+        let src = self.src;
+        if staged {
+            match self.orientation {
+                Orientation::AsStored => {
+                    scratch[..nr * cols].copy_from_slice(&src[r0 * cols..(r0 + nr) * cols]);
+                }
+                Orientation::Transposed => {
+                    // Tile gather (transpose_flat's idiom): each stored
+                    // row c contributes an ≤32-element contiguous run,
+                    // scattered into scratch column c.
+                    for (c, scol) in src.chunks(rows).enumerate() {
+                        for (i, &v) in scol[r0..r0 + nr].iter().enumerate() {
+                            scratch[i * cols + c] = v;
+                        }
+                    }
+                }
+            }
+            if let Some(op) = op {
+                let g = tmp.len();
+                for row in scratch[..nr * cols].chunks_mut(cols) {
+                    for chunk in row.chunks_mut(g) {
+                        hadamard::apply_operator_row(chunk, op, tmp);
+                    }
+                }
+            }
+        }
+        let cb = kb * BLOCK_BYTES;
+        for i in 0..nr {
+            let row = if staged {
+                &scratch[i * cols..(i + 1) * cols]
+            } else {
+                &src[(r0 + i) * cols..(r0 + i + 1) * cols]
+            };
+            let co = &mut codes[i * cb..(i + 1) * cb];
+            let eo = &mut exps[i * kb..(i + 1) * kb];
+            match rng.as_deref_mut() {
+                Some(r) => mat::encode_row(row, co, eo, &mut |v, x| {
+                    fp4::stochastic(v / x * PRESCALE, r.uniform())
+                }),
+                None => mat::encode_row(row, co, eo, &mut |v, x| {
+                    fp4::nearest((v / x).clamp(-8.0, 8.0))
+                }),
+            }
+        }
+    }
+}
+
+/// Split `rng`'s stream at every [`PACK_GROUP`]-row boundary by exact
+/// fast-forward: clone the state at each group start, then advance by
+/// the group's `rows_in_group × cols` one-draw-per-element dither
+/// consumption. On return `rng` itself sits exactly `rows × cols` draws
+/// ahead — the same end state the sequential [`MxMat::quantize_sr`]
+/// leaves it in.
+fn split_streams_fast_forward(rng: &mut Rng, rows: usize, cols: usize) -> Vec<Rng> {
+    let mut states = Vec::with_capacity(rows.div_ceil(PACK_GROUP));
+    for r0 in (0..rows).step_by(PACK_GROUP) {
+        states.push(rng.clone());
+        let nr = PACK_GROUP.min(rows - r0);
+        for _ in 0..nr * cols {
+            rng.next_u64();
+        }
+    }
+    states
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::transpose_flat;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; rows * cols];
+        Rng::seed(seed).fill_normal(&mut v, 2.0);
+        v
+    }
+
+    // odd shapes on purpose: k % 32 != 0 and rows not a multiple of the
+    // 32-row pack group; (200, 500) is big enough that the worker path
+    // clears the threadpool's MIN_PER_WORKER inline clamp
+    const SHAPES: [(usize, usize); 5] = [(1, 1), (7, 50), (33, 95), (70, 64), (200, 500)];
+
+    #[test]
+    fn nr_as_stored_matches_sequential_reference_for_any_workers() {
+        for (rows, cols) in SHAPES {
+            let v = gaussian(rows, cols, 100 + rows as u64);
+            let want = MxMat::quantize_nr(&v, rows, cols);
+            for workers in [1usize, 2, 3, 8] {
+                let got = PackPipeline::new(&v, rows, cols).pack_nr(workers);
+                assert_eq!(got, want, "({rows},{cols}) workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn nr_transposed_matches_materialized_transpose() {
+        for (rows, cols) in SHAPES {
+            // stored (cols, rows); pack its transpose (rows, cols)
+            let v = gaussian(cols, rows, 200 + rows as u64);
+            let want = MxMat::quantize_nr(&transpose_flat(&v, cols, rows), rows, cols);
+            let got = PackPipeline::transposed(&v, rows, cols).pack_nr(3);
+            assert_eq!(got, want, "({rows},{cols})");
+        }
+    }
+
+    #[test]
+    fn sr_stream_identical_to_sequential_reference_and_worker_invariant() {
+        for (rows, cols) in SHAPES {
+            let v = gaussian(rows, cols, 300 + cols as u64);
+            let mut ref_rng = Rng::seed(9);
+            let want = MxMat::quantize_sr(&v, rows, cols, &mut ref_rng);
+            for workers in [1usize, 2, 4] {
+                let mut rng = Rng::seed(9);
+                let got = PackPipeline::new(&v, rows, cols).pack_sr(&mut rng, workers);
+                assert_eq!(got, want, "({rows},{cols}) workers {workers}");
+                // the caller's stream must end exactly where the
+                // sequential reference leaves it
+                assert_eq!(
+                    rng.next_u64(),
+                    ref_rng.clone().next_u64(),
+                    "({rows},{cols}) workers {workers}: end state"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rht_pack_bit_identical_to_transform_then_quantize() {
+        let (rows, cols, g) = (37, 96, 32);
+        let v = gaussian(rows, cols, 7);
+        let sign = hadamard::sample_sign(g, &mut Rng::seed(11));
+        // old path: materialize, dense-RHT, quantize sequentially
+        let mut t = v.clone();
+        hadamard::rht_blockwise_dense(&mut t, &sign, 2);
+        let want_nr = MxMat::quantize_nr(&t, rows, cols);
+        let want_sr = MxMat::quantize_sr(&t, rows, cols, &mut Rng::seed(5));
+        for workers in [1usize, 4] {
+            let p = PackPipeline::new(&v, rows, cols).with_rht(&sign);
+            assert_eq!(p.pack_nr(workers), want_nr, "NR workers {workers}");
+            assert_eq!(p.pack_sr(&mut Rng::seed(5), workers), want_sr, "SR workers {workers}");
+        }
+    }
+
+    #[test]
+    fn rht_transposed_gather_matches_materialized_reference() {
+        let (rows, cols, g) = (33, 64, 64);
+        let v = gaussian(cols, rows, 13); // stored (cols, rows)
+        let sign = hadamard::sample_sign(g, &mut Rng::seed(17));
+        let mut t = transpose_flat(&v, cols, rows);
+        hadamard::rht_blockwise_dense(&mut t, &sign, 1);
+        let want = MxMat::quantize_sr(&t, rows, cols, &mut Rng::seed(21));
+        let got =
+            PackPipeline::transposed(&v, rows, cols).with_rht(&sign).pack_sr(&mut Rng::seed(21), 3);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_operands_pack_to_empty() {
+        let p = PackPipeline::new(&[], 0, 5).pack_nr(4);
+        assert_eq!((p.rows, p.cols, p.codes.len()), (0, 5, 0));
+        let p = PackPipeline::new(&[], 3, 0).pack_sr(&mut Rng::seed(1), 4);
+        assert_eq!((p.rows, p.cols, p.exps.len()), (3, 0, 0));
+    }
+
+    #[test]
+    fn oriented_dispatches_both_ways() {
+        let v = gaussian(6, 40, 31);
+        let a = PackPipeline::oriented(&v, 6, 40, Orientation::AsStored).pack_nr(1);
+        assert_eq!(a, MxMat::quantize_nr(&v, 6, 40));
+        let t = PackPipeline::oriented(&v, 40, 6, Orientation::Transposed).pack_nr(1);
+        assert_eq!(t, MxMat::quantize_nr(&transpose_flat(&v, 6, 40), 40, 6));
+    }
+}

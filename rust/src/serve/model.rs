@@ -4,7 +4,8 @@
 //! per-step weight cache (training rewrites weights every step), a
 //! `ServeModel` freezes one checkpoint: every 2-D weight on the forward
 //! path (`qkv`, `proj`, `fc1`, `fc2` per layer + the tied head) is
-//! NR-quantized into packed [`MxMat`] form exactly once at construction
+//! NR-quantized into packed [`MxMat`](crate::mx::mat::MxMat) form
+//! exactly once at construction
 //! — through a [`MxWeightCache`], so the quantize-once accounting
 //! (`packs` never grows after load) stays observable — and every method
 //! takes `&self`. That makes the model `Send + Sync`: wrap it in an
@@ -22,7 +23,7 @@ use crate::coordinator::mxcache::{MxWeightCache, Orientation};
 use crate::gemm::{self, Mat};
 use crate::model::gpt::{decode_rows, prefill_rows};
 use crate::model::{layer_base, DecodeState, GPTConfig, NativeRecipe, TOK_EMB};
-use crate::mx::mat::MxMat;
+use crate::mx::pipeline::PackPipeline;
 use crate::util::threadpool;
 
 /// A packed, read-only checkpoint ready to serve. See the module docs.
@@ -67,21 +68,15 @@ impl ServeModel {
                 _ => None,
             })
             .collect();
+        let workers = threadpool::default_workers();
         let mut cache = MxWeightCache::new(specs.len());
         if recipe.quantize_fwd {
             for idx in fwd_weight_indices(&cfg) {
                 let (r, c) = shapes[idx].expect("forward weights are 2-D");
-                cache.pack_nr(idx, &params[idx], r, c, Orientation::AsStored);
+                cache.pack_nr(idx, &params[idx], r, c, Orientation::AsStored, workers);
             }
         }
-        Ok(ServeModel {
-            workers: threadpool::default_workers(),
-            cfg,
-            recipe,
-            params,
-            cache,
-            shapes,
-        })
+        Ok(ServeModel { workers, cfg, recipe, params, cache, shapes })
     }
 
     pub fn config(&self) -> &GPTConfig {
@@ -133,7 +128,7 @@ impl ServeModel {
         let (m, n) = self.shapes[idx].expect("forward weights are 2-D");
         debug_assert_eq!(x.cols, n, "fwd reduction dim");
         if self.recipe.quantize_fwd {
-            let pa = MxMat::quantize_nr(&x.data, x.rows, x.cols);
+            let pa = PackPipeline::new(&x.data, x.rows, x.cols).pack_nr(self.workers);
             let pw = self
                 .cache
                 .get_nr(idx, Orientation::AsStored)

@@ -20,6 +20,23 @@ pub fn default_workers() -> usize {
 /// (~10-20 us per spawned thread vs ~1 ns/element of typical work).
 pub const MIN_PER_WORKER: usize = 16 * 1024;
 
+/// The worker count a chunked scope will actually use: capped by the
+/// number of `align`-unit chunks available and by the total work — in
+/// the ~1 ns "items" [`MIN_PER_WORKER`] is calibrated for — that must
+/// amortize each spawn. Single source of truth for [`scope_chunks`]
+/// (which uses its element count as the work size), for
+/// [`scope_chunks_pair`] (whose caller passes an explicit work hint —
+/// its slices are packed output bytes, much smaller than the work that
+/// produces them), and for callers that need to *predict* the decision
+/// (`mx::pipeline::PackPipeline::pack_sr` skips its rng fast-forward
+/// pre-pass when the pack will run inline anyway).
+pub fn planned_workers(workers: usize, units: usize, align: usize, work_items: usize) -> usize {
+    workers
+        .max(1)
+        .min(units.div_ceil(align.max(1)).max(1))
+        .min((work_items / MIN_PER_WORKER).max(1))
+}
+
 /// Run `f(chunk_index, chunk)` over ~equal contiguous chunks of `data` on
 /// `workers` scoped threads. Chunk boundaries are multiples of `align`
 /// (useful to keep MX blocks / rows intact). Small inputs run inline —
@@ -32,8 +49,7 @@ where
     if n == 0 {
         return;
     }
-    let workers =
-        workers.max(1).min(n.div_ceil(align.max(1))).min((n / MIN_PER_WORKER).max(1));
+    let workers = planned_workers(workers, n, align, n);
     if workers <= 1 {
         f(0, data);
         return;
@@ -44,6 +60,62 @@ where
         for (i, chunk) in data.chunks_mut(per).enumerate() {
             let f = &f;
             s.spawn(move || f(i, chunk));
+        }
+    });
+}
+
+/// [`scope_chunks`] over *two* parallel slices that must be split at the
+/// same logical boundaries — the `mx::pipeline` case, where one packed
+/// row spans `unit_a` bytes of FP4 codes and `unit_b` E8M0 exponents and
+/// a worker owns both halves of its rows. `a` is viewed as
+/// `a.len() / unit_a` units, `b` as `b.len() / unit_b` (the counts must
+/// agree); chunk boundaries fall on multiples of `align_units` units.
+/// `f(start_unit, a_chunk, b_chunk)` sees the absolute unit offset of
+/// its chunk, so it can recover row indices without pointer arithmetic.
+/// `work_items` is the spawn-clamp hint fed to [`planned_workers`]: the
+/// slices here are packed *outputs* (a few bits per element produced),
+/// so the caller states how much work actually backs them instead of
+/// the byte length standing in for it.
+pub fn scope_chunks_pair<A: Send, B: Send, F>(
+    a: &mut [A],
+    b: &mut [B],
+    workers: usize,
+    unit_a: usize,
+    unit_b: usize,
+    align_units: usize,
+    work_items: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(unit_a > 0 && unit_b > 0, "zero-sized units");
+    let units = a.len() / unit_a;
+    assert_eq!(a.len(), units * unit_a, "a len not a multiple of unit_a");
+    assert_eq!(b.len(), units * unit_b, "b len {} != {units} units of {unit_b}", b.len());
+    if units == 0 {
+        return;
+    }
+    let align = align_units.max(1);
+    let workers = planned_workers(workers, units, align, work_items);
+    if workers <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let per = units.div_ceil(workers).div_ceil(align) * align;
+    std::thread::scope(|s| {
+        let mut a_rest = a;
+        let mut b_rest = b;
+        let mut u0 = 0usize;
+        while u0 < units {
+            let take = per.min(units - u0);
+            let (ac, ar) = a_rest.split_at_mut(take * unit_a);
+            let (bc, br) = b_rest.split_at_mut(take * unit_b);
+            a_rest = ar;
+            b_rest = br;
+            let f = &f;
+            let start = u0;
+            s.spawn(move || f(start, ac, bc));
+            u0 += take;
         }
     });
 }
@@ -126,6 +198,63 @@ mod tests {
             }
         });
         assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunks_pair_covers_both_slices_in_lockstep() {
+        // 10 units: 4 codes-bytes + 2 exps each; chunks aligned to 3
+        // units; a large work hint forces the real multi-chunk path
+        let mut a = vec![0u8; 40];
+        let mut b = vec![0i8; 20];
+        scope_chunks_pair(&mut a, &mut b, 4, 4, 2, 3, 1 << 20, |u0, ac, bc| {
+            assert_eq!(ac.len() / 4, bc.len() / 2, "units agree per chunk");
+            assert!(u0 % 3 == 0, "boundaries on align_units");
+            for x in ac {
+                *x += 1;
+            }
+            for x in bc {
+                *x += u0 as i8 + 1;
+            }
+        });
+        assert!(a.iter().all(|&x| x == 1), "every a element visited once");
+        assert!(b.iter().all(|&x| x > 0), "every b element visited once");
+    }
+
+    #[test]
+    fn chunks_pair_small_work_runs_inline() {
+        // under MIN_PER_WORKER items of work: one inline call, chunk 0
+        let mut a = vec![0u8; 40];
+        let mut b = vec![0i8; 20];
+        let calls = AtomicUsize::new(0);
+        scope_chunks_pair(&mut a, &mut b, 4, 4, 2, 3, 100, |u0, ac, bc| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!((u0, ac.len(), bc.len()), (0, 40, 20));
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunks_pair_empty_and_single_unit() {
+        let mut a: Vec<u8> = vec![];
+        let mut b: Vec<i8> = vec![];
+        scope_chunks_pair(&mut a, &mut b, 4, 4, 2, 1, 1 << 20, |_, _, _| panic!("should not run"));
+        let mut a = vec![0u8; 4];
+        let mut b = vec![0i8; 2];
+        scope_chunks_pair(&mut a, &mut b, 4, 4, 2, 1, 1 << 20, |u0, ac, bc| {
+            assert_eq!((u0, ac.len(), bc.len()), (0, 4, 2));
+            ac[0] = 7;
+            bc[0] = 7;
+        });
+        assert_eq!((a[0], b[0]), (7, 7));
+    }
+
+    #[test]
+    fn planned_workers_clamps() {
+        // chunk-count cap, work cap, and the floor of one
+        assert_eq!(planned_workers(8, 10, 3, 1 << 30), 4, "10 units / align 3 = 4 chunks");
+        assert_eq!(planned_workers(8, 1000, 1, MIN_PER_WORKER * 2), 2, "work-limited");
+        assert_eq!(planned_workers(8, 1000, 1, 10), 1, "tiny work runs inline");
+        assert_eq!(planned_workers(0, 0, 0, 0), 1, "degenerate inputs floor at 1");
     }
 
     #[test]

@@ -14,8 +14,12 @@
 //! divergence is a packing/LUT/indexing bug, which is exactly what these
 //! properties hunt across random (including non-multiple-of-32) shapes.
 
-use mxfp4_train::gemm::{mx_gemm_packed, mx_matmul_packed, Mat, MxMode};
+use mxfp4_train::gemm::{
+    mx_gemm_packed, mx_matmul_packed, mx_matmul_packed_bt, transpose_flat, Mat, MxMode,
+};
 use mxfp4_train::hadamard;
+use mxfp4_train::mx::mat::MxMat;
+use mxfp4_train::mx::pipeline::{Orientation, PackPipeline};
 use mxfp4_train::mx::quant::{self, MX_BLOCK};
 use mxfp4_train::rng::Rng;
 use mxfp4_train::testing::{check, Config};
@@ -147,6 +151,189 @@ fn prop_packed_gemm_deterministic_across_worker_counts() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// Fused-pipeline parity matrix (ISSUE 4): the streaming PackPipeline vs.
+// the pre-refactor materialize-then-quantize prep, which survives only
+// here as the test-only reference implementation.
+// ---------------------------------------------------------------------
+
+/// The **old operand-prep path**, verbatim in shape: materialize the
+/// oriented operand (clone or `transpose_flat`), run the blockwise dense
+/// RHT over the scratch copy, then quantize the copy with the
+/// single-threaded row loop. Deleted from the library (`mx::pipeline`
+/// fused all three stages); kept here as the bit-parity oracle.
+fn reference_prep(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    orientation: Orientation,
+    sign: Option<&[f32]>,
+    sr_rng: Option<&mut Rng>,
+) -> MxMat {
+    // (rows, cols) are the logical dims of the packed output
+    let mut buf = match orientation {
+        Orientation::AsStored => src.to_vec(),
+        Orientation::Transposed => transpose_flat(src, cols, rows),
+    };
+    if let Some(sign) = sign {
+        hadamard::rht_blockwise_dense(&mut buf, sign, 1);
+    }
+    match sr_rng {
+        Some(rng) => MxMat::quantize_sr(&buf, rows, cols, rng),
+        None => MxMat::quantize_nr(&buf, rows, cols),
+    }
+}
+
+#[test]
+fn fused_pack_matches_reference_prep_across_modes_orientations_shapes() {
+    // all 5 MxModes x both orientations x odd shapes: k % 32 != 0 for
+    // the non-RHT modes, rows deliberately not a multiple of the 32-row
+    // worker group, RHT shapes with g | k. Exact never packs (the GEMM
+    // entries route it to the plain f32 path), so its "parity" is the
+    // GEMM-level test below; the four packing modes are covered here.
+    // (300, 256) is large enough that the packed output clears the
+    // threadpool's MIN_PER_WORKER clamp — the multi-chunk worker path
+    // really runs; the small shapes cover boundaries on the inline path
+    let g = 32usize;
+    for (rows, cols) in [(5usize, 50usize), (33, 95), (70, 96), (300, 256)] {
+        let src = {
+            let mut v = vec![0.0f32; rows * cols];
+            Rng::seed(rows as u64 * 31 + cols as u64).fill_normal(&mut v, 2.0);
+            v
+        };
+        for orientation in [Orientation::AsStored, Orientation::Transposed] {
+            // stored dims flip for Transposed: src holds (cols, rows)
+            let stored: Vec<f32> = match orientation {
+                Orientation::AsStored => src.clone(),
+                Orientation::Transposed => transpose_flat(&src, rows, cols),
+            };
+            let pipe = || PackPipeline::oriented(&stored, rows, cols, orientation);
+            for mode in [MxMode::Nr, MxMode::Sr, MxMode::Rht, MxMode::RhtSr] {
+                if mode.uses_rht() && cols % g != 0 {
+                    continue;
+                }
+                let sign = mode
+                    .uses_rht()
+                    .then(|| hadamard::sample_sign(g, &mut Rng::seed(77)));
+                let mut sr = Rng::seed(123);
+                let want = reference_prep(
+                    &stored,
+                    rows,
+                    cols,
+                    orientation,
+                    sign.as_deref(),
+                    mode.uses_sr().then_some(&mut sr),
+                );
+                for workers in [1usize, 2, 4] {
+                    let mut p = pipe();
+                    if let Some(s) = &sign {
+                        p = p.with_rht(s);
+                    }
+                    let got = if mode.uses_sr() {
+                        p.pack_sr(&mut Rng::seed(123), workers)
+                    } else {
+                        p.pack_nr(workers)
+                    };
+                    assert_eq!(
+                        got, want,
+                        "{mode:?} {orientation:?} ({rows},{cols}) workers {workers}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_gemm_entries_match_reference_prep_gemm_all_modes() {
+    // GEMM-level parity: mx_matmul_packed{,_bt} (fused prep inside) vs.
+    // reference_prep operands fed to the same LUT kernel, across all 5
+    // modes including Exact (where both entries are the plain f32 GEMM).
+    let (m, k, n, g) = (7usize, 96usize, 5usize, 32usize);
+    let mut rng = Rng::seed(0xF00D);
+    let a = Mat::gaussian(m, k, 1.0, &mut rng);
+    let b = Mat::gaussian(k, n, 1.0, &mut rng);
+    let bt = b.transpose();
+    for mode in [MxMode::Exact, MxMode::Nr, MxMode::Sr, MxMode::Rht, MxMode::RhtSr] {
+        let got = mx_matmul_packed(&a, &b, mode, g, &mut Rng::seed(88), 2);
+        let got_bt = mx_matmul_packed_bt(&a, &bt, mode, g, &mut Rng::seed(88), 3);
+        assert_eq!(got.data, got_bt.data, "{mode:?}: bt entry diverges");
+        if mode == MxMode::Exact {
+            continue; // no packing to compare; entry parity above suffices
+        }
+        // reference draw order: sign vector, then A's dither, then Bᵀ's
+        let mut oracle = Rng::seed(88);
+        let sign = mode.uses_rht().then(|| hadamard::sample_sign(g, &mut oracle));
+        let (pa, pbt) = if mode.uses_sr() {
+            let s = sign.as_deref();
+            let pa = reference_prep(&a.data, m, k, Orientation::AsStored, s, Some(&mut oracle));
+            let pbt =
+                reference_prep(&b.data, n, k, Orientation::Transposed, s, Some(&mut oracle));
+            (pa, pbt)
+        } else {
+            (
+                reference_prep(&a.data, m, k, Orientation::AsStored, sign.as_deref(), None),
+                reference_prep(&b.data, n, k, Orientation::Transposed, sign.as_deref(), None),
+            )
+        };
+        let mut want = mx_gemm_packed(&pa, &pbt, 1);
+        if mode.uses_sr() {
+            for v in &mut want.data {
+                *v *= quant::GEMM_RESCALE;
+            }
+        }
+        for (i, (x, y)) in got.data.iter().zip(&want.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{mode:?} elem {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn fused_sr_consumes_the_exact_quantize_sr_stream_at_one_worker() {
+    // the seeded dither-stream contract: at 1 worker the fused pack
+    // consumes the identical row-major stream as MxMat::quantize_sr —
+    // same bytes out, same rng end state (so a following pack continues
+    // the stream exactly where the sequential path would)
+    let (rows, cols) = (37usize, 50usize);
+    let mut v = vec![0.0f32; rows * cols];
+    Rng::seed(4).fill_normal(&mut v, 1.5);
+    let mut seq_rng = Rng::seed(2024);
+    let want = MxMat::quantize_sr(&v, rows, cols, &mut seq_rng);
+    let mut fused_rng = Rng::seed(2024);
+    let got = PackPipeline::new(&v, rows, cols).pack_sr(&mut fused_rng, 1);
+    assert_eq!(got, want, "1-worker fused pack != sequential reference");
+    assert_eq!(fused_rng.next_u64(), seq_rng.next_u64(), "rng end states diverge");
+}
+
+#[test]
+fn fused_sr_self_consistent_across_worker_counts() {
+    // rows straddle worker-chunk boundaries (1000 = 31 full 32-row
+    // groups + 8), and the packed output is big enough to clear the
+    // threadpool's MIN_PER_WORKER clamp, so chunks are genuinely dealt
+    // to different thread counts
+    let (rows, cols) = (1000usize, 250usize);
+    let mut v = vec![0.0f32; rows * cols];
+    Rng::seed(6).fill_normal(&mut v, 2.0);
+    let sign = hadamard::sample_sign(32, &mut Rng::seed(7));
+    for rht in [false, true] {
+        // RHT needs g | k, so the RHT case views a g-aligned (1000, 224)
+        // slice of the same buffer; the plain case keeps the odd 250 cols
+        let pack = |workers: usize| {
+            if rht {
+                PackPipeline::new(&v[..rows * 224], rows, 224)
+                    .with_rht(&sign)
+                    .pack_sr(&mut Rng::seed(31), workers)
+            } else {
+                PackPipeline::new(&v, rows, cols).pack_sr(&mut Rng::seed(31), workers)
+            }
+        };
+        let base = pack(1);
+        for workers in [2usize, 3, 8] {
+            assert_eq!(pack(workers), base, "rht {rht} workers {workers}");
+        }
+    }
 }
 
 #[test]

@@ -34,7 +34,16 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q "$@"
 
+echo "==> fused-pipeline parity tests (PackPipeline vs materialized prep reference)"
+# run the parity matrix by name (the `fused_` prefix selects: pack-level
+# parity across modes x orientations x odd shapes, GEMM-level parity for
+# all 5 modes, and the SR dither-stream / worker-count contracts) so a
+# filtered "$@" above can never silently skip it
+cargo test -q --test packed_gemm fused_
+
 echo "==> compile benches + examples"
+# covers every [[bench]] target, including the new `pack` bench
+# (fused-vs-materialized prep + the counting-allocator assert)
 cargo build --release --benches --examples
 
 echo "==> quickstart (native-capable 20-step train, loss must decrease)"
