@@ -15,7 +15,7 @@ use std::sync::Arc;
 use mxfp4_train::model::{GPTConfig, NativeRecipe};
 use mxfp4_train::rng::Rng;
 use mxfp4_train::runtime::{executor, Backend, BackendSpec};
-use mxfp4_train::serve::{Engine, EngineConfig, Request, SamplingParams, ServeModel};
+use mxfp4_train::serve::{Engine, EngineConfig, Request, SamplingParams, ServeModel, SpecConfig};
 
 const SEQ: usize = 128;
 
@@ -144,6 +144,58 @@ fn main() {
             st.generated_tokens,
             st.generated_tokens as f64 / secs,
             st.occupancy(nreq)
+        );
+    }
+
+    // speculative decode, draft == target: acceptance must be exactly
+    // 1.0 (the draft reproduces the target's bit-identical choices) and
+    // the target must run strictly fewer batched decode steps than it
+    // emits tokens — one multi-row verify advances up to k+1 positions.
+    harness::header("speculative decode: draft == target, exact acceptance (greedy, 1 request)");
+    let vanilla = {
+        let mut engine = Engine::new(Box::new(model.clone()), EngineConfig { max_batch: 1 });
+        engine.submit(Request {
+            id: 0,
+            prompt: prompt(24, cfg.vocab, 30),
+            max_new: 64,
+            sampling: SamplingParams::greedy(),
+            seed: 1,
+        });
+        engine.run().unwrap().remove(0)
+    };
+    for k in [2usize, 4, 8] {
+        let mut engine = Engine::new(Box::new(model.clone()), EngineConfig { max_batch: 1 });
+        engine.enable_spec(Box::new(model.clone()), SpecConfig { k }).unwrap();
+        let t0 = std::time::Instant::now();
+        engine.submit(Request {
+            id: 0,
+            prompt: prompt(24, cfg.vocab, 30),
+            max_new: 64,
+            sampling: SamplingParams::greedy(),
+            seed: 1,
+        });
+        let done = engine.run().unwrap().remove(0);
+        let secs = t0.elapsed().as_secs_f64();
+        let st = engine.stats();
+        assert_eq!(done.tokens, vanilla.tokens, "k={k}: speculative stream diverged");
+        assert!(st.spec_proposed > 0, "k={k}: nothing proposed");
+        assert_eq!(
+            st.spec_accepted, st.spec_proposed,
+            "k={k}: draft==target must accept every proposal"
+        );
+        assert!(
+            st.decode_steps < st.generated_tokens,
+            "k={k}: {} target steps for {} tokens — speculation saved nothing",
+            st.decode_steps,
+            st.generated_tokens
+        );
+        println!(
+            "k={k}: {} tokens, accept rate {:.2}, {} target steps + {} draft steps, {:>9.2} tok/s",
+            st.generated_tokens,
+            st.accept_rate(),
+            st.decode_steps,
+            st.draft_steps,
+            st.generated_tokens as f64 / secs,
         );
     }
 }

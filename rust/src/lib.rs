@@ -28,7 +28,7 @@
 //! | `gemm` | Algorithm 3 | qdq reference GEMM (`mx_matmul`) + packed LUT GEMM (`mx_gemm_packed`) |
 //! | `hadamard` | §3.2, Eq. 5 | blockwise RHT, dense and O(n log n) FWHT forms |
 //! | `model` | §4, Alg. 3 | **native GPT with manual backprop**: every linear GEMM (fwd/dgrad/wgrad) routed through the MX engine per recipe; KV-cached incremental decoder |
-//! | `serve` | §1, §4 | **serving subsystem**: pack-once `ServeModel`, continuous-batching `Engine`, seeded sampling (`docs/SERVING.md`) |
+//! | `serve` | §1, §4 | **serving subsystem**: pack-once `ServeModel`, continuous-batching `Engine` with chunked batched prefill, exact-acceptance speculative decoding (`serve::spec`), TCP/stdin line protocol (`serve::net`), seeded sampling (`docs/SERVING.md`) |
 //! | `coordinator` | §4 | trainer loop, DP pool, metrics, checkpoints, quantize-once `mxcache` + dgrad `PrepCache` |
 //! | `optim` | §4.1 | AdamW with FP32 masters + BF16 compute copies, cosine schedule |
 //! | `perfmodel` | Table 5, §4.2 | roofline model of the backward-pass speedups |

@@ -24,10 +24,10 @@ use anyhow::{Context, Result};
 use mxfp4_train::config::TrainConfig;
 use mxfp4_train::coordinator::Trainer;
 use mxfp4_train::data::Dataset;
+use mxfp4_train::model::{GPTConfig, NativeRecipe};
 use mxfp4_train::runtime::{executor, Backend, BackendSpec, Registry};
-use mxfp4_train::serve;
+use mxfp4_train::serve::{self, net};
 use mxfp4_train::util::cli::Args;
-use mxfp4_train::util::json::{self, Json};
 use mxfp4_train::{eval, gemm, hadamard, info, mx, perfmodel, rng::Rng};
 
 fn main() -> Result<()> {
@@ -218,6 +218,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
 /// Continuous-batching serve loop over the packed MXFP4 engine.
 ///
 /// Input modes (first match wins):
+///   --listen ADDR      TCP front-end: the same line/JSON protocol over
+///                      sockets (one engine serves every connection;
+///                      graceful drain on client EOF). --max-conns N
+///                      exits after N connections (0 = forever).
 ///   --prompt "1,2,3"   one-shot: a single request, print its completion
 ///   --stdin            line protocol: one request per line, either bare
 ///                      token ids (`12 7 33`) or JSON
@@ -229,8 +233,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
 /// Shared knobs: --config, --recipe (forward precision), --backend
 /// native|artifact|auto, --checkpoint (absent = random init demo
 /// weights), --tokens (default max_new), --temperature, --top-k, --seed,
-/// --max-batch. Weights are packed once at load and shared (`Arc`)
-/// across every session; a tokens/sec + occupancy summary prints at exit.
+/// --max-batch. Speculative decoding: --spec-draft <config|target>
+/// proposes --spec-k tokens per verify step through a draft model
+/// (`target` = the served model itself, the 100%-acceptance sanity
+/// mode; a config name builds a smaller draft from
+/// --spec-draft-checkpoint or random init). Outputs are byte-identical
+/// with or without a draft. Weights are packed once at load and shared
+/// (`Arc`) across every session; a tokens/sec + occupancy (+ acceptance
+/// rate) summary prints at exit.
 fn cmd_serve(args: &Args) -> Result<()> {
     let reg = registry(args)?;
     let config = args.get_or("config", "tiny");
@@ -250,18 +260,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )
         }
     };
+    let mut native_model = None;
     let backend: Box<dyn serve::ServeBackend> = match &spec {
         BackendSpec::Native { cfg, recipe, .. } => {
             // the native fast path: pack once, share across sessions
-            let model = serve::ServeModel::new(cfg.clone(), recipe.clone(), params)?;
+            let model =
+                std::sync::Arc::new(serve::ServeModel::new(cfg.clone(), recipe.clone(), params)?);
             info!("packed {} bytes of MXFP4 weight views once for this checkpoint", model.packed_bytes());
-            Box::new(std::sync::Arc::new(model))
+            native_model = Some(model.clone());
+            Box::new(model)
         }
         BackendSpec::Artifact(_) => Box::new(serve::BackendServe::new(spec.connect()?, params)),
     };
     info!("serving via {}", backend.describe());
     let max_batch = args.get_usize("max-batch", 8);
     let mut engine = serve::Engine::new(backend, serve::EngineConfig { max_batch });
+
+    if let Some(draft_name) = args.get("spec-draft") {
+        let k = args.get_usize("spec-k", 4);
+        let draft: Box<dyn serve::ServeBackend> = if draft_name == "target" {
+            // the served model drafts for itself: 100% acceptance, the
+            // sanity mode CI smokes (needs the pack-once native path)
+            let m = native_model
+                .clone()
+                .context("--spec-draft target needs the native serve backend")?;
+            Box::new(m)
+        } else {
+            let (dcfg, _) = GPTConfig::preset(draft_name).with_context(|| {
+                format!("unknown --spec-draft config {draft_name:?} (micro|test|tiny|small|base|target)")
+            })?;
+            let drecipe = NativeRecipe::parse(recipe).map_err(anyhow::Error::msg)?;
+            let dparams = match args.get("spec-draft-checkpoint") {
+                Some(ckpt) => {
+                    mxfp4_train::coordinator::checkpoint::load(std::path::Path::new(ckpt))?.1
+                }
+                None => {
+                    info!("no --spec-draft-checkpoint: random draft weights (acceptance will be low)");
+                    executor::init_params_for(
+                        &dcfg.param_specs(),
+                        dcfg.n_layers,
+                        args.get_u64("seed", 0),
+                    )
+                }
+            };
+            Box::new(std::sync::Arc::new(serve::ServeModel::new(dcfg, drecipe, dparams)?))
+        };
+        engine.enable_spec(draft, serve::SpecConfig { k })?;
+        info!("speculative decoding on: {}", engine.describe());
+    }
 
     let defaults = serve::Request {
         id: 0,
@@ -274,8 +320,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0),
     };
 
-    if let Some(p) = args.get("prompt") {
-        let prompt = parse_prompt_tokens(p)?;
+    if let Some(addr) = args.get("listen") {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("--listen {addr}"))?;
+        info!("listening on {}", listener.local_addr()?);
+        net::serve_tcp(&mut engine, listener, &defaults, args.get_usize("max-conns", 0))?;
+    } else if let Some(p) = args.get("prompt") {
+        let prompt = net::parse_prompt_tokens(p)?;
         engine.submit(serve::Request { prompt, ..defaults });
         for c in engine.run()? {
             print_completion(&c);
@@ -288,15 +339,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             // a malformed line gets an error response; it must not take
             // down the queued and in-flight sessions with it
-            match parse_request_line(&line, i as u64, &defaults) {
+            match net::parse_request_line(&line, i as u64, &defaults) {
                 Ok(req) => engine.submit(req),
-                Err(e) => {
-                    let doc = json::obj(vec![
-                        ("id", Json::Num(i as f64)),
-                        ("error", json::s(&e.to_string())),
-                    ]);
-                    println!("{doc}");
-                }
+                Err(e) => println!("{}", net::error_json(i as u64, &e.to_string())),
             }
             // tick between submissions so admissions interleave with
             // decode — the continuous part of continuous batching
@@ -329,71 +374,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let st = engine.stats().clone();
     println!(
-        "served {} request(s): {} prompt tokens prefilled, {} tokens generated in {:.3}s \
-         ({:.0} tok/s), mean batch occupancy {:.2} over {} decode steps",
+        "served {} request(s): {} prompt tokens prefilled ({} chunked prefill calls), \
+         {} tokens generated in {:.3}s ({:.0} tok/s), mean batch occupancy {:.2} over \
+         {} decode steps",
         st.completed,
         st.prefill_tokens,
+        st.prefill_calls,
         st.generated_tokens,
         st.secs,
         st.tokens_per_sec(),
         st.occupancy(max_batch),
         st.decode_steps,
     );
-    Ok(())
-}
-
-/// `"1,2,3"` or `"1 2 3"` → token ids.
-fn parse_prompt_tokens(s: &str) -> Result<Vec<i32>> {
-    s.split(|c: char| c == ',' || c.is_whitespace())
-        .filter(|t| !t.is_empty())
-        .map(|t| t.parse::<i32>().with_context(|| format!("bad prompt token {t:?}")))
-        .collect()
-}
-
-/// One `--stdin` request line: JSON object or bare token ids; missing
-/// fields fall back to the CLI-level defaults.
-fn parse_request_line(line: &str, line_no: u64, defaults: &serve::Request) -> Result<serve::Request> {
-    let mut req = serve::Request { id: line_no, ..defaults.clone() };
-    if line.trim_start().starts_with('{') {
-        let doc = json::parse(line).map_err(|e| anyhow::anyhow!("request line {line_no}: {e}"))?;
-        if let Some(id) = doc.get("id").as_i64() {
-            req.id = id as u64;
-        }
-        req.prompt = doc
-            .get("prompt")
-            .as_arr()
-            .context("request needs a \"prompt\" array of token ids")?
-            .iter()
-            .map(|v| v.as_i64().map(|t| t as i32))
-            .collect::<Option<Vec<i32>>>()
-            .context("prompt must hold integers")?;
-        if let Some(n) = doc.get("max_new").as_usize() {
-            req.max_new = n;
-        }
-        if let Some(t) = doc.get("temperature").as_f64() {
-            req.sampling.temperature = t as f32;
-        }
-        if let Some(k) = doc.get("top_k").as_usize() {
-            req.sampling.top_k = k;
-        }
-        if let Some(s) = doc.get("seed").as_i64() {
-            req.seed = s as u64;
-        }
-    } else {
-        req.prompt = parse_prompt_tokens(line)?;
+    if st.spec_proposed > 0 {
+        println!(
+            "speculative: {} proposed, {} accepted (rate {:.3}); {} draft steps vs {} target steps",
+            st.spec_proposed,
+            st.spec_accepted,
+            st.accept_rate(),
+            st.draft_steps,
+            st.decode_steps,
+        );
     }
-    Ok(req)
+    Ok(())
 }
 
 /// One completion as a JSON response line.
 fn print_completion(c: &serve::Completion) {
-    let doc = json::obj(vec![
-        ("id", Json::Num(c.id as f64)),
-        ("prompt_len", Json::Num(c.prompt_len as f64)),
-        ("tokens", json::arr(c.tokens.iter().map(|&t| Json::Num(t as f64)).collect())),
-        ("finish", json::s(c.finish.as_str())),
-    ]);
-    println!("{doc}");
+    println!("{}", net::completion_json(c));
 }
 
 /// Fig. 2: mean variance of Q(A)^T Q(B) with and without the RHT.

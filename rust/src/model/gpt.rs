@@ -319,7 +319,7 @@ struct LayerKv {
 }
 
 impl KvCache {
-    fn new(n_layers: usize, d: usize, capacity: usize) -> KvCache {
+    pub(crate) fn new(n_layers: usize, d: usize, capacity: usize) -> KvCache {
         KvCache {
             d,
             layers: (0..n_layers)
@@ -338,6 +338,17 @@ impl KvCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Drop every cached row at position `>= len` — the speculative-decode
+    /// rollback. Buffers keep their reserved capacity, so a rolled-back
+    /// session re-decodes without reallocating. Callers truncate the
+    /// absorbed-token window alongside (see [`DecodeState::truncate`]).
+    pub fn truncate(&mut self, len: usize) {
+        for l in &mut self.layers {
+            l.k.truncate(len * self.d);
+            l.v.truncate(len * self.d);
+        }
     }
 }
 
@@ -362,9 +373,34 @@ impl DecodeState {
         DecodeState { tokens, kv: None }
     }
 
+    /// Fresh position-0 state with an empty KV cache sized for `cfg`;
+    /// feeding a prompt through a multi-row decode from here *is* a
+    /// prefill. The one constructor behind `NativeBackend` and
+    /// `serve::ServeModel` fresh states.
+    pub fn fresh_kv(cfg: &GPTConfig) -> DecodeState {
+        DecodeState {
+            tokens: vec![],
+            kv: Some(KvCache::new(cfg.n_layers, cfg.d_model, cfg.seq_len)),
+        }
+    }
+
     /// Positions absorbed so far (== the next decode position).
     pub fn pos(&self) -> usize {
         self.tokens.len()
+    }
+
+    /// Roll the session back to its first `len` absorbed tokens, dropping
+    /// newer tokens *and* their K/V rows — how speculative decode discards
+    /// proposals past the first rejection. No-op when `len >= pos()`.
+    /// Rolled-back positions re-decode bit-identically to a fresh prefill
+    /// of the kept prefix (`tests/spec.rs` pins this down).
+    pub fn truncate(&mut self, len: usize) {
+        if len < self.tokens.len() {
+            self.tokens.truncate(len);
+        }
+        if let Some(kv) = &mut self.kv {
+            kv.truncate(self.tokens.len());
+        }
     }
 }
 
@@ -427,12 +463,9 @@ pub(crate) fn prefill_rows(
     Ok((kv, logits))
 }
 
-/// One incremental decode step for a *batch of sessions*: row `s` of the
-/// step is session `s`'s new token. Appends each session's K/V rows and
-/// returns one logits row per session. This is the continuous-batching
-/// hot path: all per-token linear GEMMs run as one `(n_sessions × d)`
-/// GEMM per layer, and because both GEMM paths quantize and reduce per
-/// row, batched logits are bit-identical to running each session alone.
+/// One incremental decode step for a *batch of sessions*, one new token
+/// each — the continuous-batching hot path, i.e. [`decode_spans`] with
+/// every span of length 1.
 pub(crate) fn decode_rows(
     cfg: &GPTConfig,
     params: &[Vec<f32>],
@@ -440,41 +473,99 @@ pub(crate) fn decode_rows(
     states: &mut [&mut DecodeState],
     tokens: &[i32],
 ) -> Result<Mat> {
+    ensure!(
+        tokens.len() == states.len(),
+        "one token per session: got {} for {}",
+        tokens.len(),
+        states.len()
+    );
+    let spans: Vec<&[i32]> = tokens.chunks(1).collect();
+    decode_spans(cfg, params, linear, states, &spans)
+}
+
+/// The multi-row incremental decode step: append `spans[s]` (any number
+/// of tokens, including zero) to session `s` and return one logits row
+/// per appended token, session-major. All per-token linear GEMMs across
+/// every session *and* every position within a span run as one
+/// `(Σ span_len × d)` GEMM per layer.
+///
+/// This one entry point serves three callers: continuous-batching decode
+/// (every span is 1 token), speculative verify (one session, `k+1`
+/// tokens — logits at all k+1 positions in one pass), and chunked
+/// cross-request prefill (fresh states, each span a whole prompt).
+///
+/// Bit-exactness: both GEMM paths quantize and reduce per row, LayerNorm
+/// / GELU / residuals are row-local, and each span row's attention runs
+/// [`attn_decode_row`] over exactly the K/V rows `0..=pos` (later span
+/// rows are already appended but never read) — so every returned row is
+/// bit-identical to feeding the same tokens one `decode_step` at a time,
+/// and, from an empty state, to [`prefill_rows`] over the same prompt.
+pub(crate) fn decode_spans(
+    cfg: &GPTConfig,
+    params: &[Vec<f32>],
+    linear: &mut dyn FnMut(&Mat, usize) -> Mat,
+    states: &mut [&mut DecodeState],
+    spans: &[&[i32]],
+) -> Result<Mat> {
     let (d, t, heads) = (cfg.d_model, cfg.seq_len, cfg.n_heads);
     let ns = states.len();
     ensure!(ns > 0, "decode wants at least one session");
-    ensure!(tokens.len() == ns, "one token per session: got {} for {ns}", tokens.len());
+    ensure!(spans.len() == ns, "one token span per session: got {} for {ns}", spans.len());
+    let total: usize = spans.iter().map(|s| s.len()).sum();
+    ensure!(total > 0, "decode wants at least one token across the spans");
     let vocab = cfg.vocab as i32;
-    let mut x = Mat::zeros(ns, d);
+    let mut x = Mat::zeros(total, d);
+    let mut r = 0usize;
     for (s, st) in states.iter().enumerate() {
-        let tk = tokens[s];
         let pos = st.tokens.len();
-        ensure!(pos < t, "context window exhausted (position {pos} of {t})");
-        ensure!((0..vocab).contains(&tk), "token {tk} out of vocab range 0..{vocab}");
+        ensure!(
+            pos + spans[s].len() <= t,
+            "span of {} tokens exhausts the context window (position {pos} of {t})",
+            spans[s].len()
+        );
         let kv = st.kv.as_ref();
         ensure!(
             kv.is_some_and(|kv| kv.len() == pos),
             "decode state has no KV rows for position {pos} (built by prefill?)"
         );
-        let te = &params[TOK_EMB][tk as usize * d..(tk as usize + 1) * d];
-        let pe = &params[POS_EMB][pos * d..(pos + 1) * d];
-        let xrow = &mut x.data[s * d..(s + 1) * d];
-        for c in 0..d {
-            xrow[c] = te[c] + pe[c];
+        for (j, &tk) in spans[s].iter().enumerate() {
+            ensure!((0..vocab).contains(&tk), "token {tk} out of vocab range 0..{vocab}");
+            let te = &params[TOK_EMB][tk as usize * d..(tk as usize + 1) * d];
+            let pe = &params[POS_EMB][(pos + j) * d..(pos + j + 1) * d];
+            let xrow = &mut x.data[r * d..(r + 1) * d];
+            for c in 0..d {
+                xrow[c] = te[c] + pe[c];
+            }
+            r += 1;
         }
     }
     for l in 0..cfg.n_layers {
         let base = layer_base(l);
         let (h1, _) = ln_fwd(&x, &params[base], &params[base + 1]);
         let qkv = linear(&h1, base + 2);
-        let mut attn = Mat::zeros(ns, d);
+        let mut attn = Mat::zeros(total, d);
+        let mut r = 0usize;
         for (s, st) in states.iter_mut().enumerate() {
             let pos = st.tokens.len();
+            let n = spans[s].len();
             let lkv = &mut st.kv.as_mut().unwrap().layers[l];
-            let row = qkv.row(s);
-            lkv.k.extend_from_slice(&row[d..2 * d]);
-            lkv.v.extend_from_slice(&row[2 * d..3 * d]);
-            attn_decode_row(row, &lkv.k, &lkv.v, pos, d, heads, &mut attn.data[s * d..(s + 1) * d]);
+            for j in 0..n {
+                let row = qkv.row(r + j);
+                lkv.k.extend_from_slice(&row[d..2 * d]);
+                lkv.v.extend_from_slice(&row[2 * d..3 * d]);
+            }
+            for j in 0..n {
+                attn_decode_row(
+                    qkv.row(r + j),
+                    &lkv.k,
+                    &lkv.v,
+                    pos + j,
+                    d,
+                    heads,
+                    &mut attn.data[(r + j) * d..(r + j + 1) * d],
+                );
+            }
+            r += n;
         }
         let proj = linear(&attn, base + 3);
         let x_mid = add(&x, &proj);
@@ -490,8 +581,8 @@ pub(crate) fn decode_rows(
     let lb = lnf_base(cfg.n_layers);
     let (xf, _) = ln_fwd(&x, &params[lb], &params[lb + 1]);
     let logits = linear(&xf, TOK_EMB);
-    for (st, &tk) in states.iter_mut().zip(tokens) {
-        st.tokens.push(tk);
+    for (st, span) in states.iter_mut().zip(spans) {
+        st.tokens.extend_from_slice(span);
     }
     Ok(logits)
 }
@@ -716,6 +807,27 @@ impl Backend for NativeBackend {
             decode_rows(&cfg, params, &mut linear, &mut [state], &[token])?
         };
         Ok(logits.data)
+    }
+
+    /// Multi-token incremental step: all span rows go through one batched
+    /// KV decode (`decode_step` is the `n = 1` case) — the speculative
+    /// verify / chunked prefill primitive.
+    fn decode_span(
+        &mut self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        params: &[Vec<f32>],
+    ) -> Result<Mat> {
+        self.check_params(params)?;
+        let cfg = self.cfg.clone();
+        let mut linear = |x: &Mat, idx: usize| self.linear_fwd(x, idx, &params[idx]);
+        decode_spans(&cfg, params, &mut linear, &mut [state], &[tokens])
+    }
+
+    /// Position-0 state with an empty KV cache: feeding a prompt through
+    /// [`decode_span`](Backend::decode_span) from here *is* a prefill.
+    fn fresh_decode_state(&self) -> DecodeState {
+        DecodeState::fresh_kv(&self.cfg)
     }
 
     fn set_compute_workers(&mut self, n: usize) {
@@ -1144,6 +1256,56 @@ mod tests {
             row = b.decode_step(&mut state, tk, &params).unwrap();
         }
         assert_eq!(batched_last, row, "multi-row prefill vs token-at-a-time");
+    }
+
+    #[test]
+    fn decode_span_matches_stepwise_and_prefill() {
+        // the multi-row step is the n=1 step, chunked: span rows must be
+        // bit-identical to one decode_step per token, and a span fed
+        // from a fresh empty state must reproduce prefill's logits
+        let mut b = backend("mxfp4");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 41);
+        let v = b.vocab();
+        let seq = [3i32, 1, 4, 1, 5, 9, 2, 6];
+
+        let (mut st_span, _) = b.prefill(&seq[..2], &params).unwrap();
+        let mut st_step = st_span.clone();
+        let rows = b.decode_span(&mut st_span, &seq[2..], &params).unwrap();
+        assert_eq!(rows.rows, seq.len() - 2);
+        for (j, &tk) in seq[2..].iter().enumerate() {
+            let row = b.decode_step(&mut st_step, tk, &params).unwrap();
+            assert_eq!(rows.data[j * v..(j + 1) * v], row[..], "span row {j}");
+        }
+        assert_eq!(st_span.tokens, st_step.tokens);
+
+        let mut fresh = b.fresh_decode_state();
+        assert_eq!(fresh.pos(), 0);
+        let all = b.decode_span(&mut fresh, &seq, &params).unwrap();
+        let (_, last) = b.prefill(&seq, &params).unwrap();
+        assert_eq!(all.data[(seq.len() - 1) * v..seq.len() * v], last[..], "span-from-empty == prefill");
+    }
+
+    #[test]
+    fn truncate_rolls_back_tokens_and_kv() {
+        let mut b = backend("mxfp4");
+        let params = init_params_for(b.param_specs(), b.n_layers(), 43);
+        let seq = [7i32, 2, 9, 4, 8, 1];
+        let (mut st, _) = b.prefill(&seq, &params).unwrap();
+        st.truncate(3);
+        assert_eq!(st.tokens, seq[..3]);
+        assert_eq!(st.kv.as_ref().unwrap().len(), 3);
+        // re-decode of the dropped suffix == fresh prefill + stepwise
+        let (mut fresh, _) = b.prefill(&seq[..3], &params).unwrap();
+        for &tk in &seq[3..] {
+            let a = b.decode_step(&mut st, tk, &params).unwrap();
+            let c = b.decode_step(&mut fresh, tk, &params).unwrap();
+            assert_eq!(a, c, "rolled-back re-decode must be bitwise fresh");
+        }
+        // truncating past the end is a no-op
+        let before = st.tokens.clone();
+        st.truncate(100);
+        assert_eq!(st.tokens, before);
+        assert_eq!(st.kv.as_ref().unwrap().len(), before.len());
     }
 
     #[test]

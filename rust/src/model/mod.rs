@@ -15,8 +15,10 @@
 //! * [`recipe`] — which of the three GEMMs each recipe quantizes
 //! * [`gpt`] — the forward/backward engine ([`NativeBackend`]) plus the
 //!   KV-cached incremental decoder ([`DecodeState`], `prefill_rows` /
-//!   `decode_rows`) behind `Backend::prefill` / `Backend::decode_step`
-//!   and the `serve` subsystem
+//!   `decode_spans` — the multi-row step behind batched decode,
+//!   chunked prefill and speculative verify, with
+//!   [`KvCache::truncate`] rollback) behind `Backend::prefill` /
+//!   `decode_step` / `decode_span` and the `serve` subsystem
 
 pub mod gpt;
 pub mod recipe;

@@ -19,6 +19,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
+use crate::gemm::Mat;
 use crate::model::{DecodeState, GPTConfig, NativeBackend, NativeRecipe};
 use crate::runtime::artifact::{Artifact, Registry, TensorSpec};
 use crate::runtime::executor::{self, Executor, Tensor, TrainOutput};
@@ -93,6 +94,46 @@ pub trait Backend {
         let logits = self.logits(&window, params)?;
         let pos = state.tokens.len() - 1;
         Ok(logits.data[pos * v..(pos + 1) * v].to_vec())
+    }
+    /// Feed a whole *span* of tokens into `state` and return the logits
+    /// row after **each** of them (`tokens.len() × vocab`, position
+    /// order) — the multi-token incremental step behind speculative
+    /// verify and chunked prefill; [`decode_step`](Self::decode_step) is
+    /// the `n = 1` case. The default pads the absorbed window into **one**
+    /// [`logits`](Self::logits) call and slices every span row out of it
+    /// (causality makes row `i` independent of later positions, so the
+    /// rows are bit-identical to stepping token-at-a-time — and a whole
+    /// prompt costs one forward, not one per token); KV-capable backends
+    /// override with one batched multi-row KV decode.
+    fn decode_span(
+        &mut self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        params: &[Vec<f32>],
+    ) -> Result<Mat> {
+        anyhow::ensure!(!tokens.is_empty(), "decode_span wants at least one token");
+        let (b, t, v) = (self.batch(), self.seq_len(), self.vocab());
+        anyhow::ensure!(
+            state.tokens.len() + tokens.len() <= t,
+            "span of {} tokens exhausts the context window (position {} of {t})",
+            tokens.len(),
+            state.tokens.len()
+        );
+        let pos0 = state.tokens.len();
+        state.tokens.extend_from_slice(tokens);
+        let mut window = vec![0i32; b * t];
+        window[..state.tokens.len()].copy_from_slice(&state.tokens);
+        let logits = self.logits(&window, params)?;
+        let mut out = Mat::zeros(tokens.len(), v);
+        out.data.copy_from_slice(&logits.data[pos0 * v..(pos0 + tokens.len()) * v]);
+        Ok(out)
+    }
+    /// A fresh position-0 decode state for this backend; feeding a
+    /// prompt through [`decode_span`](Self::decode_span) from it *is* a
+    /// prefill. Default: a window-only state (full-recompute decoding);
+    /// KV-capable backends override with an empty KV cache.
+    fn fresh_decode_state(&self) -> DecodeState {
+        DecodeState::window(vec![])
     }
     /// Cap the backend's internal compute (GEMM) thread count. The DP
     /// pool divides the machine's cores among its workers so concurrent

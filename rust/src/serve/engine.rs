@@ -6,11 +6,16 @@
 //! tick. Each [`Engine::step`]:
 //!
 //! 1. **admit** — pop queued requests into free slots (up to
-//!    `max_batch`), prefill each prompt, and sample its first token;
+//!    `max_batch`) and prefill *all* of their prompts in one chunked
+//!    multi-row decode call ([`ServeBackend::decode_spans`]), sampling
+//!    each first token;
 //! 2. **decode** — one batched tick: every active session's last token
 //!    goes through a single `(n_active × d)` GEMM per layer
 //!    ([`ServeBackend::decode`]), and each session samples its next
-//!    token from its own row with its own rng stream;
+//!    token from its own row with its own rng stream. With a draft
+//!    attached ([`Engine::enable_spec`]) the tick is speculative
+//!    instead: propose k, verify k+1 in one multi-row call, roll back
+//!    past the first rejection ([`super::spec`]);
 //! 3. **retire** — sessions that hit `max_new` or the context window
 //!    leave immediately, freeing their slot for the next queued request
 //!    on the following tick.
@@ -18,7 +23,9 @@
 //! Because decode rows are bit-identical to batch-of-one calls and
 //! sampling streams are per-request, any admit/retire schedule produces
 //! exactly the tokens of running each request alone — the scheduler
-//! changes *throughput and occupancy*, never *outputs*.
+//! changes *throughput and occupancy*, never *outputs*. Speculation
+//! preserves the same contract: spec-mode streams are byte-identical to
+//! vanilla ticks for any draft.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -33,20 +40,31 @@ use crate::util::timer::Timer;
 use super::model::ServeModel;
 use super::sample::sample;
 use super::session::{Completion, FinishReason, Request, Session};
+use super::spec::{SpecConfig, SpecRunner};
 
-/// What the engine needs from a model: prefill one prompt, decode one
-/// batched tick. Implemented by `Arc<ServeModel>` (packed native fast
-/// path, weights shared across sessions) and [`BackendServe`] (any
-/// [`Backend`], e.g. the artifact path via its full-window fallback).
+/// What the engine needs from a model: one batched multi-row decode
+/// tick over any mix of spans (prefill included). Implemented by `Arc<ServeModel>` (packed
+/// native fast path, weights shared across sessions) and
+/// [`BackendServe`] (any [`Backend`], e.g. the artifact path via its
+/// full-window fallback).
 pub trait ServeBackend {
     fn seq_len(&self) -> usize;
     fn vocab(&self) -> usize;
     fn describe(&self) -> String;
-    /// Absorb a prompt; return the state + last-position logits row.
-    fn prefill(&mut self, tokens: &[i32]) -> Result<(DecodeState, Vec<f32>)>;
+    /// A fresh position-0 decode state; prefill is feeding a prompt
+    /// through [`decode_spans`](Self::decode_spans) from it (how
+    /// [`Engine`] admits every prompt, cross-request batched).
+    fn fresh_state(&self) -> DecodeState;
+    /// Append `spans[s]` to `states[s]`; return one logits row per
+    /// appended token, session-major. The one multi-row primitive behind
+    /// batched decode, speculative verify, and chunked prefill.
+    fn decode_spans(&mut self, states: &mut [&mut DecodeState], spans: &[&[i32]]) -> Result<Mat>;
     /// Append `tokens[s]` to `states[s]`; return one logits row per
-    /// session, in session order.
-    fn decode(&mut self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat>;
+    /// session, in session order — the all-spans-of-1 case.
+    fn decode(&mut self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat> {
+        let spans: Vec<&[i32]> = tokens.chunks(1).collect();
+        self.decode_spans(states, &spans)
+    }
 }
 
 impl ServeBackend for Arc<ServeModel> {
@@ -62,8 +80,12 @@ impl ServeBackend for Arc<ServeModel> {
         ServeModel::describe(&**self)
     }
 
-    fn prefill(&mut self, tokens: &[i32]) -> Result<(DecodeState, Vec<f32>)> {
-        ServeModel::prefill(&**self, tokens)
+    fn fresh_state(&self) -> DecodeState {
+        ServeModel::fresh_state(&**self)
+    }
+
+    fn decode_spans(&mut self, states: &mut [&mut DecodeState], spans: &[&[i32]]) -> Result<Mat> {
+        ServeModel::decode_spans(&**self, states, spans)
     }
 
     fn decode(&mut self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat> {
@@ -100,8 +122,24 @@ impl ServeBackend for BackendServe {
         format!("{} (per-session decode)", self.backend.describe())
     }
 
-    fn prefill(&mut self, tokens: &[i32]) -> Result<(DecodeState, Vec<f32>)> {
-        self.backend.prefill(tokens, &self.params)
+    fn fresh_state(&self) -> DecodeState {
+        self.backend.fresh_decode_state()
+    }
+
+    fn decode_spans(&mut self, states: &mut [&mut DecodeState], spans: &[&[i32]]) -> Result<Mat> {
+        let v = self.backend.vocab();
+        let total: usize = spans.iter().map(|s| s.len()).sum();
+        let mut out = Mat::zeros(total, v);
+        let mut r = 0usize;
+        for (st, span) in states.iter_mut().zip(spans) {
+            if span.is_empty() {
+                continue;
+            }
+            let rows = self.backend.decode_span(st, span, &self.params)?;
+            out.data[r * v..(r + rows.rows) * v].copy_from_slice(&rows.data);
+            r += rows.rows;
+        }
+        Ok(out)
     }
 
     fn decode(&mut self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat> {
@@ -131,16 +169,27 @@ impl Default for EngineConfig {
 /// Aggregate serving counters.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
-    /// Batched decode ticks executed.
+    /// Batched *target* decode calls: vanilla ticks, or speculative
+    /// verify passes (each absorbs up to k+1 tokens per session).
     pub decode_steps: usize,
     /// Prompt tokens absorbed by prefill.
     pub prefill_tokens: usize,
+    /// Chunked prefill calls (each admits ≥ 1 queued prompts in one
+    /// batched multi-row decode).
+    pub prefill_calls: usize,
     /// Tokens sampled (prefill-sampled firsts + decode ticks).
     pub generated_tokens: usize,
     /// Requests retired (any finish reason).
     pub completed: usize,
     /// Σ active sessions over decode ticks (occupancy numerator).
     pub occupancy_sum: usize,
+    /// Batched *draft* decode calls (speculative catch-up + propose
+    /// rounds) — the draft-vs-target step accounting's other half.
+    pub draft_steps: usize,
+    /// Draft tokens proposed across all speculative steps.
+    pub spec_proposed: usize,
+    /// Proposals the target's verification accepted.
+    pub spec_accepted: usize,
     /// Wall seconds inside [`Engine::step`].
     pub secs: f64,
 }
@@ -159,6 +208,16 @@ impl EngineStats {
             self.occupancy_sum as f64 / (self.decode_steps * max_batch.max(1)) as f64
         }
     }
+
+    /// Fraction of draft proposals the target accepted (0 before any
+    /// proposal). 1.0 whenever draft == target — the sanity contract.
+    pub fn accept_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
 }
 
 /// The continuous-batching engine. See the module docs for the loop.
@@ -169,6 +228,8 @@ pub struct Engine {
     active: Vec<Session>,
     done: Vec<Completion>,
     stats: EngineStats,
+    /// Speculative decoder (draft backend + k); `None` = vanilla ticks.
+    spec: Option<SpecRunner>,
 }
 
 impl Engine {
@@ -180,7 +241,30 @@ impl Engine {
             active: Vec::new(),
             done: Vec::new(),
             stats: EngineStats::default(),
+            spec: None,
         }
+    }
+
+    /// Attach a draft model for speculative decoding: each tick the
+    /// draft proposes up to `spec.k` tokens per session and the target
+    /// verifies all of them in **one** batched multi-row decode, rolling
+    /// its KV back past the first rejection. The draft must share the
+    /// target's vocabulary. Output streams are byte-identical to
+    /// non-speculative decoding for *any* draft (see [`super::spec`]);
+    /// the draft only buys throughput.
+    pub fn enable_spec(&mut self, draft: Box<dyn ServeBackend>, spec: SpecConfig) -> Result<()> {
+        anyhow::ensure!(
+            draft.vocab() == self.backend.vocab(),
+            "draft vocab {} != target vocab {}",
+            draft.vocab(),
+            self.backend.vocab()
+        );
+        anyhow::ensure!(
+            self.active.is_empty(),
+            "enable speculative decoding before serving traffic"
+        );
+        self.spec = Some(SpecRunner::new(draft, spec)?);
+        Ok(())
     }
 
     /// Enqueue a request (admitted when a batch slot frees up).
@@ -202,7 +286,12 @@ impl Engine {
     }
 
     pub fn describe(&self) -> String {
-        format!("{} / max batch {}", self.backend.describe(), self.max_batch())
+        match &self.spec {
+            Some(sp) => {
+                format!("{} / max batch {} / {}", self.backend.describe(), self.max_batch(), sp.describe())
+            }
+            None => format!("{} / max batch {}", self.backend.describe(), self.max_batch()),
+        }
     }
 
     /// Drain completions finished so far.
@@ -219,31 +308,19 @@ impl Engine {
         Ok(self.take_completed())
     }
 
-    /// One scheduler tick (admit → batched decode → retire). Returns the
-    /// number of requests that completed during the tick.
+    /// One scheduler tick (chunked batched admit → batched decode →
+    /// retire). Returns the number of requests that completed during the
+    /// tick.
     pub fn step(&mut self) -> Result<usize> {
         let timer = Timer::start();
         let before = self.done.len();
-        while self.active.len() < self.max_batch() {
-            let Some(req) = self.queue.pop_front() else { break };
-            self.admit(req)?;
-        }
+        self.admit_batch()?;
         if !self.active.is_empty() {
-            self.stats.decode_steps += 1;
-            self.stats.occupancy_sum += self.active.len();
-            let tokens: Vec<i32> =
-                self.active.iter().map(|s| *s.generated.last().unwrap()).collect();
-            let logits = {
-                let mut states: Vec<&mut DecodeState> =
-                    self.active.iter_mut().map(|s| &mut s.state).collect();
-                self.backend.decode(&mut states, &tokens)?
-            };
-            let v = self.backend.vocab();
-            for (s, sess) in self.active.iter_mut().enumerate() {
-                let row = &logits.data[s * v..(s + 1) * v];
-                let next = sample(row, &sess.req.sampling, &mut sess.rng);
-                sess.generated.push(next);
-                self.stats.generated_tokens += 1;
+            if self.spec.is_some() {
+                let Engine { backend, active, stats, spec, .. } = self;
+                spec.as_mut().unwrap().tick(&mut **backend, active, stats)?;
+            } else {
+                self.vanilla_tick()?;
             }
             let window = self.backend.seq_len();
             let done = &mut self.done;
@@ -261,40 +338,87 @@ impl Engine {
         Ok(self.done.len() - before)
     }
 
-    /// Prefill one request into an active session (or complete it
-    /// immediately: invalid prompt, one-token budget, or a prompt that
-    /// already fills the window).
-    fn admit(&mut self, mut req: Request) -> Result<()> {
+    /// One single-token batched decode over every active session (the
+    /// non-speculative tick).
+    fn vanilla_tick(&mut self) -> Result<()> {
+        self.stats.decode_steps += 1;
+        self.stats.occupancy_sum += self.active.len();
+        let tokens: Vec<i32> = self.active.iter().map(|s| *s.generated.last().unwrap()).collect();
+        let logits = {
+            let mut states: Vec<&mut DecodeState> =
+                self.active.iter_mut().map(|s| &mut s.state).collect();
+            self.backend.decode(&mut states, &tokens)?
+        };
+        let v = self.backend.vocab();
+        for (s, sess) in self.active.iter_mut().enumerate() {
+            let row = &logits.data[s * v..(s + 1) * v];
+            let next = sample(row, &sess.req.sampling, &mut sess.rng);
+            sess.generated.push(next);
+            self.stats.generated_tokens += 1;
+        }
+        Ok(())
+    }
+
+    /// Pop queued requests into every free slot and prefill all of their
+    /// prompts in **one** chunked multi-row decode call (cross-request
+    /// batched prefill), instead of one full prefill per request.
+    /// Invalid requests (empty prompt, out-of-vocab token) complete
+    /// immediately without consuming a slot; over-long prompts keep
+    /// their newest window.
+    fn admit_batch(&mut self) -> Result<()> {
         let t = self.backend.seq_len();
         let v = self.backend.vocab() as i32;
-        req.max_new = req.max_new.max(1);
-        if req.prompt.len() > t {
-            // keep the newest window of an over-long prompt
-            req.prompt.drain(..req.prompt.len() - t);
+        let mut reqs: Vec<Request> = Vec::new();
+        while self.active.len() + reqs.len() < self.max_batch() {
+            let Some(mut req) = self.queue.pop_front() else { break };
+            req.max_new = req.max_new.max(1);
+            if req.prompt.len() > t {
+                // keep the newest window of an over-long prompt
+                req.prompt.drain(..req.prompt.len() - t);
+            }
+            if req.prompt.is_empty() || req.prompt.iter().any(|tk| !(0..v).contains(tk)) {
+                self.stats.completed += 1;
+                self.done.push(Completion {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    tokens: vec![],
+                    finish: FinishReason::Invalid,
+                });
+                continue;
+            }
+            reqs.push(req);
         }
-        if req.prompt.is_empty() || req.prompt.iter().any(|tk| !(0..v).contains(tk)) {
-            self.stats.completed += 1;
-            self.done.push(Completion {
-                id: req.id,
-                prompt_len: req.prompt.len(),
-                tokens: vec![],
-                finish: FinishReason::Invalid,
-            });
+        if reqs.is_empty() {
             return Ok(());
         }
-        let (state, logits) = self.backend.prefill(&req.prompt)?;
-        self.stats.prefill_tokens += req.prompt.len();
-        let mut rng = Session::sampling_rng(req.seed);
-        let first = sample(&logits, &req.sampling, &mut rng);
-        self.stats.generated_tokens += 1;
-        let mut sess = Session::start(req, state, first, rng);
-        match finish_of(&sess, t) {
-            Some(f) => {
-                self.stats.completed += 1;
-                let c = sess.complete(f);
-                self.done.push(c);
+        let mut states: Vec<DecodeState> =
+            reqs.iter().map(|_| self.backend.fresh_state()).collect();
+        self.stats.prefill_calls += 1;
+        let logits = {
+            let spans: Vec<&[i32]> = reqs.iter().map(|r| r.prompt.as_slice()).collect();
+            let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+            self.backend.decode_spans(&mut refs, &spans)?
+        };
+        let vv = self.backend.vocab();
+        let mut row = 0usize;
+        for (req, state) in reqs.into_iter().zip(states) {
+            let n = req.prompt.len();
+            let last = &logits.data[(row + n - 1) * vv..(row + n) * vv];
+            row += n;
+            self.stats.prefill_tokens += n;
+            let mut rng = Session::sampling_rng(req.seed);
+            let first = sample(last, &req.sampling, &mut rng);
+            self.stats.generated_tokens += 1;
+            let draft = self.spec.as_ref().map(SpecRunner::fresh_draft_state);
+            let mut sess = Session::start(req, state, draft, first, rng);
+            match finish_of(&sess, t) {
+                Some(f) => {
+                    self.stats.completed += 1;
+                    let c = sess.complete(f);
+                    self.done.push(c);
+                }
+                None => self.active.push(sess),
             }
-            None => self.active.push(sess),
         }
         Ok(())
     }
@@ -367,6 +491,9 @@ mod tests {
         let st = e.stats();
         assert!(st.decode_steps >= 4, "staggered admits need extra ticks");
         assert!(st.occupancy(2) > 0.0 && st.occupancy(2) <= 1.0);
+        // chunked prefill: the first two prompts share one batched call,
+        // the third (admitted when a slot frees) pays the second
+        assert_eq!(st.prefill_calls, 2, "admissions must batch per tick");
     }
 
     #[test]

@@ -26,6 +26,15 @@
 //! * [`sample`] — seeded greedy / temperature / top-k sampling plus
 //!   [`generate`], the single-stream generator behind
 //!   `eval::generate_greedy`.
+//! * [`spec`] — speculative decoding: a draft model proposes `k` tokens,
+//!   the target verifies all `k+1` positions in one batched multi-row
+//!   decode with **exact** acceptance (the KV path's bit-exactness makes
+//!   the check a byte equality, not a probability ratio) and rolls its
+//!   KV back past the first rejection. Attach via
+//!   [`Engine::enable_spec`].
+//! * [`net`] — the line/JSON request protocol shared by `serve --stdin`
+//!   and the [`net::serve_tcp`] socket front-end (one engine tick loop
+//!   over non-blocking connections, graceful drain on client EOF).
 //!
 //! ## Determinism
 //!
@@ -33,14 +42,20 @@
 //! logits are bit-identical whether it runs alone or packed into a batch
 //! with any other traffic — scheduling never changes outputs. Sampling
 //! draws from a per-request rng stream (`fold_in(seed, SAMPLE_STREAM)`),
-//! independent of admission order. `tests/serve.rs` pins both down.
+//! independent of admission order. Speculative decoding preserves both:
+//! every emitted token is the target's own seeded choice, so spec mode
+//! is byte-identical to vanilla decode for any draft. `tests/serve.rs`
+//! and `tests/spec.rs` pin all of this down.
 
 pub mod engine;
 pub mod model;
+pub mod net;
 pub mod sample;
 pub mod session;
+pub mod spec;
 
 pub use engine::{BackendServe, Engine, EngineConfig, EngineStats, ServeBackend};
 pub use model::ServeModel;
 pub use sample::{generate, sample};
 pub use session::{Completion, FinishReason, Request, SamplingParams};
+pub use spec::SpecConfig;

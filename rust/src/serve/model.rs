@@ -21,7 +21,7 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::mxcache::{MxWeightCache, Orientation};
 use crate::gemm::{self, Mat};
-use crate::model::gpt::{decode_rows, prefill_rows};
+use crate::model::gpt::{decode_rows, decode_spans, prefill_rows};
 use crate::model::{layer_base, DecodeState, GPTConfig, NativeRecipe, TOK_EMB};
 use crate::mx::pipeline::PackPipeline;
 use crate::util::threadpool;
@@ -164,6 +164,23 @@ impl ServeModel {
     pub fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<Vec<f32>> {
         let logits = self.decode_batch(&mut [state], &[token])?;
         Ok(logits.data)
+    }
+
+    /// The multi-row incremental step: append `spans[s]` to `states[s]`
+    /// and return one logits row per appended token (session-major), all
+    /// linear GEMMs batched across sessions *and* span positions. Powers
+    /// speculative verify and chunked cross-request prefill; rows are
+    /// bit-identical to one [`decode_step`](Self::decode_step) per token.
+    pub fn decode_spans(&self, states: &mut [&mut DecodeState], spans: &[&[i32]]) -> Result<Mat> {
+        let mut linear = |x: &Mat, idx: usize| self.linear(x, idx);
+        decode_spans(&self.cfg, &self.params, &mut linear, states, spans)
+    }
+
+    /// A fresh position-0 state with an empty KV cache; feeding a prompt
+    /// through [`decode_spans`](Self::decode_spans) from it *is* a
+    /// prefill (bit-identical to [`prefill`](Self::prefill)).
+    pub fn fresh_state(&self) -> DecodeState {
+        DecodeState::fresh_kv(&self.cfg)
     }
 }
 

@@ -1,0 +1,386 @@
+//! The serve front-ends' shared line/JSON protocol + the TCP listener.
+//!
+//! One request per line — either bare token ids (`12 7 33`) or a JSON
+//! object (`{"id":1,"prompt":[12,7],"max_new":8,"temperature":0.8,
+//! "top_k":4,"seed":3}`; missing fields fall back to CLI defaults) —
+//! and one JSON line back per completion. `serve --stdin` and
+//! `serve --listen <addr>` speak the identical protocol through the
+//! parser/formatter here; the transport is the only difference.
+//!
+//! [`serve_tcp`] is a single-threaded poll loop over non-blocking
+//! sockets: every iteration accepts pending connections, drains complete
+//! lines from every client into [`Engine::submit`], runs **one engine
+//! tick** (so admissions interleave with decode — the continuous part of
+//! continuous batching — and one engine serves every connection's
+//! traffic in the same batch), and streams finished completions back to
+//! the connection that submitted them. A client that half-closes (EOF)
+//! gets its in-flight requests finished and answered before the server
+//! closes the connection — graceful shutdown, mirroring how the stdin
+//! path drains the engine after input ends.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::engine::Engine;
+use super::session::{Completion, Request};
+
+/// `"1,2,3"` or `"1 2 3"` → token ids.
+pub fn parse_prompt_tokens(s: &str) -> Result<Vec<i32>> {
+    s.split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<i32>().with_context(|| format!("bad prompt token {t:?}")))
+        .collect()
+}
+
+/// One protocol request line: JSON object or bare token ids; missing
+/// fields fall back to `defaults`, a missing `id` to `fallback_id` (the
+/// line number on its transport).
+pub fn parse_request_line(line: &str, fallback_id: u64, defaults: &Request) -> Result<Request> {
+    let mut req = Request { id: fallback_id, ..defaults.clone() };
+    if line.trim_start().starts_with('{') {
+        let doc = json::parse(line).map_err(|e| anyhow::anyhow!("request line {fallback_id}: {e}"))?;
+        if let Some(id) = doc.get("id").as_i64() {
+            req.id = id as u64;
+        }
+        req.prompt = doc
+            .get("prompt")
+            .as_arr()
+            .context("request needs a \"prompt\" array of token ids")?
+            .iter()
+            .map(|v| v.as_i64().map(|t| t as i32))
+            .collect::<Option<Vec<i32>>>()
+            .context("prompt must hold integers")?;
+        if let Some(n) = doc.get("max_new").as_usize() {
+            req.max_new = n;
+        }
+        if let Some(t) = doc.get("temperature").as_f64() {
+            req.sampling.temperature = t as f32;
+        }
+        if let Some(k) = doc.get("top_k").as_usize() {
+            req.sampling.top_k = k;
+        }
+        if let Some(s) = doc.get("seed").as_i64() {
+            req.seed = s as u64;
+        }
+    } else {
+        req.prompt = parse_prompt_tokens(line)?;
+    }
+    Ok(req)
+}
+
+/// One completion as a JSON response line.
+pub fn completion_json(c: &Completion) -> String {
+    json::obj(vec![
+        ("id", Json::Num(c.id as f64)),
+        ("prompt_len", Json::Num(c.prompt_len as f64)),
+        ("tokens", json::arr(c.tokens.iter().map(|&t| Json::Num(t as f64)).collect())),
+        ("finish", json::s(c.finish.as_str())),
+    ])
+    .to_string()
+}
+
+/// A malformed request line's JSON error response.
+pub fn error_json(id: u64, err: &str) -> String {
+    json::obj(vec![("id", Json::Num(id as f64)), ("error", json::s(err))]).to_string()
+}
+
+/// Longest request line a client may send before a newline (framing
+/// guard on the undrained tail: past this the connection is dropped,
+/// bounding per-client memory).
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// How long a client may accept *no* outbound bytes while responses are
+/// pending before it is declared stalled and dropped.
+const SEND_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Split complete lines off the front of `buf` into `out` (trimmed,
+/// empties skipped).
+fn drain_lines(buf: &mut Vec<u8>, out: &mut Vec<String>) {
+    while let Some(nl) = buf.iter().position(|&b| b == b'\n') {
+        let line: Vec<u8> = buf.drain(..=nl).collect();
+        let s = String::from_utf8_lossy(&line[..nl]).trim().to_string();
+        if !s.is_empty() {
+            out.push(s);
+        }
+    }
+}
+
+/// One TCP connection's read/write buffers + routing bookkeeping.
+struct Client {
+    key: usize,
+    stream: TcpStream,
+    buf: Vec<u8>,
+    /// Responses queued for this socket; flushed non-blockingly once
+    /// per tick loop so a slow reader never stalls anyone else.
+    outbuf: Vec<u8>,
+    /// When pending output first made zero progress (stall clock).
+    stalled_since: Option<std::time::Instant>,
+    /// Protocol lines seen so far — the fallback request id, matching
+    /// the stdin path's line numbering.
+    lines_seen: u64,
+    /// Requests submitted and not yet answered.
+    open: usize,
+    eof: bool,
+    dead: bool,
+}
+
+impl Client {
+    fn new(key: usize, stream: TcpStream) -> Client {
+        Client {
+            key,
+            stream,
+            buf: Vec::new(),
+            outbuf: Vec::new(),
+            stalled_since: None,
+            lines_seen: 0,
+            open: 0,
+            eof: false,
+            dead: false,
+        }
+    }
+
+    /// Drain whatever the socket has into complete protocol lines
+    /// (lines split off as chunks arrive, so only the unterminated tail
+    /// is ever buffered). EOF flushes a final unterminated line, so
+    /// `printf 'x' | nc` works. A tail growing past [`MAX_LINE_BYTES`]
+    /// with no newline marks the client dead (broken framing; memory
+    /// stays bounded).
+    fn read_lines(&mut self) -> Vec<String> {
+        let mut out = Vec::new();
+        if !self.dead && !self.eof {
+            let mut chunk = [0u8; 4096];
+            loop {
+                match self.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        self.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.buf.extend_from_slice(&chunk[..n]);
+                        drain_lines(&mut self.buf, &mut out);
+                        if self.buf.len() > MAX_LINE_BYTES {
+                            self.dead = true;
+                            return out;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        drain_lines(&mut self.buf, &mut out);
+        if self.eof && !self.buf.is_empty() {
+            let s = String::from_utf8_lossy(&self.buf).trim().to_string();
+            self.buf.clear();
+            if !s.is_empty() {
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    /// Queue one response line (never blocks — bytes go out via
+    /// [`flush`](Self::flush) on the tick loop).
+    fn send(&mut self, line: &str) {
+        if self.dead {
+            return;
+        }
+        self.outbuf.extend_from_slice(line.as_bytes());
+        self.outbuf.push(b'\n');
+    }
+
+    /// Write as much queued output as the socket accepts *right now*.
+    /// Zero progress with output pending starts the stall clock; a
+    /// client accepting nothing for [`SEND_DEADLINE`] is declared
+    /// stalled and dropped — one unread connection can never freeze the
+    /// shared tick loop for everyone else.
+    fn flush(&mut self) {
+        if self.dead || self.outbuf.is_empty() {
+            return;
+        }
+        let mut off = 0;
+        while off < self.outbuf.len() {
+            match self.stream.write(&self.outbuf[off..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => off += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        self.outbuf.drain(..off);
+        if self.outbuf.is_empty() || off > 0 {
+            self.stalled_since = None;
+        } else {
+            let t0 = *self.stalled_since.get_or_insert_with(std::time::Instant::now);
+            if t0.elapsed() >= SEND_DEADLINE {
+                self.dead = true;
+            }
+        }
+    }
+}
+
+/// Serve the line/JSON protocol over TCP through one engine tick loop.
+/// See the module docs for the loop shape. With `max_conns > 0` the
+/// server returns after that many connections have been served to
+/// completion (smoke runs and tests); `0` serves forever.
+pub fn serve_tcp(
+    engine: &mut Engine,
+    listener: TcpListener,
+    defaults: &Request,
+    max_conns: usize,
+) -> Result<()> {
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let mut clients: Vec<Client> = Vec::new();
+    // engine-side ids must be unique across connections: requests get a
+    // fresh internal id and completions are routed (and re-labeled with
+    // the wire id) through this map
+    let mut owners: HashMap<u64, (usize, u64)> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut next_key: usize = 0;
+    let mut served = 0usize;
+    loop {
+        let mut progress = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    stream.set_nonblocking(true).context("nonblocking client")?;
+                    crate::info!("serve: connection from {peer}");
+                    clients.push(Client::new(next_key, stream));
+                    next_key += 1;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                // a peer that RSTs between SYN and accept() is its own
+                // problem, not the server's: keep serving everyone else
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::ConnectionAborted
+                            | ErrorKind::ConnectionReset
+                            | ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+        for c in &mut clients {
+            for line in c.read_lines() {
+                progress = true;
+                let line_no = c.lines_seen;
+                c.lines_seen += 1;
+                match parse_request_line(&line, line_no, defaults) {
+                    Ok(mut req) => {
+                        let wire_id = req.id;
+                        req.id = next_id;
+                        next_id += 1;
+                        owners.insert(req.id, (c.key, wire_id));
+                        c.open += 1;
+                        engine.submit(req);
+                    }
+                    Err(e) => c.send(&error_json(line_no, &e.to_string())),
+                }
+            }
+        }
+        if engine.pending() > 0 {
+            engine.step()?;
+            progress = true;
+        }
+        for mut done in engine.take_completed() {
+            let Some((key, wire_id)) = owners.remove(&done.id) else { continue };
+            if let Some(c) = clients.iter_mut().find(|c| c.key == key) {
+                done.id = wire_id;
+                c.send(&completion_json(&done));
+                c.open -= 1;
+            }
+        }
+        for c in &mut clients {
+            c.flush();
+        }
+        clients.retain_mut(|c| {
+            let finished = c.dead
+                || (c.eof && c.open == 0 && c.buf.is_empty() && c.outbuf.is_empty());
+            if finished {
+                let _ = c.stream.shutdown(Shutdown::Both);
+                served += 1;
+            }
+            !finished
+        });
+        if max_conns > 0 && served >= max_conns && clients.is_empty() && engine.pending() == 0 {
+            return Ok(());
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::session::{FinishReason, SamplingParams};
+
+    fn defaults() -> Request {
+        Request {
+            id: 0,
+            prompt: vec![],
+            max_new: 8,
+            sampling: SamplingParams::greedy(),
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn parses_bare_and_json_lines() {
+        let d = defaults();
+        let bare = parse_request_line("3 1,4", 9, &d).unwrap();
+        assert_eq!(bare.prompt, vec![3, 1, 4]);
+        assert_eq!(bare.id, 9, "bare lines take the fallback id");
+        assert_eq!(bare.max_new, d.max_new);
+
+        let js = parse_request_line(
+            r#"{"id":7,"prompt":[1,2],"max_new":3,"temperature":0.5,"top_k":2,"seed":11}"#,
+            0,
+            &d,
+        )
+        .unwrap();
+        assert_eq!((js.id, js.prompt.clone(), js.max_new, js.seed), (7, vec![1, 2], 3, 11));
+        assert_eq!(js.sampling.temperature, 0.5);
+        assert_eq!(js.sampling.top_k, 2);
+
+        assert!(parse_request_line("{\"max_new\":3}", 0, &d).is_err(), "prompt required");
+        assert!(parse_request_line("1 2 x", 0, &d).is_err(), "bad token");
+    }
+
+    #[test]
+    fn completion_and_error_lines_roundtrip() {
+        let c = Completion {
+            id: 4,
+            prompt_len: 2,
+            tokens: vec![5, 6, 7],
+            finish: FinishReason::Length,
+        };
+        let doc = json::parse(&completion_json(&c)).unwrap();
+        assert_eq!(doc.get("id").as_i64(), Some(4));
+        assert_eq!(doc.get("finish").as_str(), Some("length"));
+        let toks: Vec<i64> = doc.get("tokens").as_arr().unwrap().iter().filter_map(Json::as_i64).collect();
+        assert_eq!(toks, vec![5, 6, 7]);
+        let e = json::parse(&error_json(3, "nope")).unwrap();
+        assert_eq!(e.get("error").as_str(), Some("nope"));
+    }
+}

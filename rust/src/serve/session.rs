@@ -89,6 +89,11 @@ pub struct Completion {
 pub(crate) struct Session {
     pub req: Request,
     pub state: DecodeState,
+    /// Draft-model decode state for speculative decoding (`None` when
+    /// the engine has no draft attached). Its absorbed tokens are always
+    /// a prefix of the target history — the draft catches up lazily at
+    /// propose time, so admission never pays a draft prefill.
+    pub draft: Option<DecodeState>,
     pub rng: Rng,
     pub generated: Vec<i32>,
 }
@@ -96,8 +101,14 @@ pub(crate) struct Session {
 impl Session {
     /// Start a session from its prefilled state; `first` is the token
     /// sampled from the prefill logits.
-    pub fn start(req: Request, state: DecodeState, first: i32, rng: Rng) -> Session {
-        Session { req, state, rng, generated: vec![first] }
+    pub fn start(
+        req: Request,
+        state: DecodeState,
+        draft: Option<DecodeState>,
+        first: i32,
+        rng: Rng,
+    ) -> Session {
+        Session { req, state, draft, rng, generated: vec![first] }
     }
 
     /// The per-request sampling stream (shared derivation with

@@ -1,0 +1,255 @@
+//! Speculative decoding: a draft model proposes `k` tokens per step, the
+//! target verifies all `k+1` positions in **one batched multi-row
+//! incremental decode**, accepts the longest agreeing prefix, and rolls
+//! its KV cache back past the first rejection.
+//!
+//! ## Exact acceptance
+//!
+//! Classic speculative sampling (Leviathan et al.) accepts a proposal
+//! with probability `min(1, p(x)/q(x))` and corrects from a residual
+//! distribution — the emitted *distribution* matches the target, but any
+//! single run differs from vanilla decoding. This engine's KV decode
+//! path is **bit-identical** to the full-window forward (the
+//! `docs/SERVING.md` parity contract), so we can do strictly better: the
+//! verify pass re-derives the target's own next-token choice at every
+//! position — greedy argmax, or a seeded draw from the session's rng
+//! stream, via the *same* [`sample`] call vanilla decode makes — and a
+//! proposal is accepted iff it **equals** that choice (a seeded
+//! rejection sampler whose acceptance test is exact byte equality
+//! rather than a probability ratio).
+//!
+//! Consequence: every emitted token *is* the target's choice, so the
+//! output stream is **byte-identical to non-speculative decoding for any
+//! draft** — greedy or seeded-temperature. The draft only decides how
+//! many positions one verify call advances (the acceptance rate, i.e.
+//! throughput), never what gets emitted. With draft == target the
+//! proposals reproduce the target's choices exactly (same bit-identical
+//! logits, cloned rng stream), acceptance is 1.0, and the target runs
+//! ~`tokens / (k+1)` decode steps.
+//!
+//! ## One step, per session
+//!
+//! ```text
+//! pending t0 (sampled last tick, not yet absorbed), proposals p1..pk:
+//!
+//!   propose: draft catches up on (history ++ t0) it has not absorbed
+//!            (one multi-row decode), then samples p1..pk sequentially
+//!            with a CLONE of the session rng
+//!   verify:  target decode_spans over [t0, p1, .., pk]  → rows r0..rk
+//!            (row i = logits after t0, p1..pi — one batched call for
+//!            every active session)
+//!   accept:  walk i = 0..=k: emit c = sample(r_i, session rng);
+//!            stop after the first c != p_{i+1} (r_{i+1}.. would be
+//!            conditioned on a rejected token) or after the bonus row
+//!   rollback: target truncates to pos + emitted (pending + accepted);
+//!            draft truncates to the same prefix
+//! ```
+//!
+//! `k` is clamped per session by the generation budget (`max_new`), the
+//! target window (the span must fit), and the draft window (a session
+//! whose history outgrows the draft's context simply stops speculating
+//! and decodes vanilla — correctness never depends on the draft).
+
+use anyhow::{ensure, Result};
+
+use crate::model::DecodeState;
+use crate::rng::Rng;
+
+use super::engine::{EngineStats, ServeBackend};
+use super::sample::sample;
+use super::session::Session;
+
+/// Speculative-decode knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecConfig {
+    /// Draft tokens proposed per verification step (clamped per session
+    /// by the generation budget and both context windows).
+    pub k: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> SpecConfig {
+        SpecConfig { k: 4 }
+    }
+}
+
+/// The engine's speculative decoder: owns the draft backend and drives
+/// propose → verify → accept → rollback for every active session each
+/// tick. Built by [`Engine::enable_spec`](super::Engine::enable_spec).
+pub(crate) struct SpecRunner {
+    draft: Box<dyn ServeBackend>,
+    cfg: SpecConfig,
+}
+
+impl SpecRunner {
+    pub fn new(draft: Box<dyn ServeBackend>, cfg: SpecConfig) -> Result<SpecRunner> {
+        ensure!(cfg.k >= 1, "speculative k must be >= 1 (got {})", cfg.k);
+        Ok(SpecRunner { draft, cfg })
+    }
+
+    pub fn describe(&self) -> String {
+        format!("spec k={} / draft {}", self.cfg.k, self.draft.describe())
+    }
+
+    /// A fresh draft-side decode state for a newly admitted session.
+    pub fn fresh_draft_state(&self) -> DecodeState {
+        self.draft.fresh_state()
+    }
+
+    /// One speculative tick over all active sessions. Emits ≥ 1 token
+    /// per session (exactly like a vanilla tick when nothing can be
+    /// proposed) and leaves every session with the vanilla-tick
+    /// invariant intact: `state.tokens == prompt ++ generated[..-1]`,
+    /// the last generated token pending.
+    pub fn tick(
+        &mut self,
+        target: &mut dyn ServeBackend,
+        active: &mut [Session],
+        stats: &mut EngineStats,
+    ) -> Result<()> {
+        let tw = target.seq_len();
+        let dw = self.draft.seq_len();
+        let ns = active.len();
+
+        // -- plan: proposals per session --------------------------------
+        // a step emits at most k+1 tokens (≤ remaining budget), the
+        // target absorbs k+1 (must fit its window), and the draft ends
+        // at pos + k rows after catching up to pos+1 and absorbing k-1
+        // proposals (must fit the draft window)
+        let mut ks = vec![0usize; ns];
+        for (s, sess) in active.iter().enumerate() {
+            let pos = sess.state.tokens.len();
+            let budget = sess.req.max_new.saturating_sub(sess.generated.len());
+            debug_assert!(budget >= 1 && pos < tw, "retired session still active");
+            let mut k = self
+                .cfg
+                .k
+                .min(budget.saturating_sub(1))
+                .min(tw.saturating_sub(pos).saturating_sub(1))
+                .min(dw.saturating_sub(pos));
+            if sess.draft.is_none() {
+                k = 0;
+            }
+            ks[s] = k;
+        }
+
+        // -- propose: draft catch-up + k sequentially sampled tokens ----
+        // proposals draw from a CLONE of each session's rng so the true
+        // stream stays positioned exactly where vanilla decode would
+        // have it; with draft == target the clone reproduces the
+        // target's upcoming draws and every proposal is accepted
+        let mut proposals: Vec<Vec<i32>> = vec![Vec::new(); ns];
+        let mut rngs: Vec<Rng> = active.iter().map(|sess| sess.rng.clone()).collect();
+        let planned: Vec<usize> = (0..ns).filter(|&s| ks[s] > 0).collect();
+        if !planned.is_empty() {
+            let dv = self.draft.vocab();
+            // catch-up: whatever of (history ++ pending) the draft has
+            // not absorbed — at least the pending token, plus any
+            // proposal the previous rollback left unabsorbed
+            let catchup: Vec<Vec<i32>> = planned
+                .iter()
+                .map(|&s| {
+                    let sess = &active[s];
+                    let d = sess.draft.as_ref().expect("planned sessions have a draft");
+                    debug_assert!(sess.state.tokens.starts_with(&d.tokens));
+                    let mut span = sess.state.tokens[d.tokens.len()..].to_vec();
+                    span.push(*sess.generated.last().unwrap());
+                    span
+                })
+                .collect();
+            let cat_logits = {
+                let spans: Vec<&[i32]> = catchup.iter().map(Vec::as_slice).collect();
+                let mut refs: Vec<&mut DecodeState> = active
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(s, _)| ks[*s] > 0)
+                    .map(|(_, sess)| sess.draft.as_mut().unwrap())
+                    .collect();
+                self.draft.decode_spans(&mut refs, &spans)?
+            };
+            stats.draft_steps += 1;
+            let mut rb = 0usize;
+            for (pi, &s) in planned.iter().enumerate() {
+                let n = catchup[pi].len();
+                let last = &cat_logits.data[(rb + n - 1) * dv..(rb + n) * dv];
+                rb += n;
+                proposals[s].push(sample(last, &active[s].req.sampling, &mut rngs[s]));
+            }
+            // rounds 2..=k: absorb the previous proposal, sample the next
+            let kmax = planned.iter().map(|&s| ks[s]).max().unwrap();
+            for round in 2..=kmax {
+                let going: Vec<usize> =
+                    planned.iter().copied().filter(|&s| ks[s] >= round).collect();
+                let toks: Vec<i32> = going.iter().map(|&s| proposals[s][round - 2]).collect();
+                let logits = {
+                    let mut refs: Vec<&mut DecodeState> = active
+                        .iter_mut()
+                        .enumerate()
+                        .filter(|(s, _)| ks[*s] >= round)
+                        .map(|(_, sess)| sess.draft.as_mut().unwrap())
+                        .collect();
+                    self.draft.decode(&mut refs, &toks)?
+                };
+                stats.draft_steps += 1;
+                for (gi, &s) in going.iter().enumerate() {
+                    let row = &logits.data[gi * dv..(gi + 1) * dv];
+                    proposals[s].push(sample(row, &active[s].req.sampling, &mut rngs[s]));
+                }
+            }
+            for &s in &planned {
+                stats.spec_proposed += ks[s];
+            }
+        }
+
+        // -- verify: ONE multi-row target decode for every session ------
+        let spans_owned: Vec<Vec<i32>> = (0..ns)
+            .map(|s| {
+                let mut span = vec![*active[s].generated.last().unwrap()];
+                span.extend_from_slice(&proposals[s]);
+                span
+            })
+            .collect();
+        let logits = {
+            let spans: Vec<&[i32]> = spans_owned.iter().map(Vec::as_slice).collect();
+            let mut refs: Vec<&mut DecodeState> =
+                active.iter_mut().map(|sess| &mut sess.state).collect();
+            target.decode_spans(&mut refs, &spans)?
+        };
+        stats.decode_steps += 1;
+        stats.occupancy_sum += ns;
+
+        // -- accept + rollback ------------------------------------------
+        // every emitted token is the target's own seeded choice; the
+        // proposals only decide how many rows of this verify are usable
+        let v = target.vocab();
+        let mut row = 0usize;
+        for (s, sess) in active.iter_mut().enumerate() {
+            let k = ks[s];
+            let base = sess.state.tokens.len() - (k + 1); // pos before verify
+            let mut emitted = 0usize;
+            for i in 0..=k {
+                let r = &logits.data[(row + i) * v..(row + i + 1) * v];
+                let choice = sample(r, &sess.req.sampling, &mut sess.rng);
+                sess.generated.push(choice);
+                stats.generated_tokens += 1;
+                emitted += 1;
+                if i < k {
+                    if choice == proposals[s][i] {
+                        stats.spec_accepted += 1;
+                    } else {
+                        break; // rows past i are conditioned on a rejected token
+                    }
+                }
+            }
+            row += k + 1;
+            // target keeps pending + accepted (= emitted) absorbed
+            // tokens; the last emitted token stays pending for next tick
+            sess.state.truncate(base + emitted);
+            if let Some(d) = &mut sess.draft {
+                let keep = d.tokens.len().min(base + emitted);
+                d.truncate(keep);
+            }
+        }
+        Ok(())
+    }
+}

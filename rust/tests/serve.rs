@@ -159,6 +159,17 @@ fn trait_default_fallback_decode_matches_native_kv() {
     // and the window guard trips identically once full
     assert!(fb.decode_step(&mut fb_state, 0, &params).is_err());
     assert!(kv.decode_step(&mut kv_state, 0, &params).is_err());
+
+    // the default decode_span (ONE padded logits call, rows sliced out
+    // by causality) must also match the native multi-row KV step — the
+    // path chunked prefill and speculative verify take on KV-less
+    // backends
+    let (mut kv_s, _) = kv.prefill(&seq[..3], &params).unwrap();
+    let (mut fb_s, _) = fb.prefill(&seq[..3], &params).unwrap();
+    let a = fb.decode_span(&mut fb_s, &seq[3..10], &params).unwrap();
+    let b = kv.decode_span(&mut kv_s, &seq[3..10], &params).unwrap();
+    assert_eq!(a.data, b.data, "decode_span: fallback vs KV");
+    assert_eq!(fb_s.tokens, kv_s.tokens);
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,333 @@
+//! Speculative-decoding, KV-rollback, chunked-prefill and TCP front-end
+//! contracts:
+//!
+//! * `rollback_*` — `KvCache::truncate` + re-decode is bitwise identical
+//!   to a fresh prefill of the kept prefix; the multi-row `decode_spans`
+//!   step is bitwise identical to token-at-a-time decode and (from an
+//!   empty state) to `prefill`.
+//! * `spec_*` — speculative decode emits *byte-identical* streams to the
+//!   vanilla engine (greedy and seeded temperature), with acceptance
+//!   rate 1.0 and strictly fewer target decode steps when draft ==
+//!   target, and with the measured acceptance rate surfaced in
+//!   `EngineStats` for a smaller draft.
+//! * `net_*` — the TCP front-end serves the stdin line/JSON protocol
+//!   with per-connection routing and graceful EOF drain.
+
+use std::sync::Arc;
+
+use mxfp4_train::model::{GPTConfig, NativeRecipe};
+use mxfp4_train::rng::Rng;
+use mxfp4_train::runtime::executor;
+use mxfp4_train::serve::{
+    net, Engine, EngineConfig, FinishReason, Request, SamplingParams, ServeModel, SpecConfig,
+};
+use mxfp4_train::util::json::{self, Json};
+
+fn model_with(cfg: GPTConfig, recipe: &str, seed: u64) -> Arc<ServeModel> {
+    let params = executor::init_params_for(&cfg.param_specs(), cfg.n_layers, seed);
+    Arc::new(ServeModel::new(cfg, NativeRecipe::parse(recipe).unwrap(), params).unwrap())
+}
+
+fn micro(recipe: &str, seed: u64) -> Arc<ServeModel> {
+    model_with(GPTConfig::preset("micro").unwrap().0, recipe, seed)
+}
+
+fn random_seq(m: &ServeModel, n: usize, seed: u64) -> Vec<i32> {
+    let v = m.vocab() as u64;
+    let mut rng = Rng::seed(seed);
+    (0..n).map(|_| (rng.next_u64() % v) as i32).collect()
+}
+
+/// Run `reqs` through an engine over `target`, optionally speculative.
+fn run_engine(
+    target: &Arc<ServeModel>,
+    draft: Option<(&Arc<ServeModel>, usize)>,
+    reqs: &[Request],
+    max_batch: usize,
+) -> (Vec<mxfp4_train::serve::Completion>, mxfp4_train::serve::EngineStats) {
+    let mut e = Engine::new(Box::new(target.clone()), EngineConfig { max_batch });
+    if let Some((d, k)) = draft {
+        e.enable_spec(Box::new(d.clone()), SpecConfig { k }).unwrap();
+    }
+    for r in reqs {
+        e.submit(r.clone());
+    }
+    let done = e.run().unwrap();
+    (done, e.stats().clone())
+}
+
+// ---------------------------------------------------------------------------
+// KV rollback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rollback_redecode_is_bitwise_fresh_prefill() {
+    // truncate + re-decode must be indistinguishable, byte for byte,
+    // from a fresh prefill of the accepted prefix — per recipe
+    for recipe in ["bf16", "mxfp4"] {
+        let m = micro(recipe, 51);
+        let seq = random_seq(&m, 12, 7);
+        let (mut st, _) = m.prefill(&seq).unwrap();
+        st.truncate(5);
+        assert_eq!(st.tokens, seq[..5], "{recipe}: tokens rolled back");
+        let (mut fresh, _) = m.prefill(&seq[..5]).unwrap();
+        for (i, &tk) in seq.iter().enumerate().skip(5) {
+            let a = m.decode_step(&mut st, tk).unwrap();
+            let b = m.decode_step(&mut fresh, tk).unwrap();
+            assert_eq!(a, b, "{recipe}: re-decoded row {i} diverged from fresh prefill");
+        }
+    }
+}
+
+#[test]
+fn rollback_spans_decode_bitwise_like_single_steps() {
+    // the multi-row machinery itself: spans == stepwise == prefill
+    let m = micro("mxfp4", 53);
+    let v = m.vocab();
+    let seq = random_seq(&m, 10, 9);
+
+    // one span from an empty state is a prefill
+    let mut st = m.fresh_state();
+    let rows = m.decode_spans(&mut [&mut st], &[&seq[..]]).unwrap();
+    assert_eq!(rows.rows, seq.len());
+    let (st2, last) = m.prefill(&seq).unwrap();
+    assert_eq!(rows.data[(seq.len() - 1) * v..], last[..], "span-from-empty == prefill");
+    assert_eq!(st.tokens, st2.tokens);
+
+    // chunked spans == token-at-a-time, and a rollback mid-way replays
+    let (mut chunked, _) = m.prefill(&seq[..3]).unwrap();
+    let (mut stepwise, _) = m.prefill(&seq[..3]).unwrap();
+    let spanned = m.decode_spans(&mut [&mut chunked], &[&seq[3..8]]).unwrap();
+    for (j, &tk) in seq[3..8].iter().enumerate() {
+        let row = m.decode_step(&mut stepwise, tk).unwrap();
+        assert_eq!(spanned.data[j * v..(j + 1) * v], row[..], "chunk row {j}");
+    }
+    // roll the span state back to 4 tokens (as if proposals past the
+    // first were rejected) and re-span a different continuation: rows
+    // must equal a fresh prefill of the kept prefix + the same span
+    chunked.truncate(4);
+    let alt: Vec<i32> = seq[..4].iter().map(|&t| (t + 1) % m.vocab() as i32).collect();
+    let replay = m.decode_spans(&mut [&mut chunked], &[&alt[..]]).unwrap();
+    let (mut fresh, _) = m.prefill(&seq[..4]).unwrap();
+    let fresh_rows = m.decode_spans(&mut [&mut fresh], &[&alt[..]]).unwrap();
+    assert_eq!(replay.data, fresh_rows.data, "rollback + re-span != fresh prefill + span");
+}
+
+// ---------------------------------------------------------------------------
+// speculative decode == vanilla decode, byte for byte
+// ---------------------------------------------------------------------------
+
+fn greedy_req(id: u64, prompt: Vec<i32>, max_new: usize, seed: u64) -> Request {
+    Request { id, prompt, max_new, sampling: SamplingParams::greedy(), seed }
+}
+
+#[test]
+fn spec_draft_equals_target_matches_vanilla_and_accepts_everything() {
+    let m = micro("mxfp4", 57);
+    let reqs = vec![
+        greedy_req(1, vec![3, 1, 4], 8, 101),
+        Request {
+            id: 2,
+            prompt: vec![2, 7, 1, 8],
+            max_new: 7,
+            sampling: SamplingParams { temperature: 0.9, top_k: 8 },
+            seed: 202,
+        },
+    ];
+    let (vanilla, _) = run_engine(&m, None, &reqs, 4);
+    for k in [1usize, 2, 4] {
+        let (spec, st) = run_engine(&m, Some((&m, k)), &reqs, 4);
+        for c in &vanilla {
+            let s = spec.iter().find(|x| x.id == c.id).unwrap();
+            assert_eq!(s.tokens, c.tokens, "k={k} req {}: stream diverged", c.id);
+            assert_eq!(s.finish, c.finish);
+        }
+        // exact acceptance with a bit-identical draft: everything lands
+        assert!(st.spec_proposed > 0, "k={k}: nothing proposed");
+        assert_eq!(st.spec_accepted, st.spec_proposed, "k={k}: rejection with draft==target");
+        assert!((st.accept_rate() - 1.0).abs() < 1e-12);
+        // target steps: ≤ ceil(tokens/k)+1 verifies per request overall,
+        // and strictly fewer batched target calls than tokens emitted
+        let tokens: usize = vanilla.iter().map(|c| c.tokens.len()).sum();
+        assert!(
+            st.decode_steps < tokens,
+            "k={k}: {} target steps for {tokens} tokens",
+            st.decode_steps
+        );
+        if k >= 2 {
+            let per_req_bound: usize =
+                vanilla.iter().map(|c| (c.tokens.len() + k - 1) / k + 1).sum();
+            assert!(
+                st.decode_steps <= per_req_bound,
+                "k={k}: {} steps > bound {per_req_bound}",
+                st.decode_steps
+            );
+        }
+        assert!(st.draft_steps > 0, "k={k}: draft never ran");
+    }
+}
+
+#[test]
+fn spec_smaller_draft_still_byte_identical() {
+    // a *different* (random-weight, smaller) draft mispredicts freely —
+    // the emitted stream must still equal vanilla byte-for-byte, for
+    // greedy AND seeded sampling, with the measured acceptance rate
+    // surfaced in EngineStats
+    let (tcfg, _) = GPTConfig::preset("test").unwrap();
+    let target = model_with(tcfg, "mxfp4", 61);
+    let draft = model_with(GPTConfig::new(256, 32, 1, 2, 32, 64), "mxfp4", 62);
+    let reqs = vec![
+        greedy_req(1, vec![9, 8, 7], 10, 11),
+        Request {
+            id: 2,
+            prompt: vec![5, 6],
+            max_new: 9,
+            sampling: SamplingParams { temperature: 1.1, top_k: 16 },
+            seed: 33,
+        },
+    ];
+    let (vanilla, _) = run_engine(&target, None, &reqs, 2);
+    let (spec, st) = run_engine(&target, Some((&draft, 3)), &reqs, 2);
+    for c in &vanilla {
+        let s = spec.iter().find(|x| x.id == c.id).unwrap();
+        assert_eq!(s.tokens, c.tokens, "req {}: smaller draft changed the stream", c.id);
+        assert_eq!(s.finish, c.finish);
+    }
+    assert!(st.spec_proposed > 0);
+    assert!(st.spec_accepted <= st.spec_proposed);
+    let r = st.accept_rate();
+    assert!((0.0..=1.0).contains(&r), "acceptance rate {r} out of range");
+}
+
+#[test]
+fn spec_window_and_budget_edges_match_vanilla() {
+    let m = micro("mxfp4", 63); // micro window = 16
+    let reqs = vec![
+        // prompt nearly fills the window: retires on Window mid-burst
+        greedy_req(1, (0..13).collect(), 8, 5),
+        // budget of exactly 1: no proposals possible
+        greedy_req(2, vec![4, 5], 1, 6),
+    ];
+    let (vanilla, _) = run_engine(&m, None, &reqs, 2);
+    let (spec, _) = run_engine(&m, Some((&m, 4)), &reqs, 2);
+    for c in &vanilla {
+        let s = spec.iter().find(|x| x.id == c.id).unwrap();
+        assert_eq!(s.tokens, c.tokens, "req {}", c.id);
+        assert_eq!(s.finish, c.finish, "req {}", c.id);
+    }
+    let win = vanilla.iter().find(|c| c.id == 1).unwrap();
+    assert_eq!(win.finish, FinishReason::Window, "edge request must retire at the window");
+}
+
+#[test]
+fn spec_draft_window_smaller_than_target_falls_back_gracefully() {
+    // target window 32, draft window 16: sessions speculate while their
+    // history fits the draft and silently decode vanilla past it —
+    // stream identical throughout
+    let (tcfg, _) = GPTConfig::preset("test").unwrap();
+    let target = model_with(tcfg, "mxfp4", 71);
+    let draft = model_with(GPTConfig::new(256, 32, 1, 2, 16, 64), "mxfp4", 71);
+    let reqs = vec![greedy_req(1, vec![1, 2, 3, 4], 24, 13)];
+    let (vanilla, _) = run_engine(&target, None, &reqs, 1);
+    let (spec, st) = run_engine(&target, Some((&draft, 4)), &reqs, 1);
+    assert_eq!(spec[0].tokens, vanilla[0].tokens);
+    assert_eq!(spec[0].tokens.len(), 24, "target window still fits all 24");
+    assert!(st.spec_proposed > 0, "early positions should speculate");
+}
+
+#[test]
+fn spec_batched_prefill_admits_chunks() {
+    // 3 prompts, 4 slots: one chunked multi-row prefill call admits all
+    // of them, and outputs equal the solo runs
+    let m = micro("mxfp4", 65);
+    let reqs = vec![
+        greedy_req(1, vec![3, 1, 4], 5, 21),
+        Request {
+            id: 2,
+            prompt: vec![2, 7, 1, 8, 2, 8],
+            max_new: 4,
+            sampling: SamplingParams { temperature: 0.8, top_k: 8 },
+            seed: 22,
+        },
+        greedy_req(3, vec![6, 6], 5, 23),
+    ];
+    let (batched, st) = run_engine(&m, None, &reqs, 4);
+    assert_eq!(st.prefill_calls, 1, "all three prompts must share one prefill call");
+    assert_eq!(st.prefill_tokens, 3 + 6 + 2);
+    for r in &reqs {
+        let (solo, _) = run_engine(&m, None, std::slice::from_ref(r), 1);
+        let b = batched.iter().find(|c| c.id == r.id).unwrap();
+        assert_eq!(b.tokens, solo[0].tokens, "req {}: batched prefill changed tokens", r.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP front-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn net_tcp_roundtrip_matches_in_process_engine() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let Ok(listener) = std::net::TcpListener::bind("127.0.0.1:0") else {
+        eprintln!("skipping net_tcp test: cannot bind localhost sockets here");
+        return;
+    };
+    let addr = listener.local_addr().unwrap();
+    let m = micro("mxfp4", 81);
+    let defaults = Request {
+        id: 0,
+        prompt: vec![],
+        max_new: 5,
+        sampling: SamplingParams::greedy(),
+        seed: 9,
+    };
+
+    // expected completions from an in-process engine, same requests
+    let expect = {
+        let mut e = Engine::new(Box::new(m.clone()), EngineConfig { max_batch: 4 });
+        e.submit(Request { id: 0, prompt: vec![1, 2, 3], ..defaults.clone() });
+        e.submit(Request { id: 7, prompt: vec![4, 5], max_new: 3, seed: 11, ..defaults.clone() });
+        e.run().unwrap()
+    };
+
+    let md = m.clone();
+    let dd = defaults.clone();
+    let server = std::thread::spawn(move || {
+        let mut engine = Engine::new(Box::new(md), EngineConfig { max_batch: 4 });
+        net::serve_tcp(&mut engine, listener, &dd, 1).unwrap();
+    });
+
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    sock.write_all(b"1 2 3\n{\"id\":7,\"prompt\":[4,5],\"max_new\":3,\"seed\":11}\nnot a token\n")
+        .unwrap();
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut lines = Vec::new();
+    for line in BufReader::new(sock).lines() {
+        lines.push(line.unwrap());
+    }
+    server.join().unwrap();
+
+    assert_eq!(lines.len(), 3, "2 completions + 1 error response: {lines:?}");
+    let docs: Vec<Json> = lines.iter().map(|l| json::parse(l).unwrap()).collect();
+    let by_id = |id: i64| {
+        docs.iter()
+            .find(|d| d.get("id").as_i64() == Some(id) && *d.get("error") == Json::Null)
+            .unwrap_or_else(|| panic!("no completion for id {id}: {lines:?}"))
+    };
+    for c in &expect {
+        let doc = by_id(c.id as i64);
+        let toks: Vec<i32> = doc
+            .get("tokens")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|v| v.as_i64().map(|t| t as i32))
+            .collect();
+        assert_eq!(toks, c.tokens, "TCP completion {} diverged from in-process run", c.id);
+    }
+    assert!(
+        docs.iter().any(|d| *d.get("error") != Json::Null),
+        "malformed line must get an error response: {lines:?}"
+    );
+}

@@ -66,6 +66,35 @@ echo "$serve_out" | grep -q 'tok/s' || {
     exit 1
 }
 
+echo "==> speculative-decode smoke (draft == target must reproduce the vanilla stream)"
+# same request as the serve smoke, but drafted by the served model
+# itself: the completion line must be byte-identical to the non-spec
+# run (exact acceptance), and the acceptance summary must report on it
+spec_out=$(cargo run --release -- serve --backend native --config test \
+    --recipe mxfp4 --prompt 1,2,3,4 --tokens 16 --spec-draft target --spec-k 4)
+echo "$spec_out"
+base_line=$(echo "$serve_out" | grep '"tokens":')
+spec_line=$(echo "$spec_out" | grep '"tokens":')
+if [ "$spec_line" != "$base_line" ]; then
+    echo "spec smoke: speculative completion diverged from vanilla decode" >&2
+    echo "  vanilla: $base_line" >&2
+    echo "  spec:    $spec_line" >&2
+    exit 1
+fi
+echo "$spec_out" | grep -q 'speculative: .* accepted' || {
+    echo "spec smoke: no acceptance-rate summary" >&2
+    exit 1
+}
+
+echo "==> KV-rollback + speculative-decode + TCP contract tests (by name)"
+# run the tests/spec.rs suites by prefix so a filtered "cargo test \$@"
+# above can never silently skip them: rollback_ (truncate + re-decode
+# bitwise == fresh prefill), spec_ (spec stream == vanilla stream,
+# acceptance accounting), net_ (TCP front-end round trip)
+cargo test -q --test spec rollback_
+cargo test -q --test spec spec_
+cargo test -q --test spec net_
+
 echo "==> cargo doc (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
