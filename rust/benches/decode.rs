@@ -12,6 +12,7 @@ mod harness;
 
 use std::sync::Arc;
 
+use mxfp4_train::gemm::simd::Kernel;
 use mxfp4_train::model::{GPTConfig, NativeRecipe};
 use mxfp4_train::rng::Rng;
 use mxfp4_train::runtime::{executor, Backend, BackendSpec};
@@ -57,6 +58,7 @@ fn main() {
     harness::header(&format!(
         "decode: KV cache vs full-window recompute (2L d128 seq {SEQ}, recipe mxfp4, 1 thread)"
     ));
+    println!("packed GEMM inner kernel: {}", Kernel::select().name());
     // Single GEMM thread on BOTH sides: a 1-row decode GEMM can never
     // parallelize while the 128-row recompute would soak up every core,
     // so a threaded comparison measures the machine, not the algorithm.

@@ -6,7 +6,8 @@
 #[path = "harness.rs"]
 mod harness;
 
-use mxfp4_train::gemm::{matmul, mx_gemm_packed, mx_matmul, Mat, MxMode};
+use mxfp4_train::gemm::simd::Kernel;
+use mxfp4_train::gemm::{matmul, mx_gemm_packed, mx_gemm_packed_with, mx_matmul, Mat, MxMode};
 use mxfp4_train::mx::block::MxVec;
 use mxfp4_train::mx::mat::MxMat;
 use mxfp4_train::mx::pipeline::PackPipeline;
@@ -79,6 +80,47 @@ fn main() {
     let speedup = t_seed / t_packed;
     println!("packed LUT speedup over per-block MxVec::dot at 1024^3: {speedup:.2}x (target >= 3x)");
     assert!(speedup >= 3.0, "packed engine must beat the seed per-block path by >= 3x, got {speedup:.2}x");
+
+    // ---------------------------------------------------------------
+    // ISSUE 6 gate: the SIMD shuffle-LUT kernel vs the scalar row_dot
+    // oracle, same packed operands, kernel against kernel at 1024^3.
+    // Outputs are bit-identical (tests/packed_gemm.rs); this section
+    // pins the *speed* half of the contract.
+    // ---------------------------------------------------------------
+    harness::header("SIMD shuffle-LUT kernel vs scalar row_dot (1024^3, NR, 1 worker)");
+    println!("dispatched inner kernel: {}", Kernel::select().name());
+    match Kernel::simd() {
+        None => {
+            println!(
+                "no SIMD ISA on this host (need SSSE3 or NEON); \
+                 skipping the >=2x shuffle-LUT gate — scalar kernel is the active path"
+            );
+        }
+        Some(simd) => {
+            let t_scalar =
+                harness::bench("mx_gemm_packed scalar oracle", big_flops, "flop", 1, 1, || {
+                    std::hint::black_box(mx_gemm_packed_with(&pa, &pbt, 1, Kernel::Scalar));
+                });
+            let t_simd = harness::bench(
+                &format!("mx_gemm_packed {}", simd.name()),
+                big_flops,
+                "flop",
+                1,
+                1,
+                || {
+                    std::hint::black_box(mx_gemm_packed_with(&pa, &pbt, 1, simd));
+                },
+            );
+            let simd_speedup = t_scalar / t_simd;
+            println!(
+                "shuffle-LUT speedup over scalar row_dot at 1024^3: {simd_speedup:.2}x (target >= 2x)"
+            );
+            assert!(
+                simd_speedup >= 2.0,
+                "SIMD kernel must beat the scalar oracle by >= 2x at 1024^3, got {simd_speedup:.2}x"
+            );
+        }
+    }
 
     // ---------------------------------------------------------------
     // Quantize-once: one weight feeding several GEMMs per step. The qdq

@@ -7,6 +7,7 @@
 mod harness;
 
 use mxfp4_train::coordinator::{MxWeightCache, Orientation};
+use mxfp4_train::gemm::simd::Kernel;
 use mxfp4_train::gemm::{mx_gemm_packed, mx_matmul, Mat, MxMode};
 use mxfp4_train::hadamard;
 use mxfp4_train::mx::pipeline::PackPipeline;
@@ -155,6 +156,7 @@ fn rht_prep_share_bench() {
 /// the MX engine — runs in any checkout (no artifacts, no PJRT).
 fn native_backend_bench() {
     harness::header("native backend train step by recipe (test config, batch 4 x seq 32)");
+    println!("packed GEMM inner kernel: {}", Kernel::select().name());
     for recipe in ["bf16", "mxfp4", "mxfp4_sr", "mxfp4_rht", "mxfp4_rht_sr"] {
         let spec = BackendSpec::native("test", recipe, None).unwrap();
         let mut backend = spec.connect().unwrap();

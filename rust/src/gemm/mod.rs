@@ -18,6 +18,13 @@
 //!   power-of-two scale multiply per 32-block. Quantize once, reuse
 //!   across GEMMs (see `coordinator::mxcache`); bit-exact with a
 //!   per-block-accumulated qdq dot (`tests/packed_gemm.rs`).
+//! * [`simd`] — the **shuffle-LUT inner kernel**: 128-bit nibble table
+//!   lookups (`pshufb` / `vqtbl1q`) + exact integer multiply-accumulate
+//!   per 32-block, selected at runtime by [`simd::Kernel::select`] with
+//!   the scalar `MxMat::row_dot` as fallback and bit-exactness oracle
+//!   (`MX_FORCE_SCALAR=1` forces the oracle).
+
+pub mod simd;
 
 use crate::hadamard;
 use crate::mx::mat::MxMat;
@@ -292,9 +299,25 @@ pub fn mx_matmul(a: &Mat, b: &Mat, mode: MxMode, g: usize, rng: &mut Rng, worker
 ///
 /// Parallelism: `scope_chunks` over contiguous row-chunks of C (chunk
 /// boundaries aligned to whole output rows). Determinism: each output
-/// element is one sequential `MxMat::row_dot`, so results are identical
+/// element is one sequential row × row dot, so results are identical
 /// for any worker count.
+///
+/// Inner kernel: resolved **once per call** by [`simd::Kernel::select`] —
+/// the 128-bit shuffle-LUT kernel when the host ISA has one (SSSE3 /
+/// NEON), the scalar `MxMat::row_dot` otherwise or when
+/// `MX_FORCE_SCALAR=1` forces the oracle. The two kernels are
+/// bit-identical for every input (`gemm::simd` module docs,
+/// `tests/packed_gemm.rs`), so dispatch never changes results — only
+/// speed.
 pub fn mx_gemm_packed(a: &MxMat, bt: &MxMat, workers: usize) -> Mat {
+    mx_gemm_packed_with(a, bt, workers, simd::Kernel::select())
+}
+
+/// [`mx_gemm_packed`] with an explicit inner kernel — the entry the
+/// differential tests and benches use to force the scalar oracle and
+/// the shuffle kernel independently of host detection and the
+/// `MX_FORCE_SCALAR` override.
+pub fn mx_gemm_packed_with(a: &MxMat, bt: &MxMat, workers: usize, kernel: simd::Kernel) -> Mat {
     assert_eq!(a.cols, bt.cols, "reduction dims differ");
     let (m, n) = (a.rows, bt.rows);
     let mut c = Mat::zeros(m, n);
@@ -309,7 +332,7 @@ pub fn mx_gemm_packed(a: &MxMat, bt: &MxMat, workers: usize) -> Mat {
         for (ri, crow) in chunk.chunks_mut(n).enumerate() {
             let r = row0 + ri;
             for (j, cv) in crow.iter_mut().enumerate() {
-                *cv = a.row_dot(r, bt, j);
+                *cv = kernel.row_dot(a, r, bt, j);
             }
         }
     });

@@ -1,0 +1,315 @@
+//! SIMD shuffle-LUT inner kernel for the packed MXFP4 GEMM.
+//!
+//! The scalar inner loop ([`MxMat::row_dot`]) walks one packed byte-pair
+//! at a time through the 256-entry FP4×FP4 product table — two loads and
+//! two float adds per byte. This module replaces that walk with the
+//! nibble-shuffle trick QuTLASS-class kernels use on native FP4 hardware:
+//! a single 128-bit register holds a whole 32-element block's codes, one
+//! in-register table lookup (`pshufb` on x86, `vqtbl1q` on AArch64)
+//! decodes all 16 low or high nibbles at once, and the multiply-
+//! accumulate runs in **exact integer arithmetic** over the decoded
+//! values, finishing each block with one scale application instead of a
+//! per-element float walk.
+//!
+//! ## Why the integer inner product is bit-exact with the scalar kernel
+//!
+//! FP4 grid magnitudes are `{0, 0.5, 1, 1.5, 2, 3, 4, 6}` — every one is
+//! an integer number of *halves* (`FP4_HALVES`), so every FP4×FP4
+//! product is an integer number of quarters with `|p| ≤ 144`, and a
+//! 32-element block's product sum is an integer `S` with `|S| ≤ 4608 <
+//! 2^24` quarters. That has two consequences:
+//!
+//! * the scalar kernel's four f32 lanes (`row_dot`'s accumulation
+//!   contract: lane `j` sums elements ≡ j mod 4, combined as
+//!   `(l0+l1)+(l2+l3)`) never round *inside a block* — every partial is
+//!   an exactly-representable multiple of 0.25 — so the scalar block
+//!   accumulator equals the real-number sum `S/4` exactly;
+//! * `(S as f32) * 0.25` is also exact (`|S| < 2^24`, and ×0.25 is a
+//!   power-of-two multiply).
+//!
+//! The SIMD kernel therefore computes the *identical* f32 block value,
+//! then applies the E8M0 scales with the same expression the scalar path
+//! uses (`acc * 2^ae * 2^be`, left-associated) and adds block partials in
+//! block order — so the full dot product is **bit-identical** for every
+//! input, including subnormal underflow and saturating-scale corners
+//! (where both paths execute the same float ops on the same values). The
+//! differential suite in `tests/packed_gemm.rs` and the edge-case
+//! properties in `tests/properties.rs` pin this down; `MxMat::row_dot`
+//! stays in the tree as the always-available fallback *and* the oracle.
+//!
+//! ## Dispatch
+//!
+//! [`Kernel::select`] picks the shuffle kernel when the host ISA
+//! supports one (SSSE3 via `is_x86_feature_detected!`, NEON on AArch64
+//! where it is baseline) and the [`FORCE_SCALAR_ENV`] override is not
+//! set; `MX_FORCE_SCALAR=1` forces the scalar oracle, which is how the
+//! CI gate exercises the dispatch seam itself (`scripts/ci.sh` runs the
+//! parity suites under both settings). `gemm::mx_gemm_packed` resolves
+//! the kernel once per GEMM call — never per element — and the explicit
+//! [`gemm::mx_gemm_packed_with`](super::mx_gemm_packed_with) entry lets
+//! the differential tests force each path regardless of environment.
+
+use crate::mx::mat::MxMat;
+
+/// FP4 code → signed magnitude in *halves* (value × 2), the in-register
+/// shuffle table: grid `{0, 0.5, 1, 1.5, 2, 3, 4, 6}` doubled, sign bit
+/// (code ≥ 8) negated. Code `0x8` is −0.0, which decodes to integer 0.
+pub const FP4_HALVES: [i8; 16] = [0, 1, 2, 3, 4, 6, 8, 12, 0, -1, -2, -3, -4, -6, -8, -12];
+
+/// Environment override: set to anything but `0`/empty to force the
+/// scalar kernel (the bit-exactness oracle) in [`Kernel::select`].
+pub const FORCE_SCALAR_ENV: &str = "MX_FORCE_SCALAR";
+
+/// Is the scalar override set? Read fresh on every call (the cost is one
+/// env lookup per GEMM, not per dot), so tests and long-lived serve
+/// processes see changes without re-exec.
+pub fn force_scalar() -> bool {
+    match std::env::var_os(FORCE_SCALAR_ENV) {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+/// The inner-kernel choice for one packed GEMM call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Per-byte 256-entry product-LUT loop (`MxMat::row_dot`) — always
+    /// available, and the oracle the shuffle kernel is proven against.
+    Scalar,
+    /// 128-bit shuffle-LUT kernel: nibble table lookup + exact integer
+    /// multiply-accumulate per 32-block. Only handed out by
+    /// [`Kernel::simd`] when the host ISA supports it; on a host
+    /// without one, `row_dot` falls back to the scalar path.
+    Shuffle,
+}
+
+impl Kernel {
+    /// The kernel [`gemm::mx_gemm_packed`](super::mx_gemm_packed) runs:
+    /// the shuffle kernel when available, unless [`FORCE_SCALAR_ENV`]
+    /// overrides it back to the scalar oracle.
+    pub fn select() -> Kernel {
+        if force_scalar() {
+            Kernel::Scalar
+        } else {
+            Kernel::simd().unwrap_or(Kernel::Scalar)
+        }
+    }
+
+    /// The SIMD kernel this host can run, if any: SSSE3 (runtime
+    /// detected) on x86/x86_64, NEON (baseline) on AArch64.
+    #[allow(unreachable_code)] // on aarch64 the NEON return shadows the tail None
+    pub fn simd() -> Option<Kernel> {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        {
+            if is_x86_feature_detected!("ssse3") {
+                return Some(Kernel::Shuffle);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return Some(Kernel::Shuffle);
+        }
+        None
+    }
+
+    /// Human-readable name for bench / stats summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            Kernel::Shuffle => "shuffle-lut (ssse3)",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Shuffle => "shuffle-lut (neon)",
+            #[cfg(not(any(target_arch = "x86", target_arch = "x86_64", target_arch = "aarch64")))]
+            Kernel::Shuffle => "shuffle-lut (unavailable)",
+        }
+    }
+
+    pub fn is_simd(self) -> bool {
+        self != Kernel::Scalar
+    }
+
+    /// Dot of row `ra` of `a` with row `rb` of `bt` through this kernel.
+    /// Bit-identical across kernels for every input (module docs).
+    #[inline]
+    #[allow(unreachable_code)] // on aarch64 the NEON return shadows the tail fallback
+    pub fn row_dot(self, a: &MxMat, ra: usize, bt: &MxMat, rb: usize) -> f32 {
+        debug_assert_eq!(a.cols, bt.cols, "reduction dims differ");
+        if self == Kernel::Scalar {
+            return a.row_dot(ra, bt, rb);
+        }
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        {
+            if is_x86_feature_detected!("ssse3") {
+                // Safety: SSSE3 presence just checked (cached atomic
+                // load); slices are whole packed rows, so every 16-byte
+                // block load is in bounds.
+                return unsafe {
+                    x86::row_dot_ssse3(
+                        a.row_codes(ra),
+                        a.row_exps(ra),
+                        bt.row_codes(rb),
+                        bt.row_exps(rb),
+                    )
+                };
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // Safety: NEON is baseline on aarch64 targets; slices are
+            // whole packed rows.
+            return unsafe {
+                neon::row_dot_neon(
+                    a.row_codes(ra),
+                    a.row_exps(ra),
+                    bt.row_codes(rb),
+                    bt.row_exps(rb),
+                )
+            };
+        }
+        // A hand-constructed Shuffle on a host with no SIMD ISA (or
+        // SSSE3 absent at runtime) degrades to the oracle.
+        a.row_dot(ra, bt, rb)
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86 {
+    #[cfg(target_arch = "x86")]
+    use core::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    use super::FP4_HALVES;
+    use crate::mx::mat::BLOCK_BYTES;
+    use crate::mx::scale;
+
+    /// Sign-extend two i8 vectors to i16 (SSE2 interleave with their
+    /// sign masks) and multiply-accumulate adjacent pairs into 4×i32.
+    /// Exact: |products| ≤ 144, pair sums ≤ 288 — no overflow anywhere.
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    unsafe fn mul_i8_sum(x: __m128i, y: __m128i, zero: __m128i) -> __m128i {
+        let xs = _mm_cmpgt_epi8(zero, x);
+        let ys = _mm_cmpgt_epi8(zero, y);
+        _mm_add_epi32(
+            _mm_madd_epi16(_mm_unpacklo_epi8(x, xs), _mm_unpacklo_epi8(y, ys)),
+            _mm_madd_epi16(_mm_unpackhi_epi8(x, xs), _mm_unpackhi_epi8(y, ys)),
+        )
+    }
+
+    /// Packed row × row dot, one 128-bit vector per 32-element block per
+    /// operand. Caller guarantees SSSE3 and block-aligned row slices
+    /// (`codes.len() == exps.len() * BLOCK_BYTES`).
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn row_dot_ssse3(acodes: &[u8], aexps: &[i8], bcodes: &[u8], bexps: &[i8]) -> f32 {
+        debug_assert_eq!(acodes.len(), aexps.len() * BLOCK_BYTES);
+        debug_assert_eq!(bcodes.len(), bexps.len() * BLOCK_BYTES);
+        let tbl = _mm_loadu_si128(FP4_HALVES.as_ptr() as *const __m128i);
+        let mask = _mm_set1_epi8(0x0F);
+        let zero = _mm_setzero_si128();
+        let mut total = 0.0f32;
+        for (k, (&ae, &be)) in aexps.iter().zip(bexps).enumerate() {
+            let av = _mm_loadu_si128(acodes.as_ptr().add(k * BLOCK_BYTES) as *const __m128i);
+            let bv = _mm_loadu_si128(bcodes.as_ptr().add(k * BLOCK_BYTES) as *const __m128i);
+            // one pshufb decodes all 16 low (resp. high) nibbles to halves
+            let a_lo = _mm_shuffle_epi8(tbl, _mm_and_si128(av, mask));
+            let b_lo = _mm_shuffle_epi8(tbl, _mm_and_si128(bv, mask));
+            let a_hi = _mm_shuffle_epi8(tbl, _mm_and_si128(_mm_srli_epi16::<4>(av), mask));
+            let b_hi = _mm_shuffle_epi8(tbl, _mm_and_si128(_mm_srli_epi16::<4>(bv), mask));
+            let sum = _mm_add_epi32(mul_i8_sum(a_lo, b_lo, zero), mul_i8_sum(a_hi, b_hi, zero));
+            // horizontal i32 reduction (order-free: integers are exact)
+            let sum = _mm_add_epi32(sum, _mm_unpackhi_epi64(sum, sum));
+            let sum = _mm_add_epi32(sum, _mm_shuffle_epi32::<0b01>(sum));
+            let quarters = _mm_cvtsi128_si32(sum);
+            // same float expression as the scalar path from here on
+            let acc = quarters as f32 * 0.25;
+            total += acc * scale::exact_pow2(ae as i32) * scale::exact_pow2(be as i32);
+        }
+        total
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    use super::FP4_HALVES;
+    use crate::mx::mat::BLOCK_BYTES;
+    use crate::mx::scale;
+
+    /// Packed row × row dot, one 128-bit vector per 32-element block per
+    /// operand. NEON is baseline on aarch64; caller guarantees
+    /// block-aligned row slices.
+    pub unsafe fn row_dot_neon(acodes: &[u8], aexps: &[i8], bcodes: &[u8], bexps: &[i8]) -> f32 {
+        debug_assert_eq!(acodes.len(), aexps.len() * BLOCK_BYTES);
+        debug_assert_eq!(bcodes.len(), bexps.len() * BLOCK_BYTES);
+        let tbl = vld1q_s8(FP4_HALVES.as_ptr());
+        let mask = vdupq_n_u8(0x0F);
+        let mut total = 0.0f32;
+        for (k, (&ae, &be)) in aexps.iter().zip(bexps).enumerate() {
+            let av = vld1q_u8(acodes.as_ptr().add(k * BLOCK_BYTES));
+            let bv = vld1q_u8(bcodes.as_ptr().add(k * BLOCK_BYTES));
+            // one vqtbl1q decodes all 16 low (resp. high) nibbles
+            let a_lo = vqtbl1q_s8(tbl, vandq_u8(av, mask));
+            let b_lo = vqtbl1q_s8(tbl, vandq_u8(bv, mask));
+            let a_hi = vqtbl1q_s8(tbl, vshrq_n_u8::<4>(av));
+            let b_hi = vqtbl1q_s8(tbl, vshrq_n_u8::<4>(bv));
+            // widening i8×i8 → i16; |4-product sums| ≤ 576, no overflow
+            let p0 = vmull_s8(vget_low_s8(a_lo), vget_low_s8(b_lo));
+            let p1 = vmull_s8(vget_high_s8(a_lo), vget_high_s8(b_lo));
+            let p2 = vmull_s8(vget_low_s8(a_hi), vget_low_s8(b_hi));
+            let p3 = vmull_s8(vget_high_s8(a_hi), vget_high_s8(b_hi));
+            let s16 = vaddq_s16(vaddq_s16(p0, p1), vaddq_s16(p2, p3));
+            let quarters = vaddlvq_s16(s16);
+            // same float expression as the scalar path from here on
+            let acc = quarters as f32 * 0.25;
+            total += acc * scale::exact_pow2(ae as i32) * scale::exact_pow2(be as i32);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::fp4;
+
+    #[test]
+    fn halves_table_is_the_fp4_grid_doubled() {
+        for code in 0u8..16 {
+            let want = fp4::decode(code) * 2.0;
+            assert_eq!(FP4_HALVES[code as usize] as f32, want, "code {code:#x}");
+        }
+    }
+
+    #[test]
+    fn select_falls_back_to_scalar_or_simd() {
+        // whatever the host, select() must return a runnable kernel
+        let k = Kernel::select();
+        assert!(matches!(k, Kernel::Scalar | Kernel::Shuffle));
+        assert!(!k.name().is_empty());
+    }
+
+    #[test]
+    fn shuffle_kernel_matches_scalar_on_random_rows() {
+        // in-module smoke; the full differential suite lives in
+        // tests/packed_gemm.rs (shapes × modes × workers)
+        let Some(simd) = Kernel::simd() else {
+            eprintln!("no SIMD ISA on this host; smoke covered by scalar-only path");
+            return;
+        };
+        let mut rng = crate::rng::Rng::seed(0x51AD);
+        for cols in [1usize, 31, 32, 33, 64, 95, 257] {
+            let mut va = vec![0.0f32; cols];
+            let mut vb = vec![0.0f32; cols];
+            rng.fill_normal(&mut va, 2.0);
+            rng.fill_normal(&mut vb, 0.5);
+            let a = MxMat::quantize_nr(&va, 1, cols);
+            let b = MxMat::quantize_nr(&vb, 1, cols);
+            let want = Kernel::Scalar.row_dot(&a, 0, &b, 0);
+            let got = simd.row_dot(&a, 0, &b, 0);
+            assert_eq!(got.to_bits(), want.to_bits(), "cols {cols}: {got} vs {want}");
+        }
+    }
+}

@@ -26,6 +26,7 @@
 //! | `mx::mat` | §1, Table 5 | **packed tensor engine**: flat SoA `MxMat` + FP4×FP4 product LUT |
 //! | `mx::pipeline` | §4.2, Alg. 3 | **streaming operand prep** (`PackPipeline`): fused gather + RHT + quantize + pack, orientation-aware, parallel |
 //! | `gemm` | Algorithm 3 | qdq reference GEMM (`mx_matmul`) + packed LUT GEMM (`mx_gemm_packed`) |
+//! | `gemm::simd` | §1, Table 5 | **SIMD inner kernel**: SSSE3/NEON shuffle-LUT block decode + exact integer accumulate, runtime-dispatched with scalar `row_dot` as fallback + oracle (`MX_FORCE_SCALAR`) |
 //! | `hadamard` | §3.2, Eq. 5 | blockwise RHT, dense and O(n log n) FWHT forms |
 //! | `model` | §4, Alg. 3 | **native GPT with manual backprop**: every linear GEMM (fwd/dgrad/wgrad) routed through the MX engine per recipe; KV-cached incremental decoder |
 //! | `serve` | §1, §4 | **serving subsystem**: pack-once `ServeModel`, continuous-batching `Engine` with chunked batched prefill, exact-acceptance speculative decoding (`serve::spec`), TCP/stdin line protocol (`serve::net`), seeded sampling (`docs/SERVING.md`) |
@@ -45,7 +46,9 @@
 //! [`mx::mat::MxMat`] (one flat `Vec<u8>` of 4-bit codes + a `Vec<i8>` of
 //! E8M0 exponents, reduction dim padded to 32) and the inner loop is a
 //! 256-entry FP4×FP4 product-LUT walk with one power-of-two scale
-//! multiply per block. The two paths are bit-exact under a per-block
+//! multiply per block — or, where the host has SSSE3/NEON, the
+//! [`gemm::simd`] shuffle kernel, which is byte-identical to the scalar
+//! walk by construction. The two paths are bit-exact under a per-block
 //! accumulation contract (see `tests/packed_gemm.rs`), the
 //! quantize-once weight reuse lives in [`coordinator::mxcache`], and
 //! *every* operand — either path, either orientation, with or without

@@ -208,6 +208,24 @@ impl MxMat {
         out
     }
 
+    /// Block-aligned packed-code slice of row `r`: exactly
+    /// `kblocks * BLOCK_BYTES` bytes, one full (possibly zero-padded)
+    /// 16-byte block per 32 logical columns — the layout the
+    /// `gemm::simd` shuffle kernel loads one 128-bit vector at a time.
+    #[inline]
+    pub fn row_codes(&self, r: usize) -> &[u8] {
+        debug_assert!(r < self.rows);
+        &self.codes[r * self.kblocks * BLOCK_BYTES..(r + 1) * self.kblocks * BLOCK_BYTES]
+    }
+
+    /// E8M0 exponent slice of row `r`: `kblocks` entries, one per
+    /// 32-element block of [`row_codes`](Self::row_codes).
+    #[inline]
+    pub fn row_exps(&self, r: usize) -> &[i8] {
+        debug_assert!(r < self.rows);
+        &self.exps[r * self.kblocks..(r + 1) * self.kblocks]
+    }
+
     /// LUT dot product of row `ra` of `self` with row `rb` of `other`
     /// (both blocked along their shared reduction dimension).
     ///
@@ -224,15 +242,22 @@ impl MxMat {
     /// latency-bound at ~4 cycles/element — as slow as the per-block
     /// `MxVec::dot` path this engine replaces). The qdq reference in
     /// `tests/packed_gemm.rs` mirrors the same lane structure.
+    ///
+    /// This is the **scalar kernel**: `gemm::simd` provides a 128-bit
+    /// shuffle-LUT kernel that is bit-identical for every input (all
+    /// within-block f32 partials here are exact — see its module docs),
+    /// and `gemm::mx_gemm_packed` dispatches between the two at runtime.
+    /// This function stays as the always-available fallback and the
+    /// differential-testing oracle (`MX_FORCE_SCALAR=1`).
     #[inline]
     pub fn row_dot(&self, ra: usize, other: &MxMat, rb: usize) -> f32 {
         debug_assert_eq!(self.cols, other.cols, "reduction dims differ");
         let kb = self.kblocks;
         let lut = fp4_product_lut();
-        let ac = &self.codes[ra * kb * BLOCK_BYTES..(ra + 1) * kb * BLOCK_BYTES];
-        let bc = &other.codes[rb * kb * BLOCK_BYTES..(rb + 1) * kb * BLOCK_BYTES];
-        let ae = &self.exps[ra * kb..(ra + 1) * kb];
-        let be = &other.exps[rb * kb..(rb + 1) * kb];
+        let ac = self.row_codes(ra);
+        let bc = other.row_codes(rb);
+        let ae = self.row_exps(ra);
+        let be = other.row_exps(rb);
         let mut total = 0.0f32;
         for k in 0..kb {
             let xa = &ac[k * BLOCK_BYTES..(k + 1) * BLOCK_BYTES];

@@ -14,8 +14,10 @@
 //! divergence is a packing/LUT/indexing bug, which is exactly what these
 //! properties hunt across random (including non-multiple-of-32) shapes.
 
+use mxfp4_train::gemm::simd::Kernel;
 use mxfp4_train::gemm::{
-    mx_gemm_packed, mx_matmul_packed, mx_matmul_packed_bt, transpose_flat, Mat, MxMode,
+    mx_gemm_packed, mx_gemm_packed_with, mx_matmul_packed, mx_matmul_packed_bt, transpose_flat,
+    Mat, MxMode,
 };
 use mxfp4_train::hadamard;
 use mxfp4_train::mx::mat::MxMat;
@@ -332,6 +334,190 @@ fn fused_sr_self_consistent_across_worker_counts() {
         let base = pack(1);
         for workers in [2usize, 3, 8] {
             assert_eq!(pack(workers), base, "rht {rht} workers {workers}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SIMD differential suite (ISSUE 6): the shuffle-LUT kernel must be
+// **byte-identical** to the forced-scalar path for every shape, mode,
+// and worker count. The scalar `MxMat::row_dot` is the oracle; both
+// kernels are driven through the explicit `mx_gemm_packed_with` entry so
+// the comparison is independent of host dispatch and `MX_FORCE_SCALAR`.
+// On hosts with no SIMD ISA the suite degrades to a skip-with-message
+// (the scalar path is then the only kernel, and trivially self-equal).
+// ---------------------------------------------------------------------
+
+/// Pack a GEMM operand pair for `mode` with the engine's rng draw order
+/// (sign vector, then A's dither, then Bᵀ's) — the same prep
+/// `mx_matmul_packed` performs internally, reproduced here so the
+/// differential tests can hold the packed operands fixed while swapping
+/// kernels.
+fn pack_mode_pair(
+    a: &Mat,
+    b: &Mat,
+    mode: MxMode,
+    g: usize,
+    seed: u64,
+    workers: usize,
+) -> (MxMat, MxMat) {
+    let mut rng = Rng::seed(seed);
+    let ap = PackPipeline::new(&a.data, a.rows, a.cols);
+    let btp = PackPipeline::transposed(&b.data, b.cols, b.rows);
+    let sign_store;
+    let (ap, btp) = if mode.uses_rht() {
+        sign_store = hadamard::sample_sign(g, &mut rng);
+        (ap.with_rht(&sign_store), btp.with_rht(&sign_store))
+    } else {
+        (ap, btp)
+    };
+    if mode.uses_sr() {
+        let pa = ap.pack_sr(&mut rng, workers);
+        let pbt = btp.pack_sr(&mut rng, workers);
+        (pa, pbt)
+    } else {
+        (ap.pack_nr(workers), btp.pack_nr(workers))
+    }
+}
+
+fn assert_kernels_byte_identical(pa: &MxMat, pbt: &MxMat, simd: Kernel, workers: usize, what: &str) {
+    let scalar = mx_gemm_packed_with(pa, pbt, workers, Kernel::Scalar);
+    let shuffle = mx_gemm_packed_with(pa, pbt, workers, simd);
+    for (i, (s, v)) in scalar.data.iter().zip(&shuffle.data).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            v.to_bits(),
+            "{what}: elem {i} scalar {s:?} != {} {v:?}",
+            simd.name()
+        );
+    }
+}
+
+#[test]
+fn simd_row_dot_unit_parity_with_scalar() {
+    let Some(simd) = Kernel::simd() else {
+        eprintln!("skipping simd row_dot parity: no SIMD ISA on this host");
+        return;
+    };
+    let mut rng = Rng::seed(0x0D07);
+    // cols sweep the k%32 tail-block cases (1, 31, 33, 95) and the
+    // aligned ones; rows include an all-zero row (empty blocks) and an
+    // extreme-scale row (E8M0 exponents far from 0)
+    for cols in [1usize, 31, 32, 33, 64, 95, 96, 250] {
+        let rows = 4usize;
+        let mut va = vec![0.0f32; rows * cols];
+        let mut vb = vec![0.0f32; rows * cols];
+        rng.fill_normal(&mut va, 2.0);
+        rng.fill_normal(&mut vb, 0.5);
+        for v in &mut va[..cols] {
+            *v = 0.0; // row 0 of A: all-zero blocks
+        }
+        for v in &mut vb[..cols] {
+            *v *= 1.0e-38; // row 0 of B: subnormal-scale blocks
+        }
+        let a = MxMat::quantize_nr(&va, rows, cols);
+        let b = MxMat::quantize_sr(&vb, rows, cols, &mut Rng::seed(cols as u64));
+        for ra in 0..rows {
+            for rb in 0..rows {
+                let want = Kernel::Scalar.row_dot(&a, ra, &b, rb);
+                let got = simd.row_dot(&a, ra, &b, rb);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "cols {cols} rows ({ra},{rb}): {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_gemm_byte_identical_across_shapes_modes_workers() {
+    let Some(simd) = Kernel::simd() else {
+        eprintln!("skipping simd gemm differential sweep: no SIMD ISA on this host");
+        return;
+    };
+    // seeded-random sweep: odd m/n/k (k%32 tails), occasional empty
+    // (0-row) operands and zeroed rows, all four packing modes (Exact
+    // never packs — the GEMM entries route it to the plain f32 path,
+    // so there is no packed kernel to compare), workers 1/2/4
+    let modes = [MxMode::Nr, MxMode::Sr, MxMode::Rht, MxMode::RhtSr];
+    check("simd-vs-scalar-gemm", Config { cases: 36, seed: 0x51D0 }, |rng| {
+        let mode = modes[rng.below(4)];
+        let g = 32usize;
+        let m = rng.below(13); // 0 = empty operand
+        let n = rng.below(13);
+        let k = if mode.uses_rht() { g * (1 + rng.below(5)) } else { 1 + rng.below(170) };
+        let mut a = Mat::gaussian(m, k, 1.0, rng);
+        let b = Mat::gaussian(k, n, 1.0, rng);
+        if m > 0 && rng.below(3) == 0 {
+            let r = rng.below(m);
+            for v in &mut a.data[r * k..(r + 1) * k] {
+                *v = 0.0; // a fully-zero row: all-zero blocks end to end
+            }
+        }
+        let seed = rng.next_u64();
+        for workers in [1usize, 2, 4] {
+            let (pa, pbt) = pack_mode_pair(&a, &b, mode, g, seed, workers);
+            assert_kernels_byte_identical(
+                &pa,
+                &pbt,
+                simd,
+                workers,
+                &format!("{mode:?} ({m}x{k}x{n}) workers {workers}"),
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_dispatch_honors_force_scalar_env() {
+    // The dispatch seam: MX_FORCE_SCALAR set (and not "0") must select
+    // the scalar oracle; cleared, select() returns the host's SIMD
+    // kernel when one exists. Mutating the environment is safe here:
+    // every packed-GEMM result is kernel-independent by construction
+    // (the point of this whole suite), so a concurrent test observing
+    // the transient override computes identical bytes either way.
+    std::env::set_var("MX_FORCE_SCALAR", "1");
+    assert_eq!(Kernel::select(), Kernel::Scalar, "override must force the oracle");
+    std::env::set_var("MX_FORCE_SCALAR", "0");
+    let cleared = Kernel::select();
+    std::env::remove_var("MX_FORCE_SCALAR");
+    let unset = Kernel::select();
+    match Kernel::simd() {
+        Some(k) => {
+            assert_eq!(cleared, k, "MX_FORCE_SCALAR=0 must not force scalar");
+            assert_eq!(unset, k, "unset must auto-detect the SIMD kernel");
+        }
+        None => {
+            assert_eq!(cleared, Kernel::Scalar);
+            assert_eq!(unset, Kernel::Scalar);
+        }
+    }
+}
+
+#[test]
+fn simd_entry_level_outputs_match_forced_scalar_per_mode() {
+    // one level up from the kernel: the public mx_matmul_packed entry
+    // (fused pack + dispatched GEMM + SR rescale) must produce the same
+    // bytes whichever kernel the dispatcher picked — compared against a
+    // run forced through the scalar oracle via the explicit entry
+    let (m, k, n, g) = (6usize, 95usize, 7usize, 32usize);
+    let mut rng = Rng::seed(0xD1FF);
+    let a = Mat::gaussian(m, k, 1.0, &mut rng);
+    let b = Mat::gaussian(k, n, 1.0, &mut rng);
+    for mode in [MxMode::Nr, MxMode::Sr] {
+        let auto = mx_matmul_packed(&a, &b, mode, g, &mut Rng::seed(9), 2);
+        let (pa, pbt) = pack_mode_pair(&a, &b, mode, g, 9, 2);
+        let mut scalar = mx_gemm_packed_with(&pa, &pbt, 2, Kernel::Scalar);
+        if mode.uses_sr() {
+            for v in &mut scalar.data {
+                *v *= quant::GEMM_RESCALE;
+            }
+        }
+        for (i, (x, y)) in auto.data.iter().zip(&scalar.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{mode:?} elem {i}: {x} vs {y}");
         }
     }
 }

@@ -3,8 +3,10 @@
 //! substrates under randomized shapes and scales.
 
 use mxfp4_train::data::{Batch, Dataset};
-use mxfp4_train::gemm::{matmul, mx_matmul, Mat, MxMode};
+use mxfp4_train::gemm::simd::Kernel;
+use mxfp4_train::gemm::{matmul, mx_gemm_packed_with, mx_matmul, Mat, MxMode};
 use mxfp4_train::hadamard;
+use mxfp4_train::mx::mat::MxMat;
 use mxfp4_train::mx::{bf16, block::MxVec, fp4, quant, scale};
 use mxfp4_train::optim::{self, AdamW, CosineSchedule, ParamRounding};
 use mxfp4_train::rng::Rng;
@@ -245,6 +247,148 @@ fn prop_mx_gemm_relative_error_bounded() {
             let rel = err / exact.frob_norm().max(1e-9);
             if rel > 1.5 {
                 return Err(format!("{mode:?} rel err {rel}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// packed-GEMM inner-kernel edge cases (ISSUE 6): every property runs the
+// LUT path under both kernels — the scalar oracle and, when the host has
+// one, the shuffle-LUT SIMD kernel — and the `prop_kernel_` prefix is
+// what scripts/ci.sh selects under both MX_FORCE_SCALAR settings.
+// ---------------------------------------------------------------------------
+
+/// The kernels available on this host: always the scalar oracle, plus
+/// the shuffle kernel when the ISA supports one.
+fn kernels() -> Vec<Kernel> {
+    std::iter::once(Kernel::Scalar).chain(Kernel::simd()).collect()
+}
+
+#[test]
+fn prop_kernel_parity_under_e8m0_exponent_extremes() {
+    // blocks whose shared exponents sit at the E8M0 clamp edges: tiny
+    // (2^-126 scale floor, products underflow to subnormals/zero) and
+    // huge (2^±120-scale data) — both kernels must agree bitwise even
+    // where f32 rounding happens *between* blocks
+    check("kernel-exponent-extremes", Config { cases: 24, seed: 0xE8 }, |rng| {
+        let k = 1 + rng.below(100);
+        let rows = 3usize;
+        let mut va = vec![0.0f32; rows * k];
+        let mut vb = vec![0.0f32; rows * k];
+        rng.fill_normal(&mut va, 1.0);
+        rng.fill_normal(&mut vb, 1.0);
+        // per 32-block, swing the magnitude across the representable range
+        for (i, v) in va.iter_mut().enumerate() {
+            let e = [-126, -120, 0, 100, 120][(i / 32) % 5];
+            *v *= scale::exact_pow2(e);
+        }
+        for (i, v) in vb.iter_mut().enumerate() {
+            let e = [120, -126, 40, -80, 0][(i / 32) % 5];
+            *v *= scale::exact_pow2(e);
+        }
+        let pa = MxMat::quantize_nr(&va, rows, k);
+        let pbt = MxMat::quantize_nr(&vb, rows, k);
+        let ks = kernels();
+        let base = mx_gemm_packed_with(&pa, &pbt, 1, ks[0]);
+        for &kern in &ks[1..] {
+            let got = mx_gemm_packed_with(&pa, &pbt, 1, kern);
+            for (i, (x, y)) in base.data.iter().zip(&got.data).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("k {k} elem {i}: scalar {x:?} vs {} {y:?}", kern.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_all_zero_blocks_dot_to_positive_zero() {
+    // an all-zero row (zero codes, SCALE_EMIN exponents) must dot to
+    // exactly +0.0 against anything, under every kernel — padding and
+    // empty blocks can never leak into the accumulator
+    check("kernel-zero-blocks", Config { cases: 16, seed: 0x2E20 }, |rng| {
+        let k = 1 + rng.below(150);
+        let z = MxMat::quantize_nr(&vec![0.0f32; k], 1, k);
+        let mut vx = vec![0.0f32; k];
+        rng.fill_normal(&mut vx, 3.0);
+        let x = MxMat::quantize_nr(&vx, 1, k);
+        for &kern in &kernels() {
+            for (a, b) in [(&z, &x), (&x, &z), (&z, &z)] {
+                let d = kern.row_dot(a, 0, b, 0);
+                if d.to_bits() != 0.0f32.to_bits() {
+                    return Err(format!("{} k {k}: zero dot gave {d:?}", kern.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_sign_flip_antisymmetry() {
+    // negating one operand's source negates the packed GEMM output
+    // exactly: NR rounding is sign-symmetric, the shared exponent sees
+    // only |v|, products negate elementwise, and round-to-nearest f32
+    // addition is sign-symmetric — so C(-A, B) == -C(A, B) bitwise
+    // (modulo the sign of exact zeros), under both kernels
+    check("kernel-sign-flip", Config { cases: 16, seed: 0x5F11 }, |rng| {
+        let m = 1 + rng.below(5);
+        let n = 1 + rng.below(5);
+        let k = 1 + rng.below(120);
+        let a = Mat::gaussian(m, k, 1.5, rng);
+        let bt = Mat::gaussian(n, k, 1.5, rng);
+        let neg = Mat { rows: m, cols: k, data: a.data.iter().map(|v| -v).collect() };
+        let pa = MxMat::quantize_nr(&a.data, m, k);
+        let pneg = MxMat::quantize_nr(&neg.data, m, k);
+        let pbt = MxMat::quantize_nr(&bt.data, n, k);
+        for &kern in &kernels() {
+            let c = mx_gemm_packed_with(&pa, &pbt, 1, kern);
+            let cn = mx_gemm_packed_with(&pneg, &pbt, 1, kern);
+            for (i, (x, y)) in c.data.iter().zip(&cn.data).enumerate() {
+                let ok = if *x == 0.0 && *y == 0.0 {
+                    true // ±0 cancellations keep +0 on both sides
+                } else {
+                    (-x).to_bits() == y.to_bits()
+                };
+                if !ok {
+                    return Err(format!("{} elem {i}: {x:?} vs negated {y:?}", kern.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_lut_path_never_nan_inf_in_range() {
+    // no-NaN/no-Inf guarantee: as long as the two operands' data keep
+    // |v| ≤ 2^50 (block exponents ≤ 48 each, so |block partial| ≤
+    // 1152·2^96 « f32::MAX), the LUT path can never overflow to Inf or
+    // produce NaN — under either kernel, for any shape including tails
+    check("kernel-no-nan-inf", Config { cases: 24, seed: 0x7F }, |rng| {
+        let k = 1 + rng.below(130);
+        let rows = 2usize;
+        let mut va = vec![0.0f32; rows * k];
+        let mut vb = vec![0.0f32; rows * k];
+        rng.fill_normal(&mut va, 1.0);
+        rng.fill_normal(&mut vb, 1.0);
+        for (i, v) in va.iter_mut().enumerate() {
+            *v *= scale::exact_pow2([50, -126, 0][(i / 32) % 3]);
+        }
+        for (i, v) in vb.iter_mut().enumerate() {
+            *v *= scale::exact_pow2([48, 50, -126][(i / 32) % 3]);
+        }
+        let pa = MxMat::quantize_nr(&va, rows, k);
+        let pbt = MxMat::quantize_sr(&vb, rows, k, rng);
+        for &kern in &kernels() {
+            let c = mx_gemm_packed_with(&pa, &pbt, 1, kern);
+            for (i, v) in c.data.iter().enumerate() {
+                if !v.is_finite() {
+                    return Err(format!("{} k {k} elem {i}: {v}", kern.name()));
+                }
             }
         }
         Ok(())

@@ -5,6 +5,8 @@
 #   1. cargo fmt --check   (formatting)
 #   2. cargo build --release
 #   3. cargo test -q       (tier-1: unit + property + gated integration)
+#   3b. SIMD/scalar kernel parity suites by name, under both the
+#      auto-detected dispatch and MX_FORCE_SCALAR=1 (gemm::simd contract)
 #   4. compile-check every bench and example target
 #   5. quickstart on the native backend: a real 20-step train whose loss
 #      must decrease (the example exits nonzero otherwise)
@@ -40,6 +42,22 @@ echo "==> fused-pipeline parity tests (PackPipeline vs materialized prep referen
 # all 5 modes, and the SR dither-stream / worker-count contracts) so a
 # filtered "$@" above can never silently skip it
 cargo test -q --test packed_gemm fused_
+
+echo "==> SIMD/scalar kernel parity (auto-detected dispatch)"
+# run the differential suite by name (simd_ selects the row_dot unit
+# parity, the shape x mode x worker fuzz sweep, the dispatch-env seam,
+# and the entry-level parity check; prop_kernel_ selects the E8M0
+# extreme / all-zero / sign-flip / finiteness edge properties) so a
+# filtered "$@" above can never silently skip it
+cargo test -q --test packed_gemm simd_
+cargo test -q --test properties prop_kernel_
+
+echo "==> SIMD/scalar kernel parity (MX_FORCE_SCALAR=1 dispatch)"
+# same suite with the env override live: proves the forced-scalar path
+# dispatches AND that every in-process comparison still holds when the
+# ambient kernel is the scalar oracle itself
+MX_FORCE_SCALAR=1 cargo test -q --test packed_gemm simd_
+MX_FORCE_SCALAR=1 cargo test -q --test properties prop_kernel_
 
 echo "==> compile benches + examples"
 # covers every [[bench]] target, including the new `pack` bench
