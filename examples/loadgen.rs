@@ -1,0 +1,228 @@
+//! 1000-session load generator for the paged-KV serve path.
+//!
+//! Boots a `serve --listen`-equivalent TCP server (native packed
+//! backend + a fixed [`KvPool`]) on the main thread, then floods it from
+//! client threads: `--conns` connections × `--per-conn` pipelined
+//! requests each are all in flight at once, while the page pool — not
+//! the connection count — bounds KV memory. The run prints the evidence
+//! the roadmap asks for: every request completes, `overflow_pages == 0`
+//! (admission discipline held), reserved-KV bytes vs what dense
+//! per-session buffers would have needed, pool occupancy, eviction /
+//! resume counts, and p50/p99 per-token decode latency, plus `VmRSS`
+//! before and after the flood.
+//!
+//!     cargo run --release --example loadgen
+//!     cargo run --release --example loadgen -- --conns 8 --per-conn 4 \
+//!         --pool-pages 64   # CI smoke scale
+//!
+//! Knobs: --conns N (default 100), --per-conn M (default 10; N×M
+//! sessions total), --config NAME (micro), --pool-pages P (256),
+//! --page-rows R (4), --max-batch B (1024 — high on purpose: the pool
+//! governs concurrency), --tokens T (max_new, 8), --no-evict.
+//! The process exits non-zero if any request is lost, any page
+//! overflows, or any page leaks — so a bare run doubles as an
+//! admission-deadlock smoke test (wrap it in `timeout` to catch hangs).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use mxfp4_train::model::{GPTConfig, NativeRecipe};
+use mxfp4_train::runtime::executor::init_params_for;
+use mxfp4_train::serve::{self, net, EngineConfig, KvPool, Request, SamplingParams, ServeModel};
+use mxfp4_train::util::json;
+
+/// `--name VALUE` from argv, else `default`.
+fn arg_usize(name: &str, default: usize) -> usize {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1))
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("{name} wants a number, got {v:?}")))
+        .unwrap_or(default)
+}
+
+fn arg_str(name: &str, default: &str) -> String {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn has_flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+/// Resident set size from /proc/self/status, if the platform has it.
+fn vm_rss_kib() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// One client connection: pipeline `reqs` request lines, then read one
+/// response line per request. Returns per-finish-reason counts.
+fn run_client(addr: std::net::SocketAddr, conn: usize, reqs: Vec<String>) -> (usize, usize) {
+    // the listener is bound before clients spawn, but retry anyway so a
+    // slow accept loop under 100-way connect bursts never flakes
+    let stream = {
+        let mut tries = 0;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) if tries < 50 => {
+                    tries += 1;
+                    std::thread::sleep(Duration::from_millis(20 * tries));
+                    let _ = e;
+                }
+                Err(e) => panic!("conn {conn}: connect: {e}"),
+            }
+        }
+    };
+    let mut writer = stream.try_clone().expect("clone stream");
+    let n = reqs.len();
+    for line in &reqs {
+        writer.write_all(line.as_bytes()).expect("send request");
+        writer.write_all(b"\n").expect("send newline");
+    }
+    writer.flush().expect("flush requests");
+    let mut ok = 0usize;
+    let mut other = 0usize;
+    let mut lines = BufReader::new(stream).lines();
+    for _ in 0..n {
+        let line = lines.next().expect("server closed early").expect("read response");
+        let doc = json::parse(&line).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"));
+        assert!(doc.get("error").as_str().is_none(), "server error: {line}");
+        match doc.get("finish").as_str() {
+            Some("length") | Some("window") => ok += 1,
+            _ => other += 1,
+        }
+    }
+    (ok, other)
+}
+
+fn main() -> anyhow::Result<()> {
+    let conns = arg_usize("--conns", 100);
+    let per_conn = arg_usize("--per-conn", 10);
+    let pool_pages = arg_usize("--pool-pages", 256);
+    let page_rows = arg_usize("--page-rows", 4);
+    let max_batch = arg_usize("--max-batch", 1024);
+    let max_new = arg_usize("--tokens", 8);
+    let config = arg_str("--config", "micro");
+    let sessions = conns * per_conn;
+
+    let (cfg, _) = GPTConfig::preset(&config)
+        .unwrap_or_else(|| panic!("unknown --config {config:?}"));
+    let rss_before = vm_rss_kib();
+
+    // -- server: packed checkpoint + paged engine, pool fixed up front --
+    let params = init_params_for(&cfg.param_specs(), cfg.n_layers, 7);
+    let recipe = NativeRecipe::parse("mxfp4").map_err(anyhow::Error::msg)?;
+    let model = Arc::new(ServeModel::new(cfg.clone(), recipe, params)?);
+    let pool = KvPool::for_config(&cfg, page_rows, pool_pages);
+    let dense_bytes_per_session = 2 * cfg.n_layers * cfg.seq_len * cfg.d_model * 4;
+    println!(
+        "loadgen: {sessions} sessions ({conns} conns x {per_conn} pipelined) vs a \
+         {pool_pages}-page pool ({} KiB KV, fixed); dense KV would reserve {} KiB \
+         ({} B/session x {sessions})",
+        pool.capacity_bytes() / 1024,
+        dense_bytes_per_session * sessions / 1024,
+        dense_bytes_per_session,
+    );
+    let mut ecfg = EngineConfig::paged(max_batch, pool.clone());
+    ecfg.evict = !has_flag("--no-evict");
+    let mut engine = serve::Engine::new(Box::new(model), ecfg);
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+
+    // -- clients: one thread per connection, all requests in flight ----
+    let vocab = cfg.vocab as i32;
+    let client_handle = std::thread::spawn(move || {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let reqs: Vec<String> = (0..per_conn)
+                    .map(|r| {
+                        let i = c * per_conn + r;
+                        let len = 3 + i % 6;
+                        let prompt: Vec<String> =
+                            (0..len).map(|j| ((i * 7 + j) as i32 % vocab).to_string()).collect();
+                        format!(
+                            "{{\"id\":{i},\"prompt\":[{}],\"max_new\":{max_new},\"seed\":{i}}}",
+                            prompt.join(",")
+                        )
+                    })
+                    .collect();
+                std::thread::spawn(move || run_client(addr, c, reqs))
+            })
+            .collect();
+        let mut ok = 0usize;
+        let mut other = 0usize;
+        for h in handles {
+            let (o, x) = h.join().expect("client thread");
+            ok += o;
+            other += x;
+        }
+        (ok, other)
+    });
+
+    // -- the engine tick loop owns the main thread until every
+    //    connection is served to completion --------------------------
+    let defaults = Request {
+        id: 0,
+        prompt: vec![],
+        max_new,
+        sampling: SamplingParams::greedy(),
+        seed: 0,
+    };
+    net::serve_tcp(&mut engine, listener, &defaults, conns)?;
+    let (ok, other) = client_handle.join().expect("client aggregator");
+
+    // -- evidence ------------------------------------------------------
+    let st = engine.stats().clone();
+    let ps = pool.stats();
+    let rss_after = vm_rss_kib();
+    println!(
+        "completed {}/{} (finish length|window: {ok}, other: {other}); \
+         {:.0} tok/s, {} decode steps",
+        st.completed, sessions, st.tokens_per_sec(), st.decode_steps,
+    );
+    println!(
+        "pool: {} pages, peak used {} / peak reserved {}, mean occupancy {:.2}, \
+         overflow {}, leaked {}; {} evictions, {} resumes",
+        ps.total_pages,
+        ps.used_peak,
+        ps.reserved_peak,
+        st.pool_occupancy(),
+        ps.overflow_pages,
+        ps.used_pages,
+        st.evictions,
+        st.resumes,
+    );
+    println!(
+        "per-token decode latency: p50 {:.3} ms, p99 {:.3} ms ({} samples)",
+        st.latency_p50() * 1e3,
+        st.latency_p99() * 1e3,
+        st.latency.count,
+    );
+    if let (Some(b), Some(a)) = (rss_before, rss_after) {
+        println!(
+            "VmRSS: {b} KiB before pool, {a} KiB after flood (+{} KiB; KV's share is \
+             capped at the pool's {} KiB)",
+            a.saturating_sub(b),
+            pool.capacity_bytes() / 1024,
+        );
+    }
+
+    // a lost request, an overflow page, or a leaked page is a bug
+    assert_eq!(ok + other, sessions, "every submitted request must answer");
+    assert_eq!(other, 0, "no request may finish invalid/capacity at this scale");
+    assert_eq!(st.completed, sessions, "engine-side completion count");
+    assert_eq!(ps.overflow_pages, 0, "admission discipline must hold");
+    assert_eq!(ps.used_pages, 0, "all pages must return to the pool");
+    println!("loadgen OK: KV stayed bounded by the pool across {sessions} sessions");
+    Ok(())
+}

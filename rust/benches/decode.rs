@@ -16,7 +16,7 @@ use mxfp4_train::gemm::simd::Kernel;
 use mxfp4_train::model::{GPTConfig, NativeRecipe};
 use mxfp4_train::rng::Rng;
 use mxfp4_train::runtime::{executor, Backend, BackendSpec};
-use mxfp4_train::serve::{Engine, EngineConfig, Request, SamplingParams, ServeModel, SpecConfig};
+use mxfp4_train::serve::{Engine, EngineConfig, KvPool, Request, SamplingParams, ServeModel, SpecConfig};
 
 const SEQ: usize = 128;
 
@@ -41,6 +41,23 @@ fn decode_rate(model: &Arc<ServeModel>, label: &str) -> f64 {
     let (state, _) = model.prefill(&toks).unwrap();
     let secs = harness::time_secs(1, 4, || {
         // 32 decode steps from a cloned state (positions ~95..127)
+        let mut st = state.clone();
+        for i in 0..32 {
+            std::hint::black_box(model.decode_step(&mut st, (i % 251) as i32).unwrap());
+        }
+    });
+    let rate = 32.0 / secs;
+    println!("{label:<44} {:>12.3} us/tok {:>14.2} tok/s", secs / 32.0 * 1e6, rate);
+    rate
+}
+
+/// Same measurement through a pool-backed (paged) state: identical
+/// prompt depth and step count, KV rows resolved page-by-page.
+fn decode_rate_paged(model: &Arc<ServeModel>, pool: &KvPool, label: &str) -> f64 {
+    let toks = prompt(SEQ - 33, model.vocab(), 2);
+    let mut state = pool.fresh_state();
+    model.decode_spans(&mut [&mut state], &[&toks]).unwrap();
+    let secs = harness::time_secs(1, 4, || {
         let mut st = state.clone();
         for i in 0..32 {
             std::hint::black_box(model.decode_step(&mut st, (i % 251) as i32).unwrap());
@@ -127,7 +144,7 @@ fn main() {
     harness::header("decode: continuous batching, batch 1 vs batch 8");
     for nreq in [1usize, 8] {
         let mut engine =
-            Engine::new(Box::new(model.clone()), EngineConfig { max_batch: nreq.max(1) });
+            Engine::new(Box::new(model.clone()), EngineConfig::batch(nreq.max(1)));
         let t0 = std::time::Instant::now();
         for i in 0..nreq {
             engine.submit(Request {
@@ -149,13 +166,68 @@ fn main() {
         );
     }
 
+    // paged KV: page-resolved row reads must cost ≤5% vs the dense
+    // contiguous layout, and a 64-session pool must reserve a fraction
+    // of what 64 dense per-session windows would.
+    harness::header("decode: paged KV vs dense layout (16-row pages, 1 thread)");
+    let bench_pool = KvPool::for_config(&cfg, 16, 256);
+    let paged_rate = decode_rate_paged(&model, &bench_pool, "KV decode_step (paged mxfp4)");
+    let dense_rate = decode_rate(&model, "KV decode_step (dense mxfp4, re-measured)");
+    let ratio = paged_rate / dense_rate;
+    println!("paged/dense decode rate: {ratio:.3} (floor 0.95)");
+    assert!(
+        ratio >= 0.95,
+        "paged decode overhead exceeded 5%: {:.1}% slower than dense",
+        (1.0 - ratio) * 100.0
+    );
+    assert_eq!(bench_pool.stats().overflow_pages, 0);
+
+    {
+        const SESSIONS: usize = 64;
+        // worst case per request: 24 prompt + 16 new − 1 = 39 rows
+        // → 2·2·ceil(39/16) = 12 pages; 64 concurrent need ≤ 768
+        let pool = KvPool::for_config(&cfg, 16, 768);
+        let mut engine = Engine::new(
+            Box::new(model.clone()),
+            EngineConfig::paged(SESSIONS, pool.clone()),
+        );
+        for i in 0..SESSIONS {
+            engine.submit(Request {
+                id: i as u64,
+                prompt: prompt(24, cfg.vocab, 40 + i as u64),
+                max_new: 16,
+                sampling: SamplingParams::greedy(),
+                seed: i as u64,
+            });
+        }
+        let done = engine.run().unwrap();
+        assert_eq!(done.len(), SESSIONS);
+        let ps = pool.stats();
+        assert_eq!(ps.overflow_pages, 0, "admission discipline");
+        assert_eq!(ps.used_pages, 0, "pages must all return");
+        let dense_bytes = SESSIONS * 2 * cfg.n_layers * cfg.seq_len * cfg.d_model * 4;
+        let pool_bytes = pool.capacity_bytes();
+        println!(
+            "{SESSIONS} sessions: dense would reserve {dense_bytes} B, pool capped KV at \
+             {pool_bytes} B ({:.1}x less; peak used {} of {} pages, occupancy {:.2})",
+            dense_bytes as f64 / pool_bytes as f64,
+            ps.used_peak,
+            ps.total_pages,
+            engine.stats().pool_occupancy(),
+        );
+        assert!(
+            2 * pool_bytes <= dense_bytes,
+            "paged serving must reserve at most half the dense KV bytes at {SESSIONS} sessions"
+        );
+    }
+
     // speculative decode, draft == target: acceptance must be exactly
     // 1.0 (the draft reproduces the target's bit-identical choices) and
     // the target must run strictly fewer batched decode steps than it
     // emits tokens — one multi-row verify advances up to k+1 positions.
     harness::header("speculative decode: draft == target, exact acceptance (greedy, 1 request)");
     let vanilla = {
-        let mut engine = Engine::new(Box::new(model.clone()), EngineConfig { max_batch: 1 });
+        let mut engine = Engine::new(Box::new(model.clone()), EngineConfig::batch(1));
         engine.submit(Request {
             id: 0,
             prompt: prompt(24, cfg.vocab, 30),
@@ -166,7 +238,7 @@ fn main() {
         engine.run().unwrap().remove(0)
     };
     for k in [2usize, 4, 8] {
-        let mut engine = Engine::new(Box::new(model.clone()), EngineConfig { max_batch: 1 });
+        let mut engine = Engine::new(Box::new(model.clone()), EngineConfig::batch(1));
         engine.enable_spec(Box::new(model.clone()), SpecConfig { k }).unwrap();
         let t0 = std::time::Instant::now();
         engine.submit(Request {

@@ -233,7 +233,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
 /// Shared knobs: --config, --recipe (forward precision), --backend
 /// native|artifact|auto, --checkpoint (absent = random init demo
 /// weights), --tokens (default max_new), --temperature, --top-k, --seed,
-/// --max-batch. Speculative decoding: --spec-draft <config|target>
+/// --max-batch. Paged KV (native backend): --kv-pool-pages N switches
+/// the engine to a fixed page pool of N pages (0 = dense per-session
+/// KV, the default) with --kv-page-rows R token rows per page (default
+/// 16); admission then reserves worst-case pages per request, queueing
+/// and LRU-evicting under contention — total KV memory stays bounded by
+/// the pool for any number of connections.
+/// Speculative decoding: --spec-draft <config|target>
 /// proposes --spec-k tokens per verify step through a draft model
 /// (`target` = the served model itself, the 100%-acceptance sanity
 /// mode; a config name builds a smaller draft from
@@ -274,7 +280,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     info!("serving via {}", backend.describe());
     let max_batch = args.get_usize("max-batch", 8);
-    let mut engine = serve::Engine::new(backend, serve::EngineConfig { max_batch });
+    let pool_pages = args.get_usize("kv-pool-pages", 0);
+    let engine_cfg = if pool_pages == 0 {
+        serve::EngineConfig::batch(max_batch)
+    } else if let BackendSpec::Native { cfg, .. } = &spec {
+        let page_rows = args.get_usize("kv-page-rows", 16);
+        let pool = serve::KvPool::for_config(cfg, page_rows, pool_pages);
+        info!(
+            "paged KV: {} pages x {} rows ({:.1} MiB, fixed at startup)",
+            pool.total_pages(),
+            pool.page_rows(),
+            pool.capacity_bytes() as f64 / (1 << 20) as f64,
+        );
+        serve::EngineConfig::paged(max_batch, pool)
+    } else {
+        info!("--kv-pool-pages ignored: the artifact backend serves dense KV only");
+        serve::EngineConfig::batch(max_batch)
+    };
+    let mut engine = serve::Engine::new(backend, engine_cfg);
 
     if let Some(draft_name) = args.get("spec-draft") {
         let k = args.get_usize("spec-k", 4);
@@ -394,6 +417,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             st.accept_rate(),
             st.draft_steps,
             st.decode_steps,
+        );
+    }
+    if st.pool_pages > 0 {
+        println!(
+            "paged KV: {} pages (peak used {}, peak reserved {}, mean occupancy {:.2}); \
+             {} evictions, {} resumes",
+            st.pool_pages,
+            st.pool_used_peak,
+            st.pool_reserved_peak,
+            st.pool_occupancy(),
+            st.evictions,
+            st.resumes,
+        );
+    }
+    if st.latency.count > 0 {
+        println!(
+            "per-token decode latency: p50 {:.3} ms, p99 {:.3} ms ({} samples)",
+            st.latency_p50() * 1e3,
+            st.latency_p99() * 1e3,
+            st.latency.count,
         );
     }
     Ok(())

@@ -67,6 +67,9 @@ pub struct NativeBackend {
     /// Deterministic f32 dgrad prep (bf16 transpose / RHT transpose),
     /// paid once per epoch like the packed NR recipes' weight packs.
     prep: PrepCache,
+    /// Grown-once decode staging buffers (the serve-path analogue of
+    /// `prep`): reused across decode steps instead of per-tick allocs.
+    scratch: DecodeScratch,
     workers: usize,
 }
 
@@ -87,6 +90,7 @@ impl NativeBackend {
         NativeBackend {
             cache: MxWeightCache::new(specs.len()),
             prep: PrepCache::new(specs.len()),
+            scratch: DecodeScratch::new(),
             specs,
             batch,
             cfg,
@@ -108,6 +112,12 @@ impl NativeBackend {
     /// [`Backend::mx_cache_stats`]'s quantize-once accounting.
     pub fn prep_stats(&self) -> (usize, usize) {
         (self.prep.builds, self.prep.hits)
+    }
+
+    /// (staging buffers built, leases served from the free list) of the
+    /// decode scratch — see [`DecodeScratch`].
+    pub fn scratch_stats(&self) -> (usize, usize) {
+        self.scratch.stats()
     }
 
     fn weight_dims(&self, idx: usize) -> (usize, usize) {
@@ -304,12 +314,24 @@ struct Fwd {
 // -- KV-cached incremental decode ----------------------------------------
 
 /// Per-layer key/value rows cached by the incremental decoder. Row `i`
-/// of `k` (resp. `v`) is position `i`'s key (value) projection —
-/// `d_model` wide, the middle (last) third of that position's qkv row.
-#[derive(Debug, Clone)]
+/// (position `i`'s key/value projection, `d_model` wide — the middle /
+/// last third of that position's qkv row) lives either in a **dense**
+/// per-layer `Vec` (the training/test fast path, contiguous and
+/// allocation-free to read) or in fixed-size **pages** behind the
+/// [`PagedKvStore`] seam (`serve::kvpool` — pool-backed, O(tokens used)
+/// memory). Both layouts satisfy the same append / read / truncate
+/// contract, and reads flow through [`KvRows`] with an identical
+/// floating-point order, so decode is bit-identical across layouts.
+#[derive(Debug)]
 pub struct KvCache {
     d: usize,
-    layers: Vec<LayerKv>,
+    store: KvStore,
+}
+
+#[derive(Debug)]
+enum KvStore {
+    Dense(Vec<LayerKv>),
+    Paged(Box<dyn PagedKvStore>),
 }
 
 #[derive(Debug, Clone)]
@@ -318,36 +340,150 @@ struct LayerKv {
     v: Vec<f32>,
 }
 
+/// The paged-KV seam: what `model` needs from a page-backed store, in
+/// std types only (the implementation — page pool, free list, admission
+/// reservations — lives in `serve::kvpool`). Row `i` of a layer must
+/// read back exactly the bytes appended for position `i` until a
+/// `truncate` drops it; re-appending after a truncate must overwrite
+/// the same storage so rollback re-decodes stay bitwise identical.
+pub trait PagedKvStore: std::fmt::Debug + Send {
+    /// Cached positions (rows per layer; uniform across layers).
+    fn rows(&self) -> usize;
+    /// Append position `rows()`'s K and V projections to `layer`
+    /// (`d_model` floats each). Layers advance in lockstep: the caller
+    /// appends to every layer before the next position.
+    fn append(&mut self, layer: usize, krow: &[f32], vrow: &[f32]);
+    /// Page-view of `layer`'s rows for the attention inner loop.
+    fn layer_rows(&self, layer: usize) -> KvRows<'_>;
+    /// Drop rows at position `>= rows`, releasing whole freed pages.
+    fn truncate(&mut self, rows: usize);
+    /// Deep copy (fresh storage; the clone is independently mutable).
+    fn clone_box(&self) -> Box<dyn PagedKvStore>;
+}
+
+/// A borrowed view of one layer's cached K/V rows — the one type the
+/// attention hot loop reads through, for both layouts. A concrete enum
+/// (not a trait object) so the dense arm stays a plain slice index and
+/// the paged arm is one divide + two indexes; no per-row dynamic
+/// dispatch either way.
+pub enum KvRows<'a> {
+    /// Contiguous rows: position `j` at `k[j*d .. (j+1)*d]`.
+    Dense { k: &'a [f32], v: &'a [f32] },
+    /// Pool pages of `page_rows` positions each: position `j` in page
+    /// `j / page_rows` at row offset `j % page_rows`.
+    Paged { page_rows: usize, k_pages: &'a [Box<[f32]>], v_pages: &'a [Box<[f32]>] },
+}
+
+impl<'a> KvRows<'a> {
+    /// Position `j`'s key row (`d` floats).
+    #[inline(always)]
+    pub(crate) fn k_row(&self, j: usize, d: usize) -> &'a [f32] {
+        match self {
+            KvRows::Dense { k, .. } => &k[j * d..(j + 1) * d],
+            KvRows::Paged { page_rows, k_pages, .. } => {
+                let off = (j % page_rows) * d;
+                &k_pages[j / page_rows][off..off + d]
+            }
+        }
+    }
+
+    /// Position `j`'s value row (`d` floats).
+    #[inline(always)]
+    pub(crate) fn v_row(&self, j: usize, d: usize) -> &'a [f32] {
+        match self {
+            KvRows::Dense { v, .. } => &v[j * d..(j + 1) * d],
+            KvRows::Paged { page_rows, v_pages, .. } => {
+                let off = (j % page_rows) * d;
+                &v_pages[j / page_rows][off..off + d]
+            }
+        }
+    }
+}
+
+impl Clone for KvCache {
+    fn clone(&self) -> KvCache {
+        let store = match &self.store {
+            KvStore::Dense(ls) => KvStore::Dense(ls.clone()),
+            KvStore::Paged(p) => KvStore::Paged(p.clone_box()),
+        };
+        KvCache { d: self.d, store }
+    }
+}
+
 impl KvCache {
+    /// Dense cache with room for `capacity` positions per layer —
+    /// the training/test layout, reserved up front.
     pub(crate) fn new(n_layers: usize, d: usize, capacity: usize) -> KvCache {
         KvCache {
             d,
-            layers: (0..n_layers)
-                .map(|_| LayerKv {
-                    k: Vec::with_capacity(capacity * d),
-                    v: Vec::with_capacity(capacity * d),
-                })
-                .collect(),
+            store: KvStore::Dense(
+                (0..n_layers)
+                    .map(|_| LayerKv {
+                        k: Vec::with_capacity(capacity * d),
+                        v: Vec::with_capacity(capacity * d),
+                    })
+                    .collect(),
+            ),
         }
+    }
+
+    /// Page-backed cache over a `serve::kvpool` store (O(tokens used)
+    /// memory; see [`PagedKvStore`] for the contract).
+    pub(crate) fn paged(store: Box<dyn PagedKvStore>, d: usize) -> KvCache {
+        KvCache { d, store: KvStore::Paged(store) }
+    }
+
+    /// Whether this cache draws from a page pool.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, KvStore::Paged(_))
     }
 
     /// Cached positions (rows per layer).
     pub fn len(&self) -> usize {
-        self.layers.first().map_or(0, |l| l.k.len() / self.d.max(1))
+        match &self.store {
+            KvStore::Dense(ls) => ls.first().map_or(0, |l| l.k.len() / self.d.max(1)),
+            KvStore::Paged(p) => p.rows(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Append the next position's K and V projections to `layer`.
+    pub(crate) fn append_row(&mut self, layer: usize, krow: &[f32], vrow: &[f32]) {
+        match &mut self.store {
+            KvStore::Dense(ls) => {
+                ls[layer].k.extend_from_slice(krow);
+                ls[layer].v.extend_from_slice(vrow);
+            }
+            KvStore::Paged(p) => p.append(layer, krow, vrow),
+        }
+    }
+
+    /// The attention loop's view of `layer`'s cached rows.
+    pub(crate) fn rows_of(&self, layer: usize) -> KvRows<'_> {
+        match &self.store {
+            KvStore::Dense(ls) => KvRows::Dense { k: &ls[layer].k, v: &ls[layer].v },
+            KvStore::Paged(p) => p.layer_rows(layer),
+        }
+    }
+
     /// Drop every cached row at position `>= len` — the speculative-decode
-    /// rollback. Buffers keep their reserved capacity, so a rolled-back
-    /// session re-decodes without reallocating. Callers truncate the
-    /// absorbed-token window alongside (see [`DecodeState::truncate`]).
+    /// rollback. Dense buffers keep their reserved capacity; paged stores
+    /// return whole freed pages to their pool. Either way a rolled-back
+    /// session re-decodes bit-identically (re-appends overwrite the same
+    /// storage). Callers truncate the absorbed-token window alongside
+    /// (see [`DecodeState::truncate`]).
     pub fn truncate(&mut self, len: usize) {
-        for l in &mut self.layers {
-            l.k.truncate(len * self.d);
-            l.v.truncate(len * self.d);
+        match &mut self.store {
+            KvStore::Dense(ls) => {
+                for l in ls {
+                    l.k.truncate(len * self.d);
+                    l.v.truncate(len * self.d);
+                }
+            }
+            KvStore::Paged(p) => p.truncate(len),
         }
     }
 }
@@ -439,11 +575,9 @@ pub(crate) fn prefill_rows(
         let base = layer_base(l);
         let (h1, _) = ln_fwd(&x, &params[base], &params[base + 1]);
         let qkv = linear(&h1, base + 2);
-        let lkv = &mut kv.layers[l];
         for r in 0..n {
             let row = qkv.row(r);
-            lkv.k.extend_from_slice(&row[d..2 * d]);
-            lkv.v.extend_from_slice(&row[2 * d..3 * d]);
+            kv.append_row(l, &row[d..2 * d], &row[2 * d..3 * d]);
         }
         let (attn, _) = attn_fwd(&qkv, 1, n, heads);
         let proj = linear(&attn, base + 3);
@@ -463,6 +597,60 @@ pub(crate) fn prefill_rows(
     Ok((kv, logits))
 }
 
+/// Grown-once staging buffers for the decode hot path — the `PrepCache`
+/// idiom applied to per-tick activations. [`decode_spans`] used to
+/// allocate a fresh `(Σ span_len × d)` embedding-gather matrix plus one
+/// attention staging matrix *per layer per tick*; leasing from this
+/// free list instead means a steady-state engine tick allocates no
+/// staging memory at all (`builds` stabilizes after warm-up, `hits`
+/// grows — the contract `paged_scratch_reuses_staging_buffers` pins).
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    free: Vec<Vec<f32>>,
+    /// Leases served by allocating or growing a buffer.
+    pub builds: usize,
+    /// Leases served at full capacity from the free list.
+    pub hits: usize,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+
+    /// A zeroed `rows × cols` staging matrix, reusing a recycled buffer
+    /// when one is large enough.
+    fn lease(&mut self, rows: usize, cols: usize) -> Mat {
+        let n = rows * cols;
+        match self.free.pop() {
+            Some(mut data) => {
+                if data.capacity() >= n {
+                    self.hits += 1;
+                } else {
+                    self.builds += 1;
+                }
+                data.clear();
+                data.resize(n, 0.0);
+                Mat { rows, cols, data }
+            }
+            None => {
+                self.builds += 1;
+                Mat { rows, cols, data: vec![0.0f32; n] }
+            }
+        }
+    }
+
+    /// Return a staging matrix's buffer to the free list.
+    fn recycle(&mut self, m: Mat) {
+        self.free.push(m.data);
+    }
+
+    /// `(builds, hits)` — allocation vs reuse accounting.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.builds, self.hits)
+    }
+}
+
 /// One incremental decode step for a *batch of sessions*, one new token
 /// each — the continuous-batching hot path, i.e. [`decode_spans`] with
 /// every span of length 1.
@@ -470,6 +658,7 @@ pub(crate) fn decode_rows(
     cfg: &GPTConfig,
     params: &[Vec<f32>],
     linear: &mut dyn FnMut(&Mat, usize) -> Mat,
+    scratch: &mut DecodeScratch,
     states: &mut [&mut DecodeState],
     tokens: &[i32],
 ) -> Result<Mat> {
@@ -480,7 +669,7 @@ pub(crate) fn decode_rows(
         states.len()
     );
     let spans: Vec<&[i32]> = tokens.chunks(1).collect();
-    decode_spans(cfg, params, linear, states, &spans)
+    decode_spans(cfg, params, linear, scratch, states, &spans)
 }
 
 /// The multi-row incremental decode step: append `spans[s]` (any number
@@ -504,6 +693,7 @@ pub(crate) fn decode_spans(
     cfg: &GPTConfig,
     params: &[Vec<f32>],
     linear: &mut dyn FnMut(&Mat, usize) -> Mat,
+    scratch: &mut DecodeScratch,
     states: &mut [&mut DecodeState],
     spans: &[&[i32]],
 ) -> Result<Mat> {
@@ -514,7 +704,7 @@ pub(crate) fn decode_spans(
     let total: usize = spans.iter().map(|s| s.len()).sum();
     ensure!(total > 0, "decode wants at least one token across the spans");
     let vocab = cfg.vocab as i32;
-    let mut x = Mat::zeros(total, d);
+    let mut x = scratch.lease(total, d);
     let mut r = 0usize;
     for (s, st) in states.iter().enumerate() {
         let pos = st.tokens.len();
@@ -543,22 +733,21 @@ pub(crate) fn decode_spans(
         let base = layer_base(l);
         let (h1, _) = ln_fwd(&x, &params[base], &params[base + 1]);
         let qkv = linear(&h1, base + 2);
-        let mut attn = Mat::zeros(total, d);
+        let mut attn = scratch.lease(total, d);
         let mut r = 0usize;
         for (s, st) in states.iter_mut().enumerate() {
             let pos = st.tokens.len();
             let n = spans[s].len();
-            let lkv = &mut st.kv.as_mut().unwrap().layers[l];
+            let kv = st.kv.as_mut().unwrap();
             for j in 0..n {
                 let row = qkv.row(r + j);
-                lkv.k.extend_from_slice(&row[d..2 * d]);
-                lkv.v.extend_from_slice(&row[2 * d..3 * d]);
+                kv.append_row(l, &row[d..2 * d], &row[2 * d..3 * d]);
             }
+            let rows = kv.rows_of(l);
             for j in 0..n {
                 attn_decode_row(
                     qkv.row(r + j),
-                    &lkv.k,
-                    &lkv.v,
+                    &rows,
                     pos + j,
                     d,
                     heads,
@@ -568,6 +757,7 @@ pub(crate) fn decode_spans(
             r += n;
         }
         let proj = linear(&attn, base + 3);
+        scratch.recycle(attn);
         let x_mid = add(&x, &proj);
         let (h2, _) = ln_fwd(&x_mid, &params[base + 4], &params[base + 5]);
         let f1 = linear(&h2, base + 6);
@@ -576,10 +766,11 @@ pub(crate) fn decode_spans(
             *v = gelu(*v);
         }
         let f2 = linear(&a1, base + 7);
-        x = add(&x_mid, &f2);
+        scratch.recycle(std::mem::replace(&mut x, add(&x_mid, &f2)));
     }
     let lb = lnf_base(cfg.n_layers);
     let (xf, _) = ln_fwd(&x, &params[lb], &params[lb + 1]);
+    scratch.recycle(x);
     let logits = linear(&xf, TOK_EMB);
     for (st, span) in states.iter_mut().zip(spans) {
         st.tokens.extend_from_slice(span);
@@ -592,11 +783,13 @@ pub(crate) fn decode_spans(
 /// operation-for-operation the `i = pos` body of [`attn_fwd`] — same
 /// score order, same running max, same softmax and accumulation order —
 /// which is what keeps incremental logits bit-identical to the
-/// full-window forward.
+/// full-window forward. Rows arrive through [`KvRows`]: the dense arm
+/// indexes one contiguous slice, the paged arm resolves `j` to a pool
+/// page — per-row layout resolution only, every float op identical, so
+/// paged decode is bit-identical to dense decode.
 fn attn_decode_row(
     qkv_row: &[f32],
-    k: &[f32],
-    v: &[f32],
+    kv: &KvRows<'_>,
     pos: usize,
     d: usize,
     heads: usize,
@@ -609,7 +802,7 @@ fn attn_decode_row(
         let q = &qkv_row[h * hd..(h + 1) * hd];
         let mut mx = f32::NEG_INFINITY;
         for (j, s) in srow.iter_mut().enumerate() {
-            let kj = &k[j * d + h * hd..j * d + (h + 1) * hd];
+            let kj = &kv.k_row(j, d)[h * hd..(h + 1) * hd];
             let mut acc = 0.0f32;
             for c in 0..hd {
                 acc += q[c] * kj[c];
@@ -627,7 +820,7 @@ fn attn_decode_row(
         let inv = 1.0 / denom;
         for (j, &sj) in srow.iter().enumerate() {
             let p = sj * inv;
-            let vj = &v[j * d + h * hd..j * d + (h + 1) * hd];
+            let vj = &kv.v_row(j, d)[h * hd..(h + 1) * hd];
             let orow = &mut out[h * hd..(h + 1) * hd];
             for c in 0..hd {
                 orow[c] += p * vj[c];
@@ -802,11 +995,15 @@ impl Backend for NativeBackend {
     ) -> Result<Vec<f32>> {
         self.check_params(params)?;
         let cfg = self.cfg.clone();
-        let logits = {
+        // the linear closure borrows all of self — lend the scratch out
+        // around the call (restored even on error paths below)
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let res = {
             let mut linear = |x: &Mat, idx: usize| self.linear_fwd(x, idx, &params[idx]);
-            decode_rows(&cfg, params, &mut linear, &mut [state], &[token])?
+            decode_rows(&cfg, params, &mut linear, &mut scratch, &mut [state], &[token])
         };
-        Ok(logits.data)
+        self.scratch = scratch;
+        Ok(res?.data)
     }
 
     /// Multi-token incremental step: all span rows go through one batched
@@ -820,8 +1017,13 @@ impl Backend for NativeBackend {
     ) -> Result<Mat> {
         self.check_params(params)?;
         let cfg = self.cfg.clone();
-        let mut linear = |x: &Mat, idx: usize| self.linear_fwd(x, idx, &params[idx]);
-        decode_spans(&cfg, params, &mut linear, &mut [state], &[tokens])
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let res = {
+            let mut linear = |x: &Mat, idx: usize| self.linear_fwd(x, idx, &params[idx]);
+            decode_spans(&cfg, params, &mut linear, &mut scratch, &mut [state], &[tokens])
+        };
+        self.scratch = scratch;
+        res
     }
 
     /// Position-0 state with an empty KV cache: feeding a prompt through

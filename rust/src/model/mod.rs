@@ -23,7 +23,7 @@
 pub mod gpt;
 pub mod recipe;
 
-pub use gpt::{DecodeState, KvCache, NativeBackend};
+pub use gpt::{DecodeScratch, DecodeState, KvCache, KvRows, NativeBackend, PagedKvStore};
 pub use recipe::NativeRecipe;
 
 use crate::runtime::{DType, TensorSpec};

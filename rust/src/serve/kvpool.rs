@@ -1,0 +1,508 @@
+//! Paged KV storage: a fixed-size page pool shared by every session
+//! behind one engine, vLLM-style.
+//!
+//! Dense [`KvCache`](crate::model::KvCache) reserves `2 · L · seq_len ·
+//! d` f32 per session *up front*, so engine concurrency is bounded by
+//! the worst-case window even when most sessions use a fraction of it.
+//! Paging flips that: KV memory is a pool of fixed-size **pages** (one
+//! page = `page_rows` token-rows × `d` floats, holding the K *or* V rows
+//! of one layer), every page is allocated once at pool construction, and
+//! a session holds exactly `2 · L · ceil(tokens / page_rows)` of them —
+//! O(tokens used), not O(seq_len reserved). Total KV RSS is pinned at
+//! `total_pages · page_rows · d · 4` bytes for the life of the pool.
+//!
+//! ## Ownership model (why reads never lock)
+//!
+//! The pool hands out whole pages (`Box<[f32]>`): while a session holds
+//! a page it owns it exclusively — appends and the attention inner loop
+//! read/write session-local memory with **no** synchronization. The
+//! shared [`Mutex`] guards only the free list and the counters, touched
+//! at page granularity (alloc / free / reserve), never per row.
+//!
+//! ## Reservations (admission control)
+//!
+//! [`KvPool::fresh_reserved`] atomically reserves the worst-case page
+//! need of a session and builds its paged [`DecodeState`]; the
+//! reservation travels inside the state (RAII) and is released — along
+//! with every held page — when the state drops. The engine admits a
+//! request only if its reservation fits, so a session can never run the
+//! pool dry mid-decode: allocation against a reservation always
+//! succeeds. States created without a reservation (tests, clones) draw
+//! from unreserved free pages and fall back to a counted **overflow**
+//! allocation when the pool is dry — decode deep inside `model::gpt`
+//! can therefore never fail, and `PoolStats::overflow_pages == 0` is the
+//! observable proof that admission discipline held.
+//!
+//! ## Bitwise contract
+//!
+//! [`PagedKv`] implements the same append / read / truncate contract as
+//! the dense `LayerKv`, and the attention kernel reads rows through the
+//! same `KvRows` accessor for both layouts with an identical
+//! floating-point accumulation order — paged decode is **bit-identical**
+//! to dense decode, including `truncate` rollbacks that land on or
+//! straddle page boundaries (`tests/paged_kv.rs` pins this down).
+//! Truncation returns whole freed pages to the pool and keeps the
+//! partial tail page; re-appended rows overwrite the exact same offsets.
+
+use std::sync::{Arc, Mutex};
+
+use crate::model::gpt::{KvRows, PagedKvStore};
+use crate::model::{DecodeState, GPTConfig, KvCache};
+
+/// Shared free list + accounting. One per engine; see the module docs.
+struct PoolShared {
+    /// Recycled pages, ready to hand out.
+    free: Vec<Box<[f32]>>,
+    /// Pages handed out to live sessions.
+    in_use: usize,
+    /// Pages promised to admitted sessions (admission budget).
+    reserved: usize,
+    /// Pages allocated beyond `total` (no-reservation safety valve).
+    overflow: usize,
+    used_peak: usize,
+    reserved_peak: usize,
+    allocs: u64,
+    frees: u64,
+}
+
+/// A snapshot of the pool counters (all page counts).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Fixed pool capacity.
+    pub total_pages: usize,
+    /// Pages currently held by live sessions.
+    pub used_pages: usize,
+    /// Pages currently promised to admitted sessions.
+    pub reserved_pages: usize,
+    /// Peak of `used_pages` over the pool's lifetime.
+    pub used_peak: usize,
+    /// Peak of `reserved_pages` over the pool's lifetime.
+    pub reserved_peak: usize,
+    /// Pages ever allocated beyond capacity (0 under admission
+    /// discipline — unreserved states are the only possible source).
+    pub overflow_pages: usize,
+    /// Page grants / returns since construction.
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+/// The shared page pool handle (an `Arc`; clones are the same pool).
+#[derive(Clone)]
+pub struct KvPool {
+    shared: Arc<Mutex<PoolShared>>,
+    page_rows: usize,
+    d: usize,
+    n_layers: usize,
+    total: usize,
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.stats();
+        f.debug_struct("KvPool")
+            .field("page_rows", &self.page_rows)
+            .field("d", &self.d)
+            .field("n_layers", &self.n_layers)
+            .field("total_pages", &st.total_pages)
+            .field("used_pages", &st.used_pages)
+            .field("reserved_pages", &st.reserved_pages)
+            .finish()
+    }
+}
+
+impl KvPool {
+    /// A pool of `total_pages` pages of `page_rows × d` floats each, all
+    /// allocated (and zeroed) up front — KV RSS is fixed from here on.
+    /// `n_layers`/`d` must match the served model's config; use
+    /// [`for_config`](Self::for_config) to derive them.
+    pub fn new(n_layers: usize, d: usize, page_rows: usize, total_pages: usize) -> KvPool {
+        assert!(page_rows >= 1, "page_rows must be >= 1");
+        assert!(d >= 1 && n_layers >= 1, "pool needs real model dims");
+        let free: Vec<Box<[f32]>> = (0..total_pages)
+            .map(|_| vec![0.0f32; page_rows * d].into_boxed_slice())
+            .collect();
+        KvPool {
+            shared: Arc::new(Mutex::new(PoolShared {
+                free,
+                in_use: 0,
+                reserved: 0,
+                overflow: 0,
+                used_peak: 0,
+                reserved_peak: 0,
+                allocs: 0,
+                frees: 0,
+            })),
+            page_rows,
+            d,
+            n_layers,
+            total: total_pages,
+        }
+    }
+
+    /// Pool sized for a model config: dims from `cfg`, capacity chosen
+    /// by the caller (`total_pages`).
+    pub fn for_config(cfg: &GPTConfig, page_rows: usize, total_pages: usize) -> KvPool {
+        KvPool::new(cfg.n_layers, cfg.d_model, page_rows, total_pages)
+    }
+
+    /// Token rows per page.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Bytes per page (`page_rows · d · 4`).
+    pub fn page_bytes(&self) -> usize {
+        self.page_rows * self.d * std::mem::size_of::<f32>()
+    }
+
+    /// Fixed capacity, in pages.
+    pub fn total_pages(&self) -> usize {
+        self.total
+    }
+
+    /// Fixed capacity, in bytes — the KV memory bound the pool enforces.
+    pub fn capacity_bytes(&self) -> usize {
+        self.total * self.page_bytes()
+    }
+
+    /// Pages a session holding `rows` token positions needs: one K page
+    /// run + one V page run per layer.
+    pub fn pages_for_rows(&self, rows: usize) -> usize {
+        2 * self.n_layers * rows.div_ceil(self.page_rows)
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let sh = self.shared.lock().unwrap();
+        PoolStats {
+            total_pages: self.total,
+            used_pages: sh.in_use,
+            reserved_pages: sh.reserved,
+            used_peak: sh.used_peak,
+            reserved_peak: sh.reserved_peak,
+            overflow_pages: sh.overflow,
+            allocs: sh.allocs,
+            frees: sh.frees,
+        }
+    }
+
+    /// A paged position-0 [`DecodeState`] with **no** reservation:
+    /// allocation draws free pages and overflows (counted) when dry.
+    /// For tests, clones, and callers managing capacity themselves; the
+    /// engine admits through [`fresh_reserved`](Self::fresh_reserved).
+    pub fn fresh_state(&self) -> DecodeState {
+        self.state_with_reservation(0)
+    }
+
+    /// Atomically reserve `pages` and build a paged position-0 state
+    /// carrying the reservation, or `None` if the reservation does not
+    /// fit (`reserved + pages > total`). Dropping the state releases the
+    /// reservation and every page it holds.
+    pub fn fresh_reserved(&self, pages: usize) -> Option<DecodeState> {
+        {
+            let mut sh = self.shared.lock().unwrap();
+            if sh.reserved + pages > self.total {
+                return None;
+            }
+            sh.reserved += pages;
+            sh.reserved_peak = sh.reserved_peak.max(sh.reserved);
+        }
+        Some(self.state_with_reservation(pages))
+    }
+
+    fn state_with_reservation(&self, reservation: usize) -> DecodeState {
+        let kv = PagedKv {
+            pool: self.clone(),
+            reservation,
+            layers: (0..self.n_layers)
+                .map(|_| PagedLayerKv { rows: 0, k_pages: Vec::new(), v_pages: Vec::new() })
+                .collect(),
+        };
+        DecodeState { tokens: vec![], kv: Some(KvCache::paged(Box::new(kv), self.d)) }
+    }
+
+    /// Hand out one page. Never fails: a dry pool yields a fresh
+    /// (counted) overflow page so decode deep in `model::gpt` cannot
+    /// error — under reservation discipline the free list never runs
+    /// dry and `overflow` stays 0.
+    fn alloc_page(&self) -> Box<[f32]> {
+        let mut sh = self.shared.lock().unwrap();
+        sh.allocs += 1;
+        sh.in_use += 1;
+        sh.used_peak = sh.used_peak.max(sh.in_use);
+        match sh.free.pop() {
+            Some(p) => p,
+            None => {
+                sh.overflow += 1;
+                vec![0.0f32; self.page_rows * self.d].into_boxed_slice()
+            }
+        }
+    }
+
+    /// Return one page to the free list (overflow pages shrink back to
+    /// capacity instead of growing the list).
+    fn free_page(&self, page: Box<[f32]>) {
+        let mut sh = self.shared.lock().unwrap();
+        sh.frees += 1;
+        sh.in_use -= 1;
+        if sh.free.len() + sh.in_use < self.total {
+            sh.free.push(page);
+        }
+    }
+
+    fn release_reservation(&self, pages: usize) {
+        if pages > 0 {
+            let mut sh = self.shared.lock().unwrap();
+            sh.reserved -= pages;
+        }
+    }
+}
+
+/// One layer's K and V page runs. Row `i` of the layer lives in page
+/// `i / page_rows` at offset `(i % page_rows) · d`.
+#[derive(Debug)]
+struct PagedLayerKv {
+    rows: usize,
+    k_pages: Vec<Box<[f32]>>,
+    v_pages: Vec<Box<[f32]>>,
+}
+
+/// A per-session paged KV handle: the same append / read / truncate
+/// contract as the dense `LayerKv`, backed by pool pages. Lives inside
+/// [`KvCache`](crate::model::KvCache) behind the
+/// [`PagedKvStore`] seam; see the module docs for ownership and the
+/// bitwise contract.
+#[derive(Debug)]
+pub struct PagedKv {
+    pool: KvPool,
+    /// Pages promised at admission; released on drop. 0 for unreserved
+    /// states (tests, clones).
+    reservation: usize,
+    layers: Vec<PagedLayerKv>,
+}
+
+impl PagedKvStore for PagedKv {
+    fn rows(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.rows)
+    }
+
+    fn append(&mut self, layer: usize, krow: &[f32], vrow: &[f32]) {
+        let (p, d) = (self.pool.page_rows, self.pool.d);
+        debug_assert_eq!(krow.len(), d);
+        debug_assert_eq!(vrow.len(), d);
+        let l = &mut self.layers[layer];
+        if l.rows == l.k_pages.len() * p {
+            l.k_pages.push(self.pool.alloc_page());
+            l.v_pages.push(self.pool.alloc_page());
+        }
+        let off = (l.rows % p) * d;
+        l.k_pages[l.rows / p][off..off + d].copy_from_slice(krow);
+        l.v_pages[l.rows / p][off..off + d].copy_from_slice(vrow);
+        l.rows += 1;
+    }
+
+    fn layer_rows(&self, layer: usize) -> KvRows<'_> {
+        let l = &self.layers[layer];
+        KvRows::Paged {
+            page_rows: self.pool.page_rows,
+            k_pages: &l.k_pages,
+            v_pages: &l.v_pages,
+        }
+    }
+
+    /// Drop every row at position `>= rows`, returning **whole** freed
+    /// pages to the pool. The partial tail page is kept (its stale rows
+    /// are never read and are overwritten by re-appends at the exact
+    /// same offsets — the bitwise rollback contract).
+    fn truncate(&mut self, rows: usize) {
+        let p = self.pool.page_rows;
+        let keep = rows.div_ceil(p);
+        for l in &mut self.layers {
+            if rows >= l.rows {
+                continue;
+            }
+            while l.k_pages.len() > keep {
+                self.pool.free_page(l.k_pages.pop().unwrap());
+                self.pool.free_page(l.v_pages.pop().unwrap());
+            }
+            l.rows = rows;
+        }
+    }
+
+    /// Deep copy into fresh pool pages. The clone carries **no**
+    /// reservation — it draws free (or counted overflow) pages, exactly
+    /// like an unreserved state.
+    fn clone_box(&self) -> Box<dyn PagedKvStore> {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            let copy = |pages: &Vec<Box<[f32]>>| -> Vec<Box<[f32]>> {
+                pages
+                    .iter()
+                    .map(|src| {
+                        let mut page = self.pool.alloc_page();
+                        page.copy_from_slice(src);
+                        page
+                    })
+                    .collect()
+            };
+            layers.push(PagedLayerKv {
+                rows: l.rows,
+                k_pages: copy(&l.k_pages),
+                v_pages: copy(&l.v_pages),
+            });
+        }
+        Box::new(PagedKv { pool: self.pool.clone(), reservation: 0, layers })
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        for l in &mut self.layers {
+            for page in l.k_pages.drain(..).chain(l.v_pages.drain(..)) {
+                self.pool.free_page(page);
+            }
+        }
+        self.pool.release_reservation(self.reservation);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> KvPool {
+        // 2 layers, d 8, 4 rows per page, 32 pages
+        KvPool::new(2, 8, 4, 32)
+    }
+
+    fn row(seed: usize) -> Vec<f32> {
+        (0..8).map(|c| (seed * 10 + c) as f32).collect()
+    }
+
+    #[test]
+    fn pages_allocate_lazily_and_free_on_drop() {
+        let p = pool();
+        assert_eq!(p.stats().used_pages, 0);
+        let mut st = p.fresh_state();
+        let kv = st.kv.as_mut().unwrap();
+        assert_eq!(kv.len(), 0);
+        for i in 0..5 {
+            for l in 0..2 {
+                kv.append_row(l, &row(i), &row(i + 100));
+            }
+        }
+        assert_eq!(kv.len(), 5);
+        // 5 rows at 4 rows/page = 2 pages per run, × (K + V) × 2 layers
+        assert_eq!(p.stats().used_pages, 8);
+        assert_eq!(p.pages_for_rows(5), 8);
+        drop(st);
+        let st = p.stats();
+        assert_eq!(st.used_pages, 0);
+        assert_eq!(st.allocs, st.frees);
+        assert_eq!(st.overflow_pages, 0);
+    }
+
+    #[test]
+    fn rows_read_back_across_page_boundaries() {
+        let p = pool();
+        let mut st = p.fresh_state();
+        let kv = st.kv.as_mut().unwrap();
+        for i in 0..9 {
+            kv.append_row(0, &row(i), &row(i + 100));
+            kv.append_row(1, &row(i + 200), &row(i + 300));
+        }
+        for i in 0..9 {
+            let r0 = kv.rows_of(0);
+            assert_eq!(r0.k_row(i, 8), &row(i)[..], "k row {i}");
+            assert_eq!(r0.v_row(i, 8), &row(i + 100)[..], "v row {i}");
+            let r1 = kv.rows_of(1);
+            assert_eq!(r1.k_row(i, 8), &row(i + 200)[..]);
+        }
+    }
+
+    #[test]
+    fn truncate_frees_whole_pages_and_reappends_in_place() {
+        let p = pool();
+        let mut st = p.fresh_state();
+        let kv = st.kv.as_mut().unwrap();
+        for i in 0..11 {
+            for l in 0..2 {
+                kv.append_row(l, &row(i), &row(i + 50));
+            }
+        }
+        assert_eq!(p.stats().used_pages, p.pages_for_rows(11)); // 3 pages/run
+        // straddling a boundary: 11 -> 6 keeps 2 pages/run, frees 1
+        kv.truncate(6);
+        assert_eq!(kv.len(), 6);
+        assert_eq!(p.stats().used_pages, p.pages_for_rows(6));
+        // exactly on a boundary: 6 -> 4 keeps 1 page/run
+        kv.truncate(4);
+        assert_eq!(p.stats().used_pages, p.pages_for_rows(4));
+        // truncate past the end is a no-op
+        kv.truncate(100);
+        assert_eq!(kv.len(), 4);
+        // surviving rows are intact; re-appends land at the same offsets
+        assert_eq!(kv.rows_of(0).k_row(3, 8), &row(3)[..]);
+        for l in 0..2 {
+            kv.append_row(l, &row(77), &row(78));
+        }
+        assert_eq!(kv.rows_of(1).k_row(4, 8), &row(77)[..]);
+        assert_eq!(p.stats().overflow_pages, 0);
+    }
+
+    #[test]
+    fn reservations_gate_admission_and_release_on_drop() {
+        let p = pool(); // 32 pages
+        let a = p.fresh_reserved(20).expect("20 of 32 fits");
+        assert_eq!(p.stats().reserved_pages, 20);
+        assert!(p.fresh_reserved(13).is_none(), "20 + 13 > 32");
+        let b = p.fresh_reserved(12).expect("20 + 12 fits exactly");
+        assert_eq!(p.stats().reserved_pages, 32);
+        drop(a);
+        assert_eq!(p.stats().reserved_pages, 12);
+        drop(b);
+        let st = p.stats();
+        assert_eq!((st.reserved_pages, st.used_pages), (0, 0));
+        assert_eq!(st.reserved_peak, 32);
+    }
+
+    #[test]
+    fn dry_pool_overflows_instead_of_failing() {
+        let tiny = KvPool::new(1, 8, 4, 2); // 2 pages total
+        let mut st = tiny.fresh_state();
+        let kv = st.kv.as_mut().unwrap();
+        for i in 0..8 {
+            kv.append_row(0, &row(i), &row(i)); // needs 4 pages
+        }
+        let s = tiny.stats();
+        assert_eq!(s.used_pages, 4);
+        assert_eq!(s.overflow_pages, 2, "2 pages beyond capacity, counted");
+        // reads still correct through the overflow pages
+        assert_eq!(kv.rows_of(0).k_row(7, 8), &row(7)[..]);
+        drop(st);
+        assert_eq!(tiny.stats().used_pages, 0);
+    }
+
+    #[test]
+    fn cloned_state_owns_independent_pages() {
+        let p = pool();
+        let mut st = p.fresh_reserved(p.pages_for_rows(6)).unwrap();
+        let kv = st.kv.as_mut().unwrap();
+        for i in 0..6 {
+            for l in 0..2 {
+                kv.append_row(l, &row(i), &row(i + 9));
+            }
+        }
+        let used_one = p.stats().used_pages;
+        let mut copy = st.clone();
+        assert_eq!(p.stats().used_pages, 2 * used_one, "clone deep-copies pages");
+        // mutating the clone leaves the original untouched
+        copy.kv.as_mut().unwrap().truncate(1);
+        assert_eq!(st.kv.as_ref().unwrap().len(), 6);
+        assert_eq!(copy.kv.as_ref().unwrap().len(), 1);
+        assert_eq!(st.kv.as_ref().unwrap().rows_of(0).k_row(5, 8), &row(5)[..]);
+        drop(copy);
+        // clone's drop releases its pages but not the original's reservation
+        assert_eq!(p.stats().used_pages, used_one);
+        assert_eq!(p.stats().reserved_pages, p.pages_for_rows(6));
+    }
+}

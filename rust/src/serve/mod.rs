@@ -35,6 +35,13 @@
 //! * [`net`] — the line/JSON request protocol shared by `serve --stdin`
 //!   and the [`net::serve_tcp`] socket front-end (one engine tick loop
 //!   over non-blocking connections, graceful drain on client EOF).
+//! * [`kvpool`] — paged KV storage: a [`KvPool`] of fixed-size pages
+//!   shared behind the engine, vLLM-style. Per-session KV goes from
+//!   O(`seq_len`) reserved to O(tokens used); the engine admits by page
+//!   reservation, queues when the pool is dry, and LRU-evicts /
+//!   re-prefills under contention — total KV memory is bounded by the
+//!   pool for any number of sessions (the 1000-session
+//!   `examples/loadgen.rs` scenario).
 //!
 //! ## Determinism
 //!
@@ -48,13 +55,15 @@
 //! and `tests/spec.rs` pin all of this down.
 
 pub mod engine;
+pub mod kvpool;
 pub mod model;
 pub mod net;
 pub mod sample;
 pub mod session;
 pub mod spec;
 
-pub use engine::{BackendServe, Engine, EngineConfig, EngineStats, ServeBackend};
+pub use engine::{BackendServe, Engine, EngineConfig, EngineStats, LatencyWindow, ServeBackend};
+pub use kvpool::{KvPool, PoolStats};
 pub use model::ServeModel;
 pub use sample::{generate, sample};
 pub use session::{Completion, FinishReason, Request, SamplingParams};

@@ -17,11 +17,13 @@
 //! forward, so logits are bit-identical to `NativeBackend::logits` at
 //! every position (the `tests/serve.rs` parity contract).
 
+use std::sync::Mutex;
+
 use anyhow::{ensure, Result};
 
 use crate::coordinator::mxcache::{MxWeightCache, Orientation};
 use crate::gemm::{self, Mat};
-use crate::model::gpt::{decode_rows, decode_spans, prefill_rows};
+use crate::model::gpt::{decode_rows, decode_spans, prefill_rows, DecodeScratch};
 use crate::model::{layer_base, DecodeState, GPTConfig, NativeRecipe, TOK_EMB};
 use crate::mx::pipeline::PackPipeline;
 use crate::util::threadpool;
@@ -36,6 +38,11 @@ pub struct ServeModel {
     cache: MxWeightCache,
     /// (rows, cols) per parameter; `None` for 1-D tensors.
     shapes: Vec<Option<(usize, usize)>>,
+    /// Grown-once decode staging buffers (the per-tick `(n_active × d)`
+    /// gather matrices), leased per decode call instead of reallocated.
+    /// A `Mutex` so the model stays `Sync` behind its `Arc`; the engine
+    /// decodes single-threaded, so the lock is uncontended.
+    scratch: Mutex<DecodeScratch>,
     workers: usize,
 }
 
@@ -76,7 +83,15 @@ impl ServeModel {
                 cache.pack_nr(idx, &params[idx], r, c, Orientation::AsStored, workers);
             }
         }
-        Ok(ServeModel { workers, cfg, recipe, params, cache, shapes })
+        Ok(ServeModel {
+            workers,
+            cfg,
+            recipe,
+            params,
+            cache,
+            shapes,
+            scratch: Mutex::new(DecodeScratch::new()),
+        })
     }
 
     pub fn config(&self) -> &GPTConfig {
@@ -157,7 +172,8 @@ impl ServeModel {
     /// bit-identical to a batch-of-one call.
     pub fn decode_batch(&self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat> {
         let mut linear = |x: &Mat, idx: usize| self.linear(x, idx);
-        decode_rows(&self.cfg, &self.params, &mut linear, states, tokens)
+        let mut scratch = self.scratch.lock().unwrap();
+        decode_rows(&self.cfg, &self.params, &mut linear, &mut scratch, states, tokens)
     }
 
     /// Single-session convenience wrapper over [`decode_batch`](Self::decode_batch).
@@ -173,7 +189,15 @@ impl ServeModel {
     /// bit-identical to one [`decode_step`](Self::decode_step) per token.
     pub fn decode_spans(&self, states: &mut [&mut DecodeState], spans: &[&[i32]]) -> Result<Mat> {
         let mut linear = |x: &Mat, idx: usize| self.linear(x, idx);
-        decode_spans(&self.cfg, &self.params, &mut linear, states, spans)
+        let mut scratch = self.scratch.lock().unwrap();
+        decode_spans(&self.cfg, &self.params, &mut linear, &mut scratch, states, spans)
+    }
+
+    /// `(staging buffers built, leases served from the free list)` of
+    /// the decode scratch — `builds` must stabilize after warm-up while
+    /// `hits` keeps growing (the per-tick-allocation fix's contract).
+    pub fn scratch_stats(&self) -> (usize, usize) {
+        self.scratch.lock().unwrap().stats()
     }
 
     /// A fresh position-0 state with an empty KV cache; feeding a prompt

@@ -17,6 +17,13 @@
 //! gets its in-flight requests finished and answered before the server
 //! closes the connection — graceful shutdown, mirroring how the stdin
 //! path drains the engine after input ends.
+//!
+//! With a paged engine (`--kv-pool-pages`), submissions past the pool's
+//! page budget simply queue inside the engine until pages free up, so a
+//! listener can carry thousands of connections with KV memory bounded
+//! by the pool (the `examples/loadgen.rs` scenario). A request whose
+//! worst-case footprint exceeds the whole pool comes back with
+//! `"finish":"capacity"` instead of wedging the queue.
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};

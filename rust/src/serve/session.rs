@@ -62,6 +62,10 @@ pub enum FinishReason {
     Window,
     /// Rejected at admission (empty prompt or out-of-vocab token).
     Invalid,
+    /// Rejected at admission: the request's worst-case KV footprint
+    /// exceeds the *entire* page pool, so it could never be scheduled
+    /// (paged engines only — see `serve::kvpool`).
+    Capacity,
 }
 
 impl FinishReason {
@@ -70,6 +74,7 @@ impl FinishReason {
             FinishReason::Length => "length",
             FinishReason::Window => "window",
             FinishReason::Invalid => "invalid",
+            FinishReason::Capacity => "capacity",
         }
     }
 }
@@ -96,6 +101,10 @@ pub(crate) struct Session {
     pub draft: Option<DecodeState>,
     pub rng: Rng,
     pub generated: Vec<i32>,
+    /// Engine tick of (re-)admission — the LRU key for paged eviction
+    /// (smallest = longest-resident = evicted first). Maintained by the
+    /// engine; 0 until first admitted.
+    pub admitted_tick: u64,
 }
 
 impl Session {
@@ -108,7 +117,7 @@ impl Session {
         first: i32,
         rng: Rng,
     ) -> Session {
-        Session { req, state, draft, rng, generated: vec![first] }
+        Session { req, state, draft, rng, generated: vec![first], admitted_tick: 0 }
     }
 
     /// The per-request sampling stream (shared derivation with

@@ -49,6 +49,13 @@
 //! target window (the span must fit), and the draft window (a session
 //! whose history outgrows the draft's context simply stops speculating
 //! and decodes vanilla — correctness never depends on the draft).
+//!
+//! Paged KV states (`serve::kvpool`) flow through here untouched: the
+//! verify/rollback loop only uses the `DecodeState` append + truncate
+//! contract, and `PagedKv::truncate` keeps the partial tail page so a
+//! rollback that straddles a page boundary re-appends into the same
+//! offsets — bitwise-identical to the dense rollback. Draft states stay
+//! dense (the draft model is small; only target KV is pooled).
 
 use anyhow::{ensure, Result};
 

@@ -1,0 +1,247 @@
+//! Paged-KV contracts (`serve::kvpool` + the `model::gpt` seam):
+//!
+//! * **bitwise parity** — decode through pool-backed states is
+//!   bit-identical to dense states, per recipe, across span shapes and
+//!   page boundaries (the attention kernel reads both layouts through
+//!   one `KvRows` accessor with the same FP accumulation order);
+//! * **rollback** — `truncate` landing on or straddling a page boundary
+//!   frees exactly the whole pages above the cut, keeps the partial
+//!   tail, and re-decode reproduces the dense rows byte-for-byte (what
+//!   speculative rejection depends on);
+//! * **admission** — a dry pool queues requests (no overflow pages, no
+//!   deadlock) and admits them as pages free; eviction parks the LRU
+//!   session and the re-prefilled resume continues byte-identically;
+//! * **scratch** — the grown-once decode staging buffers stop building
+//!   after warm-up while lease hits keep growing.
+
+use std::sync::Arc;
+
+use mxfp4_train::model::{DecodeState, GPTConfig, NativeRecipe};
+use mxfp4_train::serve::{
+    Engine, EngineConfig, FinishReason, KvPool, Request, SamplingParams, ServeModel, SpecConfig,
+};
+
+/// micro: 1 layer, d 32, seq 16, vocab 64 — small enough that every
+/// test crosses page boundaries with 4-row pages.
+const PAGE_ROWS: usize = 4;
+
+fn model(recipe: &str, seed: u64) -> Arc<ServeModel> {
+    let (cfg, _) = GPTConfig::preset("micro").unwrap();
+    let params = mxfp4_train::runtime::executor::init_params_for(
+        &cfg.param_specs(),
+        cfg.n_layers,
+        seed,
+    );
+    Arc::new(ServeModel::new(cfg, NativeRecipe::parse(recipe).unwrap(), params).unwrap())
+}
+
+fn pool(total_pages: usize) -> KvPool {
+    let (cfg, _) = GPTConfig::preset("micro").unwrap();
+    KvPool::for_config(&cfg, PAGE_ROWS, total_pages)
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+    Request { id, prompt, max_new, sampling: SamplingParams::greedy(), seed: id }
+}
+
+/// Append `span` to both states through the same batched call shape and
+/// assert the logits agree bitwise.
+fn step_both(
+    m: &ServeModel,
+    dense: &mut DecodeState,
+    paged: &mut DecodeState,
+    span: &[i32],
+    what: &str,
+) -> Vec<f32> {
+    let a = m.decode_spans(&mut [dense], &[span]).unwrap();
+    let b = m.decode_spans(&mut [paged], &[span]).unwrap();
+    assert_eq!(a.data, b.data, "{what}: paged logits diverged from dense");
+    b.data
+}
+
+#[test]
+fn paged_decode_bitwise_matches_dense_all_recipes() {
+    for recipe in ["bf16", "mxfp4", "mxfp4_sr", "mxfp4_rht", "mxfp4_rht_sr"] {
+        let m = model(recipe, 11);
+        let p = pool(64);
+        let mut dense = m.fresh_state();
+        let mut paged = p.fresh_state();
+        // varied span shapes whose boundaries do NOT line up with the
+        // 4-row pages: rows 0..3, 3..4, 4..9, then singles to 15
+        for (i, span) in [&[1i32, 2, 3][..], &[4], &[5, 6, 7, 8, 9]].iter().enumerate() {
+            step_both(&m, &mut dense, &mut paged, span, &format!("{recipe}: span {i}"));
+        }
+        for t in 9..15 {
+            step_both(&m, &mut dense, &mut paged, &[t as i32], &format!("{recipe}: row {t}"));
+        }
+        assert_eq!(dense.tokens, paged.tokens, "{recipe}: absorbed streams");
+        // 15 rows at 4 rows/page, 1 layer: K + V runs of 4 pages each
+        assert_eq!(p.stats().used_pages, p.pages_for_rows(15), "{recipe}");
+        assert_eq!(p.stats().overflow_pages, 0, "{recipe}");
+    }
+}
+
+#[test]
+fn paged_truncate_rollback_is_bitwise_on_and_across_page_boundaries() {
+    let m = model("mxfp4", 13);
+    let p = pool(32);
+    let mut dense = m.fresh_state();
+    let mut paged = p.fresh_state();
+    let toks: Vec<i32> = (0..11).map(|i| 7 + i).collect();
+    let first_pass = step_both(&m, &mut dense, &mut paged, &toks, "first pass");
+
+    // straddling a boundary: 11 -> 6 rows keeps page 1 partially full
+    for st in [&mut dense, &mut paged] {
+        st.truncate(6);
+    }
+    assert_eq!(p.stats().used_pages, p.pages_for_rows(6), "whole freed pages returned");
+    let replay = step_both(&m, &mut dense, &mut paged, &toks[6..], "replay 6..");
+    let v = m.vocab();
+    assert_eq!(
+        replay,
+        first_pass[6 * v..],
+        "re-appended rows after a mid-page rollback must reproduce the stream"
+    );
+
+    // exactly on a boundary: 11 -> 8 rows (2 full pages per run)
+    for st in [&mut dense, &mut paged] {
+        st.truncate(8);
+    }
+    assert_eq!(p.stats().used_pages, p.pages_for_rows(8));
+    let replay = step_both(&m, &mut dense, &mut paged, &toks[8..], "replay 8..");
+    assert_eq!(replay, first_pass[8 * v..], "on-boundary rollback replay");
+
+    // the pool never lost or minted a page through all of it
+    let ps = p.stats();
+    assert_eq!(ps.overflow_pages, 0);
+    drop(paged);
+    assert_eq!(p.stats().used_pages, 0, "drop returns every page");
+}
+
+#[test]
+fn paged_spec_engine_stream_matches_dense_vanilla() {
+    // speculative rollback truncates mid-tick at positions that land on
+    // and straddle page boundaries; with draft == target every proposal
+    // is accepted, and the paged spec stream must equal dense vanilla
+    let m = model("mxfp4", 17);
+    let mut vanilla = Engine::new(Box::new(m.clone()), EngineConfig::batch(4));
+    let mut spec = Engine::new(Box::new(m.clone()), EngineConfig::paged(4, pool(64)));
+    spec.enable_spec(Box::new(m.clone()), SpecConfig { k: 4 }).unwrap();
+    for e in [&mut vanilla, &mut spec] {
+        e.submit(req(1, vec![1, 2, 3], 9));
+        e.submit(req(2, vec![9, 8, 7, 6], 7));
+        e.submit(Request {
+            id: 3,
+            prompt: vec![5, 5],
+            max_new: 8,
+            sampling: SamplingParams { temperature: 0.9, top_k: 8 },
+            seed: 33,
+        });
+    }
+    let mut a = vanilla.run().unwrap();
+    let mut b = spec.run().unwrap();
+    a.sort_by_key(|c| c.id);
+    b.sort_by_key(|c| c.id);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.tokens, y.tokens, "req {}: paged spec diverged from dense vanilla", x.id);
+        assert_eq!(x.finish, y.finish);
+    }
+    let st = spec.stats();
+    assert!(st.spec_proposed > 0 && st.spec_accepted == st.spec_proposed);
+}
+
+#[test]
+fn paged_pool_exhaustion_queues_then_admits() {
+    // every request's worst case is 2·1·ceil(5/4) = 4 pages; a 4-page
+    // pool (evictions off) must serialize four of them — queueing, not
+    // overflowing, not deadlocking — where max_batch alone would run
+    // all four at once
+    let p = pool(4);
+    let mut e = Engine::new(
+        Box::new(model("mxfp4", 19)),
+        EngineConfig { max_batch: 8, pool: Some(p.clone()), evict: false },
+    );
+    for i in 0..4 {
+        e.submit(req(i, vec![1 + i as i32, 2, 3], 3)); // rows ≤ 3+3-1 = 5
+    }
+    let done = e.run().unwrap();
+    assert_eq!(done.len(), 4);
+    assert!(done.iter().all(|c| c.tokens.len() == 3 && c.finish == FinishReason::Length));
+    assert_eq!(e.stats().prefill_calls, 4, "page budget must serialize admission");
+    assert_eq!(e.stats().evictions, 0);
+    let ps = p.stats();
+    assert_eq!(ps.overflow_pages, 0, "queueing, never overflow");
+    assert_eq!(ps.used_pages, 0);
+    assert_eq!(ps.reserved_pages, 0);
+
+    // a request that can never fit retires immediately as Capacity
+    e.submit(req(9, vec![1, 2, 3, 4], 12)); // rows 15 → 8 pages > 4
+    let done = e.run().unwrap();
+    assert_eq!(done[0].finish, FinishReason::Capacity);
+    assert!(done[0].tokens.is_empty());
+}
+
+#[test]
+fn paged_evict_resume_continues_byte_identically() {
+    // pool fits exactly one worst-case session; the second request's
+    // arrival evicts the LRU mid-generation and both must still emit
+    // the dense engine's exact streams (re-prefill == decode, bitwise)
+    let m = model("mxfp4", 23);
+    let p = pool(6); // worst case 2·1·ceil(10/4) = 6 pages each
+    let mut dense = Engine::new(Box::new(m.clone()), EngineConfig::batch(2));
+    let mut paged = Engine::new(Box::new(m.clone()), EngineConfig::paged(2, p.clone()));
+    for e in [&mut dense, &mut paged] {
+        e.submit(Request {
+            id: 1,
+            prompt: vec![1, 2, 3, 4],
+            max_new: 7,
+            sampling: SamplingParams { temperature: 0.8, top_k: 16 },
+            seed: 41,
+        });
+    }
+    paged.step().unwrap();
+    paged.step().unwrap(); // let req 1 build KV depth before contention
+    for e in [&mut dense, &mut paged] {
+        e.submit(req(2, vec![5, 6, 7, 8], 7));
+    }
+    let mut a = dense.run().unwrap();
+    let mut b = paged.run().unwrap();
+    a.sort_by_key(|c| c.id);
+    b.sort_by_key(|c| c.id);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.tokens, y.tokens, "req {}: evict/resume changed the stream", x.id);
+        assert_eq!(x.finish, y.finish);
+    }
+    let st = paged.stats();
+    assert!(st.evictions >= 1, "contention must evict");
+    assert_eq!(st.resumes, st.evictions, "every parked session resumed");
+    assert!(st.pool_used_peak <= 6, "pool bound held");
+    assert_eq!(p.stats().overflow_pages, 0);
+    assert_eq!(p.stats().used_pages, 0);
+}
+
+#[test]
+fn paged_scratch_builds_stabilize_after_warmup() {
+    // the per-tick staging-allocation fix: after the first requests at a
+    // given batch shape, further traffic must be served entirely from
+    // recycled buffers (hits grow, builds don't)
+    let m = model("mxfp4", 29);
+    let mut e = Engine::new(Box::new(m.clone()), EngineConfig::paged(4, pool(64)));
+    for i in 0..4 {
+        e.submit(req(i, vec![1 + i as i32, 2, 3], 6));
+    }
+    e.run().unwrap();
+    let (builds_warm, hits_warm) = m.scratch_stats();
+    assert!(builds_warm > 0, "first traffic must build staging buffers");
+    assert!(hits_warm > 0, "same-shape ticks must recycle buffers");
+
+    let mut e = Engine::new(Box::new(m.clone()), EngineConfig::paged(4, pool(64)));
+    for i in 0..4 {
+        e.submit(req(10 + i, vec![2 + i as i32, 3, 4], 6));
+    }
+    e.run().unwrap();
+    let (builds_after, hits_after) = m.scratch_stats();
+    assert_eq!(builds_after, builds_warm, "warm traffic must not allocate new staging");
+    assert!(hits_after > hits_warm, "warm traffic must lease from the free list");
+}

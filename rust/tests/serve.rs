@@ -209,7 +209,7 @@ fn staggered_batching_matches_solo_runs() {
     // solo: each request on its own engine (batch of one throughout)
     let mut solo = Vec::new();
     for req in requests() {
-        let mut e = Engine::new(Box::new(model.clone()), EngineConfig { max_batch: 1 });
+        let mut e = Engine::new(Box::new(model.clone()), EngineConfig::batch(1));
         e.submit(req);
         let mut done = e.run().unwrap();
         solo.push(done.remove(0));
@@ -217,7 +217,7 @@ fn staggered_batching_matches_solo_runs() {
 
     // staggered: 2 slots for 3 requests ⇒ request 3 queues until one of
     // the first two retires mid-run (continuous batching in action)
-    let mut e = Engine::new(Box::new(model.clone()), EngineConfig { max_batch: 2 });
+    let mut e = Engine::new(Box::new(model.clone()), EngineConfig::batch(2));
     for req in requests() {
         e.submit(req);
     }
@@ -252,7 +252,7 @@ fn engine_greedy_matches_single_stream_generate() {
         sampling: SamplingParams::greedy(),
         seed: 42,
     };
-    let mut e = Engine::new(Box::new(model.clone()), EngineConfig { max_batch: 4 });
+    let mut e = Engine::new(Box::new(model.clone()), EngineConfig::batch(4));
     e.submit(req.clone());
     let done = e.run().unwrap();
 
@@ -301,7 +301,7 @@ fn weights_pack_exactly_once_per_served_checkpoint() {
     assert_eq!((hits0, sr0), (0, 0));
 
     // serve a pile of traffic through every path: packs must not move
-    let mut e = Engine::new(Box::new(model.clone()), EngineConfig { max_batch: 3 });
+    let mut e = Engine::new(Box::new(model.clone()), EngineConfig::batch(3));
     for req in requests() {
         e.submit(req);
     }

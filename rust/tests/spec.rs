@@ -45,7 +45,7 @@ fn run_engine(
     reqs: &[Request],
     max_batch: usize,
 ) -> (Vec<mxfp4_train::serve::Completion>, mxfp4_train::serve::EngineStats) {
-    let mut e = Engine::new(Box::new(target.clone()), EngineConfig { max_batch });
+    let mut e = Engine::new(Box::new(target.clone()), EngineConfig::batch(max_batch));
     if let Some((d, k)) = draft {
         e.enable_spec(Box::new(d.clone()), SpecConfig { k }).unwrap();
     }
@@ -285,7 +285,7 @@ fn net_tcp_roundtrip_matches_in_process_engine() {
 
     // expected completions from an in-process engine, same requests
     let expect = {
-        let mut e = Engine::new(Box::new(m.clone()), EngineConfig { max_batch: 4 });
+        let mut e = Engine::new(Box::new(m.clone()), EngineConfig::batch(4));
         e.submit(Request { id: 0, prompt: vec![1, 2, 3], ..defaults.clone() });
         e.submit(Request { id: 7, prompt: vec![4, 5], max_new: 3, seed: 11, ..defaults.clone() });
         e.run().unwrap()
@@ -294,7 +294,7 @@ fn net_tcp_roundtrip_matches_in_process_engine() {
     let md = m.clone();
     let dd = defaults.clone();
     let server = std::thread::spawn(move || {
-        let mut engine = Engine::new(Box::new(md), EngineConfig { max_batch: 4 });
+        let mut engine = Engine::new(Box::new(md), EngineConfig::batch(4));
         net::serve_tcp(&mut engine, listener, &dd, 1).unwrap();
     });
 

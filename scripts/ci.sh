@@ -113,6 +113,21 @@ cargo test -q --test spec rollback_
 cargo test -q --test spec spec_
 cargo test -q --test spec net_
 
+echo "==> paged-KV contract tests (by name)"
+# tests/paged_kv.rs by prefix: paged-vs-dense bitwise parity per recipe,
+# truncate rollback on/straddling page boundaries, pool exhaustion ->
+# queueing -> admission, evict/re-prefill byte identity, scratch reuse
+cargo test -q --test paged_kv paged_
+
+echo "==> loadgen smoke (paged engine under concurrent TCP load, bounded KV)"
+# small-scale run of the 1000-session load generator: 32 pipelined
+# requests against a 24-page pool force queueing + eviction; the example
+# asserts every request answers, no page overflows, and no page leaks.
+# timeout turns an admission deadlock into a hard failure, not a hang.
+timeout 300 cargo run --release --example loadgen -- \
+    --conns 8 --per-conn 4 --pool-pages 24 --page-rows 4 --config micro --tokens 4
+echo "==> loadgen full scale is: cargo run --release --example loadgen (1000 sessions)"
+
 echo "==> cargo doc (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
