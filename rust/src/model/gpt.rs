@@ -603,7 +603,9 @@ pub(crate) fn prefill_rows(
 /// attention staging matrix *per layer per tick*; leasing from this
 /// free list instead means a steady-state engine tick allocates no
 /// staging memory at all (`builds` stabilizes after warm-up, `hits`
-/// grows — the contract `paged_scratch_reuses_staging_buffers` pins).
+/// grows, and the free list stays under [`DecodeScratch::MAX_FREE`] —
+/// the contract `paged_scratch_builds_stabilize_after_warmup` pins all
+/// three).
 #[derive(Debug, Default)]
 pub struct DecodeScratch {
     free: Vec<Vec<f32>>,
@@ -614,6 +616,12 @@ pub struct DecodeScratch {
 }
 
 impl DecodeScratch {
+    /// Hard cap on retained buffers. `decode_spans` holds at most two
+    /// leases at once (`x` + `attn`), so a free list past this size can
+    /// only mean a lease/recycle imbalance — `recycle` drops the buffer
+    /// instead of growing without bound on a long-running server.
+    pub const MAX_FREE: usize = 4;
+
     pub fn new() -> DecodeScratch {
         DecodeScratch::default()
     }
@@ -640,14 +648,23 @@ impl DecodeScratch {
         }
     }
 
-    /// Return a staging matrix's buffer to the free list.
+    /// Return a staging matrix's buffer to the free list (dropped when
+    /// the list is already at [`Self::MAX_FREE`] — see there).
     fn recycle(&mut self, m: Mat) {
-        self.free.push(m.data);
+        if self.free.len() < Self::MAX_FREE {
+            self.free.push(m.data);
+        }
     }
 
     /// `(builds, hits)` — allocation vs reuse accounting.
     pub fn stats(&self) -> (usize, usize) {
         (self.builds, self.hits)
+    }
+
+    /// Buffers currently parked on the free list (bounded by
+    /// [`Self::MAX_FREE`]; the leak-regression contract reads this).
+    pub fn free_len(&self) -> usize {
+        self.free.len()
     }
 }
 
@@ -758,15 +775,20 @@ pub(crate) fn decode_spans(
         }
         let proj = linear(&attn, base + 3);
         scratch.recycle(attn);
-        let x_mid = add(&x, &proj);
-        let (h2, _) = ln_fwd(&x_mid, &params[base + 4], &params[base + 5]);
+        // Residuals run in place on the leased `x` (same element order
+        // as [`add`], so bit-identical): the single `x` lease survives
+        // the whole layer stack, keeping leases and recycles balanced —
+        // recycling fresh `add` outputs here would grow the scratch
+        // free list by `n_layers` buffers every tick.
+        add_assign_mat(&mut x, &proj);
+        let (h2, _) = ln_fwd(&x, &params[base + 4], &params[base + 5]);
         let f1 = linear(&h2, base + 6);
         let mut a1 = f1;
         for v in &mut a1.data {
             *v = gelu(*v);
         }
         let f2 = linear(&a1, base + 7);
-        scratch.recycle(std::mem::replace(&mut x, add(&x_mid, &f2)));
+        add_assign_mat(&mut x, &f2);
     }
     let lb = lnf_base(cfg.n_layers);
     let (xf, _) = ln_fwd(&x, &params[lb], &params[lb + 1]);

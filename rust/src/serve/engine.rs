@@ -598,6 +598,10 @@ impl Engine {
             self.stats.prefill_tokens += sess.state.tokens.len();
             self.stats.resumes += 1;
             sess.state = state;
+            // eviction dropped the draft state; rebuild it so the
+            // resumed session keeps speculating (the draft replays the
+            // history lazily through the propose-time catch-up path)
+            sess.draft = self.spec.as_ref().map(SpecRunner::fresh_draft_state);
             sess.admitted_tick = self.tick;
             self.active.push(sess);
         }

@@ -31,7 +31,10 @@
 //! from unreserved free pages and fall back to a counted **overflow**
 //! allocation when the pool is dry — decode deep inside `model::gpt`
 //! can therefore never fail, and `PoolStats::overflow_pages == 0` is the
-//! observable proof that admission discipline held.
+//! observable proof that admission discipline held. Pages held by
+//! unreserved states are tallied and count against admission
+//! (`reserved + unreserved + need ≤ total`), so sharing a pool between
+//! reserved and unreserved states cannot silently void the RSS bound.
 //!
 //! ## Bitwise contract
 //!
@@ -55,6 +58,12 @@ struct PoolShared {
     free: Vec<Box<[f32]>>,
     /// Pages handed out to live sessions.
     in_use: usize,
+    /// The subset of `in_use` held by states with **no** reservation
+    /// (tests, clones). Admission must count these: they consume free
+    /// pages invisibly to the `reserved` budget, and ignoring them
+    /// would let reserved sessions mint counted overflow allocations —
+    /// silently breaking the fixed-RSS bound.
+    unreserved: usize,
     /// Pages promised to admitted sessions (admission budget).
     reserved: usize,
     /// Pages allocated beyond `total` (no-reservation safety valve).
@@ -125,6 +134,7 @@ impl KvPool {
             shared: Arc::new(Mutex::new(PoolShared {
                 free,
                 in_use: 0,
+                unreserved: 0,
                 reserved: 0,
                 overflow: 0,
                 used_peak: 0,
@@ -195,12 +205,15 @@ impl KvPool {
 
     /// Atomically reserve `pages` and build a paged position-0 state
     /// carrying the reservation, or `None` if the reservation does not
-    /// fit (`reserved + pages > total`). Dropping the state releases the
-    /// reservation and every page it holds.
+    /// fit (`reserved + unreserved-in-use + pages > total` — pages held
+    /// by unreserved states count against admission too, or reserved
+    /// sessions could be promised pages an unreserved state already
+    /// holds and spill into counted overflow). Dropping the state
+    /// releases the reservation and every page it holds.
     pub fn fresh_reserved(&self, pages: usize) -> Option<DecodeState> {
         {
             let mut sh = self.shared.lock().unwrap();
-            if sh.reserved + pages > self.total {
+            if sh.reserved + sh.unreserved + pages > self.total {
                 return None;
             }
             sh.reserved += pages;
@@ -220,14 +233,19 @@ impl KvPool {
         DecodeState { tokens: vec![], kv: Some(KvCache::paged(Box::new(kv), self.d)) }
     }
 
-    /// Hand out one page. Never fails: a dry pool yields a fresh
-    /// (counted) overflow page so decode deep in `model::gpt` cannot
-    /// error — under reservation discipline the free list never runs
-    /// dry and `overflow` stays 0.
-    fn alloc_page(&self) -> Box<[f32]> {
+    /// Hand out one page; `covered` says whether the caller holds a
+    /// reservation covering it (unreserved pages are tallied separately
+    /// for admission). Never fails: a dry pool yields a fresh (counted)
+    /// overflow page so decode deep in `model::gpt` cannot error —
+    /// under reservation discipline the free list never runs dry and
+    /// `overflow` stays 0.
+    fn alloc_page(&self, covered: bool) -> Box<[f32]> {
         let mut sh = self.shared.lock().unwrap();
         sh.allocs += 1;
         sh.in_use += 1;
+        if !covered {
+            sh.unreserved += 1;
+        }
         sh.used_peak = sh.used_peak.max(sh.in_use);
         match sh.free.pop() {
             Some(p) => p,
@@ -239,11 +257,15 @@ impl KvPool {
     }
 
     /// Return one page to the free list (overflow pages shrink back to
-    /// capacity instead of growing the list).
-    fn free_page(&self, page: Box<[f32]>) {
+    /// capacity instead of growing the list). `covered` must match the
+    /// matching [`alloc_page`](Self::alloc_page) call.
+    fn free_page(&self, page: Box<[f32]>, covered: bool) {
         let mut sh = self.shared.lock().unwrap();
         sh.frees += 1;
         sh.in_use -= 1;
+        if !covered {
+            sh.unreserved -= 1;
+        }
         if sh.free.len() + sh.in_use < self.total {
             sh.free.push(page);
         }
@@ -287,12 +309,13 @@ impl PagedKvStore for PagedKv {
 
     fn append(&mut self, layer: usize, krow: &[f32], vrow: &[f32]) {
         let (p, d) = (self.pool.page_rows, self.pool.d);
+        let covered = self.reservation > 0;
         debug_assert_eq!(krow.len(), d);
         debug_assert_eq!(vrow.len(), d);
         let l = &mut self.layers[layer];
         if l.rows == l.k_pages.len() * p {
-            l.k_pages.push(self.pool.alloc_page());
-            l.v_pages.push(self.pool.alloc_page());
+            l.k_pages.push(self.pool.alloc_page(covered));
+            l.v_pages.push(self.pool.alloc_page(covered));
         }
         let off = (l.rows % p) * d;
         l.k_pages[l.rows / p][off..off + d].copy_from_slice(krow);
@@ -315,14 +338,15 @@ impl PagedKvStore for PagedKv {
     /// same offsets — the bitwise rollback contract).
     fn truncate(&mut self, rows: usize) {
         let p = self.pool.page_rows;
+        let covered = self.reservation > 0;
         let keep = rows.div_ceil(p);
         for l in &mut self.layers {
             if rows >= l.rows {
                 continue;
             }
             while l.k_pages.len() > keep {
-                self.pool.free_page(l.k_pages.pop().unwrap());
-                self.pool.free_page(l.v_pages.pop().unwrap());
+                self.pool.free_page(l.k_pages.pop().unwrap(), covered);
+                self.pool.free_page(l.v_pages.pop().unwrap(), covered);
             }
             l.rows = rows;
         }
@@ -334,11 +358,13 @@ impl PagedKvStore for PagedKv {
     fn clone_box(&self) -> Box<dyn PagedKvStore> {
         let mut layers = Vec::with_capacity(self.layers.len());
         for l in &self.layers {
+            // the clone carries no reservation, so its pages count as
+            // unreserved regardless of what the source holds
             let copy = |pages: &Vec<Box<[f32]>>| -> Vec<Box<[f32]>> {
                 pages
                     .iter()
                     .map(|src| {
-                        let mut page = self.pool.alloc_page();
+                        let mut page = self.pool.alloc_page(false);
                         page.copy_from_slice(src);
                         page
                     })
@@ -356,9 +382,10 @@ impl PagedKvStore for PagedKv {
 
 impl Drop for PagedKv {
     fn drop(&mut self) {
+        let covered = self.reservation > 0;
         for l in &mut self.layers {
             for page in l.k_pages.drain(..).chain(l.v_pages.drain(..)) {
-                self.pool.free_page(page);
+                self.pool.free_page(page, covered);
             }
         }
         self.pool.release_reservation(self.reservation);
@@ -463,6 +490,25 @@ mod tests {
         let st = p.stats();
         assert_eq!((st.reserved_pages, st.used_pages), (0, 0));
         assert_eq!(st.reserved_peak, 32);
+    }
+
+    #[test]
+    fn unreserved_pages_count_against_admission() {
+        let p = pool(); // 32 pages
+        let mut un = p.fresh_state(); // no reservation
+        let kv = un.kv.as_mut().unwrap();
+        for i in 0..5 {
+            for l in 0..2 {
+                kv.append_row(l, &row(i), &row(i + 40));
+            }
+        }
+        // 5 rows at 4 rows/page × (K + V) × 2 layers, all unreserved
+        assert_eq!(p.stats().used_pages, 8);
+        assert!(p.fresh_reserved(25).is_none(), "8 unreserved + 25 > 32");
+        let r = p.fresh_reserved(24).expect("8 unreserved + 24 fits exactly");
+        drop(r);
+        drop(un);
+        assert!(p.fresh_reserved(32).is_some(), "frees restore the full budget");
     }
 
     #[test]

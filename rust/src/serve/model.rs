@@ -200,6 +200,13 @@ impl ServeModel {
         self.scratch.lock().unwrap().stats()
     }
 
+    /// Staging buffers parked on the scratch free list right now —
+    /// bounded by a hard cap (leases and recycles balance per decode
+    /// call), so long-running traffic cannot grow it tick over tick.
+    pub fn scratch_free_len(&self) -> usize {
+        self.scratch.lock().unwrap().free_len()
+    }
+
     /// A fresh position-0 state with an empty KV cache; feeding a prompt
     /// through [`decode_spans`](Self::decode_spans) from it *is* a
     /// prefill (bit-identical to [`prefill`](Self::prefill)).

@@ -222,6 +222,53 @@ fn paged_evict_resume_continues_byte_identically() {
 }
 
 #[test]
+fn paged_resume_rebuilds_draft_and_keeps_speculating() {
+    // eviction drops the draft state with the target KV; resume must
+    // rebuild it, or the session silently decodes vanilla forever (the
+    // spec tick forces k = 0 when draft is None). With draft == target
+    // the stream stays byte-identical either way, so the pin is on the
+    // proposal counters continuing to grow *after* the resume.
+    let m = model("mxfp4", 23);
+    let p = pool(6); // worst case 2·1·ceil(12/4) = 6 pages: one session at a time
+    let mut dense = Engine::new(Box::new(m.clone()), EngineConfig::batch(2));
+    let mut paged = Engine::new(Box::new(m.clone()), EngineConfig::paged(2, p.clone()));
+    paged.enable_spec(Box::new(m.clone()), SpecConfig { k: 3 }).unwrap();
+    for e in [&mut dense, &mut paged] {
+        e.submit(req(1, vec![1, 2, 3, 4], 9));
+    }
+    paged.step().unwrap(); // let req 1 start speculating
+    for e in [&mut dense, &mut paged] {
+        e.submit(req(2, vec![5, 6, 7, 8], 7)); // needs the whole pool: evicts req 1
+    }
+    for _ in 0..300 {
+        if paged.stats().resumes >= 1 {
+            break;
+        }
+        paged.step().unwrap();
+    }
+    let st = paged.stats();
+    assert!(st.evictions >= 1 && st.resumes >= 1, "scenario must evict and resume");
+    let proposed_at_resume = st.spec_proposed;
+    let done_paged = {
+        let mut b = paged.run().unwrap();
+        b.sort_by_key(|c| c.id);
+        b
+    };
+    let st = paged.stats();
+    assert!(
+        st.spec_proposed > proposed_at_resume,
+        "resumed session stopped speculating (draft not rebuilt after eviction)"
+    );
+    assert_eq!(st.spec_accepted, st.spec_proposed, "draft == target accepts everything");
+    let mut a = dense.run().unwrap();
+    a.sort_by_key(|c| c.id);
+    for (x, y) in a.iter().zip(&done_paged) {
+        assert_eq!(x.tokens, y.tokens, "req {}: spec evict/resume changed the stream", x.id);
+        assert_eq!(x.finish, y.finish);
+    }
+}
+
+#[test]
 fn paged_scratch_builds_stabilize_after_warmup() {
     // the per-tick staging-allocation fix: after the first requests at a
     // given batch shape, further traffic must be served entirely from
@@ -244,4 +291,12 @@ fn paged_scratch_builds_stabilize_after_warmup() {
     let (builds_after, hits_after) = m.scratch_stats();
     assert_eq!(builds_after, builds_warm, "warm traffic must not allocate new staging");
     assert!(hits_after > hits_warm, "warm traffic must lease from the free list");
+    // leak regression: leases and recycles balance per decode call, so
+    // the free list must not grow with tick count (decode holds at most
+    // two leases at a time — x + attn)
+    assert!(
+        m.scratch_free_len() <= 2,
+        "scratch free list grew past the lease high-water mark: {} buffers parked",
+        m.scratch_free_len()
+    );
 }
