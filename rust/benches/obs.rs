@@ -1,0 +1,116 @@
+//! Bench: observability overhead gate — the tracing spans left
+//! permanently in the packed-GEMM and decode hot paths must cost ≤ 3%
+//! with tracing *enabled*, and one relaxed atomic load when disabled.
+//!
+//! Span granularity is deliberately coarse (one guard per GEMM call /
+//! decode step, never per block or per row), so the enabled cost is a
+//! few `Instant::now` calls against milliseconds of compute. This bench
+//! pins that claim; `tests/obs.rs` pins the bitwise half (tracing never
+//! moves a result bit).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use mxfp4_train::gemm::{mx_gemm_packed, Mat};
+use mxfp4_train::model::{GPTConfig, NativeRecipe};
+use mxfp4_train::obs::trace;
+use mxfp4_train::rng::Rng;
+use mxfp4_train::runtime::executor;
+use mxfp4_train::serve::ServeModel;
+
+const SEQ: usize = 128;
+
+fn prompt(n: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::seed(seed);
+    (0..n).map(|_| (rng.next_u64() % vocab as u64) as i32).collect()
+}
+
+/// Seconds for 32 decode steps at window-edge depth (cloned state per
+/// iteration, same shape as the decode bench's hot loop).
+fn decode_secs(model: &Arc<ServeModel>) -> f64 {
+    let toks = prompt(SEQ - 33, model.vocab(), 2);
+    let (state, _) = model.prefill(&toks).unwrap();
+    harness::time_secs(1, 4, || {
+        let mut st = state.clone();
+        for i in 0..32 {
+            std::hint::black_box(model.decode_step(&mut st, (i % 251) as i32).unwrap());
+        }
+    })
+}
+
+fn main() {
+    assert!(!trace::enabled(), "bench must start with tracing off");
+
+    // -----------------------------------------------------------------
+    // disabled-path cost: the permanent price of a span call site
+    // -----------------------------------------------------------------
+    harness::header("obs: disabled span call cost (the permanent hot-path tax)");
+    const CALLS: usize = 1_000_000;
+    let secs = harness::time_secs(1, 4, || {
+        for _ in 0..CALLS {
+            std::hint::black_box(trace::span("bench.noop"));
+        }
+    });
+    let ns = secs / CALLS as f64 * 1e9;
+    println!("disabled span construct+drop: {ns:.2} ns/call");
+    assert!(ns < 1000.0, "disabled span must stay in the nanoseconds: {ns:.2} ns");
+
+    // -----------------------------------------------------------------
+    // 1024^3 packed GEMM: tracing off vs on (one span per GEMM call)
+    // -----------------------------------------------------------------
+    harness::header("obs: packed GEMM 1024^3, tracing off vs on (1 worker)");
+    let mut rng = Rng::seed(0);
+    let (m, n, k) = (1024usize, 1024usize, 1024usize);
+    let aw = Mat::gaussian(m, k, 1.0, &mut rng);
+    let bw = Mat::gaussian(n, k, 1.0, &mut rng); // Bᵀ-shaped
+    let pa = aw.pack_nr();
+    let pbt = bw.pack_nr();
+    let flops = 2.0 * (m * n * k) as f64;
+
+    let t_off = harness::bench("mx_gemm_packed (tracing off)", flops, "flop", 1, 2, || {
+        std::hint::black_box(mx_gemm_packed(&pa, &pbt, 1));
+    });
+    trace::set_enabled(true);
+    let t_on = harness::bench("mx_gemm_packed (tracing on)", flops, "flop", 1, 2, || {
+        std::hint::black_box(mx_gemm_packed(&pa, &pbt, 1));
+    });
+    trace::set_enabled(false);
+    trace::clear();
+    let gemm_ratio = t_on / t_off;
+    println!("gemm traced/untraced: {gemm_ratio:.4} (gate <= 1.03)");
+
+    // -----------------------------------------------------------------
+    // serving decode: tracing off vs on (spans per decode + per GEMM)
+    // -----------------------------------------------------------------
+    harness::header("obs: KV decode 2L d128, tracing off vs on (1 thread)");
+    let cfg = GPTConfig::new(256, 128, 2, 4, SEQ, 0);
+    let params = executor::init_params_for(&cfg.param_specs(), cfg.n_layers, 1);
+    let model = Arc::new({
+        let mut m = ServeModel::new(cfg, NativeRecipe::parse("mxfp4").unwrap(), params).unwrap();
+        m.set_workers(1);
+        m
+    });
+    let d_off = decode_secs(&model);
+    trace::set_enabled(true);
+    let d_on = decode_secs(&model);
+    trace::set_enabled(false);
+    trace::clear();
+    let decode_ratio = d_on / d_off;
+    println!(
+        "decode untraced {:.3} us/tok, traced {:.3} us/tok, ratio {decode_ratio:.4} (gate <= 1.03)",
+        d_off / 32.0 * 1e6,
+        d_on / 32.0 * 1e6
+    );
+
+    assert!(
+        gemm_ratio <= 1.03,
+        "tracing overhead on the packed GEMM exceeded 3%: ratio {gemm_ratio:.4}"
+    );
+    assert!(
+        decode_ratio <= 1.03,
+        "tracing overhead on the decode path exceeded 3%: ratio {decode_ratio:.4}"
+    );
+    println!("obs overhead gate passed: gemm {gemm_ratio:.4}, decode {decode_ratio:.4} (<= 1.03)");
+}

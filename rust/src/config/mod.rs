@@ -41,6 +41,14 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Master-weight rounding for the BF16 parameter copy: "nearest" | "stochastic".
     pub param_rounding: String,
+    /// Sample quantization-health telemetry (clip fraction, exponent
+    /// histograms, SR dither stats — `obs::quant`) every N steps; 0
+    /// (default) disables sampling entirely.
+    pub quant_sample_every: usize,
+    /// Flag a gradient-norm spike when the post-clip norm exceeds this
+    /// multiple of the running median (`obs` counter + warning); 0
+    /// disables the guard.
+    pub grad_spike_mult: f32,
 }
 
 impl Default for TrainConfig {
@@ -64,6 +72,8 @@ impl Default for TrainConfig {
             eval_batches: 4,
             seed: 0,
             param_rounding: "nearest".into(),
+            quant_sample_every: 0,
+            grad_spike_mult: 10.0,
         }
     }
 }
@@ -92,6 +102,8 @@ impl TrainConfig {
             "eval_batches" => self.eval_batches = parse_usize(value)?,
             "seed" => self.seed = value.parse().map_err(|e| format!("{key}: {e}"))?,
             "param_rounding" => self.param_rounding = value.into(),
+            "quant_sample_every" => self.quant_sample_every = parse_usize(value)?,
+            "grad_spike_mult" => self.grad_spike_mult = parse_f32(value)?,
             _ => return Err(format!("unknown config key {key:?}")),
         }
         Ok(())
@@ -185,6 +197,10 @@ mod tests {
         c.set("recipe", "mxfp4").unwrap();
         c.set("backend", "native").unwrap();
         c.set("microbatches", "4").unwrap();
+        c.set("quant_sample_every", "25").unwrap();
+        c.set("grad_spike_mult", "8.5").unwrap();
+        assert_eq!(c.quant_sample_every, 25);
+        assert_eq!(c.grad_spike_mult, 8.5);
         assert_eq!(c.lr, 0.002);
         assert_eq!(c.steps, 123);
         assert_eq!(c.recipe, "mxfp4");

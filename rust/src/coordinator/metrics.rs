@@ -1,10 +1,16 @@
 //! Run metrics: console + CSV logging of the quantities the paper plots
 //! (train loss/ppl per step, val loss/ppl per eval — Figures 3-6 and
-//! 10-14 are regenerated from these CSVs).
+//! 10-14 are regenerated from these CSVs), plus sampled quantization
+//! health (`quant.csv`, see `obs::quant`).
+//!
+//! Writers are buffered; rows are durable after every eval point and on
+//! drop, so a killed run loses at most the steps since its last eval.
 
-use std::io::Write;
+use std::fs::File;
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
+use crate::obs::quant::QuantRow;
 use crate::util::timer::Timer;
 
 /// One training step's record.
@@ -31,14 +37,17 @@ impl EvalRecord {
     }
 }
 
-/// Collects records and streams them to `<dir>/<run>/{train,val}.csv`.
+/// Collects records and streams them to `<dir>/<run>/{train,val,quant}.csv`.
 pub struct Metrics {
     pub run_name: String,
     pub dir: PathBuf,
     pub steps: Vec<StepRecord>,
     pub evals: Vec<EvalRecord>,
-    train_csv: Option<std::fs::File>,
-    val_csv: Option<std::fs::File>,
+    train_csv: Option<BufWriter<File>>,
+    val_csv: Option<BufWriter<File>>,
+    /// Lazily created on the first [`Metrics::record_quant`] call so runs
+    /// with quant sampling disabled don't leave an empty file behind.
+    quant_csv: Option<BufWriter<File>>,
     timer: Timer,
     pub log_every: usize,
 }
@@ -50,8 +59,8 @@ impl Metrics {
             Some(d) => {
                 let run_dir = d.join(run_name);
                 std::fs::create_dir_all(&run_dir)?;
-                let mut t = std::fs::File::create(run_dir.join("train.csv"))?;
-                let mut v = std::fs::File::create(run_dir.join("val.csv"))?;
+                let mut t = BufWriter::new(File::create(run_dir.join("train.csv"))?);
+                let mut v = BufWriter::new(File::create(run_dir.join("val.csv"))?);
                 writeln!(t, "step,loss,ppl,lr,grad_norm,tokens_per_sec")?;
                 writeln!(v, "step,val_loss,val_ppl")?;
                 (Some(t), Some(v), run_dir)
@@ -65,6 +74,7 @@ impl Metrics {
             evals: Vec::new(),
             train_csv,
             val_csv,
+            quant_csv: None,
             timer: Timer::start(),
             log_every: 10,
         })
@@ -111,6 +121,59 @@ impl Metrics {
             rec.ppl()
         );
         self.evals.push(rec);
+        // eval points double as durability barriers for all CSV streams
+        self.flush();
+    }
+
+    /// Append sampled quantization-health rows (see `obs::quant`) to
+    /// `quant.csv`, creating it on first use. In-memory mode drops them.
+    pub fn record_quant(&mut self, rows: &[QuantRow]) {
+        if rows.is_empty() || self.dir.as_os_str().is_empty() {
+            return;
+        }
+        if self.quant_csv.is_none() {
+            match File::create(self.dir.join("quant.csv")) {
+                Ok(f) => {
+                    let mut w = BufWriter::new(f);
+                    let _ = writeln!(
+                        w,
+                        "step,class,clip_fraction,flip_rate,abs_diff_mean,\
+                         exp_min,exp_mean,exp_max,samples"
+                    );
+                    self.quant_csv = Some(w);
+                }
+                Err(e) => {
+                    crate::warn!("metrics: cannot create quant.csv: {e}");
+                    return;
+                }
+            }
+        }
+        if let Some(f) = &mut self.quant_csv {
+            for r in rows {
+                let _ = writeln!(
+                    f,
+                    "{},{},{:.6},{:.6},{:.6e},{},{:.2},{},{}",
+                    r.step,
+                    r.class,
+                    r.clip_fraction,
+                    r.flip_rate,
+                    r.abs_diff_mean,
+                    r.exp_min,
+                    r.exp_mean,
+                    r.exp_max,
+                    r.samples
+                );
+            }
+        }
+    }
+
+    /// Flush every CSV stream to disk (best-effort).
+    pub fn flush(&mut self) {
+        for w in [&mut self.train_csv, &mut self.val_csv, &mut self.quant_csv] {
+            if let Some(f) = w {
+                let _ = f.flush();
+            }
+        }
     }
 
     /// Mean train loss over the last `n` steps (Table 2's "Train. Loss").
@@ -128,6 +191,15 @@ impl Metrics {
 
     pub fn total_secs(&self) -> f64 {
         self.timer.secs()
+    }
+}
+
+impl Drop for Metrics {
+    fn drop(&mut self) {
+        // `BufWriter` would flush on drop anyway, but doing it here makes
+        // the durability contract explicit (and keeps it if the writer
+        // type ever changes).
+        self.flush();
     }
 }
 
@@ -162,5 +234,73 @@ mod tests {
         m.record_eval(EvalRecord { step: 3, val_loss: 1.2 });
         assert_eq!(m.final_val_loss(), 1.2);
         assert!((m.evals[0].ppl() - (1.2f32 as f64).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buffered_rows_survive_mid_run_drop() {
+        let dir = std::env::temp_dir().join("mxfp4_metrics_drop_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut m = Metrics::new("unit", Some(&dir)).unwrap();
+        m.log_every = 0;
+        for i in 0..5 {
+            m.record_step(StepRecord {
+                step: i,
+                loss: 3.0,
+                lr: 1e-3,
+                grad_norm: 0.5,
+                tokens: 512,
+                secs: 0.1,
+            });
+        }
+        // simulate a killed run: no eval barrier, just drop mid-run
+        drop(m);
+        let t = std::fs::read_to_string(dir.join("unit/train.csv")).unwrap();
+        assert_eq!(t.lines().count(), 6, "header + 5 buffered rows durable after drop");
+    }
+
+    #[test]
+    fn eval_flushes_and_quant_csv_roundtrips() {
+        let dir = std::env::temp_dir().join("mxfp4_metrics_quant_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut m = Metrics::new("unit", Some(&dir)).unwrap();
+        m.log_every = 0;
+        m.record_step(StepRecord {
+            step: 0,
+            loss: 2.0,
+            lr: 1e-3,
+            grad_norm: 0.5,
+            tokens: 512,
+            secs: 0.1,
+        });
+        m.record_quant(&[QuantRow {
+            step: 0,
+            class: "wgrad",
+            samples: 2,
+            clip_fraction: 0.0125,
+            flip_rate: 0.5,
+            abs_diff_mean: 1.5e-2,
+            exp_min: -3,
+            exp_mean: -1.25,
+            exp_max: 2,
+        }]);
+        m.record_eval(EvalRecord { step: 1, val_loss: 2.5 });
+        // eval is a durability barrier: rows readable while `m` is live
+        let t = std::fs::read_to_string(dir.join("unit/train.csv")).unwrap();
+        assert!(t.contains("2.000000"), "train row flushed by eval");
+        let q = std::fs::read_to_string(dir.join("unit/quant.csv")).unwrap();
+        let mut lines = q.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "step,class,clip_fraction,flip_rate,abs_diff_mean,exp_min,exp_mean,exp_max,samples"
+        );
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("0,wgrad,0.012500,0.500000,"), "row: {row}");
+        assert!(row.ends_with(",-3,-1.25,2,2"), "row: {row}");
+        drop(m);
+        // in-memory mode ignores quant rows entirely
+        let mut mem = Metrics::new("mem", None).unwrap();
+        mem.log_every = 0;
+        mem.record_quant(&[]);
+        assert!(mem.dir.as_os_str().is_empty());
     }
 }

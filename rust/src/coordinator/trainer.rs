@@ -15,7 +15,7 @@
 //! all-reduce folds in shard order, so gradients are byte-identical for
 //! any worker count — see `coordinator::dp`.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -68,6 +68,11 @@ pub struct Trainer {
     step: usize,
     /// Drives per-step data-order seeds (one draw per step).
     rng: Rng,
+    /// Flags non-finite losses and grad-norm spikes (obs counters).
+    guard: AnomalyGuard,
+    /// `--metrics-dump`: write an obs JSON snapshot here after every
+    /// eval and at run end.
+    metrics_dump: Option<PathBuf>,
 }
 
 impl Trainer {
@@ -143,6 +148,9 @@ impl Trainer {
         let seq = train_spec.seq_len();
         let backend_kind = train_spec.kind();
         let seed = cfg.seed;
+        // arm the (read-only) quant-health sampler; 0 keeps it off
+        crate::obs::quant::set_sample_every(cfg.quant_sample_every as u64);
+        let guard = AnomalyGuard::new(cfg.grad_spike_mult);
         Ok(Trainer {
             cfg,
             metrics,
@@ -161,7 +169,15 @@ impl Trainer {
             backend_kind,
             step: 0,
             rng: Rng::fold_in(seed, 0xDA7A),
+            guard,
+            metrics_dump: None,
         })
+    }
+
+    /// Write an obs JSON snapshot to `path` after every eval and at run
+    /// end (the train CLI's `--metrics-dump`).
+    pub fn set_metrics_dump(&mut self, path: PathBuf) {
+        self.metrics_dump = Some(path);
     }
 
     /// Tokens consumed per optimizer step (all DP shards).
@@ -172,6 +188,8 @@ impl Trainer {
     /// One optimizer step: S independent microbatches → all-reduce → clip
     /// → AdamW. Returns the averaged loss.
     pub fn train_step(&mut self) -> Result<f32> {
+        let _span = crate::obs::trace::span_cat("train.step", "train");
+        crate::obs::quant::set_step(self.step as u64);
         let t = Timer::start();
         // the trainer rng drives data order: one fresh stream per step,
         // independent of worker count and resumable from `cfg.seed`
@@ -196,7 +214,30 @@ impl Trainer {
         let grad_norm =
             optim::clip_global_norm(&mut grads, self.cfg.grad_clip, crate::util::threadpool::default_workers());
         let lr = self.schedule.lr(self.step);
-        self.opt.step(&grads, lr, &mut self.compute);
+        let (loss_nonfinite, grad_spike) = self.guard.observe(loss, grad_norm);
+        if loss_nonfinite {
+            crate::obs::inc_counter("train.anomalies.loss_nonfinite");
+            crate::warn!(
+                "[{}] step {}: non-finite loss {loss} — run is likely diverging",
+                self.metrics.run_name,
+                self.step
+            );
+        }
+        if let Some(median) = grad_spike {
+            crate::obs::inc_counter("train.anomalies.grad_spike");
+            crate::warn!(
+                "[{}] step {}: grad norm {:.4} exceeds {}x running median {:.4}",
+                self.metrics.run_name,
+                self.step,
+                grad_norm,
+                self.cfg.grad_spike_mult,
+                median
+            );
+        }
+        {
+            let _span = crate::obs::trace::span_cat("optim.step", "train");
+            self.opt.step(&grads, lr, &mut self.compute);
+        }
         // The optimizer just rewrote the compute weights: every packed
         // MXFP4 view is stale. Consumers re-pack lazily, at most once per
         // (weight, orientation) until the next step — quantize-once. The
@@ -215,12 +256,20 @@ impl Trainer {
             tokens: self.tokens_per_step(),
             secs: t.secs(),
         });
+        // drain any quant-health samples this step produced into
+        // quant.csv and the gauge registry (no-op when sampling is off)
+        let rows = crate::obs::quant::take_rows(self.step);
+        if !rows.is_empty() {
+            self.metrics.record_quant(&rows);
+            crate::obs::quant::publish();
+        }
         self.step += 1;
         Ok(loss)
     }
 
     /// Validation loss over the holdout split.
     pub fn evaluate(&mut self) -> Result<f32> {
+        let _span = crate::obs::trace::span_cat("train.eval", "train");
         let batches = self.dataset.val_batches(self.batch, self.seq, self.cfg.eval_batches);
         let mut total = 0.0f64;
         for b in &batches {
@@ -228,7 +277,29 @@ impl Trainer {
         }
         let loss = (total / batches.len().max(1) as f64) as f32;
         self.metrics.record_eval(EvalRecord { step: self.step, val_loss: loss });
+        self.publish_obs();
         Ok(loss)
+    }
+
+    /// Publish trainer-level gauges into the global obs registry and, if
+    /// a `--metrics-dump` path is set, write a fresh JSON snapshot.
+    pub fn publish_obs(&self) {
+        crate::obs::set_gauge("train.step", self.step as f64);
+        if let Some(r) = self.metrics.steps.last() {
+            crate::obs::set_gauge("train.loss", r.loss as f64);
+            crate::obs::set_gauge("train.grad_norm", r.grad_norm);
+            crate::obs::set_gauge("train.lr", r.lr as f64);
+            crate::obs::set_gauge("train.tokens_per_sec", r.tokens as f64 / r.secs.max(1e-9));
+        }
+        if let Some(e) = self.metrics.evals.last() {
+            crate::obs::set_gauge("train.val_loss", e.val_loss as f64);
+        }
+        crate::obs::quant::publish();
+        if let Some(p) = &self.metrics_dump {
+            if let Err(e) = crate::obs::write_snapshot(p) {
+                crate::warn!("metrics dump {} failed: {e}", p.display());
+            }
+        }
     }
 
     /// Run the configured number of steps with periodic eval.
@@ -246,6 +317,8 @@ impl Trainer {
         {
             self.evaluate()?;
         }
+        self.publish_obs();
+        self.metrics.flush();
         Ok(self.summary())
     }
 
@@ -342,5 +415,141 @@ impl Trainer {
     /// artifact backend reports zeros; its cache lives inside the HLO).
     pub fn backend_cache_stats(&self) -> (usize, usize, usize) {
         self.pool.cache_stats()
+    }
+}
+
+/// Streaming anomaly detector for the training loop: flags non-finite
+/// losses, and gradient norms spiking above a configurable multiple of
+/// the running median. Pure accounting — it never alters a step.
+pub(crate) struct AnomalyGuard {
+    /// Spike threshold as a multiple of the running median; 0 disables.
+    mult: f64,
+    /// Ring of recent (finite) post-clip grad norms.
+    window: Vec<f64>,
+    next: usize,
+}
+
+impl AnomalyGuard {
+    /// Running-median window length.
+    const WINDOW: usize = 64;
+    /// Spike detection stays silent until this many norms are seen.
+    const MIN_SAMPLES: usize = 8;
+
+    pub fn new(mult: f32) -> AnomalyGuard {
+        AnomalyGuard { mult: mult as f64, window: Vec::new(), next: 0 }
+    }
+
+    fn median(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            return None;
+        }
+        let mut v = self.window.clone();
+        v.sort_by(f64::total_cmp);
+        Some(v[v.len() / 2])
+    }
+
+    /// Observe one step's (loss, post-clip grad norm). Returns
+    /// `(loss_nonfinite, grad_spike)`, the spike carrying the median it
+    /// was judged against. Spiking norms still enter the window, so a
+    /// genuine regime change stops firing once the window catches up;
+    /// non-finite norms always flag and never enter the window.
+    pub fn observe(&mut self, loss: f32, grad_norm: f64) -> (bool, Option<f64>) {
+        let loss_bad = !loss.is_finite();
+        if self.mult <= 0.0 {
+            return (loss_bad, None);
+        }
+        if !grad_norm.is_finite() {
+            return (loss_bad, Some(self.median().unwrap_or(0.0)));
+        }
+        let spike = match self.median() {
+            Some(med)
+                if self.window.len() >= Self::MIN_SAMPLES
+                    && med > 0.0
+                    && grad_norm > self.mult * med =>
+            {
+                Some(med)
+            }
+            _ => None,
+        };
+        if self.window.len() < Self::WINDOW {
+            self.window.push(grad_norm);
+        } else {
+            self.window[self.next] = grad_norm;
+            self.next = (self.next + 1) % Self::WINDOW;
+        }
+        (loss_bad, spike)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::AnomalyGuard;
+
+    #[test]
+    fn guard_disabled_never_flags_spikes() {
+        let mut g = AnomalyGuard::new(0.0);
+        for _ in 0..20 {
+            assert_eq!(g.observe(2.0, 1.0), (false, None));
+        }
+        assert_eq!(g.observe(2.0, 1e9), (false, None));
+    }
+
+    #[test]
+    fn guard_flags_nonfinite_loss_regardless_of_norm() {
+        let mut g = AnomalyGuard::new(10.0);
+        let (bad, _) = g.observe(f32::NAN, 1.0);
+        assert!(bad);
+        let (bad, _) = g.observe(f32::INFINITY, 1.0);
+        assert!(bad);
+        let (bad, _) = g.observe(2.0, 1.0);
+        assert!(!bad);
+    }
+
+    #[test]
+    fn guard_needs_min_samples_then_flags_spikes() {
+        let mut g = AnomalyGuard::new(10.0);
+        // 7 quiet steps: the 8th observation sees only 7 norms → silent
+        for _ in 0..7 {
+            assert_eq!(g.observe(2.0, 1.0), (false, None));
+        }
+        assert_eq!(g.observe(2.0, 1000.0), (false, None), "below MIN_SAMPLES stays silent");
+        // top the window back up with quiet steps, then spike
+        for _ in 0..8 {
+            g.observe(2.0, 1.0);
+        }
+        let (_, spike) = g.observe(2.0, 1000.0);
+        assert_eq!(spike, Some(1.0), "spike judged against running median");
+        // 10x median exactly is NOT a spike (strict >)
+        let (_, spike) = g.observe(2.0, 10.0);
+        assert_eq!(spike, None);
+    }
+
+    #[test]
+    fn guard_adapts_to_a_regime_change() {
+        let mut g = AnomalyGuard::new(10.0);
+        for _ in 0..8 {
+            g.observe(2.0, 1.0);
+        }
+        let mut fired = 0;
+        for _ in 0..20 {
+            if g.observe(2.0, 1000.0).1.is_some() {
+                fired += 1;
+            }
+        }
+        assert!(fired >= 1, "first spike fires");
+        assert!(fired < 20, "persistent shift stops firing as the median catches up");
+        assert_eq!(g.observe(2.0, 1000.0), (false, None), "new regime is the norm now");
+    }
+
+    #[test]
+    fn guard_flags_nonfinite_norms_without_admitting_them() {
+        let mut g = AnomalyGuard::new(10.0);
+        for _ in 0..8 {
+            g.observe(2.0, 1.0);
+        }
+        let (_, spike) = g.observe(2.0, f64::NAN);
+        assert_eq!(spike, Some(1.0));
+        // window unchanged: a quiet step right after is still quiet
+        assert_eq!(g.observe(2.0, 1.0), (false, None));
     }
 }

@@ -318,6 +318,12 @@ pub fn mx_gemm_packed(a: &MxMat, bt: &MxMat, workers: usize) -> Mat {
 /// the shuffle kernel independently of host detection and the
 /// `MX_FORCE_SCALAR` override.
 pub fn mx_gemm_packed_with(a: &MxMat, bt: &MxMat, workers: usize, kernel: simd::Kernel) -> Mat {
+    let name = if matches!(kernel, simd::Kernel::Scalar) {
+        "gemm.packed.scalar"
+    } else {
+        "gemm.packed.simd"
+    };
+    let _span = crate::obs::trace::span_cat(name, "gemm");
     assert_eq!(a.cols, bt.cols, "reduction dims differ");
     let (m, n) = (a.rows, bt.rows);
     let mut c = Mat::zeros(m, n);

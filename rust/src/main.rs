@@ -32,6 +32,7 @@ use mxfp4_train::{eval, gemm, hadamard, info, mx, perfmodel, rng::Rng};
 
 fn main() -> Result<()> {
     mxfp4_train::util::log::level_from_env();
+    mxfp4_train::obs::trace::init_from_env();
     let args = Args::from_env();
     match args.command.as_deref() {
         Some("train") => cmd_train(&args),
@@ -88,13 +89,34 @@ fn results_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("results", "results"))
 }
 
+/// `--trace-out <path>`: turn span collection on for the whole command;
+/// [`finish_trace`] writes the Chrome trace and prints the phase tree.
+fn start_trace(args: &Args) -> Option<PathBuf> {
+    let p = args.get("trace-out").map(PathBuf::from)?;
+    mxfp4_train::obs::trace::set_enabled(true);
+    Some(p)
+}
+
+fn finish_trace(path: &Option<PathBuf>) -> Result<()> {
+    let Some(p) = path else { return Ok(()) };
+    mxfp4_train::obs::trace::write_chrome_trace(p)
+        .with_context(|| format!("--trace-out {}", p.display()))?;
+    eprint!("{}", mxfp4_train::obs::trace::phase_report());
+    info!("chrome trace -> {} (open in Perfetto or chrome://tracing)", p.display());
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    let trace = start_trace(args);
     let mut cfg = TrainConfig::preset(args.get_or("config", "tiny"));
     cfg.apply_cli(args);
     let reg = registry(args)?;
     let ds = dataset(args, cfg.seed)?;
     let rd = results_dir(args);
     let mut trainer = Trainer::new(reg.as_ref(), cfg, ds, Some(&rd))?;
+    if let Some(p) = args.get("metrics-dump") {
+        trainer.set_metrics_dump(PathBuf::from(p));
+    }
     let summary = trainer.run()?;
     if args.has("save") || args.get("checkpoint-dir").is_some() {
         let dir = PathBuf::from(args.get_or("checkpoint-dir", "results"))
@@ -113,6 +135,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         (summary.final_val_loss as f64).exp(),
         summary.total_secs
     );
+    finish_trace(&trace)?;
     Ok(())
 }
 
@@ -247,7 +270,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
 /// with or without a draft. Weights are packed once at load and shared
 /// (`Arc`) across every session; a tokens/sec + occupancy (+ acceptance
 /// rate) summary prints at exit.
+/// Observability: --metrics-dump <path> writes an obs JSON snapshot at
+/// exit, --trace-out <path> records Chrome-trace spans (Perfetto), and
+/// the TCP protocol answers `stats` / `metrics` / `metrics prometheus`
+/// lines in-band — see docs/OBSERVABILITY.md.
 fn cmd_serve(args: &Args) -> Result<()> {
+    let trace = start_trace(args);
     let reg = registry(args)?;
     let config = args.get_or("config", "tiny");
     let recipe = args.get_or("recipe", "mxfp4");
@@ -439,6 +467,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             st.latency.count,
         );
     }
+    if let Some(p) = args.get("metrics-dump") {
+        engine.publish_obs();
+        mxfp4_train::obs::write_snapshot(std::path::Path::new(p))
+            .with_context(|| format!("--metrics-dump {p}"))?;
+        info!("metrics snapshot -> {p}");
+    }
+    finish_trace(&trace)?;
     Ok(())
 }
 

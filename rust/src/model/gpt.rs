@@ -156,6 +156,9 @@ impl NativeBackend {
         let (m, n) = self.weight_dims(widx);
         debug_assert_eq!(x2.cols, n, "fwd reduction dim");
         if self.recipe.quantize_fwd {
+            // read-only telemetry on the operand about to be quantized
+            // (no-op unless quant sampling is enabled for this step)
+            crate::obs::quant::maybe_sample(crate::obs::quant::GemmClass::Fwd, &x2.data);
             let pa = PackPipeline::new(&x2.data, x2.rows, x2.cols).pack_nr(self.workers);
             let pw = self.cache.pack_nr(widx, w, m, n, Orientation::AsStored, self.workers);
             gemm::mx_gemm_packed(&pa, pw, self.workers)
@@ -174,6 +177,9 @@ impl NativeBackend {
     fn linear_dgrad(&mut self, g2: &Mat, widx: usize, w: &[f32], rng: &mut Rng) -> Mat {
         let (m, n) = self.weight_dims(widx);
         debug_assert_eq!(g2.cols, m, "dgrad reduction dim");
+        if self.recipe.bwd != MxMode::Exact {
+            crate::obs::quant::maybe_sample(crate::obs::quant::GemmClass::Dgrad, &g2.data);
+        }
         match self.recipe.bwd {
             MxMode::Exact => {
                 // per-epoch prep cache: the transpose is a pure function
@@ -229,6 +235,7 @@ impl NativeBackend {
                 gemm::matmul_bt_raw(&gt.data, &xt, gt.rows, x2.cols, x2.rows, self.workers)
             }
             mode => {
+                crate::obs::quant::maybe_sample(crate::obs::quant::GemmClass::Wgrad, &g2.data);
                 // only RHT modes constrain the block size; NR/SR tolerate
                 // any reduction dim (row-aware tail blocks)
                 let g = if mode.uses_rht() { g_eff(self.recipe.g, g2.rows) } else { self.recipe.g };
@@ -556,6 +563,7 @@ pub(crate) fn prefill_rows(
     linear: &mut dyn FnMut(&Mat, usize) -> Mat,
     tokens: &[i32],
 ) -> Result<(KvCache, Mat)> {
+    let _span = crate::obs::trace::span_cat("model.prefill", "model");
     let (d, t, heads) = (cfg.d_model, cfg.seq_len, cfg.n_heads);
     let n = tokens.len();
     ensure!(n >= 1 && n <= t, "prefill wants 1..={t} tokens, got {n}");
@@ -714,6 +722,7 @@ pub(crate) fn decode_spans(
     states: &mut [&mut DecodeState],
     spans: &[&[i32]],
 ) -> Result<Mat> {
+    let _span = crate::obs::trace::span_cat("model.decode", "model");
     let (d, t, heads) = (cfg.d_model, cfg.seq_len, cfg.n_heads);
     let ns = states.len();
     ensure!(ns > 0, "decode wants at least one session");
@@ -1196,6 +1205,7 @@ fn gelu_grad(x: f32) -> f32 {
 /// and the attention probabilities `(batch, heads, T, T)` (zero above
 /// the diagonal) for the backward pass.
 fn attn_fwd(qkv: &Mat, batch: usize, t: usize, heads: usize) -> (Mat, Vec<f32>) {
+    let _span = crate::obs::trace::span_cat("model.attn_fwd", "model");
     let d = qkv.cols / 3;
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
@@ -1250,6 +1260,7 @@ fn attn_bwd(
     t: usize,
     heads: usize,
 ) -> Mat {
+    let _span = crate::obs::trace::span_cat("model.attn_bwd", "model");
     let d = qkv.cols / 3;
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();

@@ -178,6 +178,10 @@ impl<'a> PackPipeline<'a> {
     /// [`MxMat::quantize_nr`] over the (possibly transposed, possibly
     /// RHT-transformed) materialized operand, for any worker count.
     pub fn pack_nr(&self, workers: usize) -> MxMat {
+        let _span = crate::obs::trace::span_cat(
+            if self.has_rht() { "pack.nr.rht" } else { "pack.nr" },
+            "pack",
+        );
         self.pack_impl(None, workers)
     }
 
@@ -192,6 +196,10 @@ impl<'a> PackPipeline<'a> {
     /// materialized operand, and `rng` advances exactly `rows × cols`
     /// draws.
     pub fn pack_sr(&self, rng: &mut Rng, workers: usize) -> MxMat {
+        let _span = crate::obs::trace::span_cat(
+            if self.has_rht() { "pack.sr.rht" } else { "pack.sr" },
+            "pack",
+        );
         if self.par_workers(workers) <= 1 {
             return self.pack_seq(Some(rng));
         }

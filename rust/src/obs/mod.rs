@@ -1,0 +1,437 @@
+//! Process-global observability: metrics registry, hot-path tracing
+//! spans, and quantization-health telemetry.
+//!
+//! Three pillars (see `docs/OBSERVABILITY.md` for the catalogue):
+//!
+//! * **Registry** (this module): named atomic [`Counter`]s, [`Gauge`]s
+//!   and fixed-bucket [`Histogram`]s behind a process-global map, plus
+//!   the reusable [`LatencyRing`] (extracted from `serve::engine`).
+//!   One [`snapshot_json`] / [`prometheus_text`] call exports
+//!   everything — engine, pool, cache, scratch, and quant-health —
+//!   in one document.
+//! * **Tracing** ([`trace`]): per-thread span buffers behind an RAII
+//!   guard, aggregated into a phase tree and exportable as Chrome
+//!   trace-event JSON (Perfetto-loadable). One relaxed atomic load
+//!   when disabled.
+//! * **Quant health** ([`quant`]): sampled live clip-fraction, E8M0
+//!   block-exponent histograms and SR-vs-NR dither statistics per
+//!   GEMM class — the paper's §3–§4 variance story at runtime.
+//!
+//! Everything here is *read-only* with respect to the computation:
+//! instrumentation never touches an rng stream, an operand, or a
+//! result, so every bitwise-parity contract holds with observability
+//! on or off.
+
+pub mod quant;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// Instruments
+// ---------------------------------------------------------------------------
+
+/// Monotone event counter (relaxed atomics; cheap from any thread).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 value (stored as bits in an `AtomicU64`).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: `bounds` are ascending upper edges, with an
+/// implicit final +Inf bucket. Observation cost is one binary search +
+/// two relaxed atomic adds + one CAS loop for the running sum.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+/// Default buckets for second-scale latencies: 10 µs → 10 s, ~⅓-decade.
+pub const LATENCY_BUCKETS: [f64; 13] = [
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0, 10.0,
+];
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// `(upper_bound, cumulative_count)` per bucket; the final entry is
+    /// `(f64::INFINITY, total)` — the Prometheus exposition shape.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.buckets.len());
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            let le = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((le, acc));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Latency ring (extracted from serve::engine)
+// ---------------------------------------------------------------------------
+
+/// Retained latency samples at the default capacity (~256 KiB of f32).
+pub const LATENCY_WINDOW: usize = 1 << 16;
+
+/// A bounded ring of latency samples (seconds) with exact quantiles
+/// over the retained window. The ring keeps the newest `cap` samples;
+/// `count` keeps growing. Owned (not atomic): it lives inside stats
+/// structs that are already single-writer, and quantiles need the raw
+/// samples anyway.
+#[derive(Debug, Clone)]
+pub struct LatencyRing {
+    samples: Vec<f32>,
+    next: usize,
+    cap: usize,
+    /// Total samples ever recorded (≥ retained samples).
+    pub count: u64,
+}
+
+impl Default for LatencyRing {
+    fn default() -> LatencyRing {
+        LatencyRing::with_capacity(LATENCY_WINDOW)
+    }
+}
+
+impl LatencyRing {
+    pub fn with_capacity(cap: usize) -> LatencyRing {
+        LatencyRing { samples: Vec::new(), next: 0, cap: cap.max(1), count: 0 }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        let s = secs as f32;
+        if self.samples.len() < self.cap {
+            self.samples.push(s);
+        } else {
+            self.samples[self.next] = s;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.count += 1;
+    }
+
+    /// Retained samples (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The `p`-th percentile (`p` in `[0, 1]`) of the retained window;
+    /// 0 before any sample.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(f32::total_cmp);
+        let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+        v[idx] as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        histograms: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// Get-or-register a counter. Hold the `Arc` for hot paths; the map
+/// lookup takes a mutex.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut m = registry().counters.lock().unwrap();
+    m.entry(name.to_string()).or_default().clone()
+}
+
+/// Get-or-register a gauge.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut m = registry().gauges.lock().unwrap();
+    m.entry(name.to_string()).or_default().clone()
+}
+
+/// Get-or-register a histogram. `bounds` apply only on first
+/// registration; later callers share the existing instrument.
+pub fn histogram(name: &str, bounds: &[f64]) -> Arc<Histogram> {
+    let mut m = registry().histograms.lock().unwrap();
+    m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new(bounds))).clone()
+}
+
+/// One-shot counter bump (registry lookup per call — fine off the hot
+/// path; hot paths should hold the `Arc` from [`counter`]).
+pub fn inc_counter(name: &str) {
+    counter(name).inc();
+}
+
+pub fn add_counter(name: &str, n: u64) {
+    counter(name).add(n);
+}
+
+/// One-shot gauge write.
+pub fn set_gauge(name: &str, v: f64) {
+    gauge(name).set(v);
+}
+
+/// Drop every registered instrument (tests / tools only; live `Arc`
+/// handles keep working but detach from future snapshots).
+pub fn reset() {
+    registry().counters.lock().unwrap().clear();
+    registry().gauges.lock().unwrap().clear();
+    registry().histograms.lock().unwrap().clear();
+    quant::reset();
+}
+
+// ---------------------------------------------------------------------------
+// Export
+// ---------------------------------------------------------------------------
+
+/// Snapshot every registered instrument (plus the quant-health table)
+/// as one JSON document: `{"counters": {...}, "gauges": {...},
+/// "histograms": {...}, "quant": {...}}`.
+pub fn snapshot_json() -> Json {
+    let mut counters = BTreeMap::new();
+    for (k, c) in registry().counters.lock().unwrap().iter() {
+        counters.insert(k.clone(), json::num(c.get() as f64));
+    }
+    let mut gauges = BTreeMap::new();
+    for (k, g) in registry().gauges.lock().unwrap().iter() {
+        let v = g.get();
+        gauges.insert(k.clone(), if v.is_finite() { json::num(v) } else { Json::Null });
+    }
+    let mut hists = BTreeMap::new();
+    for (k, h) in registry().histograms.lock().unwrap().iter() {
+        let buckets = h
+            .cumulative()
+            .into_iter()
+            .map(|(le, c)| {
+                let le = if le.is_finite() { json::num(le) } else { json::s("+Inf") };
+                json::obj(vec![("le", le), ("count", json::num(c as f64))])
+            })
+            .collect();
+        hists.insert(
+            k.clone(),
+            json::obj(vec![
+                ("count", json::num(h.count() as f64)),
+                ("sum", json::num(h.sum())),
+                ("buckets", json::arr(buckets)),
+            ]),
+        );
+    }
+    json::obj(vec![
+        ("counters", Json::Obj(counters)),
+        ("gauges", Json::Obj(gauges)),
+        ("histograms", Json::Obj(hists)),
+        ("quant", quant::to_json()),
+    ])
+}
+
+/// Prometheus text exposition (format 0.0.4) over the same instruments.
+/// Names are prefixed `mxfp4_` with dots mapped to underscores.
+pub fn prometheus_text() -> String {
+    use std::fmt::Write;
+    fn sanitize(name: &str) -> String {
+        let mut s = String::with_capacity(name.len() + 6);
+        s.push_str("mxfp4_");
+        for c in name.chars() {
+            s.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+        }
+        s
+    }
+    let mut out = String::new();
+    for (k, c) in registry().counters.lock().unwrap().iter() {
+        let n = sanitize(k);
+        let _ = writeln!(out, "# TYPE {n} counter\n{n} {}", c.get());
+    }
+    for (k, g) in registry().gauges.lock().unwrap().iter() {
+        let n = sanitize(k);
+        let _ = writeln!(out, "# TYPE {n} gauge\n{n} {}", g.get());
+    }
+    for (k, h) in registry().histograms.lock().unwrap().iter() {
+        let n = sanitize(k);
+        let _ = writeln!(out, "# TYPE {n} histogram");
+        for (le, c) in h.cumulative() {
+            if le.is_finite() {
+                let _ = writeln!(out, "{n}_bucket{{le=\"{le}\"}} {c}");
+            } else {
+                let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {c}");
+            }
+        }
+        let _ = writeln!(out, "{n}_sum {}\n{n}_count {}", h.sum(), h.count());
+    }
+    out
+}
+
+/// Write the JSON snapshot to `path` (the `--metrics-dump` backend).
+pub fn write_snapshot(path: &std::path::Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", snapshot_json()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = counter("test.mod.counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(counter("test.mod.counter").get(), 5, "same name, same instrument");
+        set_gauge("test.mod.gauge", 2.5);
+        assert_eq!(gauge("test.mod.gauge").get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 1.7, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 106.7).abs() < 1e-9);
+        let cum = h.cumulative();
+        assert_eq!(cum, vec![(1.0, 1), (2.0, 3), (4.0, 4), (f64::INFINITY, 5)]);
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_newest() {
+        let mut r = LatencyRing::with_capacity(4);
+        for i in 0..10 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count, 10);
+        assert_eq!(r.len(), 4);
+        // newest 4 samples are 6..=9 → min/max quantiles reflect only them
+        assert_eq!(r.percentile(0.0), 6.0);
+        assert_eq!(r.percentile(1.0), 9.0);
+    }
+
+    #[test]
+    fn ring_quantile_math() {
+        let mut r = LatencyRing::with_capacity(1024);
+        assert_eq!(r.percentile(0.5), 0.0, "empty ring reads 0");
+        // 101 samples 0..=100: percentile p lands on round(100p)
+        for i in 0..=100 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.percentile(0.50), 50.0);
+        assert_eq!(r.percentile(0.99), 99.0);
+        assert_eq!(r.percentile(1.0), 100.0);
+        // out-of-range p clamps
+        assert_eq!(r.percentile(-1.0), 0.0);
+        assert_eq!(r.percentile(2.0), 100.0);
+    }
+
+    #[test]
+    fn ring_default_capacity_matches_engine_window() {
+        assert_eq!(LatencyRing::default().capacity(), LATENCY_WINDOW);
+    }
+
+    #[test]
+    fn snapshot_and_prometheus_cover_instruments() {
+        counter("test.snap.counter").add(3);
+        set_gauge("test.snap.gauge", 1.25);
+        histogram("test.snap.hist", &[0.1, 1.0]).observe(0.05);
+        let snap = snapshot_json();
+        assert_eq!(snap.get("counters").get("test.snap.counter").as_i64(), Some(3));
+        assert_eq!(snap.get("gauges").get("test.snap.gauge").as_f64(), Some(1.25));
+        let h = snap.get("histograms").get("test.snap.hist");
+        assert_eq!(h.get("count").as_i64(), Some(1));
+        let text = prometheus_text();
+        assert!(text.contains("# TYPE mxfp4_test_snap_counter counter"));
+        assert!(text.contains("mxfp4_test_snap_gauge 1.25"));
+        assert!(text.contains("mxfp4_test_snap_hist_bucket{le=\"+Inf\"} 1"));
+        // the document round-trips through our own parser
+        let parsed = crate::util::json::parse(&snap.to_string()).unwrap();
+        assert_eq!(parsed.get("counters").get("test.snap.counter").as_i64(), Some(3));
+    }
+}

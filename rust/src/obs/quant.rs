@@ -1,0 +1,378 @@
+//! Quantization-health telemetry: the paper's §3–§4 variance story,
+//! observable on any live run.
+//!
+//! When enabled (`quant_sample_every > 0` in the train config), every
+//! N-th step samples each GEMM class (fwd / dgrad / wgrad) as its
+//! operands pass through `model::gpt`'s linear hooks:
+//!
+//! * **clip fraction** — [`crate::mx::quant::clip_fraction`] on a
+//!   bounded prefix of the quantized operand: the share of elements
+//!   Algorithm 1 would clip (scaled magnitude in (6, 8]), the §3.1
+//!   bias the 0.75 pre-scale removes;
+//! * **E8M0 block exponents** — a histogram of shared block exponents
+//!   ([`crate::mx::scale::shared_exp`]), the dynamic-range picture
+//!   that decides whether the RHT has bounded the block maxima;
+//! * **SR-vs-NR dither** — the same sample quantized both ways (SR
+//!   output rescaled by 16/9 into NR's frame): flip rate and mean
+//!   |difference| measure how much rounding noise SR injects.
+//!
+//! Sampling is strictly read-only: operands are copied into scratch,
+//! and the SR pass draws from a throwaway step-derived rng — never the
+//! training stream — so enabling telemetry cannot move a single bit of
+//! the run (`tests/obs.rs` pins this next to the tracing parity test).
+//! Stats stream into the registry ([`publish`]) and into `quant.csv`
+//! rows ([`take_rows`]) next to the train/val CSVs.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::mx::quant as mxq;
+use crate::mx::scale;
+use crate::rng::Rng;
+use crate::util::json::{self, Json};
+
+/// Elements examined per sample (per linear, per sampled step) —
+/// bounds the copy + double-qdq cost to a few µs.
+pub const SAMPLE_CAP: usize = 4096;
+
+/// The three GEMMs of a linear layer (Algorithm 3's classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmClass {
+    Fwd,
+    Dgrad,
+    Wgrad,
+}
+
+impl GemmClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmClass::Fwd => "fwd",
+            GemmClass::Dgrad => "dgrad",
+            GemmClass::Wgrad => "wgrad",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            GemmClass::Fwd => 0,
+            GemmClass::Dgrad => 1,
+            GemmClass::Wgrad => 2,
+        }
+    }
+}
+
+pub const CLASSES: [GemmClass; 3] = [GemmClass::Fwd, GemmClass::Dgrad, GemmClass::Wgrad];
+
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(0); // 0 = disabled
+static STEP: AtomicU64 = AtomicU64::new(0);
+
+/// Sample every `n` steps (0 disables — the default; the fast path is
+/// then one relaxed atomic load per linear).
+pub fn set_sample_every(n: u64) {
+    SAMPLE_EVERY.store(n, Ordering::Relaxed);
+}
+
+/// The trainer advances this each optimizer step; [`should_sample`]
+/// keys off it.
+pub fn set_step(step: u64) {
+    STEP.store(step, Ordering::Relaxed);
+}
+
+/// Is the current step a sampled one?
+#[inline]
+pub fn should_sample() -> bool {
+    let n = SAMPLE_EVERY.load(Ordering::Relaxed);
+    n != 0 && STEP.load(Ordering::Relaxed) % n == 0
+}
+
+/// Aggregated health stats for one GEMM class.
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    /// [`record_sample`] calls folded in.
+    pub samples: u64,
+    /// Elements examined across those samples.
+    pub elements: u64,
+    /// Σ clip fraction (mean = `clip_sum / samples`).
+    pub clip_sum: f64,
+    /// Most recent sample's clip fraction.
+    pub clip_last: f64,
+    /// Elements where SR (rescaled by 16/9) != NR.
+    pub flips: u64,
+    /// Σ |sr·16/9 − nr| over examined elements.
+    pub abs_diff_sum: f64,
+    /// Shared block exponent → block count.
+    pub exp_counts: BTreeMap<i32, u64>,
+}
+
+impl Accum {
+    pub fn clip_mean(&self) -> f64 {
+        self.clip_sum / self.samples.max(1) as f64
+    }
+
+    pub fn flip_rate(&self) -> f64 {
+        self.flips as f64 / self.elements.max(1) as f64
+    }
+
+    pub fn abs_diff_mean(&self) -> f64 {
+        self.abs_diff_sum / self.elements.max(1) as f64
+    }
+
+    pub fn exp_min(&self) -> i32 {
+        self.exp_counts.keys().next().copied().unwrap_or(0)
+    }
+
+    pub fn exp_max(&self) -> i32 {
+        self.exp_counts.keys().next_back().copied().unwrap_or(0)
+    }
+
+    pub fn exp_mean(&self) -> f64 {
+        let total: u64 = self.exp_counts.values().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self.exp_counts.iter().map(|(&e, &c)| e as f64 * c as f64).sum();
+        sum / total as f64
+    }
+
+    fn fold(&mut self, other: &Accum) {
+        self.samples += other.samples;
+        self.elements += other.elements;
+        self.clip_sum += other.clip_sum;
+        self.clip_last = other.clip_last;
+        self.flips += other.flips;
+        self.abs_diff_sum += other.abs_diff_sum;
+        for (&e, &c) in &other.exp_counts {
+            *self.exp_counts.entry(e).or_insert(0) += c;
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct ClassState {
+    /// Run-to-date totals (registry / JSON snapshot).
+    total: Accum,
+    /// Since the last [`take_rows`] drain (one `quant.csv` row each).
+    interval: Accum,
+}
+
+fn table() -> &'static Mutex<[ClassState; 3]> {
+    static T: OnceLock<Mutex<[ClassState; 3]>> = OnceLock::new();
+    T.get_or_init(|| Mutex::new(Default::default()))
+}
+
+/// Sample `data` (an operand about to be MX-quantized) for `class` if
+/// this step is a sampled one. The hot-path cost when sampling is off
+/// is the [`should_sample`] atomic load.
+#[inline]
+pub fn maybe_sample(class: GemmClass, data: &[f32]) {
+    if !should_sample() {
+        return;
+    }
+    record_sample(class, data);
+}
+
+/// Unconditionally fold a sample of `data` into `class`'s stats.
+/// Examines at most [`SAMPLE_CAP`] elements (whole 32-element MX
+/// blocks). Read-only: `data` is copied; the SR pass uses a
+/// step-derived throwaway rng.
+pub fn record_sample(class: GemmClass, data: &[f32]) {
+    let n = (data.len().min(SAMPLE_CAP) / mxq::MX_BLOCK) * mxq::MX_BLOCK;
+    if n == 0 {
+        return;
+    }
+    let slice = &data[..n];
+    let mut acc = Accum { samples: 1, elements: n as u64, ..Accum::default() };
+    acc.clip_last = mxq::clip_fraction(slice);
+    acc.clip_sum = acc.clip_last;
+    for block in slice.chunks(mxq::MX_BLOCK) {
+        *acc.exp_counts.entry(scale::shared_exp(block)).or_insert(0) += 1;
+    }
+    // SR-vs-NR dither on the same sample. The rng here is derived from
+    // the step counter alone — deterministic per step, and crucially
+    // *not* the training stream, so telemetry never shifts a draw.
+    let mut nr = slice.to_vec();
+    mxq::qdq_nr(&mut nr);
+    let mut sr = slice.to_vec();
+    let mut rng = Rng::fold_in(0x0B5_0B5, STEP.load(Ordering::Relaxed));
+    mxq::qdq_sr(&mut sr, &mut rng);
+    for (&a, &b) in nr.iter().zip(&sr) {
+        let b = b * mxq::GEMM_RESCALE; // SR estimates (3/4)·v; compare in v's frame
+        if a != b {
+            acc.flips += 1;
+        }
+        acc.abs_diff_sum += (a - b).abs() as f64;
+    }
+    let mut t = table().lock().unwrap();
+    let st = &mut t[class.index()];
+    st.total.fold(&acc);
+    st.interval.fold(&acc);
+}
+
+/// Run-to-date stats per class (clones).
+pub fn snapshot() -> Vec<(GemmClass, Accum)> {
+    let t = table().lock().unwrap();
+    CLASSES.iter().map(|&c| (c, t[c.index()].total.clone())).collect()
+}
+
+/// One `quant.csv` row: the interval aggregate for a class since the
+/// previous drain.
+#[derive(Debug, Clone)]
+pub struct QuantRow {
+    pub step: usize,
+    pub class: &'static str,
+    pub samples: u64,
+    pub clip_fraction: f64,
+    pub flip_rate: f64,
+    pub abs_diff_mean: f64,
+    pub exp_min: i32,
+    pub exp_mean: f64,
+    pub exp_max: i32,
+}
+
+/// Drain per-interval stats into CSV rows (classes with no samples
+/// since the last drain are skipped).
+pub fn take_rows(step: usize) -> Vec<QuantRow> {
+    let mut t = table().lock().unwrap();
+    let mut rows = Vec::new();
+    for &c in &CLASSES {
+        let st = &mut t[c.index()];
+        if st.interval.samples == 0 {
+            continue;
+        }
+        let a = std::mem::take(&mut st.interval);
+        rows.push(QuantRow {
+            step,
+            class: c.name(),
+            samples: a.samples,
+            clip_fraction: a.clip_mean(),
+            flip_rate: a.flip_rate(),
+            abs_diff_mean: a.abs_diff_mean(),
+            exp_min: a.exp_min(),
+            exp_mean: a.exp_mean(),
+            exp_max: a.exp_max(),
+        });
+    }
+    rows
+}
+
+/// Push run-to-date stats into registry gauges
+/// (`quant.<class>.clip_fraction` etc.).
+pub fn publish() {
+    for (c, a) in snapshot() {
+        if a.samples == 0 {
+            continue;
+        }
+        let base = format!("quant.{}", c.name());
+        super::set_gauge(&format!("{base}.samples"), a.samples as f64);
+        super::set_gauge(&format!("{base}.clip_fraction"), a.clip_mean());
+        super::set_gauge(&format!("{base}.clip_last"), a.clip_last);
+        super::set_gauge(&format!("{base}.dither_flip_rate"), a.flip_rate());
+        super::set_gauge(&format!("{base}.exp_min"), a.exp_min() as f64);
+        super::set_gauge(&format!("{base}.exp_mean"), a.exp_mean());
+        super::set_gauge(&format!("{base}.exp_max"), a.exp_max() as f64);
+    }
+}
+
+/// The snapshot's `"quant"` section: run-to-date stats per sampled
+/// class, sparse exponent histogram included.
+pub fn to_json() -> Json {
+    let mut classes = BTreeMap::new();
+    for (c, a) in snapshot() {
+        if a.samples == 0 {
+            continue;
+        }
+        let mut hist = BTreeMap::new();
+        for (&e, &cnt) in &a.exp_counts {
+            hist.insert(e.to_string(), json::num(cnt as f64));
+        }
+        classes.insert(
+            c.name().to_string(),
+            json::obj(vec![
+                ("samples", json::num(a.samples as f64)),
+                ("elements", json::num(a.elements as f64)),
+                ("clip_fraction", json::num(a.clip_mean())),
+                ("clip_last", json::num(a.clip_last)),
+                ("dither_flip_rate", json::num(a.flip_rate())),
+                ("dither_abs_diff_mean", json::num(a.abs_diff_mean())),
+                ("exp_min", json::num(a.exp_min() as f64)),
+                ("exp_mean", json::num(a.exp_mean())),
+                ("exp_max", json::num(a.exp_max() as f64)),
+                ("exp_hist", Json::Obj(hist)),
+            ]),
+        );
+    }
+    Json::Obj(classes)
+}
+
+/// Zero all stats and disable sampling (tests / between runs).
+pub fn reset() {
+    set_sample_every(0);
+    set_step(0);
+    *table().lock().unwrap() = Default::default();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    // Global sampling config + table: single test, own lock-step order,
+    // so parallel unit tests can't interleave with it.
+    #[test]
+    fn sampling_gate_stats_and_rows() {
+        // gate: off by default, keyed to step % n
+        reset();
+        assert!(!should_sample(), "disabled by default");
+        set_sample_every(10);
+        set_step(5);
+        assert!(!should_sample());
+        set_step(20);
+        assert!(should_sample());
+
+        // record: clip fraction matches the direct computation, blocks
+        // land in the exponent histogram, dither stats are populated
+        let v = gaussian(256, 42);
+        record_sample(GemmClass::Fwd, &v);
+        let (_, a) = snapshot().into_iter().find(|(c, _)| *c == GemmClass::Fwd).unwrap();
+        assert_eq!(a.samples, 1);
+        assert_eq!(a.elements, 256);
+        assert_eq!(a.clip_last, mxq::clip_fraction(&v));
+        assert_eq!(a.exp_counts.values().sum::<u64>(), 256 / mxq::MX_BLOCK as u64);
+        assert!(a.flips > 0, "SR dither must flip some elements on gaussian data");
+        assert!(a.exp_min() <= a.exp_max());
+
+        // read-only: recording must not perturb the input
+        let before = v.clone();
+        record_sample(GemmClass::Fwd, &v);
+        assert_eq!(v, before);
+
+        // cap: oversized operands examine SAMPLE_CAP elements
+        let big = gaussian(SAMPLE_CAP + 999, 7);
+        record_sample(GemmClass::Dgrad, &big);
+        let (_, d) = snapshot().into_iter().find(|(c, _)| *c == GemmClass::Dgrad).unwrap();
+        assert_eq!(d.elements, SAMPLE_CAP as u64);
+
+        // rows: drain resets intervals but not totals
+        let rows = take_rows(20);
+        assert_eq!(rows.len(), 2, "fwd + dgrad sampled: {rows:?}");
+        assert!(rows.iter().all(|r| r.step == 20));
+        assert!(take_rows(21).is_empty(), "interval drained");
+        let (_, t) = snapshot().into_iter().find(|(c, _)| *c == GemmClass::Fwd).unwrap();
+        assert_eq!(t.samples, 2, "totals survive the drain");
+
+        // export surfaces
+        publish();
+        assert!(super::super::gauge("quant.fwd.clip_fraction").get() >= 0.0);
+        let j = to_json();
+        assert_eq!(j.get("fwd").get("samples").as_i64(), Some(2));
+        assert_eq!(j.get("wgrad"), &Json::Null, "unsampled class absent");
+        reset();
+    }
+}

@@ -1,0 +1,336 @@
+//! Hot-path tracing: RAII spans into per-thread buffers, with a phase
+//! tree report and Chrome trace-event JSON export (Perfetto-loadable).
+//!
+//! Disabled (the default) the entire machinery is one relaxed atomic
+//! load per [`span`] call and one branch per drop — cheap enough to
+//! leave the guards in `mx_gemm_packed`'s outer call, the pack
+//! pipeline, attention, and every engine/trainer phase permanently.
+//! Enabled, each finished span appends a record to a `thread_local`
+//! buffer (no locks on the hot path); buffers drain into one global
+//! sink every [`FLUSH_AT`] records and at thread exit, so scoped
+//! worker threads never lose spans.
+//!
+//! Tracing observes wall time only: it never touches operands, rng
+//! streams, or results, so every bitwise-parity contract holds with
+//! tracing on or off (`tests/obs.rs` pins this).
+
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Local buffer size before draining into the global sink.
+const FLUSH_AT: usize = 256;
+
+/// Global sink cap: beyond this, spans are counted but dropped (a
+/// runaway-trace backstop; ~48 MiB of records at the cap).
+pub const MAX_SPANS: usize = 1 << 20;
+
+/// Is tracing live? One relaxed atomic load — the entire disabled-path
+/// cost of a [`span`] call site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip tracing at runtime. Enabling pins the trace epoch (t=0) if it
+/// was not already pinned.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// `MXFP4_TRACE=1` enables tracing at startup (CLIs call this next to
+/// `log::level_from_env`).
+pub fn init_from_env() {
+    if std::env::var("MXFP4_TRACE").as_deref() == Ok("1") {
+        set_enabled(true);
+    }
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// One finished span: a `ph:"X"` (complete) event in Chrome trace terms.
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub tid: u64,
+}
+
+struct Sink {
+    spans: Vec<SpanRec>,
+    dropped: u64,
+}
+
+fn sink() -> &'static Mutex<Sink> {
+    static S: OnceLock<Mutex<Sink>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(Sink { spans: Vec::new(), dropped: 0 }))
+}
+
+fn flush_into_sink(buf: &mut Vec<SpanRec>) {
+    if buf.is_empty() {
+        return;
+    }
+    let mut s = sink().lock().unwrap();
+    let room = MAX_SPANS.saturating_sub(s.spans.len());
+    if buf.len() > room {
+        s.dropped += (buf.len() - room) as u64;
+        buf.truncate(room);
+    }
+    s.spans.append(buf);
+}
+
+struct LocalBuf {
+    spans: Vec<SpanRec>,
+    tid: u64,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        flush_into_sink(&mut self.spans);
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf {
+        spans: Vec::new(),
+        tid: {
+            static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+            NEXT_TID.fetch_add(1, Ordering::Relaxed)
+        },
+    });
+}
+
+/// RAII span guard: records `[construction, drop)` as one complete
+/// event when tracing is enabled; a no-op shell otherwise.
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    live: bool,
+}
+
+/// Open a span named `name` (category "span").
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    span_cat(name, "span")
+}
+
+/// Open a span with an explicit category (the Perfetto track filter).
+#[inline]
+pub fn span_cat(name: &'static str, cat: &'static str) -> Span {
+    if !enabled() {
+        return Span { name, cat, start_ns: 0, live: false };
+    }
+    Span { name, cat, start_ns: now_ns(), live: true }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let dur_ns = now_ns().saturating_sub(self.start_ns);
+        let rec =
+            SpanRec { name: self.name, cat: self.cat, start_ns: self.start_ns, dur_ns, tid: 0 };
+        LOCAL.with(|b| {
+            let mut b = b.borrow_mut();
+            let tid = b.tid;
+            b.spans.push(SpanRec { tid, ..rec });
+            if b.spans.len() >= FLUSH_AT {
+                flush_into_sink(&mut b.spans);
+            }
+        });
+    }
+}
+
+/// Drain the calling thread's local buffer into the sink (worker
+/// threads flush automatically at exit; the main thread calls this via
+/// [`snapshot`] before exporting).
+pub fn flush_thread() {
+    LOCAL.with(|b| flush_into_sink(&mut b.borrow_mut().spans));
+}
+
+/// All collected spans so far (caller's buffer flushed first; the sink
+/// is left intact so a report and an export can share one run).
+pub fn snapshot() -> Vec<SpanRec> {
+    flush_thread();
+    sink().lock().unwrap().spans.clone()
+}
+
+/// Spans lost to the [`MAX_SPANS`] backstop.
+pub fn dropped() -> u64 {
+    sink().lock().unwrap().dropped
+}
+
+/// Discard all collected spans (tests / between runs).
+pub fn clear() {
+    flush_thread();
+    let mut s = sink().lock().unwrap();
+    s.spans.clear();
+    s.dropped = 0;
+}
+
+/// Write every collected span as Chrome trace-event JSON: open in
+/// Perfetto (ui.perfetto.dev) or `chrome://tracing`. Timestamps are
+/// microseconds from the trace epoch; `pid` is constant 1 and `tid` is
+/// the internal thread index.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
+    let spans = snapshot();
+    let dropped = dropped();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    write!(w, "{{\"traceEvents\":[")?;
+    for (i, r) in spans.iter().enumerate() {
+        if i > 0 {
+            write!(w, ",")?;
+        }
+        write!(
+            w,
+            "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{}}}",
+            json::s(r.name),
+            json::s(r.cat),
+            r.start_ns as f64 / 1e3,
+            r.dur_ns as f64 / 1e3,
+            r.tid
+        )?;
+    }
+    write!(w, "],\"displayTimeUnit\":\"ms\",\"droppedSpans\":{dropped}}}")?;
+    w.flush()
+}
+
+/// Aggregate collected spans into an inclusive-time phase tree, one
+/// line per distinct call path (nesting recovered per thread by
+/// interval containment). Times are inclusive of children; counts are
+/// span instances.
+pub fn phase_report() -> String {
+    use std::collections::BTreeMap;
+    use std::fmt::Write as _;
+
+    let spans = snapshot();
+    if spans.is_empty() {
+        return String::new();
+    }
+    let mut by_tid: BTreeMap<u64, Vec<&SpanRec>> = BTreeMap::new();
+    for r in &spans {
+        by_tid.entry(r.tid).or_default().push(r);
+    }
+    // path -> (instances, total inclusive ns)
+    let mut agg: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    for (_tid, mut v) in by_tid {
+        // parents start no later than children and outlast them: sort by
+        // start ascending, then longer spans first, and recover nesting
+        // with an interval stack
+        v.sort_by(|a, b| a.start_ns.cmp(&b.start_ns).then(b.dur_ns.cmp(&a.dur_ns)));
+        let mut stack: Vec<(u64, String)> = Vec::new(); // (end_ns, path)
+        for r in v {
+            while stack.last().is_some_and(|(end, _)| *end <= r.start_ns) {
+                stack.pop();
+            }
+            let path = match stack.last() {
+                Some((_, parent)) => format!("{parent}/{}", r.name),
+                None => r.name.to_string(),
+            };
+            let e = agg.entry(path.clone()).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += r.dur_ns;
+            stack.push((r.start_ns + r.dur_ns, path));
+        }
+    }
+    let mut out = String::from("phase tree (inclusive time):\n");
+    for (path, (count, ns)) in &agg {
+        let depth = path.matches('/').count();
+        let name = path.rsplit('/').next().unwrap();
+        let _ = writeln!(
+            out,
+            "  {:indent$}{name:<26} {:>12.3} ms  x{count}",
+            "",
+            *ns as f64 / 1e6,
+            indent = depth * 2
+        );
+    }
+    let d = dropped();
+    if d > 0 {
+        let _ = writeln!(out, "  ({d} spans dropped past the {MAX_SPANS}-span cap)");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global; keep everything in one test so
+    // parallel unit tests never race on enable/clear. The cross-crate
+    // integration suite (`tests/obs.rs`) runs in its own process.
+    #[test]
+    fn spans_collect_nest_and_export() {
+        assert!(!enabled(), "tracing must default off");
+        {
+            let _s = span("off.outer");
+        }
+        flush_thread();
+        assert!(
+            !snapshot().iter().any(|r| r.name == "off.outer"),
+            "disabled spans must not record"
+        );
+
+        set_enabled(true);
+        clear();
+        {
+            let _outer = span("t.outer");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            {
+                let _inner = span_cat("t.inner", "test");
+            }
+        }
+        set_enabled(false);
+        let spans = snapshot();
+        let outer = spans.iter().find(|r| r.name == "t.outer").unwrap();
+        let inner = spans.iter().find(|r| r.name == "t.inner").unwrap();
+        assert!(outer.dur_ns >= inner.dur_ns, "outer span contains inner");
+        assert!(inner.start_ns >= outer.start_ns);
+        assert_eq!(inner.cat, "test");
+
+        let report = phase_report();
+        assert!(report.contains("t.outer"), "report: {report}");
+        assert!(report.contains("t.inner"));
+
+        let path = std::env::temp_dir().join("mxfp4_obs_trace_unit.json");
+        write_chrome_trace(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        assert!(events.iter().any(|e| e.get("name").as_str() == Some("t.inner")));
+        for e in events {
+            assert_eq!(e.get("ph").as_str(), Some("X"));
+            assert!(e.get("ts").as_f64().is_some() && e.get("dur").as_f64().is_some());
+        }
+        let _ = std::fs::remove_file(&path);
+        clear();
+    }
+}

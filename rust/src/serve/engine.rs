@@ -66,6 +66,11 @@ pub trait ServeBackend {
         let spans: Vec<&[i32]> = tokens.chunks(1).collect();
         self.decode_spans(states, &spans)
     }
+
+    /// Push backend-internal stats (weight cache, decode scratch, …)
+    /// into the obs registry as gauges. Read-only; default: nothing to
+    /// publish.
+    fn publish_obs(&self) {}
 }
 
 impl ServeBackend for Arc<ServeModel> {
@@ -91,6 +96,10 @@ impl ServeBackend for Arc<ServeModel> {
 
     fn decode(&mut self, states: &mut [&mut DecodeState], tokens: &[i32]) -> Result<Mat> {
         ServeModel::decode_batch(&**self, states, tokens)
+    }
+
+    fn publish_obs(&self) {
+        ServeModel::publish_obs(&**self);
     }
 }
 
@@ -196,46 +205,12 @@ impl EngineConfig {
     }
 }
 
-/// A bounded ring of per-token latency samples (seconds). Each decode
-/// tick contributes one sample — the tick's wall time divided by the
-/// tokens each session absorbed in it — so percentiles reflect what a
-/// single token waited, including batch-width effects. The ring keeps
-/// the newest [`LATENCY_WINDOW`] samples; `count` keeps growing.
-#[derive(Debug, Clone, Default)]
-pub struct LatencyWindow {
-    samples: Vec<f32>,
-    next: usize,
-    /// Total samples ever recorded (≥ retained samples).
-    pub count: u64,
-}
-
-/// Retained latency samples (~256 KiB of f32 at the cap).
-pub const LATENCY_WINDOW: usize = 1 << 16;
-
-impl LatencyWindow {
-    fn record(&mut self, secs: f64) {
-        let s = secs as f32;
-        if self.samples.len() < LATENCY_WINDOW {
-            self.samples.push(s);
-        } else {
-            self.samples[self.next] = s;
-            self.next = (self.next + 1) % LATENCY_WINDOW;
-        }
-        self.count += 1;
-    }
-
-    /// The `p`-th percentile (`p` in `[0, 1]`) of the retained window;
-    /// 0 before any sample.
-    pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.samples.clone();
-        v.sort_by(f32::total_cmp);
-        let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
-        v[idx] as f64
-    }
-}
+/// Per-token latency ring: each decode tick contributes one sample —
+/// the tick's wall time divided by the tokens each session absorbed in
+/// it — so percentiles reflect what a single token waited, including
+/// batch-width effects. The ring type itself lives in [`crate::obs`]
+/// (it predates the obs layer here; the alias keeps the serving API).
+pub use crate::obs::{LatencyRing as LatencyWindow, LATENCY_WINDOW};
 
 /// Aggregate serving counters.
 #[derive(Debug, Clone, Default)]
@@ -344,6 +319,9 @@ pub struct Engine {
     tick: u64,
     /// Speculative decoder (draft backend + k); `None` = vanilla ticks.
     spec: Option<SpecRunner>,
+    /// Registry handle held hot (one lookup at construction, atomic
+    /// bumps per tick): wall seconds per [`Engine::step`].
+    tick_hist: Arc<crate::obs::Histogram>,
 }
 
 impl Engine {
@@ -362,6 +340,7 @@ impl Engine {
             stats,
             tick: 0,
             spec: None,
+            tick_hist: crate::obs::histogram("engine.tick_secs", &crate::obs::LATENCY_BUCKETS),
         }
     }
 
@@ -432,6 +411,7 @@ impl Engine {
     /// retire). Returns the number of requests that completed during the
     /// tick.
     pub fn step(&mut self) -> Result<usize> {
+        let _span = crate::obs::trace::span_cat("engine.tick", "engine");
         let timer = Timer::start();
         let before = self.done.len();
         self.tick += 1;
@@ -473,13 +453,57 @@ impl Engine {
             self.stats.pool_used_sum += ps.used_pages as u64;
             self.stats.pool_samples += 1;
         }
-        self.stats.secs += timer.secs();
+        let secs = timer.secs();
+        self.stats.secs += secs;
+        self.tick_hist.observe(secs);
         Ok(self.done.len() - before)
+    }
+
+    /// Copy the engine's stats — and its backend's and pool's — into
+    /// the obs registry, so one [`crate::obs::snapshot_json`] covers
+    /// engine, pool, cache and scratch. Read-only; call before any
+    /// snapshot/export (the TCP `metrics` command and `--metrics-dump`
+    /// do).
+    pub fn publish_obs(&self) {
+        use crate::obs::set_gauge;
+        let st = &self.stats;
+        set_gauge("engine.decode_steps", st.decode_steps as f64);
+        set_gauge("engine.prefill_tokens", st.prefill_tokens as f64);
+        set_gauge("engine.prefill_calls", st.prefill_calls as f64);
+        set_gauge("engine.generated_tokens", st.generated_tokens as f64);
+        set_gauge("engine.completed", st.completed as f64);
+        set_gauge("engine.occupancy", st.occupancy(self.max_batch()));
+        set_gauge("engine.draft_steps", st.draft_steps as f64);
+        set_gauge("engine.spec_proposed", st.spec_proposed as f64);
+        set_gauge("engine.spec_accepted", st.spec_accepted as f64);
+        set_gauge("engine.spec_accept_rate", st.accept_rate());
+        set_gauge("engine.secs", st.secs);
+        set_gauge("engine.tokens_per_sec", st.tokens_per_sec());
+        set_gauge("engine.evictions", st.evictions as f64);
+        set_gauge("engine.resumes", st.resumes as f64);
+        set_gauge("engine.latency_p50_secs", st.latency_p50());
+        set_gauge("engine.latency_p99_secs", st.latency_p99());
+        set_gauge("engine.latency_samples", st.latency.count as f64);
+        set_gauge("engine.pending", self.pending() as f64);
+        if let Some(pool) = &self.cfg.pool {
+            let ps = pool.stats();
+            set_gauge("pool.total_pages", ps.total_pages as f64);
+            set_gauge("pool.used_pages", ps.used_pages as f64);
+            set_gauge("pool.reserved_pages", ps.reserved_pages as f64);
+            set_gauge("pool.used_peak", ps.used_peak as f64);
+            set_gauge("pool.reserved_peak", ps.reserved_peak as f64);
+            set_gauge("pool.overflow_pages", ps.overflow_pages as f64);
+            set_gauge("pool.allocs", ps.allocs as f64);
+            set_gauge("pool.frees", ps.frees as f64);
+            set_gauge("pool.occupancy", st.pool_occupancy());
+        }
+        self.backend.publish_obs();
     }
 
     /// One single-token batched decode over every active session (the
     /// non-speculative tick).
     fn vanilla_tick(&mut self) -> Result<()> {
+        let _span = crate::obs::trace::span_cat("engine.decode", "engine");
         self.stats.decode_steps += 1;
         self.stats.occupancy_sum += self.active.len();
         let tokens: Vec<i32> = self.active.iter().map(|s| *s.generated.last().unwrap()).collect();
@@ -582,6 +606,7 @@ impl Engine {
         // one chunked decode over resume replays + new prompts
         self.stats.prefill_calls += 1;
         let logits = {
+            let _span = crate::obs::trace::span_cat("engine.prefill", "engine");
             let mut spans: Vec<&[i32]> = Vec::with_capacity(resumed.len() + reqs.len());
             spans.extend(resumed.iter().map(|sess| sess.state.tokens.as_slice()));
             spans.extend(reqs.iter().map(|r| r.prompt.as_slice()));

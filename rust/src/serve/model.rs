@@ -213,6 +213,21 @@ impl ServeModel {
     pub fn fresh_state(&self) -> DecodeState {
         DecodeState::fresh_kv(&self.cfg)
     }
+
+    /// Copy the checkpoint's cache and scratch accounting into the obs
+    /// registry (one snapshot covers engine + pool + cache + scratch).
+    pub fn publish_obs(&self) {
+        use crate::obs::set_gauge;
+        let (packs, hits, sr_draws) = self.mx_cache_stats();
+        set_gauge("cache.weight_packs", packs as f64);
+        set_gauge("cache.weight_hits", hits as f64);
+        set_gauge("cache.weight_sr_draws", sr_draws as f64);
+        set_gauge("cache.packed_bytes", self.packed_bytes() as f64);
+        let (builds, leases) = self.scratch_stats();
+        set_gauge("scratch.builds", builds as f64);
+        set_gauge("scratch.hits", leases as f64);
+        set_gauge("scratch.free_len", self.scratch_free_len() as f64);
+    }
 }
 
 /// Parameter indices of the 2-D weights the forward pass GEMMs: the

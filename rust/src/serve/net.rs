@@ -7,6 +7,11 @@
 //! `serve --listen <addr>` speak the identical protocol through the
 //! parser/formatter here; the transport is the only difference.
 //!
+//! The literal lines `stats` / `metrics` (obs JSON snapshot) and
+//! `metrics prometheus` (Prometheus text exposition) are control
+//! commands: answered immediately from the live registry, never parsed
+//! as requests (see `docs/OBSERVABILITY.md`).
+//!
 //! [`serve_tcp`] is a single-threaded poll loop over non-blocking
 //! sockets: every iteration accepts pending connections, drains complete
 //! lines from every client into [`Engine::submit`], runs **one engine
@@ -289,6 +294,19 @@ pub fn serve_tcp(
         for c in &mut clients {
             for line in c.read_lines() {
                 progress = true;
+                // obs commands are not request lines: they are answered
+                // immediately (and don't consume a request id)
+                let cmd = line.trim();
+                if cmd.eq_ignore_ascii_case("metrics") || cmd.eq_ignore_ascii_case("stats") {
+                    engine.publish_obs();
+                    c.send(&crate::obs::snapshot_json().to_string());
+                    continue;
+                }
+                if cmd.eq_ignore_ascii_case("metrics prometheus") {
+                    engine.publish_obs();
+                    c.send(crate::obs::prometheus_text().trim_end());
+                    continue;
+                }
                 let line_no = c.lines_seen;
                 c.lines_seen += 1;
                 match parse_request_line(&line, line_no, defaults) {

@@ -149,6 +149,7 @@ impl SpecRunner {
         let mut rngs: Vec<Rng> = active.iter().map(|sess| sess.rng.clone()).collect();
         let planned: Vec<usize> = (0..ns).filter(|&s| ks[s] > 0).collect();
         if !planned.is_empty() {
+            let _span = crate::obs::trace::span_cat("spec.propose", "engine");
             let dv = self.draft.vocab();
             // catch-up: whatever of (history ++ pending) the draft has
             // not absorbed — at least the pending token, plus any
@@ -217,6 +218,7 @@ impl SpecRunner {
             })
             .collect();
         let logits = {
+            let _span = crate::obs::trace::span_cat("spec.verify", "engine");
             let spans: Vec<&[i32]> = spans_owned.iter().map(Vec::as_slice).collect();
             let mut refs: Vec<&mut DecodeState> =
                 active.iter_mut().map(|sess| &mut sess.state).collect();

@@ -21,11 +21,22 @@ pub fn set_level(level: Level) {
 }
 
 pub fn level_from_env() {
-    match std::env::var("MXFP4_LOG").as_deref() {
-        Ok("debug") => set_level(Level::Debug),
-        Ok("warn") => set_level(Level::Warn),
-        Ok("error") => set_level(Level::Error),
-        _ => {}
+    if let Ok(v) = std::env::var("MXFP4_LOG") {
+        match parse_level(&v) {
+            Some(l) => set_level(l),
+            None => eprintln!("[log] unrecognized MXFP4_LOG={v:?}; keeping current level"),
+        }
+    }
+}
+
+/// Parse a level name; `None` for anything unrecognized.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "debug" => Some(Level::Debug),
+        "info" => Some(Level::Info),
+        "warn" => Some(Level::Warn),
+        "error" => Some(Level::Error),
+        _ => None,
     }
 }
 
@@ -76,5 +87,15 @@ mod tests {
         assert!(enabled(Level::Error));
         set_level(Level::Info);
         assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn parse_level_accepts_all_names_and_rejects_junk() {
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("info"), Some(Level::Info), "info was silently ignored before");
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level(""), None);
     }
 }

@@ -1,0 +1,303 @@
+//! Observability-layer contracts (`obs` + its engine/trainer wiring):
+//!
+//! * **read-only** — tracing and quant-health sampling must be bitwise
+//!   invisible: the same engine run produces byte-identical token
+//!   streams with instrumentation on and off (the hard constraint every
+//!   parity suite in this repo depends on);
+//! * **coverage** — one `publish_obs` + `snapshot_json` covers engine,
+//!   pool, cache, scratch and histogram state in a single document that
+//!   round-trips through our own JSON parser and the Prometheus text
+//!   exposition;
+//! * **export** — `--trace-out`-style Chrome trace JSON carries the
+//!   engine/model span names and parses back;
+//! * **protocol** — the TCP front-end answers `metrics` /
+//!   `metrics prometheus` lines in-band, interleaved with requests;
+//! * **accounting** — `EngineStats` sums (occupancy, pool peaks, spec
+//!   acceptance, latency samples) stay consistent under a deterministic
+//!   multi-session paged + speculative scenario.
+//!
+//! ci.sh runs this suite twice: with tracing off and with
+//! `MXFP4_TRACE=1`, so every assertion here holds in both worlds.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use mxfp4_train::model::{GPTConfig, NativeRecipe};
+use mxfp4_train::obs::{self, trace};
+use mxfp4_train::serve::{
+    net, Engine, EngineConfig, KvPool, Request, SamplingParams, ServeModel, SpecConfig,
+};
+use mxfp4_train::util::json;
+
+/// Registry gauges and the trace sink are process-global; tests that
+/// publish or export hold this lock so parallel tests can't interleave
+/// their snapshots.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const PAGE_ROWS: usize = 4;
+
+fn model(recipe: &str, seed: u64) -> Arc<ServeModel> {
+    let (cfg, _) = GPTConfig::preset("micro").unwrap();
+    let params = mxfp4_train::runtime::executor::init_params_for(
+        &cfg.param_specs(),
+        cfg.n_layers,
+        seed,
+    );
+    Arc::new(ServeModel::new(cfg, NativeRecipe::parse(recipe).unwrap(), params).unwrap())
+}
+
+fn pool(total_pages: usize) -> KvPool {
+    let (cfg, _) = GPTConfig::preset("micro").unwrap();
+    KvPool::for_config(&cfg, PAGE_ROWS, total_pages)
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+    Request { id, prompt, max_new, sampling: SamplingParams::greedy(), seed: id ^ 0x5EED }
+}
+
+fn requests() -> Vec<Request> {
+    vec![
+        req(1, vec![3, 1, 4, 1], 6),
+        req(2, vec![2, 7, 1], 5),
+        Request {
+            id: 3,
+            prompt: vec![6, 6, 6],
+            max_new: 5,
+            sampling: SamplingParams { temperature: 0.9, top_k: 8 },
+            seed: 303,
+        },
+        req(4, vec![9, 8], 4),
+        req(5, vec![5, 5, 5, 5, 5], 6),
+    ]
+}
+
+/// Run the standard request set through a fresh engine; completions
+/// sorted by id so runs compare positionally.
+fn run_tokens(recipe: &str, seed: u64) -> Vec<Vec<i32>> {
+    let m = model(recipe, seed);
+    let mut e = Engine::new(Box::new(m), EngineConfig::batch(2));
+    for r in requests() {
+        e.submit(r);
+    }
+    let mut done = e.run().unwrap();
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.tokens).collect()
+}
+
+// ---------------------------------------------------------------------------
+// read-only: tracing and quant sampling never move a bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn obs_instrumentation_is_bitwise_invisible() {
+    let _g = obs_lock();
+    // every MX recipe the serve path supports, including the SR ones
+    // whose rng streams are the easiest thing for instrumentation to
+    // accidentally perturb
+    for recipe in ["mxfp4", "mxfp4_rht_sr"] {
+        let baseline = run_tokens(recipe, 51);
+
+        trace::set_enabled(true);
+        let traced = run_tokens(recipe, 51);
+        trace::set_enabled(false);
+        trace::init_from_env(); // restore the MXFP4_TRACE=1 world if ci set it
+        assert_eq!(baseline, traced, "{recipe}: tracing moved the token stream");
+
+        obs::quant::set_sample_every(1);
+        let sampled = run_tokens(recipe, 51);
+        obs::quant::set_sample_every(0);
+        assert_eq!(baseline, sampled, "{recipe}: quant sampling moved the token stream");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coverage: one snapshot spans engine + pool + cache + scratch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn obs_snapshot_covers_engine_pool_cache_scratch() {
+    let _g = obs_lock();
+    let m = model("mxfp4", 81);
+    let p = pool(32);
+    let mut e = Engine::new(Box::new(m.clone()), EngineConfig::paged(2, p));
+    for r in requests().into_iter().take(3) {
+        e.submit(r);
+    }
+    e.run().unwrap();
+    e.publish_obs();
+
+    let snap = obs::snapshot_json();
+    let g = snap.get("gauges");
+    assert!(g.get("engine.generated_tokens").as_f64().unwrap() > 0.0);
+    assert!(g.get("engine.decode_steps").as_f64().unwrap() > 0.0);
+    assert!(g.get("engine.latency_samples").as_f64().unwrap() > 0.0);
+    assert_eq!(g.get("pool.total_pages").as_f64(), Some(32.0));
+    assert!(g.get("pool.used_peak").as_f64().unwrap() > 0.0);
+    assert!(g.get("cache.weight_packs").as_f64().unwrap() > 0.0);
+    assert!(g.get("cache.packed_bytes").as_f64().unwrap() > 0.0);
+    assert!(g.get("scratch.builds").as_f64().is_some());
+    let h = snap.get("histograms").get("engine.tick_secs");
+    assert!(h.get("count").as_i64().unwrap() > 0, "tick histogram populated");
+
+    // the whole document survives our own parser
+    let parsed = json::parse(&snap.to_string()).unwrap();
+    assert!(parsed.get("gauges").get("engine.generated_tokens").as_f64().unwrap() > 0.0);
+
+    // and the same instruments appear in the Prometheus exposition
+    let text = obs::prometheus_text();
+    assert!(text.contains("# TYPE mxfp4_engine_generated_tokens gauge"), "{text}");
+    assert!(text.contains("mxfp4_pool_total_pages 32"));
+    assert!(text.contains("mxfp4_engine_tick_secs_bucket{le=\"+Inf\"}"));
+
+    // --metrics-dump backend: file write + re-read
+    let path = std::env::temp_dir().join("mxfp4_obs_it_snapshot.json");
+    obs::write_snapshot(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = json::parse(&text).unwrap();
+    assert!(doc.get("gauges").get("engine.generated_tokens").as_f64().unwrap() > 0.0);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// export: Chrome trace JSON round-trips with the expected span names
+// ---------------------------------------------------------------------------
+
+#[test]
+fn obs_chrome_trace_export_roundtrip() {
+    let _g = obs_lock();
+    trace::set_enabled(true);
+    trace::clear();
+    let m = model("mxfp4", 91);
+    let mut e = Engine::new(Box::new(m), EngineConfig::batch(2));
+    for r in requests().into_iter().take(2) {
+        e.submit(r);
+    }
+    e.run().unwrap();
+    trace::set_enabled(false);
+    trace::init_from_env();
+
+    let spans = trace::snapshot();
+    for name in ["engine.tick", "engine.decode", "engine.prefill"] {
+        assert!(spans.iter().any(|r| r.name == name), "span {name} missing");
+    }
+    // either packed kernel (scalar or simd) satisfies the GEMM coverage
+    assert!(spans.iter().any(|r| r.name.starts_with("gemm.packed.")), "no GEMM spans");
+
+    let path = std::env::temp_dir().join("mxfp4_obs_it_trace.json");
+    trace::write_chrome_trace(&path).unwrap();
+    let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let events = doc.get("traceEvents").as_arr().unwrap();
+    assert!(!events.is_empty());
+    assert!(events.iter().any(|ev| ev.get("name").as_str() == Some("engine.tick")));
+    for ev in events {
+        assert_eq!(ev.get("ph").as_str(), Some("X"));
+        assert!(ev.get("ts").as_f64().is_some() && ev.get("dur").as_f64().is_some());
+        assert!(ev.get("tid").as_i64().is_some());
+    }
+    assert_eq!(doc.get("droppedSpans").as_i64(), Some(0));
+    let report = trace::phase_report();
+    assert!(report.contains("engine.tick"), "phase tree: {report}");
+    let _ = std::fs::remove_file(&path);
+    trace::clear();
+}
+
+// ---------------------------------------------------------------------------
+// protocol: metrics command on the TCP front-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn obs_tcp_metrics_command_roundtrip() {
+    use std::io::{BufRead, BufReader, Read as _, Write as _};
+    let _g = obs_lock();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let m = model("mxfp4", 71);
+        let mut e = Engine::new(Box::new(m), EngineConfig::batch(2));
+        let defaults = req(0, vec![], 4);
+        net::serve_tcp(&mut e, listener, &defaults, 1).unwrap();
+    });
+
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    sock.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+
+    // a real request first, so the metrics answer has traffic behind it
+    sock.write_all(b"{\"id\":1,\"prompt\":[1,2,3],\"max_new\":4,\"seed\":9}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let done = json::parse(line.trim()).unwrap();
+    assert_eq!(done.get("id").as_i64(), Some(1));
+    assert_eq!(done.get("tokens").as_arr().unwrap().len(), 4);
+
+    // `metrics` answers one JSON document on the same connection
+    sock.write_all(b"metrics\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let snap = json::parse(line.trim()).unwrap();
+    let generated = snap.get("gauges").get("engine.generated_tokens").as_f64().unwrap();
+    assert!(generated > 0.0, "metrics must reflect the served request");
+
+    // `metrics prometheus` answers the text exposition, then the
+    // half-close drains gracefully
+    sock.write_all(b"metrics prometheus\n").unwrap();
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.contains("mxfp4_engine_generated_tokens"), "prometheus text: {rest}");
+    server.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// accounting: EngineStats sums under a paged + speculative multi-session run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn obs_engine_stats_accounting_multi_session() {
+    let m = model("mxfp4", 61);
+    // 16 pages at 4 rows: two ~15-row sessions fit, the rest queue —
+    // the admission path is genuinely exercised
+    let p = pool(16);
+    let handle = p.clone();
+    let mut e = Engine::new(Box::new(m.clone()), EngineConfig::paged(3, p));
+    e.enable_spec(Box::new(m.clone()), SpecConfig { k: 3 }).unwrap();
+    for r in requests() {
+        e.submit(r);
+    }
+    let done = e.run().unwrap();
+    let st = e.stats().clone();
+
+    assert_eq!(done.len(), 5);
+    assert_eq!(st.completed, 5);
+    let total: usize = done.iter().map(|c| c.tokens.len()).sum();
+    assert_eq!(st.generated_tokens, total, "generated == Σ completion lengths");
+    let prompts: usize = requests().iter().map(|r| r.prompt.len()).sum();
+    assert!(st.prefill_tokens >= prompts, "every prompt prefilled (re-prefills allowed)");
+
+    // occupancy_sum is Σ per-tick active sessions: between 1 and
+    // max_batch per decode step
+    assert!(st.decode_steps > 0);
+    assert!(st.occupancy_sum >= st.decode_steps);
+    assert!(st.occupancy_sum <= st.decode_steps * 3);
+    let occ = st.occupancy(3);
+    assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ}");
+
+    // draft == target: exact acceptance, and proposals actually happened
+    assert!(st.spec_proposed > 0, "speculation must engage");
+    assert_eq!(st.spec_accepted, st.spec_proposed, "self-draft accepts everything");
+    assert_eq!(st.accept_rate(), 1.0);
+
+    // pool peaks propagate into stats; retirement returns every page
+    let ps = handle.stats();
+    assert_eq!(st.pool_used_peak, ps.used_peak, "stats mirror the pool peak");
+    assert!(ps.used_peak > 0);
+    assert_eq!(ps.used_pages, 0, "all sessions retired -> all pages returned");
+    assert_eq!(ps.overflow_pages, 0, "admission discipline held");
+    assert_eq!(st.pool_pages, 16);
+
+    // latency ring saw every decode tick that emitted tokens
+    assert!(st.latency.count > 0);
+    assert!(st.latency_p99() >= st.latency_p50());
+}

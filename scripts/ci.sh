@@ -12,6 +12,9 @@
 #      must decrease (the example exits nonzero otherwise)
 #   6. serve smoke: a 16-token native KV-cached decode that must echo a
 #      completion and exit 0
+#   6b. observability: the obs_ contract suite with tracing off AND
+#      MXFP4_TRACE=1, plus a --metrics-dump/--trace-out smoke whose
+#      JSON snapshot must report the tokens actually served
 #   7. cargo doc           (rustdoc, warnings denied)
 #
 # Usage: ./scripts/ci.sh        (from the repo root; any extra args are
@@ -118,6 +121,45 @@ echo "==> paged-KV contract tests (by name)"
 # truncate rollback on/straddling page boundaries, pool exhaustion ->
 # queueing -> admission, evict/re-prefill byte identity, scratch reuse
 cargo test -q --test paged_kv paged_
+
+echo "==> observability contract tests (tracing off, then MXFP4_TRACE=1)"
+# tests/obs.rs by prefix, twice: every assertion (bitwise parity,
+# snapshot coverage, Chrome-trace export, TCP metrics command,
+# EngineStats accounting) must hold with tracing disabled AND with the
+# env switch enabling it at startup — instrumentation is read-only.
+cargo test -q --test obs obs_
+MXFP4_TRACE=1 cargo test -q --test obs obs_
+
+echo "==> metrics-dump smoke (serve writes one JSON snapshot covering the run)"
+# the dump must parse as JSON and report the generated tokens the smoke
+# actually served (the bench gate for tracing overhead is benches/obs.rs,
+# compile-checked above with the other bench targets)
+dump=$(mktemp /tmp/mxfp4-metrics.XXXXXX.json)
+trace=$(mktemp /tmp/mxfp4-trace.XXXXXX.json)
+cargo run --release -- serve --backend native --config test \
+    --recipe mxfp4 --prompt 1,2,3,4 --tokens 8 \
+    --metrics-dump "$dump" --trace-out "$trace" >/dev/null
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$dump" "$trace" <<'EOF'
+import json, sys
+snap = json.load(open(sys.argv[1]))
+gen = snap["gauges"]["engine.generated_tokens"]
+assert gen > 0, f"metrics dump reports no generated tokens: {gen}"
+trace = json.load(open(sys.argv[2]))
+assert trace["traceEvents"], "trace-out exported no spans"
+print(f"metrics dump ok: {gen:.0f} tokens, {len(trace['traceEvents'])} spans")
+EOF
+else
+    grep -q '"engine.generated_tokens"' "$dump" || {
+        echo "metrics dump missing engine.generated_tokens" >&2
+        exit 1
+    }
+    grep -q '"traceEvents":\[{' "$trace" || {
+        echo "trace-out exported no spans" >&2
+        exit 1
+    }
+fi
+rm -f "$dump" "$trace"
 
 echo "==> loadgen smoke (paged engine under concurrent TCP load, bounded KV)"
 # small-scale run of the 1000-session load generator: 32 pipelined
