@@ -1,0 +1,77 @@
+//! Checkpoint-format bench: MXFP4-at-rest (`.mxpk`) vs f32 (`.mxck`).
+//!
+//! Gates the PR's two perf claims for the `small` preset, asserting (so
+//! `cargo bench --bench ckpt` fails loudly if a refactor regresses them):
+//!   * size: the packed checkpoint is >= 3x smaller than the f32 one
+//!   * cold start: `ServeModel::load_packed` is >= 5x faster than the
+//!     f32 load-then-pack path (`checkpoint::load` + `ServeModel::new`)
+
+#[path = "harness.rs"]
+mod harness;
+
+use mxfp4_train::coordinator::checkpoint;
+use mxfp4_train::model::{GPTConfig, NativeRecipe};
+use mxfp4_train::mx::store;
+use mxfp4_train::runtime::executor::init_params_for;
+use mxfp4_train::serve::ServeModel;
+
+fn main() {
+    harness::header("checkpoint formats: small preset, mxfp4 recipe");
+    let dir = std::env::temp_dir().join("mxfp4_bench_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let (cfg, _) = GPTConfig::preset("small").unwrap();
+    let recipe = NativeRecipe::parse("mxfp4").unwrap();
+    let specs = cfg.param_specs();
+    let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+    let params = init_params_for(&specs, cfg.n_layers, 7);
+    let workers = mxfp4_train::util::threadpool::default_workers();
+
+    let f32_path = dir.join("master.mxck");
+    let pk_path = dir.join("packed.mxpk");
+    checkpoint::save(&f32_path, &names, &params).unwrap();
+    let pk = checkpoint::build_packed(&cfg, &recipe, &names, &params, workers).unwrap();
+    store::write(&pk_path, &pk).unwrap();
+
+    let f32_bytes = std::fs::metadata(&f32_path).unwrap().len();
+    let pk_bytes = std::fs::metadata(&pk_path).unwrap().len();
+    let ratio = f32_bytes as f64 / pk_bytes as f64;
+    println!(
+        "{:<44} {f32_bytes:>12} B -> {pk_bytes:>10} B   ({ratio:.2}x smaller)",
+        "size: .mxck -> .mxpk"
+    );
+
+    // cold start: disk -> servable model (the pack work dominates the
+    // f32 path; the packed path is pure section reads)
+    let s_f32 = harness::time_secs(1, 3, || {
+        let (_, tensors) = checkpoint::load(&f32_path).unwrap();
+        let m = ServeModel::new(cfg.clone(), recipe.clone(), tensors).unwrap();
+        assert!(m.pack_stats() > 0);
+        std::hint::black_box(&m);
+    });
+    let s_pk = harness::time_secs(1, 3, || {
+        let m = ServeModel::load_packed(&pk_path).unwrap();
+        assert_eq!(m.pack_stats(), 0, "packed load must not quantize");
+        std::hint::black_box(&m);
+    });
+    let speedup = s_f32 / s_pk;
+    println!(
+        "{:<44} {:>12.3} ms vs {:>10.3} ms   ({speedup:.2}x faster)",
+        "cold start: load+pack vs load_packed",
+        s_f32 * 1e3,
+        s_pk * 1e3
+    );
+
+    assert!(
+        ratio >= 3.0,
+        "SIZE GATE FAILED: .mxpk must be >= 3x smaller than .mxck (got {ratio:.2}x)"
+    );
+    assert!(
+        speedup >= 5.0,
+        "LOAD GATE FAILED: packed load must be >= 5x faster than load-then-pack (got {speedup:.2}x)"
+    );
+    println!("gates passed: {ratio:.2}x smaller (>= 3x), {speedup:.2}x faster (>= 5x)");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -10,34 +10,134 @@
 //!     numel u64 LE
 //!     f32 LE data
 //! ```
+//!
+//! All writes are atomic (tmp + rename via [`atomic_write`]) — a
+//! mid-save kill leaves either the previous complete checkpoint or
+//! none, never a truncated file.
+//!
+//! [`build_packed`] bridges these f32 tensor sets to the serving-native
+//! `.mxpk` format (`mx::store`): it NR-packs every forward weight
+//! through the same [`PackPipeline`] orientation the serve loader uses,
+//! so a `.mxpk` converted from a `.mxck` decodes bitwise-identically to
+//! a `ServeModel` that packed the f32 weights itself.
 
+use std::collections::HashSet;
 use std::io::{Read, Write};
 use std::path::Path;
+
+use crate::model::{fwd_weight_indices, GPTConfig, NativeRecipe, TOK_EMB};
+use crate::mx::pipeline::{Orientation, PackPipeline};
+use crate::mx::store::{ModelMeta, PackedCheckpoint, PackedTensor};
+use crate::util::fs::atomic_write;
 
 const MAGIC: &[u8; 4] = b"MXCK";
 const VERSION: u32 = 1;
 
 /// Named tensor set (params, adam m, adam v each saved as one file).
+/// Atomic: the payload streams to `<path>.tmp` and is renamed into
+/// place only once complete.
 pub fn save(path: &Path, names: &[String], tensors: &[Vec<f32>]) -> std::io::Result<()> {
     assert_eq!(names.len(), tensors.len());
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(names.len() as u32).to_le_bytes())?;
-    for (name, t) in names.iter().zip(tensors) {
-        f.write_all(&(name.len() as u32).to_le_bytes())?;
-        f.write_all(name.as_bytes())?;
-        f.write_all(&(t.len() as u64).to_le_bytes())?;
-        // bulk-write the f32 payload
-        let bytes: &[u8] =
-            unsafe { std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 4) };
-        f.write_all(bytes)?;
-    }
-    Ok(())
+    atomic_write(path, |f| {
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(names.len() as u32).to_le_bytes())?;
+        for (name, t) in names.iter().zip(tensors) {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.len() as u64).to_le_bytes())?;
+            // bulk-write the f32 payload
+            let bytes: &[u8] =
+                unsafe { std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 4) };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    })
 }
 
-fn bad(msg: &str) -> std::io::Error {
-    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+fn bad(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Assemble a `.mxpk` [`PackedCheckpoint`] from an f32 tensor set in
+/// [`GPTConfig::param_specs`] order — the one place the NR pack for
+/// at-rest storage happens. Forward weights (for quantizing recipes)
+/// get their `MxMat` section packed here exactly as the serve loader
+/// would have (`Orientation::AsStored`, worker-count-independent
+/// bytes); the tied embedding keeps its f32 copy too (the gather reads
+/// it), every other forward weight stores packed-only. The result is
+/// deterministic: trainer-emitted and `convert`-emitted files for the
+/// same tensors are byte-identical.
+pub fn build_packed(
+    cfg: &GPTConfig,
+    recipe: &NativeRecipe,
+    names: &[String],
+    tensors: &[Vec<f32>],
+    workers: usize,
+) -> std::io::Result<PackedCheckpoint> {
+    let specs = cfg.param_specs();
+    if names.len() != specs.len() || tensors.len() != specs.len() {
+        return Err(bad(format!(
+            "tensor set has {} tensors, config wants {}",
+            names.len(),
+            specs.len()
+        )));
+    }
+    let fwd: HashSet<usize> = if recipe.quantize_fwd {
+        fwd_weight_indices(cfg).into_iter().collect()
+    } else {
+        HashSet::new()
+    };
+    let mut out = Vec::with_capacity(specs.len());
+    for (idx, spec) in specs.iter().enumerate() {
+        if names[idx] != spec.name {
+            return Err(bad(format!(
+                "tensor {idx} is {:?}, config wants {:?} — not a master-weight set for this config?",
+                names[idx], spec.name
+            )));
+        }
+        if tensors[idx].len() != spec.numel() {
+            return Err(bad(format!(
+                "tensor {}: numel {} != {}",
+                spec.name,
+                tensors[idx].len(),
+                spec.numel()
+            )));
+        }
+        let packed = if fwd.contains(&idx) {
+            let (r, c) = match spec.shape.as_slice() {
+                [r, c] => (*r, *c),
+                _ => return Err(bad(format!("forward weight {} is not 2-D", spec.name))),
+            };
+            Some(
+                PackPipeline::oriented(&tensors[idx], r, c, Orientation::AsStored)
+                    .pack_nr(workers),
+            )
+        } else {
+            None
+        };
+        // f32 rides along wherever the forward reads raw values; the
+        // packed-only weights are the size win
+        let keep_f32 = packed.is_none() || idx == TOK_EMB;
+        out.push(PackedTensor {
+            name: spec.name.clone(),
+            shape: spec.shape.clone(),
+            f32_data: keep_f32.then(|| tensors[idx].clone()),
+            packed,
+        });
+    }
+    Ok(PackedCheckpoint {
+        meta: ModelMeta {
+            vocab: cfg.vocab,
+            d_model: cfg.d_model,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            seq_len: cfg.seq_len,
+            d_ff: cfg.d_ff,
+            recipe: recipe.name.clone(),
+        },
+        tensors: out,
+    })
 }
 
 /// Load a tensor set; returns (names, tensors).
@@ -103,6 +203,45 @@ mod tests {
         let p = dir.join("garbage.mxck");
         std::fs::write(&p, b"not a checkpoint at all").unwrap();
         assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("mxfp4_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("atomic.mxck");
+        save(&p, &["w".to_string()], &[vec![1.0f32; 8]]).unwrap();
+        assert!(p.exists());
+        assert!(!dir.join("atomic.mxck.tmp").exists(), "rename must consume the tmp file");
+        // overwrite path: old complete file is replaced wholesale
+        save(&p, &["w".to_string()], &[vec![2.0f32; 8]]).unwrap();
+        let (_, t) = load(&p).unwrap();
+        assert_eq!(t[0], vec![2.0f32; 8]);
+    }
+
+    #[test]
+    fn build_packed_validates_the_tensor_set() {
+        let (cfg, _) = GPTConfig::preset("micro").unwrap();
+        let recipe = NativeRecipe::parse("mxfp4").unwrap();
+        let specs = cfg.param_specs();
+        let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+        let tensors: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.5f32; s.numel()]).collect();
+        let pk = build_packed(&cfg, &recipe, &names, &tensors, 1).unwrap();
+        // tied embedding carries both sections; fc1 packed-only; LNs f32-only
+        assert!(pk.tensors[0].f32_data.is_some() && pk.tensors[0].packed.is_some());
+        let fc1 = pk.tensors.iter().find(|t| t.name == "l0_fc1_w").unwrap();
+        assert!(fc1.f32_data.is_none() && fc1.packed.is_some());
+        let ln = pk.tensors.iter().find(|t| t.name == "l0_ln1_g").unwrap();
+        assert!(ln.f32_data.is_some() && ln.packed.is_none());
+        // wrong name order and wrong count are typed errors
+        let mut swapped = names.clone();
+        swapped.swap(0, 1);
+        assert!(build_packed(&cfg, &recipe, &swapped, &tensors, 1).is_err());
+        assert!(build_packed(&cfg, &recipe, &names[..1], &tensors[..1], 1).is_err());
+        // bf16 recipe: nothing packed, everything f32
+        let bf16 = NativeRecipe::parse("bf16").unwrap();
+        let pk = build_packed(&cfg, &bf16, &names, &tensors, 1).unwrap();
+        assert!(pk.tensors.iter().all(|t| t.packed.is_none() && t.f32_data.is_some()));
     }
 
     #[test]

@@ -116,6 +116,19 @@ impl MxWeightCache {
         self.entries[idx][slot].as_ref().unwrap()
     }
 
+    /// Install an already-packed NR matrix into a slot, replacing any
+    /// cached pack. This is the `.mxpk` restore path: the bytes were
+    /// packed at checkpoint-write time, so installing them counts as
+    /// **neither** a pack nor a hit — `packs == 0` after a packed load
+    /// is the observable proof that serving did zero quantize work.
+    pub fn insert_nr(&mut self, idx: usize, orientation: Orientation, m: MxMat) {
+        let slot = match orientation {
+            Orientation::AsStored => 0,
+            Orientation::Transposed => 1,
+        };
+        self.entries[idx][slot] = Some(m);
+    }
+
     /// Read-only view of an already-packed NR slot — `None` until
     /// [`pack_nr`](Self::pack_nr) has populated it this epoch. This is
     /// the serving path: `serve::ServeModel` packs every forward weight
@@ -314,6 +327,22 @@ mod tests {
         assert_eq!(*seen, packed);
         assert_eq!((cache.packs, cache.hits), (packs, hits), "read path must not count");
         assert!(cache.get_nr(0, Orientation::Transposed).is_none());
+    }
+
+    #[test]
+    fn insert_nr_installs_without_counting() {
+        // the .mxpk restore path: pre-packed bytes go in, the counters
+        // stay untouched, and reads see exactly the inserted pack
+        let w = weight(32, 64, 9);
+        let packed = MxMat::quantize_nr(&w, 32, 64);
+        let mut cache = MxWeightCache::new(2);
+        cache.insert_nr(1, Orientation::AsStored, packed.clone());
+        assert_eq!((cache.packs, cache.hits, cache.sr_draws), (0, 0, 0));
+        assert_eq!(cache.get_nr(1, Orientation::AsStored), Some(&packed));
+        assert!(cache.get_nr(1, Orientation::Transposed).is_none());
+        // a subsequent pack_nr on the same slot is a hit, not a pack
+        cache.pack_nr(1, &w, 32, 64, Orientation::AsStored, 1);
+        assert_eq!((cache.packs, cache.hits), (0, 1));
     }
 
     #[test]

@@ -333,11 +333,38 @@ impl Trainer {
         }
     }
 
-    /// Save master weights (and a compute-copy snapshot) to `<dir>/`.
+    /// Save master weights (and a compute-copy snapshot) to `<dir>/`,
+    /// plus the serving-native `packed.mxpk` (MXFP4 at rest) — packed
+    /// from the f32 masters, so `convert`ing `master.mxck` later
+    /// produces a byte-identical file. All three writes are atomic.
     pub fn save_checkpoint(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         super::checkpoint::save(&dir.join("master.mxck"), &self.param_names, &self.opt.master)?;
         super::checkpoint::save(&dir.join("compute.mxck"), &self.param_names, &self.compute)?;
+        // The packed emit needs the architecture + recipe; a non-preset
+        // config or unparseable recipe (artifact-backend runs) just
+        // skips it — the f32 masters above are already durable.
+        match (
+            crate::model::GPTConfig::preset(&self.cfg.config),
+            crate::model::NativeRecipe::parse(&self.cfg.recipe),
+        ) {
+            (Some((cfg, _)), Ok(recipe)) => {
+                let workers = crate::util::threadpool::default_workers();
+                let pk = super::checkpoint::build_packed(
+                    &cfg,
+                    &recipe,
+                    &self.param_names,
+                    &self.opt.master,
+                    workers,
+                )?;
+                crate::mx::store::write(&dir.join("packed.mxpk"), &pk)?;
+            }
+            _ => crate::warn!(
+                "skipping packed.mxpk: config {:?} / recipe {:?} not packable",
+                self.cfg.config,
+                self.cfg.recipe
+            ),
+        }
         Ok(())
     }
 

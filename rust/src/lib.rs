@@ -25,6 +25,7 @@
 //! | `mx::block` | §2 | per-block packed container (`MxVec`) — the reference layout |
 //! | `mx::mat` | §1, Table 5 | **packed tensor engine**: flat SoA `MxMat` + FP4×FP4 product LUT |
 //! | `mx::pipeline` | §4.2, Alg. 3 | **streaming operand prep** (`PackPipeline`): fused gather + RHT + quantize + pack, orientation-aware, parallel |
+//! | `mx::store` | §1 (deployment) | **MXFP4 at rest**: the `.mxpk` packed-checkpoint container — `MxMat` SoA + f32 sections behind a JSON manifest, 64-byte aligned, atomic writes, optional `mmap` reads (`docs/CHECKPOINTS.md`) |
 //! | `gemm` | Algorithm 3 | qdq reference GEMM (`mx_matmul`) + packed LUT GEMM (`mx_gemm_packed`) |
 //! | `gemm::simd` | §1, Table 5 | **SIMD inner kernel**: SSSE3/NEON shuffle-LUT block decode + exact integer accumulate, runtime-dispatched with scalar `row_dot` as fallback + oracle (`MX_FORCE_SCALAR`) |
 //! | `hadamard` | §3.2, Eq. 5 | blockwise RHT, dense and O(n log n) FWHT forms |

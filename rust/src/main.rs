@@ -6,7 +6,11 @@
 //!   eval        validation perplexity + cloze accuracy for a checkpoint
 //!   generate    greedy generation demo from a checkpoint
 //!   serve       continuous-batching KV-cached decode server (one-shot
-//!               --prompt, --stdin line/JSON protocol, or --demo N)
+//!               --prompt, --stdin line/JSON protocol, or --demo N);
+//!               --checkpoint accepts f32 `.mxck` or packed `.mxpk`
+//!               (auto-detected by magic — the latter starts with zero
+//!               quantize/pack work)
+//!   convert     f32 `.mxck` checkpoint → packed `.mxpk` (MXFP4 at rest)
 //!   variance    Fig. 2 variance study (rust substrates)
 //!   table5      roofline throughput table (perfmodel)
 //!   formats     print Table 1 (FP datatype zoo)
@@ -40,13 +44,14 @@ fn main() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("convert") => cmd_convert(&args),
         Some("variance") => cmd_variance(&args),
         Some("table5") => cmd_table5(&args),
         Some("formats") => cmd_formats(),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: mxfp4-train <train|sweep|eval|generate|serve|variance|table5|formats|artifacts> [--key value ...]"
+                "usage: mxfp4-train <train|sweep|eval|generate|serve|convert|variance|table5|formats|artifacts> [--key value ...]"
             );
             Ok(())
         }
@@ -280,34 +285,94 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny");
     let recipe = args.get_or("recipe", "mxfp4");
     let choice = args.get_or("backend", "auto");
-    let spec = BackendSpec::resolve_fwd(config, recipe, "logits", choice, reg.as_ref())?;
-    let params = match args.get("checkpoint") {
-        Some(ckpt) => {
-            mxfp4_train::coordinator::checkpoint::load(std::path::Path::new(ckpt))?.1
-        }
-        None => {
-            info!("no --checkpoint: serving randomly-initialized weights (demo/smoke mode)");
-            executor::init_params_for(
-                &spec.param_specs(),
-                spec.n_layers(),
-                args.get_u64("seed", 0),
-            )
-        }
-    };
-    let mut native_model = None;
-    let backend: Box<dyn serve::ServeBackend> = match &spec {
-        BackendSpec::Native { cfg, recipe, .. } => {
-            // the native fast path: pack once, share across sessions
-            let model =
-                std::sync::Arc::new(serve::ServeModel::new(cfg.clone(), recipe.clone(), params)?);
-            info!("packed {} bytes of MXFP4 weight views once for this checkpoint", model.packed_bytes());
-            native_model = Some(model.clone());
-            Box::new(model)
-        }
-        BackendSpec::Artifact(_) => Box::new(serve::BackendServe::new(spec.connect()?, params)),
-    };
-    info!("serving via {}", backend.describe());
     let max_batch = args.get_usize("max-batch", 8);
+
+    // checkpoint format auto-detection: a `.mxpk` magic routes to the
+    // zero-quantize packed load, anything else through the f32 path
+    let ckpt_path = args.get("checkpoint").map(PathBuf::from);
+    let packed_ckpt = match &ckpt_path {
+        Some(p) => mx::store::is_packed(p)
+            .with_context(|| format!("--checkpoint {}", p.display()))?,
+        None => false,
+    };
+
+    let mut native_model = None;
+    let mut ckpt_kind: Option<(&str, u64)> = None; // (format label, file bytes)
+    let load_t0 = std::time::Instant::now();
+    let spec;
+    let backend: Box<dyn serve::ServeBackend> = if packed_ckpt {
+        let p = ckpt_path.as_ref().unwrap();
+        anyhow::ensure!(
+            choice != "artifact",
+            "--backend artifact cannot serve a packed .mxpk (native engine format); \
+             convert came from its f32 master — serve that instead"
+        );
+        let model = serve::ServeModel::load_packed(p)
+            .with_context(|| format!("--checkpoint {}", p.display()))?;
+        // the manifest is authoritative: packed bytes only decode
+        // correctly for the config/recipe they were packed under
+        if args.get("config").is_some_and(|_| {
+            GPTConfig::preset(config).map(|(c, _)| &c != model.config()).unwrap_or(true)
+        }) {
+            info!("--config {config} ignored: the .mxpk manifest pins the architecture");
+        }
+        if args.get("recipe").is_some_and(|r| r != model.recipe().name) {
+            info!("--recipe {recipe} ignored: checkpoint was packed for {}", model.recipe().name);
+        }
+        let model = std::sync::Arc::new(model);
+        spec = BackendSpec::Native {
+            cfg: model.config().clone(),
+            recipe: model.recipe().clone(),
+            batch: max_batch,
+        };
+        ckpt_kind = Some(("packed .mxpk", std::fs::metadata(p)?.len()));
+        native_model = Some(model.clone());
+        Box::new(model)
+    } else {
+        spec = BackendSpec::resolve_fwd(config, recipe, "logits", choice, reg.as_ref())?;
+        let params = match &ckpt_path {
+            Some(p) => {
+                ckpt_kind = Some(("f32 .mxck", std::fs::metadata(p)?.len()));
+                mxfp4_train::coordinator::checkpoint::load(p)?.1
+            }
+            None => {
+                info!("no --checkpoint: serving randomly-initialized weights (demo/smoke mode)");
+                executor::init_params_for(
+                    &spec.param_specs(),
+                    spec.n_layers(),
+                    args.get_u64("seed", 0),
+                )
+            }
+        };
+        match &spec {
+            BackendSpec::Native { cfg, recipe, .. } => {
+                // the native fast path: pack once, share across sessions
+                let model = std::sync::Arc::new(serve::ServeModel::new(
+                    cfg.clone(),
+                    recipe.clone(),
+                    params,
+                )?);
+                info!(
+                    "packed {} bytes of MXFP4 weight views once for this checkpoint",
+                    model.packed_bytes()
+                );
+                native_model = Some(model.clone());
+                Box::new(model)
+            }
+            BackendSpec::Artifact(_) => Box::new(serve::BackendServe::new(spec.connect()?, params)),
+        }
+    };
+    // checkpoint cold-start accounting: how long until servable, and how
+    // much quantize work it took (0 for .mxpk — the tentpole claim)
+    if let Some((kind, bytes)) = ckpt_kind {
+        let load_secs = load_t0.elapsed().as_secs_f64();
+        let packs = native_model.as_ref().map_or(0, |m| m.pack_stats());
+        println!("checkpoint load: {load_secs:.3}s, {packs} quantize packs, {bytes} bytes ({kind})");
+        mxfp4_train::obs::set_gauge("serve.load_secs", load_secs);
+        mxfp4_train::obs::set_gauge("serve.ckpt_bytes", bytes as f64);
+        mxfp4_train::obs::set_gauge("serve.load_packs", packs as f64);
+    }
+    info!("serving via {}", backend.describe());
     let pool_pages = args.get_usize("kv-pool-pages", 0);
     let engine_cfg = if pool_pages == 0 {
         serve::EngineConfig::batch(max_batch)
@@ -336,6 +401,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .clone()
                 .context("--spec-draft target needs the native serve backend")?;
             Box::new(m)
+        } else if args
+            .get("spec-draft-checkpoint")
+            .map(|c| mx::store::is_packed(std::path::Path::new(c)))
+            .transpose()?
+            .unwrap_or(false)
+        {
+            // packed draft: manifest config/recipe win, zero pack work
+            let ckpt = args.get("spec-draft-checkpoint").unwrap();
+            let m = serve::ServeModel::load_packed(std::path::Path::new(ckpt))
+                .with_context(|| format!("--spec-draft-checkpoint {ckpt}"))?;
+            info!("spec draft from packed checkpoint ({})", m.describe());
+            Box::new(std::sync::Arc::new(m))
         } else {
             let (dcfg, _) = GPTConfig::preset(draft_name).with_context(|| {
                 format!("unknown --spec-draft config {draft_name:?} (micro|test|tiny|small|base|target)")
@@ -480,6 +557,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// One completion as a JSON response line.
 fn print_completion(c: &serve::Completion) {
     println!("{}", net::completion_json(c));
+}
+
+/// `convert --checkpoint <master.mxck> --config <preset> --recipe <name>
+/// [--out <path.mxpk>]`: NR-pack an f32 checkpoint into the
+/// serving-native `.mxpk` container (MXFP4 at rest). The output is
+/// byte-identical to the `packed.mxpk` the trainer emits for the same
+/// masters, and `serve --checkpoint <out>` starts with zero quantize
+/// work. Default output: the input path with a `.mxpk` extension.
+fn cmd_convert(args: &Args) -> Result<()> {
+    let ckpt = args.get("checkpoint").context("--checkpoint <master.mxck> required")?;
+    let src = PathBuf::from(ckpt);
+    let out = match args.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => src.with_extension("mxpk"),
+    };
+    anyhow::ensure!(
+        !mx::store::is_packed(&src).with_context(|| format!("--checkpoint {ckpt}"))?,
+        "{} is already a packed .mxpk checkpoint",
+        src.display()
+    );
+    let config = args.get_or("config", "tiny");
+    let recipe_name = args.get_or("recipe", "mxfp4");
+    let (cfg, _) = GPTConfig::preset(config)
+        .with_context(|| format!("unknown --config {config:?} (micro|test|tiny|small|base)"))?;
+    let recipe = NativeRecipe::parse(recipe_name).map_err(anyhow::Error::msg)?;
+    let (names, tensors) = mxfp4_train::coordinator::checkpoint::load(&src)?;
+    let workers = mxfp4_train::util::threadpool::default_workers();
+    let pk = mxfp4_train::coordinator::checkpoint::build_packed(
+        &cfg, &recipe, &names, &tensors, workers,
+    )?;
+    let out_bytes = mx::store::write(&out, &pk)?;
+    let src_bytes = std::fs::metadata(&src)?.len();
+    println!(
+        "convert: {} ({src_bytes} bytes f32) -> {} ({out_bytes} bytes, {:.2}x smaller, recipe {})",
+        src.display(),
+        out.display(),
+        src_bytes as f64 / out_bytes as f64,
+        recipe.name
+    );
+    Ok(())
 }
 
 /// Fig. 2: mean variance of Q(A)^T Q(B) with and without the RHT.

@@ -125,6 +125,20 @@ pub(crate) fn lnf_base(n_layers: usize) -> usize {
     2 + n_layers * PER_LAYER
 }
 
+/// Parameter indices of the 2-D weights the forward pass GEMMs: the
+/// tied head plus `qkv`/`proj`/`fc1`/`fc2` per layer. (`pos_emb` is 2-D
+/// but only ever gathered, never multiplied.) Shared by the serve
+/// pack-once load and the `.mxpk` checkpoint writer — both sides of the
+/// packed-at-rest contract must agree on which tensors carry packs.
+pub(crate) fn fwd_weight_indices(cfg: &GPTConfig) -> Vec<usize> {
+    let mut idxs = vec![TOK_EMB];
+    for l in 0..cfg.n_layers {
+        let base = layer_base(l);
+        idxs.extend([base + 2, base + 3, base + 6, base + 7]);
+    }
+    idxs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

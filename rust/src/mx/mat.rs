@@ -280,6 +280,58 @@ impl MxMat {
         total
     }
 
+    /// Rebuild an `MxMat` from its stable byte layout: `codes` must be
+    /// exactly `rows * ceil(cols/32) * 16` nibble-packed bytes and
+    /// `exps` exactly `rows * ceil(cols/32)` E8M0 exponents, both in the
+    /// row-major block order [`codes_bytes`](Self::codes_bytes) /
+    /// [`exps_bytes`](Self::exps_bytes) expose. This is the load half of
+    /// the `.mxpk` at-rest contract (`mx::store`): a matrix packed once
+    /// at convert time round-trips through disk into an identical
+    /// `MxMat` with **zero quantize work**. Length mismatches are typed
+    /// errors, never panics — corrupt files must fail loudly and
+    /// cleanly.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        codes: Vec<u8>,
+        exps: Vec<i8>,
+    ) -> Result<MxMat, String> {
+        let kblocks = cols.div_ceil(MX_BLOCK);
+        let want_codes = rows * kblocks * BLOCK_BYTES;
+        if codes.len() != want_codes {
+            return Err(format!(
+                "codes length {} != {} ({rows}x{cols} needs {kblocks} blocks/row)",
+                codes.len(),
+                want_codes
+            ));
+        }
+        let want_exps = rows * kblocks;
+        if exps.len() != want_exps {
+            return Err(format!("exps length {} != {}", exps.len(), want_exps));
+        }
+        Ok(MxMat { rows, cols, kblocks, codes, exps })
+    }
+
+    /// The packed FP4 code bytes, whole matrix: row-major, `kblocks`
+    /// 16-byte blocks per row, two 4-bit codes per byte (element `i` of
+    /// a block in byte `i/2`, **low nibble first** — the OCP MX
+    /// ordering), tail padding inside a row's last block zero. This
+    /// byte layout is pinned by golden-vector tests (`tests/golden.rs`)
+    /// because it is also the on-disk `.mxpk` section format.
+    #[inline]
+    pub fn codes_bytes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// The E8M0 shared exponents as raw bytes (one `i8` per 32-element
+    /// block, row-major — the same order as
+    /// [`codes_bytes`](Self::codes_bytes) blocks), for bulk I/O.
+    #[inline]
+    pub fn exps_bytes(&self) -> &[u8] {
+        // i8 -> u8 is a bit-preserving reinterpretation
+        unsafe { std::slice::from_raw_parts(self.exps.as_ptr() as *const u8, self.exps.len()) }
+    }
+
     /// Packed bytes held (codes + exponents) — the memory the engine
     /// actually touches per GEMM operand.
     pub fn packed_bytes(&self) -> usize {
@@ -380,6 +432,24 @@ mod tests {
         // padded tail costs extra bits per logical element
         let t = MxMat::quantize_nr(&vec![1.0f32; 33], 1, 33);
         assert!(t.bits_per_element() > 4.25);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_rejects_bad_lengths() {
+        let v = gaussian(3, 50, 70);
+        let m = MxMat::quantize_nr(&v, 3, 50);
+        let rebuilt =
+            MxMat::from_parts(3, 50, m.codes_bytes().to_vec(), m.exps.clone()).unwrap();
+        assert_eq!(rebuilt, m, "byte-layout accessors must round-trip exactly");
+        // exps_bytes is the bit-view of the i8 exponents
+        assert_eq!(rebuilt.exps_bytes().len(), m.exps.len());
+        for (b, &e) in rebuilt.exps_bytes().iter().zip(&m.exps) {
+            assert_eq!(*b, e as u8);
+        }
+        // wrong lengths are errors, not panics
+        assert!(MxMat::from_parts(3, 50, m.codes[1..].to_vec(), m.exps.clone()).is_err());
+        assert!(MxMat::from_parts(3, 50, m.codes.clone(), m.exps[1..].to_vec()).is_err());
+        assert!(MxMat::from_parts(4, 50, m.codes.clone(), m.exps.clone()).is_err());
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //! * `pipeline` — the streaming operand-prep pipeline (`PackPipeline`):
 //!   fused gather + blockwise RHT + quantize + pack, orientation-aware
 //!   and parallel — every GEMM operand is prepared through it
+//! * `store` — `.mxpk` packed checkpoints: `MxMat` SoA at rest (aligned
+//!   sections + JSON manifest), read back with zero quantize/pack work
 
 pub mod bf16;
 pub mod block;
@@ -24,6 +26,7 @@ pub mod mat;
 pub mod pipeline;
 pub mod quant;
 pub mod scale;
+pub mod store;
 
 /// Table 1 of the paper: common hardware FP datatypes.
 pub fn format_table() -> Vec<(&'static str, u32, u32, u32, u32)> {

@@ -1,0 +1,675 @@
+//! `.mxpk` — MXFP4-at-rest packed checkpoints: the engine's native
+//! `MxMat` SoA (nibble-packed FP4 codes + i8 E8M0 block exponents) as a
+//! versioned on-disk container, so serving a checkpoint never quantizes
+//! or packs anything at startup.
+//!
+//! The f32 `.mxck` tensor sets (`coordinator::checkpoint`) stay the
+//! training masters; this module stores what the *serve* path actually
+//! consumes — one NR pack per forward weight, done once at convert time
+//! (the paper's §4 "one pack per checkpoint" economics taken to rest):
+//! ~3.2× smaller than f32 at 4.25 bits/element, and loading is pure
+//! section reads straight into [`MxMat`] buffers
+//! ([`MxMat::from_parts`]). Tensors the forward pass reads as f32
+//! (embedding gathers, LayerNorm gains/biases — and every weight for
+//! unquantized recipes) ride along as raw f32 sections.
+//!
+//! ## File layout (all integers little-endian)
+//!
+//! ```text
+//!   off  0: magic  "MXPK"                      4 bytes
+//!   off  4: format version u32                 4 bytes
+//!   off  8: manifest_len u64                   8 bytes
+//!   off 16: manifest (UTF-8 JSON)              manifest_len bytes
+//!   data:   align_up(16 + manifest_len, 64)
+//!           sections, each 64-byte aligned, zero-padded between
+//! ```
+//!
+//! The manifest (see `docs/CHECKPOINTS.md` for the full spec) carries
+//! the model dimensions + recipe and, per tensor, its name, logical
+//! shape, and the offset/length of each section **relative to the data
+//! area** — so the manifest's own length never feeds back into the
+//! offsets it contains. Sections are 64-byte aligned for direct mapped
+//! or `O_DIRECT`-style consumption.
+//!
+//! Reads go through buffered `pread`-style section reads by default;
+//! the `mmap` cargo feature maps the file once (Linux x86_64/aarch64,
+//! raw `mmap(2)`; no libc crate offline) and copies sections out of the
+//! mapping, falling back to buffered reads anywhere the mapping is
+//! unavailable. Either way the bytes land unmodified in the `MxMat`
+//! buffers — zero quantize work, and `ServeModel::pack_stats()` == 0
+//! after [`serve::ServeModel::load_packed`](crate::serve::ServeModel).
+//!
+//! All corruption paths (bad magic, wrong version, truncated sections,
+//! shape/length mismatches, malformed manifest) are typed
+//! [`io::Error`]s, never panics; writes are atomic
+//! (tmp + rename, [`crate::util::fs::atomic_write`]) so a mid-run kill
+//! can never leave a truncated `.mxpk` either.
+
+use std::fs::File;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::mx::mat::{MxMat, BLOCK_BYTES};
+use crate::mx::quant::MX_BLOCK;
+use crate::util::fs::atomic_write;
+use crate::util::json::{self, Json};
+
+pub const MAGIC: &[u8; 4] = b"MXPK";
+pub const VERSION: u32 = 1;
+/// Section alignment (bytes). Every section offset — and the data area
+/// itself — is a multiple of this.
+pub const ALIGN: u64 = 64;
+
+/// Model dimensions + serving recipe recorded in the manifest — enough
+/// to rebuild the `GPTConfig` and `NativeRecipe` without CLI flags, so
+/// `serve` can auto-detect a `.mxpk` by magic alone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    /// Resolved feed-forward width (never 0).
+    pub d_ff: usize,
+    /// Recipe the checkpoint was packed for (e.g. "mxfp4"); its forward
+    /// leg decides which tensors carry packed vs f32 sections.
+    pub recipe: String,
+}
+
+/// One stored tensor: either representation may be present (the tied
+/// embedding carries both — f32 for the gather, packed for the head
+/// GEMM; plain forward weights carry only the pack).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTensor {
+    pub name: String,
+    /// Logical parameter shape (the `param_specs` shape, not padded).
+    pub shape: Vec<usize>,
+    /// Raw f32 values, when the forward pass reads this tensor unquantized.
+    pub f32_data: Option<Vec<f32>>,
+    /// The NR-packed `MxMat` view (`Orientation::AsStored`), when the
+    /// forward pass GEMMs against this tensor.
+    pub packed: Option<MxMat>,
+}
+
+impl PackedTensor {
+    fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An in-memory `.mxpk`: manifest metadata + tensor sections.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedCheckpoint {
+    pub meta: ModelMeta,
+    /// In `param_specs` order (load validates names against the specs).
+    pub tensors: Vec<PackedTensor>,
+}
+
+impl PackedCheckpoint {
+    /// Payload bytes across all sections (excluding header/manifest/padding).
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| {
+                t.f32_data.as_ref().map_or(0, |d| d.len() * 4)
+                    + t.packed.as_ref().map_or(0, MxMat::packed_bytes)
+            })
+            .sum()
+    }
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+fn align_up(x: u64) -> u64 {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// `true` if `path` starts with the `.mxpk` magic (the `serve`
+/// auto-detection probe). Short or unreadable-as-MXPK files are
+/// `Ok(false)`; only open errors surface as `Err`.
+pub fn is_packed(path: &Path) -> io::Result<bool> {
+    let mut f = File::open(path)?;
+    let mut magic = [0u8; 4];
+    match f.read_exact(&mut magic) {
+        Ok(()) => Ok(&magic == MAGIC),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => Ok(false),
+        Err(e) => Err(e),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+/// Per-tensor section placement, relative to the data area.
+struct Layout {
+    f32_off: u64,
+    codes_off: u64,
+    exps_off: u64,
+}
+
+/// Assign aligned relative offsets to every section, in tensor order
+/// (f32, then codes, then exps per tensor). Returns the placements and
+/// the data-area length.
+fn plan(tensors: &[PackedTensor]) -> (Vec<Layout>, u64) {
+    let mut cur = 0u64;
+    let mut out = Vec::with_capacity(tensors.len());
+    for t in tensors {
+        let mut l = Layout { f32_off: 0, codes_off: 0, exps_off: 0 };
+        if let Some(d) = &t.f32_data {
+            l.f32_off = cur;
+            cur = align_up(cur + (d.len() * 4) as u64);
+        }
+        if let Some(m) = &t.packed {
+            l.codes_off = cur;
+            cur = align_up(cur + m.codes_bytes().len() as u64);
+            l.exps_off = cur;
+            cur = align_up(cur + m.exps_bytes().len() as u64);
+        }
+        out.push(l);
+    }
+    (out, cur)
+}
+
+fn manifest_json(ck: &PackedCheckpoint, layouts: &[Layout]) -> Json {
+    let m = &ck.meta;
+    let model = json::obj(vec![
+        ("vocab", json::num(m.vocab as f64)),
+        ("d_model", json::num(m.d_model as f64)),
+        ("n_layers", json::num(m.n_layers as f64)),
+        ("n_heads", json::num(m.n_heads as f64)),
+        ("seq_len", json::num(m.seq_len as f64)),
+        ("d_ff", json::num(m.d_ff as f64)),
+        ("recipe", json::s(&m.recipe)),
+    ]);
+    let tensors = ck
+        .tensors
+        .iter()
+        .zip(layouts)
+        .map(|(t, l)| {
+            let mut entry = vec![
+                ("name", json::s(&t.name)),
+                (
+                    "shape",
+                    json::arr(t.shape.iter().map(|&d| json::num(d as f64)).collect()),
+                ),
+            ];
+            if let Some(d) = &t.f32_data {
+                entry.push((
+                    "f32",
+                    json::obj(vec![
+                        ("off", json::num(l.f32_off as f64)),
+                        ("len", json::num((d.len() * 4) as f64)),
+                    ]),
+                ));
+            }
+            if let Some(p) = &t.packed {
+                entry.push((
+                    "mx",
+                    json::obj(vec![
+                        ("orientation", json::s("as_stored")),
+                        ("rows", json::num(p.rows as f64)),
+                        ("cols", json::num(p.cols as f64)),
+                        ("kblocks", json::num(p.kblocks as f64)),
+                        ("codes_off", json::num(l.codes_off as f64)),
+                        ("codes_len", json::num(p.codes_bytes().len() as f64)),
+                        ("exps_off", json::num(l.exps_off as f64)),
+                        ("exps_len", json::num(p.exps_bytes().len() as f64)),
+                    ]),
+                ));
+            }
+            json::obj(entry)
+        })
+        .collect();
+    json::obj(vec![
+        ("format", json::s("mxpk")),
+        ("version", json::num(VERSION as f64)),
+        ("align", json::num(ALIGN as f64)),
+        ("model", model),
+        ("tensors", json::arr(tensors)),
+    ])
+}
+
+/// Pad the writer with zeros from `at` up to `to` bytes into the data
+/// area; returns `to`.
+fn pad_to(w: &mut impl Write, at: u64, to: u64) -> io::Result<u64> {
+    debug_assert!(to >= at);
+    const ZEROS: [u8; 64] = [0u8; 64];
+    let mut left = (to - at) as usize;
+    while left > 0 {
+        let n = left.min(ZEROS.len());
+        w.write_all(&ZEROS[..n])?;
+        left -= n;
+    }
+    Ok(to)
+}
+
+/// Write `ck` to `path` atomically (tmp + fsync + rename). Returns the
+/// total file size in bytes. Deterministic: the same checkpoint always
+/// produces byte-identical files (the trainer-emitted `packed.mxpk` and
+/// a `convert` of the matching `master.mxck` compare equal with `cmp`).
+pub fn write(path: &Path, ck: &PackedCheckpoint) -> io::Result<u64> {
+    let (layouts, data_len) = plan(&ck.tensors);
+    let manifest = manifest_json(ck, &layouts).to_string();
+    let data_start = align_up(16 + manifest.len() as u64);
+    atomic_write(path, |w| {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(manifest.len() as u64).to_le_bytes())?;
+        w.write_all(manifest.as_bytes())?;
+        pad_to(w, 16 + manifest.len() as u64, data_start)?;
+        let mut at = 0u64; // relative to the data area
+        for (t, l) in ck.tensors.iter().zip(&layouts) {
+            if let Some(d) = &t.f32_data {
+                debug_assert_eq!(at, l.f32_off);
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len() * 4)
+                };
+                w.write_all(bytes)?;
+                at = pad_to(w, at + bytes.len() as u64, align_up(at + bytes.len() as u64))?;
+            }
+            if let Some(m) = &t.packed {
+                debug_assert_eq!(at, l.codes_off);
+                w.write_all(m.codes_bytes())?;
+                let end = at + m.codes_bytes().len() as u64;
+                at = pad_to(w, end, align_up(end))?;
+                debug_assert_eq!(at, l.exps_off);
+                w.write_all(m.exps_bytes())?;
+                let end = at + m.exps_bytes().len() as u64;
+                at = pad_to(w, end, align_up(end))?;
+            }
+        }
+        debug_assert_eq!(at, data_len);
+        Ok(())
+    })?;
+    Ok(data_start + data_len)
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+/// Section source: buffered positional reads by default; one `mmap`
+/// under the `mmap` feature (supported targets), sections copied out of
+/// the mapping.
+enum Source {
+    Buffered { file: File, len: u64 },
+    #[cfg(feature = "mmap")]
+    Mapped(mmap::Map),
+}
+
+impl Source {
+    fn open(path: &Path) -> io::Result<Source> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        #[cfg(feature = "mmap")]
+        if len > 0 {
+            match mmap::Map::new(&file, len as usize) {
+                Ok(m) => return Ok(Source::Mapped(m)),
+                // unsupported target / exotic fs: buffered reads are
+                // always correct, mapping is only an optimization
+                Err(_) => {}
+            }
+        }
+        Ok(Source::Buffered { file, len })
+    }
+
+    fn len(&self) -> u64 {
+        match self {
+            Source::Buffered { len, .. } => *len,
+            #[cfg(feature = "mmap")]
+            Source::Mapped(m) => m.as_slice().len() as u64,
+        }
+    }
+
+    /// Read exactly `dst.len()` bytes at absolute offset `off`. Callers
+    /// bounds-check against [`len`](Self::len) first for typed errors
+    /// with context; this still fails cleanly on a short file.
+    fn read_at(&mut self, off: u64, dst: &mut [u8]) -> io::Result<()> {
+        match self {
+            Source::Buffered { file, .. } => {
+                file.seek(SeekFrom::Start(off))?;
+                file.read_exact(dst)
+            }
+            #[cfg(feature = "mmap")]
+            Source::Mapped(m) => {
+                let s = m.as_slice();
+                let end = off as usize + dst.len();
+                if end > s.len() {
+                    return Err(bad("section extends past end of mapped file"));
+                }
+                dst.copy_from_slice(&s[off as usize..end]);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A section descriptor from the manifest: `off` relative to the data
+/// area, `len` in bytes.
+struct Section {
+    off: u64,
+    len: u64,
+}
+
+fn section(entry: &Json, what: &str) -> io::Result<Section> {
+    let off = entry.get("off").as_f64().ok_or_else(|| bad(format!("{what}: missing off")))?;
+    let len = entry.get("len").as_f64().ok_or_else(|| bad(format!("{what}: missing len")))?;
+    if off < 0.0 || len < 0.0 || off % ALIGN as f64 != 0.0 {
+        return Err(bad(format!("{what}: bad section placement (off {off}, len {len})")));
+    }
+    Ok(Section { off: off as u64, len: len as u64 })
+}
+
+/// Bounds-check a section against the data area, then read it.
+fn read_section(
+    src: &mut Source,
+    data_start: u64,
+    sec: &Section,
+    dst: &mut [u8],
+    what: &str,
+) -> io::Result<()> {
+    if sec.len != dst.len() as u64 {
+        return Err(bad(format!("{what}: section length {} != expected {}", sec.len, dst.len())));
+    }
+    let end = data_start
+        .checked_add(sec.off)
+        .and_then(|s| s.checked_add(sec.len))
+        .ok_or_else(|| bad(format!("{what}: section offset overflows")))?;
+    if end > src.len() {
+        return Err(bad(format!(
+            "{what}: section [{}, {}) extends past end of file ({} bytes) — truncated checkpoint?",
+            data_start + sec.off,
+            end,
+            src.len()
+        )));
+    }
+    src.read_at(data_start + sec.off, dst)
+}
+
+fn meta_dim(model: &Json, key: &str) -> io::Result<usize> {
+    model.get(key).as_usize().ok_or_else(|| bad(format!("manifest model.{key} missing")))
+}
+
+/// Read a `.mxpk` from disk. Every malformation — bad magic, unknown
+/// version, manifest that fails to parse, sections that lie outside the
+/// file or disagree with the declared shapes — is a typed
+/// [`io::Error`], never a panic, and no section read allocates more
+/// than the (bounds-checked) manifest declares.
+pub fn read(path: &Path) -> io::Result<PackedCheckpoint> {
+    let mut src = Source::open(path)?;
+    let mut hdr = [0u8; 16];
+    if src.len() < 16 {
+        return Err(bad("not a .mxpk packed checkpoint (file shorter than the header)"));
+    }
+    src.read_at(0, &mut hdr)?;
+    if &hdr[0..4] != MAGIC {
+        return Err(bad("not a .mxpk packed checkpoint (bad magic)"));
+    }
+    let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(bad(format!("unsupported .mxpk version {version} (reader supports {VERSION})")));
+    }
+    let mlen = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+    if mlen == 0 || 16 + mlen > src.len() {
+        return Err(bad(format!("manifest length {mlen} inconsistent with file size {}", src.len())));
+    }
+    let mut mbytes = vec![0u8; mlen as usize];
+    src.read_at(16, &mut mbytes)?;
+    let mtext = String::from_utf8(mbytes).map_err(|_| bad("manifest is not UTF-8"))?;
+    let manifest = json::parse(&mtext).map_err(|e| bad(format!("manifest: {e}")))?;
+    if manifest.get("align").as_f64() != Some(ALIGN as f64) {
+        return Err(bad("manifest align disagrees with the format's 64-byte alignment"));
+    }
+    let data_start = align_up(16 + mlen);
+
+    let model = manifest.get("model");
+    let meta = ModelMeta {
+        vocab: meta_dim(model, "vocab")?,
+        d_model: meta_dim(model, "d_model")?,
+        n_layers: meta_dim(model, "n_layers")?,
+        n_heads: meta_dim(model, "n_heads")?,
+        seq_len: meta_dim(model, "seq_len")?,
+        d_ff: meta_dim(model, "d_ff")?,
+        recipe: model
+            .get("recipe")
+            .as_str()
+            .ok_or_else(|| bad("manifest model.recipe missing"))?
+            .to_string(),
+    };
+
+    let entries =
+        manifest.get("tensors").as_arr().ok_or_else(|| bad("manifest tensors missing"))?;
+    let mut tensors = Vec::with_capacity(entries.len());
+    for entry in entries {
+        let name = entry
+            .get("name")
+            .as_str()
+            .ok_or_else(|| bad("tensor entry missing name"))?
+            .to_string();
+        let shape = entry
+            .get("shape")
+            .as_shape()
+            .ok_or_else(|| bad(format!("tensor {name}: bad shape")))?;
+        let numel: usize = shape.iter().product();
+
+        let f32_data = match entry.get("f32") {
+            Json::Null => None,
+            e => {
+                let sec = section(e, &format!("tensor {name} f32"))?;
+                let mut data = vec![0.0f32; numel];
+                let bytes: &mut [u8] = unsafe {
+                    std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+                };
+                read_section(&mut src, data_start, &sec, bytes, &format!("tensor {name} f32"))?;
+                Some(data)
+            }
+        };
+
+        let packed = match entry.get("mx") {
+            Json::Null => None,
+            e => {
+                match e.get("orientation").as_str() {
+                    Some("as_stored") => {}
+                    o => {
+                        return Err(bad(format!(
+                            "tensor {name}: unsupported pack orientation {o:?}"
+                        )))
+                    }
+                }
+                let rows = e
+                    .get("rows")
+                    .as_usize()
+                    .ok_or_else(|| bad(format!("tensor {name}: mx.rows missing")))?;
+                let cols = e
+                    .get("cols")
+                    .as_usize()
+                    .ok_or_else(|| bad(format!("tensor {name}: mx.cols missing")))?;
+                let kblocks = cols.div_ceil(MX_BLOCK);
+                if e.get("kblocks").as_usize() != Some(kblocks) {
+                    return Err(bad(format!(
+                        "tensor {name}: kblocks disagrees with cols {cols}"
+                    )));
+                }
+                if shape != [rows, cols] {
+                    return Err(bad(format!(
+                        "tensor {name}: packed dims {rows}x{cols} disagree with shape {shape:?}"
+                    )));
+                }
+                let codes_sec = mx_section(e, "codes", &name)?;
+                let exps_sec = mx_section(e, "exps", &name)?;
+                let mut codes = vec![0u8; rows * kblocks * BLOCK_BYTES];
+                read_section(
+                    &mut src,
+                    data_start,
+                    &codes_sec,
+                    &mut codes,
+                    &format!("tensor {name} codes"),
+                )?;
+                let mut exps = vec![0i8; rows * kblocks];
+                let ebytes: &mut [u8] = unsafe {
+                    std::slice::from_raw_parts_mut(exps.as_mut_ptr() as *mut u8, exps.len())
+                };
+                read_section(
+                    &mut src,
+                    data_start,
+                    &exps_sec,
+                    ebytes,
+                    &format!("tensor {name} exps"),
+                )?;
+                Some(
+                    MxMat::from_parts(rows, cols, codes, exps)
+                        .map_err(|e| bad(format!("tensor {name}: {e}")))?,
+                )
+            }
+        };
+
+        if f32_data.is_none() && packed.is_none() {
+            return Err(bad(format!("tensor {name}: no f32 or packed section")));
+        }
+        tensors.push(PackedTensor { name, shape, f32_data, packed });
+    }
+    Ok(PackedCheckpoint { meta, tensors })
+}
+
+/// The mx entry flattens its sections as `{codes_off, codes_len,
+/// exps_off, exps_len}`; read one pair back as a [`Section`].
+fn mx_section(mx: &Json, which: &str, tensor: &str) -> io::Result<Section> {
+    let what = format!("tensor {tensor} {which}");
+    let off = mx
+        .get(&format!("{which}_off"))
+        .as_f64()
+        .ok_or_else(|| bad(format!("{what}: missing {which}_off")))?;
+    let len = mx
+        .get(&format!("{which}_len"))
+        .as_f64()
+        .ok_or_else(|| bad(format!("{what}: missing {which}_len")))?;
+    if off < 0.0 || len < 0.0 || off % ALIGN as f64 != 0.0 {
+        return Err(bad(format!("{what}: bad section placement (off {off}, len {len})")));
+    }
+    Ok(Section { off: off as u64, len: len as u64 })
+}
+
+// ---------------------------------------------------------------------------
+// mmap (feature-gated; Linux x86_64 / aarch64 raw syscalls — no libc
+// crate in the offline tree)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "mmap")]
+mod mmap {
+    use std::fs::File;
+    use std::io;
+
+    /// A read-only private mapping of a whole file.
+    pub struct Map {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // The mapping is read-only and owned for its whole lifetime.
+    unsafe impl Send for Map {}
+
+    impl Map {
+        pub fn as_slice(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    mod sys {
+        const PROT_READ: usize = 1;
+        const MAP_PRIVATE: usize = 2;
+
+        #[cfg(target_arch = "x86_64")]
+        pub const SYS_MMAP: usize = 9;
+        #[cfg(target_arch = "x86_64")]
+        pub const SYS_MUNMAP: usize = 11;
+        #[cfg(target_arch = "aarch64")]
+        pub const SYS_MMAP: usize = 222;
+        #[cfg(target_arch = "aarch64")]
+        pub const SYS_MUNMAP: usize = 215;
+
+        #[cfg(target_arch = "x86_64")]
+        unsafe fn syscall6(n: usize, a: usize, b: usize, c: usize, d: usize, e: usize, f: usize) -> isize {
+            let ret: isize;
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") n as isize => ret,
+                in("rdi") a,
+                in("rsi") b,
+                in("rdx") c,
+                in("r10") d,
+                in("r8") e,
+                in("r9") f,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+            ret
+        }
+
+        #[cfg(target_arch = "aarch64")]
+        unsafe fn syscall6(n: usize, a: usize, b: usize, c: usize, d: usize, e: usize, f: usize) -> isize {
+            let ret: isize;
+            core::arch::asm!(
+                "svc 0",
+                in("x8") n,
+                inlateout("x0") a => ret,
+                in("x1") b,
+                in("x2") c,
+                in("x3") d,
+                in("x4") e,
+                in("x5") f,
+                options(nostack)
+            );
+            ret
+        }
+
+        /// `mmap(NULL, len, PROT_READ, MAP_PRIVATE, fd, 0)`.
+        pub unsafe fn mmap_ro(len: usize, fd: i32) -> Result<*const u8, i32> {
+            let r = syscall6(SYS_MMAP, 0, len, PROT_READ, MAP_PRIVATE, fd as usize, 0);
+            if r < 0 {
+                Err(-r as i32)
+            } else {
+                Ok(r as *const u8)
+            }
+        }
+
+        pub unsafe fn munmap(ptr: *const u8, len: usize) {
+            let _ = syscall6(SYS_MUNMAP, ptr as usize, len, 0, 0, 0, 0);
+        }
+    }
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    impl Map {
+        pub fn new(file: &File, len: usize) -> io::Result<Map> {
+            use std::os::unix::io::AsRawFd;
+            if len == 0 {
+                return Err(io::Error::new(io::ErrorKind::InvalidInput, "empty file"));
+            }
+            let ptr = unsafe { sys::mmap_ro(len, file.as_raw_fd()) }
+                .map_err(io::Error::from_raw_os_error)?;
+            Ok(Map { ptr, len })
+        }
+    }
+
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    impl Map {
+        pub fn new(_file: &File, _len: usize) -> io::Result<Map> {
+            // the caller falls back to buffered section reads
+            Err(io::Error::new(io::ErrorKind::Unsupported, "mmap unavailable on this target"))
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            unsafe {
+                sys::munmap(self.ptr, self.len)
+            };
+        }
+    }
+}

@@ -24,8 +24,9 @@ use anyhow::{ensure, Result};
 use crate::coordinator::mxcache::{MxWeightCache, Orientation};
 use crate::gemm::{self, Mat};
 use crate::model::gpt::{decode_rows, decode_spans, prefill_rows, DecodeScratch};
-use crate::model::{layer_base, DecodeState, GPTConfig, NativeRecipe, TOK_EMB};
+use crate::model::{fwd_weight_indices, DecodeState, GPTConfig, NativeRecipe, TOK_EMB};
 use crate::mx::pipeline::PackPipeline;
+use crate::mx::store::{self, PackedCheckpoint};
 use crate::util::threadpool;
 
 /// A packed, read-only checkpoint ready to serve. See the module docs.
@@ -94,6 +95,128 @@ impl ServeModel {
         })
     }
 
+    /// Load a `.mxpk` packed checkpoint from disk — the zero-quantize
+    /// cold start. Config and recipe come from the manifest; the stored
+    /// `MxMat` sections are installed into the pack-once cache as-is, so
+    /// [`pack_stats`](Self::pack_stats) is 0 afterwards and decode
+    /// output is bitwise-identical to a [`ServeModel::new`] over the
+    /// matching f32 checkpoint (same NR pack, performed at write time).
+    pub fn load_packed(path: &std::path::Path) -> Result<ServeModel> {
+        let pk = store::read(path)?;
+        ServeModel::from_packed(pk)
+    }
+
+    /// Build a servable model from an in-memory [`PackedCheckpoint`]
+    /// without any quantize/pack work. Validates dimensions before
+    /// constructing the config ([`GPTConfig::new`] asserts; a corrupt
+    /// manifest must surface as a typed error, not a panic) and checks
+    /// every tensor against the parameter ABI.
+    pub fn from_packed(pk: PackedCheckpoint) -> Result<ServeModel> {
+        let m = &pk.meta;
+        ensure!(
+            m.n_heads > 0 && m.d_model % m.n_heads == 0,
+            "packed checkpoint: d_model {} not divisible by n_heads {}",
+            m.d_model,
+            m.n_heads
+        );
+        for (what, dim) in [("d_model", m.d_model), ("d_ff", m.d_ff), ("vocab", m.vocab)] {
+            ensure!(dim > 0 && dim % 32 == 0, "packed checkpoint: {what} {dim} must be a positive multiple of 32");
+        }
+        ensure!(m.seq_len > 0 && m.n_layers > 0, "packed checkpoint: empty model");
+        let cfg = GPTConfig::new(m.vocab, m.d_model, m.n_layers, m.n_heads, m.seq_len, m.d_ff);
+        let recipe = NativeRecipe::parse(&m.recipe)
+            .map_err(|e| anyhow::anyhow!("packed checkpoint recipe: {e}"))?;
+
+        let specs = cfg.param_specs();
+        ensure!(
+            pk.tensors.len() == specs.len(),
+            "packed checkpoint tensor count mismatch: got {}, model wants {}",
+            pk.tensors.len(),
+            specs.len()
+        );
+        let fwd: std::collections::HashSet<usize> =
+            fwd_weight_indices(&cfg).into_iter().collect();
+        let shapes: Vec<Option<(usize, usize)>> = specs
+            .iter()
+            .map(|s| match s.shape.as_slice() {
+                [r, c] => Some((*r, *c)),
+                _ => None,
+            })
+            .collect();
+        let mut cache = MxWeightCache::new(specs.len());
+        let mut params: Vec<Vec<f32>> = Vec::with_capacity(specs.len());
+        for (idx, (t, spec)) in pk.tensors.into_iter().zip(&specs).enumerate() {
+            ensure!(
+                t.name == spec.name,
+                "packed checkpoint tensor {idx}: got {:?}, model wants {:?}",
+                t.name,
+                spec.name
+            );
+            ensure!(
+                t.shape == spec.shape,
+                "packed tensor {}: shape {:?} disagrees with model shape {:?}",
+                t.name,
+                t.shape,
+                spec.shape
+            );
+            let wants_pack = recipe.quantize_fwd && fwd.contains(&idx);
+            if wants_pack {
+                let packed = t.packed.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "packed tensor {}: forward weight has no mx section for recipe {}",
+                        t.name,
+                        recipe.name
+                    )
+                })?;
+                let (r, c) = shapes[idx].expect("forward weights are 2-D");
+                ensure!(
+                    (packed.rows, packed.cols) == (r, c),
+                    "packed tensor {}: mx dims {}x{} disagree with weight {}x{}",
+                    t.name,
+                    packed.rows,
+                    packed.cols,
+                    r,
+                    c
+                );
+                cache.insert_nr(idx, Orientation::AsStored, packed);
+            }
+            // f32 payloads: required wherever the forward reads raw
+            // values (gathers, LayerNorms, every tensor for unquantized
+            // recipes); packed-only weights keep an empty slot — that
+            // absent copy is the .mxpk RAM win.
+            let needs_f32 = !wants_pack || idx == TOK_EMB;
+            match t.f32_data {
+                Some(d) => {
+                    ensure!(
+                        d.len() == spec.numel(),
+                        "packed tensor {}: f32 numel {} != {}",
+                        t.name,
+                        d.len(),
+                        spec.numel()
+                    );
+                    params.push(d);
+                }
+                None => {
+                    ensure!(
+                        !needs_f32,
+                        "packed tensor {}: forward pass reads this tensor as f32 but the checkpoint has no f32 section",
+                        t.name
+                    );
+                    params.push(Vec::new());
+                }
+            }
+        }
+        Ok(ServeModel {
+            workers: threadpool::default_workers(),
+            cfg,
+            recipe,
+            params,
+            cache,
+            shapes,
+            scratch: Mutex::new(DecodeScratch::new()),
+        })
+    }
+
     pub fn config(&self) -> &GPTConfig {
         &self.cfg
     }
@@ -120,6 +243,14 @@ impl ServeModel {
     /// "weights are packed exactly once per served checkpoint".
     pub fn mx_cache_stats(&self) -> (usize, usize, usize) {
         (self.cache.packs, self.cache.hits, self.cache.sr_draws)
+    }
+
+    /// Quantize/pack operations performed since construction — the
+    /// `.mxpk` acceptance criterion in one number: 0 after
+    /// [`load_packed`](Self::load_packed) (sections installed as-is),
+    /// `1 + 4·n_layers` after a pack-at-load [`ServeModel::new`].
+    pub fn pack_stats(&self) -> usize {
+        self.cache.packs
     }
 
     /// Packed bytes resident for the checkpoint's weight views.
@@ -228,18 +359,6 @@ impl ServeModel {
         set_gauge("scratch.hits", leases as f64);
         set_gauge("scratch.free_len", self.scratch_free_len() as f64);
     }
-}
-
-/// Parameter indices of the 2-D weights the forward pass GEMMs: the
-/// tied head plus `qkv`/`proj`/`fc1`/`fc2` per layer. (`pos_emb` is 2-D
-/// but only ever gathered, never multiplied.)
-fn fwd_weight_indices(cfg: &GPTConfig) -> Vec<usize> {
-    let mut idxs = vec![TOK_EMB];
-    for l in 0..cfg.n_layers {
-        let base = layer_base(l);
-        idxs.extend([base + 2, base + 3, base + 6, base + 7]);
-    }
-    idxs
 }
 
 #[cfg(test)]

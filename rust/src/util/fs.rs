@@ -1,0 +1,108 @@
+//! Filesystem helpers: atomic file writes.
+//!
+//! Checkpoints are the one artifact a crash must never corrupt: a
+//! training run killed mid-`save` used to be able to leave a truncated
+//! `.mxck` that a later restore would read as garbage (or reject,
+//! losing the run). [`atomic_write`] closes that window with the
+//! standard tmp-then-rename discipline: the payload streams to
+//! `<path>.tmp` in the same directory, is flushed and fsynced, and only
+//! then renamed over the target — POSIX `rename(2)` is atomic within a
+//! filesystem, so readers observe either the old complete file or the
+//! new complete file, never a prefix.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// `<path>.tmp` in the same directory (same filesystem, so the final
+/// rename is atomic).
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Write `path` atomically: `write` streams the payload into a buffered
+/// writer over `<path>.tmp`; on success the temp file is fsynced and
+/// renamed over `path`. On any error the temp file is removed
+/// (best-effort) and the target is left exactly as it was.
+pub fn atomic_write(
+    path: &Path,
+    write: impl FnOnce(&mut BufWriter<File>) -> io::Result<()>,
+) -> io::Result<()> {
+    let tmp = tmp_path(path);
+    let result = (|| {
+        let mut w = BufWriter::new(File::create(&tmp)?);
+        write(&mut w)?;
+        w.flush()?;
+        // fsync before rename: the rename must not become durable ahead
+        // of the bytes it points at
+        w.get_ref().sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mxfp4_fs_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn read_bytes(p: &Path) -> Vec<u8> {
+        let mut buf = Vec::new();
+        File::open(p).unwrap().read_to_end(&mut buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn writes_content_and_leaves_no_tmp() {
+        let d = tmp_dir("basic");
+        let p = d.join("out.bin");
+        atomic_write(&p, |w| w.write_all(b"hello")).unwrap();
+        assert_eq!(read_bytes(&p), b"hello");
+        assert!(!tmp_path(&p).exists(), "tmp file must be consumed by the rename");
+    }
+
+    #[test]
+    fn overwrites_existing_file() {
+        let d = tmp_dir("overwrite");
+        let p = d.join("out.bin");
+        atomic_write(&p, |w| w.write_all(b"old old old")).unwrap();
+        atomic_write(&p, |w| w.write_all(b"new")).unwrap();
+        assert_eq!(read_bytes(&p), b"new");
+    }
+
+    #[test]
+    fn failed_write_preserves_target_and_cleans_tmp() {
+        let d = tmp_dir("fail");
+        let p = d.join("out.bin");
+        atomic_write(&p, |w| w.write_all(b"good")).unwrap();
+        let err = atomic_write(&p, |w| {
+            w.write_all(b"partial garbage")?;
+            Err(io::Error::new(io::ErrorKind::Other, "injected failure"))
+        });
+        assert!(err.is_err());
+        assert_eq!(read_bytes(&p), b"good", "target must keep the old complete content");
+        assert!(!tmp_path(&p).exists(), "failed write must not leave a tmp file");
+    }
+
+    #[test]
+    fn stale_tmp_from_a_dead_writer_is_replaced() {
+        let d = tmp_dir("stale");
+        let p = d.join("out.bin");
+        std::fs::write(tmp_path(&p), b"truncated leftovers").unwrap();
+        atomic_write(&p, |w| w.write_all(b"fresh")).unwrap();
+        assert_eq!(read_bytes(&p), b"fresh");
+        assert!(!tmp_path(&p).exists());
+    }
+}

@@ -3,6 +3,7 @@
 //! rayon / criterion (DESIGN.md §3).
 
 pub mod cli;
+pub mod fs;
 pub mod json;
 pub mod log;
 pub mod threadpool;

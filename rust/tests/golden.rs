@@ -107,3 +107,112 @@ fn model_loss_matches_jax() {
         "rust-executed loss {got} vs jax {want} — HLO round-trip corrupted?"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Self-contained byte-layout goldens (no jax artifact needed): the
+// `.mxpk` on-disk format stores `MxMat` buffers verbatim, so these pin
+// the exact bytes for hand-computed inputs. If any of them fails, the
+// checkpoint format has silently drifted — bump `mx::store::VERSION`
+// instead of changing the expectations.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mxmat_byte_layout_golden_full_grid_row() {
+    use mxfp4_train::mx::mat::MxMat;
+    // one 8-element row covering every FP4 magnitude; max |v| = 6 so the
+    // shared exponent is floor_log2(6) - 2 = 0 (scale 1), codes are the
+    // raw grid indices, negatives set bit 3, low nibble first
+    let row = [0.5f32, 1.0, -1.5, 2.0, -3.0, 4.0, 6.0, -6.0];
+    let m = MxMat::quantize_nr(&row, 1, 8);
+    assert_eq!((m.rows, m.cols, m.kblocks), (1, 8, 1));
+    let mut want_codes = vec![0u8; 16]; // BLOCK_BYTES, tail padding zero
+    want_codes[..4].copy_from_slice(&[0x21, 0x4B, 0x6D, 0xF7]);
+    assert_eq!(m.codes_bytes(), &want_codes[..], "packed nibble layout drifted");
+    assert_eq!(m.exps_bytes(), &[0u8], "E8M0 exponent byte drifted");
+}
+
+#[test]
+fn mxmat_byte_layout_golden_scaled_block_and_zero_block() {
+    use mxfp4_train::mx::mat::MxMat;
+    // max |v| = 16 -> shared exponent 2 (scale 4): values/4 =
+    // [2, -4, 0.25, 0.0625]; 0.25 is the tie that rounds down to 0
+    let row = [8.0f32, -16.0, 1.0, 0.25];
+    let m = MxMat::quantize_nr(&row, 1, 4);
+    let mut want_codes = vec![0u8; 16];
+    want_codes[..2].copy_from_slice(&[0xE4, 0x00]);
+    assert_eq!(m.codes_bytes(), &want_codes[..]);
+    assert_eq!(m.exps_bytes(), &[2u8]);
+
+    // an all-zero block stores the FTZ-safe minimum exponent (-126) and
+    // all-zero codes
+    let z = MxMat::quantize_nr(&[0.0f32; 32], 1, 32);
+    assert_eq!(z.codes_bytes(), &[0u8; 16][..]);
+    assert_eq!(z.exps_bytes(), &[(-126i8) as u8]);
+}
+
+#[test]
+fn mxpk_header_golden() {
+    use mxfp4_train::mx::mat::MxMat;
+    use mxfp4_train::mx::store;
+    // a tiny hand-built checkpoint: one f32 tensor + one packed tensor.
+    // store::write does not validate against a model ABI, so the layout
+    // can be pinned without a full parameter set.
+    let packed = MxMat::quantize_nr(&[0.5f32, 1.0, -1.5, 2.0, -3.0, 4.0, 6.0, -6.0], 1, 8);
+    let ck = store::PackedCheckpoint {
+        meta: store::ModelMeta {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 2,
+            seq_len: 16,
+            d_ff: 64,
+            recipe: "mxfp4".into(),
+        },
+        tensors: vec![
+            store::PackedTensor {
+                name: "a".into(),
+                shape: vec![2],
+                f32_data: Some(vec![1.0f32, -2.5]),
+                packed: None,
+            },
+            store::PackedTensor {
+                name: "b".into(),
+                shape: vec![1, 8],
+                f32_data: None,
+                packed: Some(packed.clone()),
+            },
+        ],
+    };
+    let dir = std::env::temp_dir().join("mxfp4_golden_mxpk");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("golden.mxpk");
+    store::write(&p, &ck).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+
+    // header: magic, version, manifest length (all little-endian)
+    assert_eq!(&bytes[0..4], b"MXPK");
+    assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), store::VERSION);
+    let mlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    assert!(mlen > 0 && 16 + mlen <= bytes.len(), "manifest must fit inside the file");
+    // the manifest region parses as JSON and records the alignment
+    let manifest = std::str::from_utf8(&bytes[16..16 + mlen]).unwrap();
+    let doc = mxfp4_train::util::json::parse(manifest).unwrap();
+    assert_eq!(doc.get("align").as_usize(), Some(64));
+    assert_eq!(doc.get("model").get("recipe").as_str(), Some("mxfp4"));
+
+    // data area: 64-byte aligned; tensor "a" is the first section, its
+    // f32 payload stored as little-endian bytes
+    let data_start = (16 + mlen).div_ceil(64) * 64;
+    assert_eq!(data_start % 64, 0);
+    assert_eq!(&bytes[data_start..data_start + 4], &1.0f32.to_le_bytes());
+    assert_eq!(&bytes[data_start + 4..data_start + 8], &(-2.5f32).to_le_bytes());
+    // tensor "b"'s codes section holds the golden nibble bytes verbatim
+    let codes_off = doc.get("tensors").as_arr().unwrap()[1]
+        .get("mx")
+        .get("codes_off")
+        .as_usize()
+        .unwrap();
+    let at = data_start + codes_off;
+    assert_eq!(&bytes[at..at + 4], &[0x21, 0x4B, 0x6D, 0xF7]);
+    assert_eq!(&bytes[at..at + 16], packed.codes_bytes());
+}

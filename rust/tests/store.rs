@@ -1,0 +1,219 @@
+//! `.mxpk` packed-checkpoint contract tests: bitwise roundtrip,
+//! deterministic bytes, zero-quantize serve start with decode parity
+//! against the f32 load-then-pack path, and typed (never-panicking)
+//! corruption handling. Runs identically with `--features mmap` — the
+//! mapped reader must produce the same bytes as the buffered one.
+
+use std::path::{Path, PathBuf};
+
+use mxfp4_train::coordinator::checkpoint;
+use mxfp4_train::model::{GPTConfig, NativeRecipe};
+use mxfp4_train::mx::store;
+use mxfp4_train::runtime::executor::init_params_for;
+use mxfp4_train::serve::ServeModel;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mxfp4_store_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Micro-preset f32 tensor set + its packed checkpoint for `recipe`.
+fn micro_packed(recipe: &str, seed: u64) -> (GPTConfig, NativeRecipe, Vec<String>, Vec<Vec<f32>>, store::PackedCheckpoint) {
+    let (cfg, _) = GPTConfig::preset("micro").unwrap();
+    let recipe = NativeRecipe::parse(recipe).unwrap();
+    let specs = cfg.param_specs();
+    let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+    let params = init_params_for(&specs, cfg.n_layers, seed);
+    let pk = checkpoint::build_packed(&cfg, &recipe, &names, &params, 2).unwrap();
+    (cfg, recipe, names, params, pk)
+}
+
+fn read_bytes(p: &Path) -> Vec<u8> {
+    std::fs::read(p).unwrap()
+}
+
+#[test]
+fn roundtrips_bitwise() {
+    let d = tmp_dir("roundtrip");
+    let (_, _, _, _, pk) = micro_packed("mxfp4", 3);
+    let p = d.join("ck.mxpk");
+    let written = store::write(&p, &pk).unwrap();
+    assert_eq!(written, std::fs::metadata(&p).unwrap().len(), "write must report the file size");
+    assert!(!d.join("ck.mxpk.tmp").exists(), "atomic write must consume its tmp file");
+    let back = store::read(&p).unwrap();
+    assert_eq!(back, pk, "roundtrip must be bitwise (codes, exps, f32, meta)");
+    assert!(store::is_packed(&p).unwrap());
+}
+
+#[test]
+fn writes_are_deterministic() {
+    let d = tmp_dir("determinism");
+    let (_, _, _, _, pk) = micro_packed("mxfp4", 5);
+    let (a, b) = (d.join("a.mxpk"), d.join("b.mxpk"));
+    store::write(&a, &pk).unwrap();
+    store::write(&b, &pk).unwrap();
+    assert_eq!(read_bytes(&a), read_bytes(&b), "same checkpoint must produce identical bytes");
+}
+
+#[test]
+fn trainer_emit_equals_convert_of_masters() {
+    // the cross-producer contract: build_packed over the same tensors
+    // is the only pack step, so both producers write identical files
+    let d = tmp_dir("producers");
+    let (cfg, recipe, names, params, pk) = micro_packed("mxfp4", 11);
+    let trainer_side = d.join("packed.mxpk");
+    store::write(&trainer_side, &pk).unwrap();
+    // the convert path: f32 .mxck to disk, load it back, pack that
+    let mxck = d.join("master.mxck");
+    checkpoint::save(&mxck, &names, &params).unwrap();
+    let (names2, tensors2) = checkpoint::load(&mxck).unwrap();
+    let pk2 = checkpoint::build_packed(&cfg, &recipe, &names2, &tensors2, 4).unwrap();
+    let convert_side = d.join("converted.mxpk");
+    store::write(&convert_side, &pk2).unwrap();
+    assert_eq!(read_bytes(&trainer_side), read_bytes(&convert_side));
+}
+
+#[test]
+fn packed_load_is_zero_quantize_with_bitwise_decode_parity() {
+    // mxfp4/mxfp4_sr quantize the forward (serve packs NR either way);
+    // bf16 serves raw f32 — all three must load and decode identically
+    for recipe_name in ["mxfp4", "mxfp4_sr", "bf16"] {
+        let d = tmp_dir(&format!("parity_{recipe_name}"));
+        let (cfg, recipe, _, params, pk) = micro_packed(recipe_name, 9);
+        let p = d.join("ck.mxpk");
+        store::write(&p, &pk).unwrap();
+
+        let reference = ServeModel::new(cfg.clone(), recipe.clone(), params).unwrap();
+        let loaded = ServeModel::load_packed(&p).unwrap();
+        assert_eq!(loaded.pack_stats(), 0, "{recipe_name}: packed load must not quantize");
+        if recipe.quantize_fwd {
+            assert_eq!(
+                reference.pack_stats(),
+                1 + 4 * cfg.n_layers,
+                "{recipe_name}: the f32 path pays one pack per forward weight"
+            );
+            assert_eq!(loaded.packed_bytes(), reference.packed_bytes());
+        }
+        assert_eq!(loaded.config(), reference.config());
+        assert_eq!(loaded.recipe().name, reference.recipe().name);
+
+        // logits must match bitwise at every position: prefill + decode
+        let prompt = [1i32, 5, 2, 7];
+        let (mut st_ref, logits_ref) = reference.prefill(&prompt).unwrap();
+        let (mut st_pk, logits_pk) = loaded.prefill(&prompt).unwrap();
+        assert_eq!(logits_ref, logits_pk, "{recipe_name}: prefill logits must be bitwise equal");
+        let mut tok = 3i32;
+        for step in 0..8 {
+            let r = reference.decode_step(&mut st_ref, tok).unwrap();
+            let p = loaded.decode_step(&mut st_pk, tok).unwrap();
+            assert_eq!(r, p, "{recipe_name}: decode step {step} logits must be bitwise equal");
+            // greedy argmax keeps the two trajectories in lockstep
+            tok = r
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+        }
+        assert_eq!(loaded.pack_stats(), 0, "{recipe_name}: serving must never re-quantize");
+    }
+}
+
+#[test]
+fn is_packed_distinguishes_formats() {
+    let d = tmp_dir("magic");
+    let (_, _, names, params, pk) = micro_packed("mxfp4", 2);
+    let mxpk = d.join("ck.mxpk");
+    let mxck = d.join("ck.mxck");
+    store::write(&mxpk, &pk).unwrap();
+    checkpoint::save(&mxck, &names, &params).unwrap();
+    assert!(store::is_packed(&mxpk).unwrap());
+    assert!(!store::is_packed(&mxck).unwrap());
+    // short and empty files are "not packed", not errors
+    let short = d.join("short");
+    std::fs::write(&short, b"MX").unwrap();
+    assert!(!store::is_packed(&short).unwrap());
+    let empty = d.join("empty");
+    std::fs::write(&empty, b"").unwrap();
+    assert!(!store::is_packed(&empty).unwrap());
+    // a missing file is an error (not a silent false)
+    assert!(store::is_packed(&d.join("nope")).is_err());
+}
+
+#[test]
+fn corruption_is_typed_errors_never_panics() {
+    let d = tmp_dir("corruption");
+    let (_, _, _, _, pk) = micro_packed("mxfp4", 4);
+    let p = d.join("ck.mxpk");
+    store::write(&p, &pk).unwrap();
+    let good = read_bytes(&p);
+
+    let case = |name: &str, bytes: Vec<u8>| {
+        let cp = d.join(name);
+        std::fs::write(&cp, bytes).unwrap();
+        let err = store::read(&cp).expect_err(name);
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{name}: typed InvalidData");
+        // the serve loader surfaces the same failure as a Result
+        assert!(ServeModel::load_packed(&cp).is_err(), "{name}: load_packed must error");
+    };
+
+    // bad magic
+    let mut b = good.clone();
+    b[0] = b'X';
+    case("bad_magic", b);
+    // unsupported version
+    let mut b = good.clone();
+    b[4..8].copy_from_slice(&99u32.to_le_bytes());
+    case("bad_version", b);
+    // manifest length pointing past EOF
+    let mut b = good.clone();
+    b[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+    case("bad_manifest_len", b);
+    // manifest that is not JSON
+    let mut b = good.clone();
+    b[16] = b'X';
+    case("bad_manifest_json", b);
+    // truncated section payload (cut the tail of the data area)
+    case("truncated", good[..good.len() - 64].to_vec());
+    // header-only file
+    case("header_only", good[..16].to_vec());
+}
+
+#[test]
+fn mismatched_checkpoints_are_rejected_by_the_loader() {
+    // a structurally valid .mxpk whose contents disagree with the model
+    // ABI must fail from_packed with an error, never a panic
+    let (_, _, _, _, pk) = micro_packed("mxfp4", 6);
+
+    // unparseable recipe name
+    let mut bad = pk.clone();
+    bad.meta.recipe = "no_such_recipe".into();
+    assert!(ServeModel::from_packed(bad).is_err());
+
+    // dimensions that would trip GPTConfig::new's asserts must be
+    // caught by validation first (d_model not a multiple of 32)
+    let mut bad = pk.clone();
+    bad.meta.d_model = 33;
+    assert!(ServeModel::from_packed(bad).is_err());
+
+    // tensor name drift (wrong checkpoint for this config)
+    let mut bad = pk.clone();
+    bad.tensors[0].name = "not_tok_emb".into();
+    assert!(ServeModel::from_packed(bad).is_err());
+
+    // a forward weight missing its packed section under a quantizing recipe
+    let mut bad = pk.clone();
+    bad.tensors[4].packed = None; // l0_qkv_w is packed-only on disk
+    assert!(ServeModel::from_packed(bad).is_err());
+
+    // n_layers drift: tensor count no longer matches the config
+    let mut bad = pk.clone();
+    bad.meta.n_layers = 2;
+    assert!(ServeModel::from_packed(bad).is_err());
+
+    // and the untouched checkpoint still loads (the clones above were
+    // the only mutations)
+    assert!(ServeModel::from_packed(pk).is_ok());
+}

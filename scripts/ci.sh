@@ -15,6 +15,10 @@
 #   6b. observability: the obs_ contract suite with tracing off AND
 #      MXFP4_TRACE=1, plus a --metrics-dump/--trace-out smoke whose
 #      JSON snapshot must report the tokens actually served
+#   6c. packed checkpoints: the store/golden format contracts (buffered
+#      and --features mmap readers), a train -> convert -> serve smoke
+#      asserting byte-identical completions + zero quantize packs, and
+#      the benches/ckpt.rs size/cold-start gates
 #   7. cargo doc           (rustdoc, warnings denied)
 #
 # Usage: ./scripts/ci.sh        (from the repo root; any extra args are
@@ -169,6 +173,64 @@ echo "==> loadgen smoke (paged engine under concurrent TCP load, bounded KV)"
 timeout 300 cargo run --release --example loadgen -- \
     --conns 8 --per-conn 4 --pool-pages 24 --page-rows 4 --config micro --tokens 4
 echo "==> loadgen full scale is: cargo run --release --example loadgen (1000 sessions)"
+
+echo "==> packed-checkpoint contract tests (by name)"
+# tests/store.rs (roundtrip, determinism, zero-quantize load parity,
+# corruption paths) plus the self-contained byte-layout goldens in
+# tests/golden.rs — run by name so a filtered "\$@" above can never
+# silently skip the on-disk format contract
+cargo test -q --test store
+cargo test -q --test golden mxmat_byte_layout
+cargo test -q --test golden mxpk_header
+
+echo "==> mmap feature (mapped reader must pass the same store contract)"
+cargo build --release --features mmap
+cargo test -q --release --features mmap --test store
+
+echo "==> packed-checkpoint smoke (train -> convert -> serve, zero quantize packs)"
+# train 20 steps emitting checkpoints, convert the f32 master, then
+# serve from both formats: the trainer-emitted and converted .mxpk must
+# be byte-identical, the two 16-token completions must match exactly,
+# and the packed serve must report zero quantize packs at load
+ckroot=$(mktemp -d /tmp/mxfp4-ckpt.XXXXXX)
+cargo run --release -- train --backend native --config test --recipe mxfp4 \
+    --steps 20 --eval-every 0 --checkpoint-dir "$ckroot" >/dev/null
+master=$(find "$ckroot" -name master.mxck | head -n1)
+ckdir=$(dirname "$master")
+[ -f "$ckdir/packed.mxpk" ] || {
+    echo "ckpt smoke: trainer did not emit packed.mxpk" >&2
+    exit 1
+}
+cargo run --release -- convert --checkpoint "$master" --config test --recipe mxfp4 \
+    --out "$ckdir/converted.mxpk"
+cmp -s "$ckdir/packed.mxpk" "$ckdir/converted.mxpk" || {
+    echo "ckpt smoke: convert output differs from trainer-emitted packed.mxpk" >&2
+    exit 1
+}
+mxck_out=$(cargo run --release -- serve --backend native --config test --recipe mxfp4 \
+    --checkpoint "$master" --prompt 1,2,3,4 --tokens 16)
+mxpk_out=$(cargo run --release -- serve --backend native \
+    --checkpoint "$ckdir/packed.mxpk" --prompt 1,2,3,4 --tokens 16)
+mxck_line=$(echo "$mxck_out" | grep '"tokens":')
+mxpk_line=$(echo "$mxpk_out" | grep '"tokens":')
+if [ -z "$mxck_line" ] || [ "$mxck_line" != "$mxpk_line" ]; then
+    echo "ckpt smoke: .mxpk completion diverged from .mxck completion" >&2
+    echo "  .mxck: $mxck_line" >&2
+    echo "  .mxpk: $mxpk_line" >&2
+    exit 1
+fi
+echo "$mxpk_out" | grep -q '0 quantize packs' || {
+    echo "ckpt smoke: packed serve performed quantize work at startup" >&2
+    exit 1
+}
+echo "$mxpk_out" | grep -q 'packed .mxpk' || {
+    echo "ckpt smoke: serve did not auto-detect the .mxpk format" >&2
+    exit 1
+}
+rm -rf "$ckroot"
+
+echo "==> checkpoint bench gates (.mxpk >=3x smaller, packed load >=5x faster)"
+cargo bench --bench ckpt
 
 echo "==> cargo doc (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
