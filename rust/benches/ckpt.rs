@@ -5,6 +5,9 @@
 //!   * size: the packed checkpoint is >= 3x smaller than the f32 one
 //!   * cold start: `ServeModel::load_packed` is >= 5x faster than the
 //!     f32 load-then-pack path (`checkpoint::load` + `ServeModel::new`)
+//!
+//! Both gates are data-driven records in `BENCH_<gitrev>.json` now;
+//! failure still exits nonzero via the reporter.
 
 #[path = "harness.rs"]
 mod harness;
@@ -16,7 +19,8 @@ use mxfp4_train::runtime::executor::init_params_for;
 use mxfp4_train::serve::ServeModel;
 
 fn main() {
-    harness::header("checkpoint formats: small preset, mxfp4 recipe");
+    let mut rep = harness::Reporter::start("ckpt");
+    rep.section("checkpoint formats: small preset, mxfp4 recipe");
     let dir = std::env::temp_dir().join("mxfp4_bench_ckpt");
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
@@ -44,13 +48,13 @@ fn main() {
 
     // cold start: disk -> servable model (the pack work dominates the
     // f32 path; the packed path is pure section reads)
-    let s_f32 = harness::time_secs(1, 3, || {
+    let s_f32 = rep.bench("cold_start_f32_load_pack", 1.0, "load", 1, 3, || {
         let (_, tensors) = checkpoint::load(&f32_path).unwrap();
         let m = ServeModel::new(cfg.clone(), recipe.clone(), tensors).unwrap();
         assert!(m.pack_stats() > 0);
         std::hint::black_box(&m);
     });
-    let s_pk = harness::time_secs(1, 3, || {
+    let s_pk = rep.bench("cold_start_packed_load", 1.0, "load", 1, 3, || {
         let m = ServeModel::load_packed(&pk_path).unwrap();
         assert_eq!(m.pack_stats(), 0, "packed load must not quantize");
         std::hint::black_box(&m);
@@ -63,15 +67,9 @@ fn main() {
         s_pk * 1e3
     );
 
-    assert!(
-        ratio >= 3.0,
-        "SIZE GATE FAILED: .mxpk must be >= 3x smaller than .mxck (got {ratio:.2}x)"
-    );
-    assert!(
-        speedup >= 5.0,
-        "LOAD GATE FAILED: packed load must be >= 5x faster than load-then-pack (got {speedup:.2}x)"
-    );
-    println!("gates passed: {ratio:.2}x smaller (>= 3x), {speedup:.2}x faster (>= 5x)");
+    rep.gate_min("mxpk_size_ratio", ratio, 3.0);
+    rep.gate_min("packed_load_speedup", speedup, 5.0);
 
     let _ = std::fs::remove_dir_all(&dir);
+    rep.finish_and_assert();
 }

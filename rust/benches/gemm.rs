@@ -2,6 +2,10 @@
 //! packed MXFP4 tensor engine vs the seed per-block path, and the
 //! quantize-once weight-reuse win — supports the Fig. 2 / Table 5
 //! harnesses and the §1 "MXFP4 GEMMs are cheap" narrative.
+//!
+//! Measurements and the two perf gates (>=3x packed-vs-seed, >=2x SIMD
+//! shuffle-LUT) are recorded into `BENCH_<gitrev>.json` via the shared
+//! reporter; a failed gate still fails `cargo bench` at exit.
 
 #[path = "harness.rs"]
 mod harness;
@@ -14,15 +18,16 @@ use mxfp4_train::mx::pipeline::PackPipeline;
 use mxfp4_train::rng::Rng;
 
 fn main() {
+    let mut r = harness::Reporter::start("gemm");
     let mut rng = Rng::seed(0);
     let a = Mat::gaussian(256, 1024, 1.0, &mut rng);
     let b = Mat::gaussian(1024, 256, 1.0, &mut rng);
     let flops = 2.0 * 256.0 * 1024.0 * 256.0;
 
-    harness::header("f32 GEMM thread scaling (256x1024x256)");
+    r.section("f32 GEMM thread scaling (256x1024x256)");
     let mut t1 = 0.0;
     for w in [1usize, 2, 4, 8] {
-        let t = harness::bench(&format!("gemm workers={w}"), flops, "flop", 1, 3, || {
+        let t = r.bench(&format!("f32_gemm_workers_{w}"), flops, "flop", 1, 3, || {
             std::hint::black_box(matmul(&a, &b, w));
         });
         if w == 1 {
@@ -35,13 +40,13 @@ fn main() {
         })
     });
 
-    harness::header("MX GEMM modes, qdq reference path (256x1024x256, g=64)");
+    r.section("MX GEMM modes, qdq reference path (256x1024x256, g=64)");
     for (label, mode) in [
         ("exact", MxMode::Exact),
         ("nr", MxMode::Nr),
         ("rht_sr", MxMode::RhtSr),
     ] {
-        harness::bench(&format!("mx_matmul {label}"), flops, "flop", 1, 3, || {
+        r.bench(&format!("mx_matmul_{label}"), flops, "flop", 1, 3, || {
             std::hint::black_box(mx_matmul(&a, &b, mode, 64, &mut Rng::seed(1), 4));
         });
     }
@@ -50,7 +55,7 @@ fn main() {
     // The tentpole claim: the packed LUT engine vs the seed per-block
     // MxVec::dot path, kernel against kernel at 1024^3 (1 worker each).
     // ---------------------------------------------------------------
-    harness::header("packed LUT engine vs seed per-block path (1024^3, NR)");
+    r.section("packed LUT engine vs seed per-block path (1024^3, NR)");
     let (m, n, k) = (1024usize, 1024usize, 1024usize);
     let aw = Mat::gaussian(m, k, 1.0, &mut rng);
     let bw = Mat::gaussian(n, k, 1.0, &mut rng); // already Bᵀ-shaped
@@ -58,7 +63,7 @@ fn main() {
 
     let qa_rows: Vec<MxVec> = (0..m).map(|r| MxVec::quantize_nr(aw.row(r))).collect();
     let qb_rows: Vec<MxVec> = (0..n).map(|r| MxVec::quantize_nr(bw.row(r))).collect();
-    let t_seed = harness::bench("seed MxVec::dot GEMM (1 worker)", big_flops, "flop", 0, 1, || {
+    let t_seed = r.bench("seed_mxvec_dot_1w", big_flops, "flop", 0, 1, || {
         let mut c = Mat::zeros(m, n);
         for r in 0..m {
             let qr = &qa_rows[r];
@@ -71,15 +76,13 @@ fn main() {
 
     let pa = aw.pack_nr();
     let pbt = bw.pack_nr();
-    let t_packed = harness::bench("mx_gemm_packed LUT (1 worker)", big_flops, "flop", 1, 1, || {
+    let t_packed = r.bench("packed_lut_1w", big_flops, "flop", 1, 1, || {
         std::hint::black_box(mx_gemm_packed(&pa, &pbt, 1));
     });
-    harness::bench("mx_gemm_packed LUT (8 workers)", big_flops, "flop", 0, 1, || {
+    r.bench("packed_lut_8w", big_flops, "flop", 0, 1, || {
         std::hint::black_box(mx_gemm_packed(&pa, &pbt, 8));
     });
-    let speedup = t_seed / t_packed;
-    println!("packed LUT speedup over per-block MxVec::dot at 1024^3: {speedup:.2}x (target >= 3x)");
-    assert!(speedup >= 3.0, "packed engine must beat the seed per-block path by >= 3x, got {speedup:.2}x");
+    r.gate_min("packed_vs_seed_speedup", t_seed / t_packed, 3.0);
 
     // ---------------------------------------------------------------
     // ISSUE 6 gate: the SIMD shuffle-LUT kernel vs the scalar row_dot
@@ -87,7 +90,7 @@ fn main() {
     // Outputs are bit-identical (tests/packed_gemm.rs); this section
     // pins the *speed* half of the contract.
     // ---------------------------------------------------------------
-    harness::header("SIMD shuffle-LUT kernel vs scalar row_dot (1024^3, NR, 1 worker)");
+    r.section("SIMD shuffle-LUT kernel vs scalar row_dot (1024^3, NR, 1 worker)");
     println!("dispatched inner kernel: {}", Kernel::select().name());
     match Kernel::simd() {
         None => {
@@ -97,28 +100,13 @@ fn main() {
             );
         }
         Some(simd) => {
-            let t_scalar =
-                harness::bench("mx_gemm_packed scalar oracle", big_flops, "flop", 1, 1, || {
-                    std::hint::black_box(mx_gemm_packed_with(&pa, &pbt, 1, Kernel::Scalar));
-                });
-            let t_simd = harness::bench(
-                &format!("mx_gemm_packed {}", simd.name()),
-                big_flops,
-                "flop",
-                1,
-                1,
-                || {
-                    std::hint::black_box(mx_gemm_packed_with(&pa, &pbt, 1, simd));
-                },
-            );
-            let simd_speedup = t_scalar / t_simd;
-            println!(
-                "shuffle-LUT speedup over scalar row_dot at 1024^3: {simd_speedup:.2}x (target >= 2x)"
-            );
-            assert!(
-                simd_speedup >= 2.0,
-                "SIMD kernel must beat the scalar oracle by >= 2x at 1024^3, got {simd_speedup:.2}x"
-            );
+            let t_scalar = r.bench("packed_scalar_oracle", big_flops, "flop", 1, 1, || {
+                std::hint::black_box(mx_gemm_packed_with(&pa, &pbt, 1, Kernel::Scalar));
+            });
+            let t_simd = r.bench("packed_simd_kernel", big_flops, "flop", 1, 1, || {
+                std::hint::black_box(mx_gemm_packed_with(&pa, &pbt, 1, simd));
+            });
+            r.gate_min("simd_speedup", t_scalar / t_simd, 2.0);
         }
     }
 
@@ -127,16 +115,16 @@ fn main() {
     // path re-quantizes W inside every call; the packed engine pays for
     // W once and re-packs only the activations (coordinator::mxcache).
     // ---------------------------------------------------------------
-    harness::header("quantize-once weight reuse (8 GEMMs over one weight, 256x1024x256)");
+    r.section("quantize-once weight reuse (8 GEMMs over one weight, 256x1024x256)");
     let reuse = 8usize;
     let t_requant =
-        harness::bench("qdq mx_matmul x8 (re-quantizes W per GEMM)", reuse as f64 * flops, "flop", 0, 1, || {
+        r.bench("qdq_requant_x8", reuse as f64 * flops, "flop", 0, 1, || {
             for _ in 0..reuse {
                 std::hint::black_box(mx_matmul(&a, &b, MxMode::Nr, 64, &mut Rng::seed(1), 4));
             }
         });
     let t_once =
-        harness::bench("pack W once + x8 (pack A + packed GEMM)", reuse as f64 * flops, "flop", 0, 1, || {
+        r.bench("pack_once_x8", reuse as f64 * flops, "flop", 0, 1, || {
             let pw = PackPipeline::transposed(&b.data, 256, 1024).pack_nr(4); // once per step
             for _ in 0..reuse {
                 let pact = a.pack_nr(); // activations change per GEMM
@@ -145,19 +133,21 @@ fn main() {
         });
     println!("quantize-once speedup over per-GEMM requantize: {:.2}x", t_requant / t_once);
 
-    harness::header("packed MX dot product (32K elements)");
+    r.section("packed MX dot product (32K elements)");
     let mut x = vec![0.0f32; 1 << 15];
     let mut y = vec![0.0f32; 1 << 15];
     rng.fill_normal(&mut x, 1.0);
     rng.fill_normal(&mut y, 1.0);
     let qx = MxVec::quantize_nr(&x);
     let qy = MxVec::quantize_nr(&y);
-    harness::bench("MxVec::dot (seed per-block)", x.len() as f64, "elem", 2, 20, || {
+    r.bench("mxvec_dot_32k", x.len() as f64, "elem", 2, 20, || {
         std::hint::black_box(qx.dot(&qy));
     });
     let px = MxMat::quantize_nr(&x, 1, x.len());
     let py = MxMat::quantize_nr(&y, 1, y.len());
-    harness::bench("MxMat::row_dot (LUT)", x.len() as f64, "elem", 2, 20, || {
+    r.bench("mxmat_row_dot_32k", x.len() as f64, "elem", 2, 20, || {
         std::hint::black_box(px.row_dot(0, &py, 0));
     });
+
+    r.finish_and_assert();
 }

@@ -1,31 +1,38 @@
 //! Shared micro-bench harness (criterion is unavailable offline).
 //!
-//! `cargo bench` runs each `[[bench]]` target's `main()`; targets use
-//! `bench()` to time closures with warmup + median-of-means and print
-//! aligned rows. Compiled as a module into each bench via `#[path]`.
+//! Since PR 10 this is a thin shim over [`mxfp4_train::obs::bench`]:
+//! the timing loop (warmup + reps + median/MAD), the aligned-row
+//! printer, and the [`Reporter`] that records named measurements and
+//! data-driven gates into the schema-versioned `BENCH_<gitrev>.json`
+//! report all live in the library, shared with the `bench` CLI
+//! subcommand. Compiled as a module into each bench via `#[path]`.
+//!
+//! Bench targets construct a [`Reporter`] per suite, replace bare
+//! timing `assert!`s with `gate_min`/`gate_max` (recorded in the
+//! report, still fatal via [`Reporter::finish_and_assert`]), and keep
+//! correctness assertions (byte parity, allocation counts, exactness)
+//! as plain asserts.
 
-use std::time::Instant;
+#[allow(unused_imports)]
+pub use mxfp4_train::obs::bench::Reporter;
 
-/// Median-of-means seconds/iteration with warmup.
-pub fn time_secs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
-    for _ in 0..warmup {
-        f();
-    }
-    let reps = 3usize;
-    let mut times = Vec::with_capacity(reps);
-    for _ in 0..reps {
-        let t = Instant::now();
-        for _ in 0..iters {
-            f();
-        }
-        times.push(t.elapsed().as_secs_f64() / iters.max(1) as f64);
-    }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    times[reps / 2]
+/// Median seconds/iteration with warmup (3 reps, back-compat helper
+/// for unrecorded side measurements).
+#[allow(dead_code)]
+pub fn time_secs<F: FnMut()>(warmup: usize, iters: usize, f: F) -> f64 {
+    mxfp4_train::obs::bench::time_secs(warmup, iters, f)
 }
 
-/// Time and print one row: label, secs/iter, and a derived rate.
-pub fn bench<F: FnMut()>(label: &str, units: f64, unit_name: &str, warmup: usize, iters: usize, f: F) -> f64 {
+/// Time and print one row without recording it in a report.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(
+    label: &str,
+    units: f64,
+    unit_name: &str,
+    warmup: usize,
+    iters: usize,
+    f: F,
+) -> f64 {
     let secs = time_secs(warmup, iters, f);
     println!(
         "{label:<44} {:>12.3} us/iter {:>14.2} {unit_name}/s",
@@ -35,6 +42,7 @@ pub fn bench<F: FnMut()>(label: &str, units: f64, unit_name: &str, warmup: usize
     secs
 }
 
+#[allow(dead_code)]
 pub fn header(title: &str) {
     println!("\n==== {title} ====");
 }

@@ -1,5 +1,7 @@
 //! Bench: quantization kernels (§4.2b analogue) — NR vs SR cost, packed
-//! vs qdq, and the Alg. 2 invariants under timing loads.
+//! vs qdq, and the Alg. 2 invariants under timing loads. Rates land in
+//! `BENCH_<gitrev>.json`; the deterministic §3.1 clip-fraction window
+//! is a data-driven gate there.
 
 #[path = "harness.rs"]
 mod harness;
@@ -8,54 +10,55 @@ use mxfp4_train::mx::{block::MxVec, int4, mat::MxMat, quant};
 use mxfp4_train::rng::Rng;
 
 fn main() {
+    let mut rep = harness::Reporter::start("quant");
     let n = 1 << 20;
     let mut base = vec![0.0f32; n];
     Rng::seed(0).fill_normal(&mut base, 2.0);
     let elems = n as f64;
 
-    harness::header("MXFP4 quantization over 1M f32 (per-element rates)");
-    harness::bench("Algorithm 1 (NR qdq)", elems, "elem", 1, 5, || {
+    rep.section("MXFP4 quantization over 1M f32 (per-element rates)");
+    rep.bench("qdq_nr", elems, "elem", 1, 5, || {
         let mut v = base.clone();
         quant::qdq_nr(&mut v);
         std::hint::black_box(v);
     });
-    let t_sr = harness::bench("Algorithm 2 (SR qdq, software dither)", elems, "elem", 1, 5, || {
+    let t_sr = rep.bench("qdq_sr", elems, "elem", 1, 5, || {
         let mut v = base.clone();
         quant::qdq_sr(&mut v, &mut Rng::seed(1));
         std::hint::black_box(v);
     });
-    harness::bench("Algorithm 2 minus prescale (ablation)", elems, "elem", 1, 5, || {
+    rep.bench("qdq_sr_noprescale", elems, "elem", 1, 5, || {
         let mut v = base.clone();
         quant::qdq_sr_noprescale(&mut v, &mut Rng::seed(1));
         std::hint::black_box(v);
     });
-    harness::bench("packed MxVec quantize (NR, 4.25 b/elem)", elems, "elem", 1, 5, || {
+    rep.bench("mxvec_quantize_nr", elems, "elem", 1, 5, || {
         std::hint::black_box(MxVec::quantize_nr(&base));
     });
     let packed = MxVec::quantize_nr(&base);
-    harness::bench("packed MxVec dequantize", elems, "elem", 1, 5, || {
+    rep.bench("mxvec_dequantize", elems, "elem", 1, 5, || {
         std::hint::black_box(packed.dequantize());
     });
 
     // the flat SoA engine container (1024x1024 matrix view of the buffer)
-    harness::bench("packed MxMat quantize (NR, SoA)", elems, "elem", 1, 5, || {
+    rep.bench("mxmat_quantize_nr", elems, "elem", 1, 5, || {
         std::hint::black_box(MxMat::quantize_nr(&base, 1024, 1024));
     });
-    harness::bench("packed MxMat quantize (SR, SoA)", elems, "elem", 1, 5, || {
+    rep.bench("mxmat_quantize_sr", elems, "elem", 1, 5, || {
         std::hint::black_box(MxMat::quantize_sr(&base, 1024, 1024, &mut Rng::seed(2)));
     });
     let pm = MxMat::quantize_nr(&base, 1024, 1024);
-    harness::bench("packed MxMat dequantize", elems, "elem", 1, 5, || {
+    rep.bench("mxmat_dequantize", elems, "elem", 1, 5, || {
         std::hint::black_box(pm.dequantize());
     });
 
-    harness::header("MXINT4 extension: quantization cost + error vs MXFP4");
-    harness::bench("MXINT4 Algorithm 1 (NR qdq)", elems, "elem", 1, 5, || {
+    rep.section("MXINT4 extension: quantization cost + error vs MXFP4");
+    rep.bench("int4_qdq_nr", elems, "elem", 1, 5, || {
         let mut v = base.clone();
         int4::qdq_nr(&mut v);
         std::hint::black_box(v);
     });
-    harness::bench("MXINT4 Algorithm 2 (SR qdq)", elems, "elem", 1, 5, || {
+    rep.bench("int4_qdq_sr", elems, "elem", 1, 5, || {
         let mut v = base.clone();
         int4::qdq_sr(&mut v, &mut Rng::seed(1));
         std::hint::black_box(v);
@@ -78,10 +81,11 @@ fn main() {
     }
 
     // §3.1 clip-fraction measurement (the Algorithm 1 bias source)
-    harness::header("Algorithm 1 clipping bias (§3.1)");
+    rep.section("Algorithm 1 clipping bias (§3.1)");
     let frac = quant::clip_fraction(&base);
     println!("fraction of Gaussian entries scaled into (6, 8]: {:.2}% (paper: ~3%)", frac * 100.0);
-    assert!((0.005..0.10).contains(&frac));
+    rep.gate_min("clip_fraction_floor", frac, 0.005);
+    rep.gate_max("clip_fraction_ceiling", frac, 0.10);
 
     // SR must stay unbiased even at bench sizes
     let mut v = base[..32].to_vec();
@@ -101,4 +105,6 @@ fn main() {
         .fold(0.0f64, f64::max);
     println!("max |E[Alg2(v)] - 0.75 v| over a block: {max_bias:.4} (SEM-limited)");
     let _ = t_sr;
+
+    rep.finish_and_assert();
 }

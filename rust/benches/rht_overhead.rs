@@ -2,7 +2,8 @@
 //! block sizes, plus dense-vs-FWHT crossover (Table 5's last two columns).
 //!
 //! Paper reference points (H100, FP8 RHT-GEMM): +9.7% for 7B shapes,
-//! +1.6% for 70B shapes; memory-bound while g <~ 256.
+//! +1.6% for 70B shapes; memory-bound while g <~ 256. Rows land in
+//! `BENCH_<gitrev>.json`; the grows-with-g claim is a recorded gate.
 
 #[path = "harness.rs"]
 mod harness;
@@ -13,6 +14,7 @@ use mxfp4_train::rng::Rng;
 use mxfp4_train::util::threadpool;
 
 fn main() {
+    let mut rep = harness::Reporter::start("rht_overhead");
     let workers = threadpool::default_workers();
     let mut rng = Rng::seed(3);
 
@@ -21,29 +23,29 @@ fn main() {
     let b = Mat::gaussian(512, 512, 1.0, &mut rng);
     let flops = 2.0 * 512f64.powi(3);
 
-    harness::header("f32 GEMM baseline (512^3)");
-    let t_gemm = harness::bench("gemm", flops, "flop", 1, 3, || {
+    rep.section("f32 GEMM baseline (512^3)");
+    let t_gemm = rep.bench("f32_gemm_512", flops, "flop", 1, 3, || {
         std::hint::black_box(matmul(&a, &b, workers));
     });
 
-    harness::header("blockwise RHT on one operand (512x512), dense operator");
+    rep.section("blockwise RHT on one operand (512x512), dense operator");
     let elems = (512 * 512) as f64;
     let mut dense_times = Vec::new();
     for g in [32usize, 64, 128, 256, 1024] {
         let sign = hadamard::sample_sign(g, &mut rng);
         let mut buf = a.data.clone();
-        let t = harness::bench(&format!("rht dense g={g}"), elems, "elem", 1, 3, || {
+        let t = rep.bench(&format!("rht_dense_g{g}"), elems, "elem", 1, 3, || {
             hadamard::rht_blockwise_dense(&mut buf, &sign, workers);
         });
         println!("{:<44} {:>11.1}% of GEMM", format!("  -> overhead vs gemm (g={g})"), 100.0 * t / t_gemm);
         dense_times.push((g, t));
     }
 
-    harness::header("blockwise RHT via FWHT (O(n log g))");
+    rep.section("blockwise RHT via FWHT (O(n log g))");
     for g in [256usize, 1024] {
         let sign = hadamard::sample_sign(g, &mut rng);
         let mut buf = a.data.clone();
-        let t = harness::bench(&format!("rht fwht g={g}"), elems, "elem", 1, 3, || {
+        let t = rep.bench(&format!("rht_fwht_g{g}"), elems, "elem", 1, 3, || {
             hadamard::rht_blockwise_fwht(&mut buf, &sign, workers);
         });
         let dense = dense_times.iter().find(|(gg, _)| *gg == g).map(|(_, t)| *t);
@@ -60,5 +62,7 @@ fn main() {
     // dense at g = 1024 (the HadaCore row of Table 5)
     let t32 = dense_times[0].1;
     let t1024 = dense_times.last().unwrap().1;
-    assert!(t1024 > 2.0 * t32, "dense RHT cost must grow with g: {t32} vs {t1024}");
+    rep.gate_min("dense_rht_g1024_over_g32", t1024 / t32, 2.0);
+
+    rep.finish_and_assert();
 }

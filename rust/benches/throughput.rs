@@ -4,6 +4,8 @@
 //!   INT4 > INT8 > FP16; RHT overhead < 5% E2E for g <= 256; the
 //!   O(n log n) kernel recovers most of the dense g=1024 penalty; and
 //!   the §1 headline backward speedups (>1.3x vs 8-bit, >1.7x vs 16-bit).
+//! The roofline checks are deterministic, so they run as data-driven
+//! gates in `BENCH_<gitrev>.json` (one set per modeled accelerator).
 
 #[path = "harness.rs"]
 mod harness;
@@ -14,8 +16,10 @@ use mxfp4_train::perfmodel::{self, BwConfig, RhtStyle, LLAMA2_70B_LAYER};
 use mxfp4_train::rng::Rng;
 
 fn main() {
+    let mut rep = harness::Reporter::start("throughput");
     for hw in [perfmodel::A100, perfmodel::B200] {
-        harness::header(&format!("Table 5 (modeled, {}): Llama-2-70B decoder layer", hw.name));
+        let tag = hw.name.to_lowercase();
+        rep.section(&format!("Table 5 (modeled, {}): Llama-2-70B decoder layer", hw.name));
         println!("{:<28} {:>12} {:>12}", "BW pass", "E2E tok/s", "BW tok/s");
         let mut rows = Vec::new();
         for cfg in perfmodel::table5_configs() {
@@ -25,18 +29,23 @@ fn main() {
         }
         let get = |label: &str| rows.iter().find(|r| r.0 == label).unwrap().1;
 
-        assert!(get("INT4 no RHT") > get("INT8 no RHT"));
-        assert!(get("INT8 no RHT") > get("FP16"));
+        rep.gate_min(&format!("{tag}_int4_over_int8"), get("INT4 no RHT") / get("INT8 no RHT"), 1.0);
+        rep.gate_min(&format!("{tag}_int8_over_fp16"), get("INT8 no RHT") / get("FP16"), 1.0);
         let rht_overhead = 1.0 - get("INT4 + RHT g=256") / get("INT4 no RHT");
-        assert!(rht_overhead < 0.06, "RHT E2E overhead {rht_overhead}");
-        assert!(get("INT4 + RHT g=1024 nlogn") > get("INT4 + RHT g=1024 dense"));
+        rep.gate_max(&format!("{tag}_rht_e2e_overhead"), rht_overhead, 0.06);
+        rep.gate_min(
+            &format!("{tag}_nlogn_over_dense_g1024"),
+            get("INT4 + RHT g=1024 nlogn") / get("INT4 + RHT g=1024 dense"),
+            1.0,
+        );
 
         let (vs8, vs16) = perfmodel::headline_speedups(&hw, &LLAMA2_70B_LAYER);
         println!("headline backward speedup: {vs8:.2}x vs 8-bit, {vs16:.2}x vs 16-bit");
-        assert!(vs8 > 1.3 && vs16 > 1.7, "headline claim violated: {vs8} {vs16}");
+        rep.gate_min(&format!("{tag}_headline_vs_8bit"), vs8, 1.3);
+        rep.gate_min(&format!("{tag}_headline_vs_16bit"), vs16, 1.7);
     }
 
-    harness::header("paper Table 5 (measured by the authors, for reference)");
+    rep.section("paper Table 5 (measured by the authors, for reference)");
     println!("FP16 bw 94688 tok/s | INT8 133952* | INT4 208662* | INT4+RHT g=64 197139*");
     println!("(*paper numbers are HuggingFace-stack measurements: 94688/123056/133952;");
     println!(" our roofline is the idealized ceiling — ordering and ratios match)");
@@ -46,17 +55,17 @@ fn main() {
     // operand bytes each one streams. The packed engine touches 8x fewer
     // operand bytes (4.25 vs 32 bits/elem) and pays quantization once —
     // the software shape of Table 5's bandwidth argument.
-    harness::header("measured rust substrate (512x1024x512 GEMM, NR)");
+    rep.section("measured rust substrate (512x1024x512 GEMM, NR)");
     let mut rng = Rng::seed(4);
     let a = Mat::gaussian(512, 1024, 1.0, &mut rng);
     let b = Mat::gaussian(1024, 512, 1.0, &mut rng);
     let flops = 2.0 * 512.0 * 1024.0 * 512.0;
-    let t_qdq = harness::bench("qdq mx_matmul (quantize + f32 GEMM per call)", flops, "flop", 0, 2, || {
+    let t_qdq = rep.bench("qdq_mx_matmul", flops, "flop", 0, 2, || {
         std::hint::black_box(mx_matmul(&a, &b, MxMode::Nr, 64, &mut Rng::seed(1), 4));
     });
     let pa = a.pack_nr();
     let pbt = PackPipeline::transposed(&b.data, 512, 1024).pack_nr(4);
-    let t_packed = harness::bench("mx_gemm_packed (pre-packed operands)", flops, "flop", 0, 2, || {
+    let t_packed = rep.bench("packed_gemm_prepacked", flops, "flop", 0, 2, || {
         std::hint::black_box(mx_gemm_packed(&pa, &pbt, 4));
     });
     let f32_bytes = (a.data.len() + b.data.len()) * 4;
@@ -69,7 +78,7 @@ fn main() {
     );
 
     // sensitivity: the crossover where dense RHT stops being memory-bound
-    harness::header("RHT memory-bound crossover (modeled)");
+    rep.section("RHT memory-bound crossover (modeled)");
     for g in [64usize, 128, 256, 512, 1024] {
         let t = perfmodel::bw_time_per_token(
             &perfmodel::A100,
@@ -83,4 +92,6 @@ fn main() {
         );
         println!("g = {g:>5}: RHT adds {:>6.2}% to the backward pass", 100.0 * (t - t0) / t0);
     }
+
+    rep.finish_and_assert();
 }

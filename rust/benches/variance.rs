@@ -1,6 +1,8 @@
 //! Bench: Fig. 2 regeneration — SR-GEMM variance vs b, with/without RHT
-//! (DESIGN.md F2). Prints the figure's series and asserts the Theorem 3.2
-//! growth-rate ordering; also times the underlying mx_matmul.
+//! (DESIGN.md F2). Prints the figure's series and keeps the Theorem 3.2
+//! growth-rate ordering as a hard assert (a statistical-correctness
+//! contract, not a perf number); mx_matmul timings are recorded into
+//! `BENCH_<gitrev>.json` through the shared reporter.
 
 #[path = "harness.rs"]
 mod harness;
@@ -29,7 +31,8 @@ fn variance_point(b: usize, p: f64, samples: usize, trials: usize) -> (f64, f64)
 }
 
 fn main() {
-    harness::header("Fig. 2: SR-GEMM variance vs b (A,B ~ N(0,I) + Bern(p) N(0,5I))");
+    let mut rep = harness::Reporter::start("variance");
+    rep.section("Fig. 2: SR-GEMM variance vs b (A,B ~ N(0,I) + Bern(p) N(0,5I))");
     let (samples, trials) = (96, 16);
     for p in [0.0, 0.01] {
         println!("\np = {p}");
@@ -53,7 +56,7 @@ fn main() {
         );
     }
 
-    harness::header("mx_matmul wall time (128x1024 @ 1024x128)");
+    rep.section("mx_matmul wall time (128x1024 @ 1024x128)");
     let mut rng = Rng::seed(7);
     let a = Mat::gaussian(128, 1024, 1.0, &mut rng);
     let b = Mat::gaussian(1024, 128, 1.0, &mut rng);
@@ -62,11 +65,13 @@ fn main() {
         ("exact", MxMode::Exact),
         ("nr", MxMode::Nr),
         ("sr", MxMode::Sr),
-        ("rht (g=64)", MxMode::Rht),
-        ("rht_sr (g=64)", MxMode::RhtSr),
+        ("rht_g64", MxMode::Rht),
+        ("rht_sr_g64", MxMode::RhtSr),
     ] {
-        harness::bench(&format!("mx_matmul {label}"), flops, "flop", 1, 3, || {
+        rep.bench(&format!("mx_matmul_{label}"), flops, "flop", 1, 3, || {
             std::hint::black_box(mx_matmul(&a, &b, mode, 64, &mut Rng::seed(1), 4));
         });
     }
+
+    rep.finish_and_assert();
 }

@@ -33,7 +33,7 @@
 //! | `serve` | §1, §4 | **serving subsystem**: pack-once `ServeModel`, continuous-batching `Engine` with chunked batched prefill, exact-acceptance speculative decoding (`serve::spec`), TCP/stdin line protocol (`serve::net`), seeded sampling (`docs/SERVING.md`) |
 //! | `coordinator` | §4 | trainer loop, DP pool, metrics, checkpoints, quantize-once `mxcache` + dgrad `PrepCache` |
 //! | `optim` | §4.1 | AdamW with FP32 masters + BF16 compute copies, cosine schedule |
-//! | `obs` | §3.1, §4 | **observability**: process-global metrics registry (counters/gauges/histograms, Prometheus + JSON export), RAII tracing spans with Chrome-trace export, sampled quant-health telemetry (live clip fraction, E8M0 exponent histograms, SR dither stats) — see `docs/OBSERVABILITY.md` |
+//! | `obs` | §3.1, §4 | **observability**: process-global metrics registry (counters/gauges/histograms, Prometheus + JSON export), RAII tracing spans with Chrome-trace export, sampled quant-health telemetry (live clip fraction, E8M0 exponent histograms, SR dither stats), benchmark flight data (`obs::bench` reporter: schema-versioned `BENCH_*.json` reports, noise-aware regression comparator, in-library suites behind the `bench` CLI subcommand) — see `docs/OBSERVABILITY.md` |
 //! | `perfmodel` | Table 5, §4.2 | roofline model of the backward-pass speedups |
 //! | `runtime` | §4 | the pluggable `Backend` trait: native GPT or PJRT executor over AOT artifacts |
 //! | `data`, `eval` | §4.1, Table 3 | byte-level corpus, cloze eval, greedy generation |

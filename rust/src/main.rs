@@ -11,6 +11,10 @@
 //!               (auto-detected by magic — the latter starts with zero
 //!               quantize/pack work)
 //!   convert     f32 `.mxck` checkpoint → packed `.mxpk` (MXFP4 at rest)
+//!   bench       in-process benchmark suites → schema-versioned
+//!               BENCH_<gitrev>.json report + noise-aware comparison
+//!               against a committed baseline (exit nonzero on
+//!               regression); also --validate / --compare-only modes
 //!   variance    Fig. 2 variance study (rust substrates)
 //!   table5      roofline throughput table (perfmodel)
 //!   formats     print Table 1 (FP datatype zoo)
@@ -45,13 +49,14 @@ fn main() -> Result<()> {
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
         Some("convert") => cmd_convert(&args),
+        Some("bench") => cmd_bench(&args),
         Some("variance") => cmd_variance(&args),
         Some("table5") => cmd_table5(&args),
         Some("formats") => cmd_formats(),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: mxfp4-train <train|sweep|eval|generate|serve|convert|variance|table5|formats|artifacts> [--key value ...]"
+                "usage: mxfp4-train <train|sweep|eval|generate|serve|convert|bench|variance|table5|formats|artifacts> [--key value ...]"
             );
             Ok(())
         }
@@ -276,9 +281,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
 /// (`Arc`) across every session; a tokens/sec + occupancy (+ acceptance
 /// rate) summary prints at exit.
 /// Observability: --metrics-dump <path> writes an obs JSON snapshot at
-/// exit, --trace-out <path> records Chrome-trace spans (Perfetto), and
-/// the TCP protocol answers `stats` / `metrics` / `metrics prometheus`
-/// lines in-band — see docs/OBSERVABILITY.md.
+/// exit (add --metrics-every <secs> to also refresh that file
+/// periodically while the engine runs, for scraping long-lived
+/// servers), --trace-out <path> records Chrome-trace spans (Perfetto),
+/// and the TCP protocol answers `stats` / `metrics` /
+/// `metrics prometheus` lines in-band — see docs/OBSERVABILITY.md.
 fn cmd_serve(args: &Args) -> Result<()> {
     let trace = start_trace(args);
     let reg = registry(args)?;
@@ -391,6 +398,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         serve::EngineConfig::batch(max_batch)
     };
     let mut engine = serve::Engine::new(backend, engine_cfg);
+
+    if let Some(secs) = args.get("metrics-every") {
+        let secs: f64 = secs.parse().map_err(|_| anyhow::anyhow!("--metrics-every {secs}: not a number"))?;
+        anyhow::ensure!(secs > 0.0, "--metrics-every must be > 0 seconds");
+        let path = args.get("metrics-dump").ok_or_else(|| {
+            anyhow::anyhow!("--metrics-every needs --metrics-dump <path> to know where to write")
+        })?;
+        engine.set_metrics_every(PathBuf::from(path), std::time::Duration::from_secs_f64(secs));
+    }
 
     if let Some(draft_name) = args.get("spec-draft") {
         let k = args.get_usize("spec-k", 4);
@@ -596,6 +612,134 @@ fn cmd_convert(args: &Args) -> Result<()> {
         src_bytes as f64 / out_bytes as f64,
         recipe.name
     );
+    Ok(())
+}
+
+/// Run the in-process benchmark suites and gate on the committed
+/// baseline.
+///
+/// Modes (mutually exclusive):
+///   (default)        run suites, write BENCH_<gitrev>.json, compare
+///                    against BENCH_baseline.json when present; exit
+///                    nonzero on any failed gate or noise-aware
+///                    regression (median worse by > max(5%, 3×MAD))
+///   --validate <p>   schema-check an existing report and exit
+///   --compare-only   compare --report <p> against --baseline <p>
+///                    without running anything; --inject-slowdown <f>
+///                    multiplies fresh medians first (comparator
+///                    self-test)
+///
+/// Run-mode keys: --suite micro|full (default micro), --suites a,b,c
+/// (subset; default all), --out <path> (report destination, default
+/// repo root), --baseline <path>, --update-baseline (copy the fresh
+/// report over the baseline), --no-compare, --trace-out <path>.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use mxfp4_train::obs::bench;
+
+    if let Some(p) = args.get("validate") {
+        let text = std::fs::read_to_string(p).with_context(|| format!("--validate {p}"))?;
+        let doc = mxfp4_train::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("--validate {p}: {e}"))?;
+        let n = bench::validate(&doc).map_err(|e| anyhow::anyhow!("--validate {p}: {e}"))?;
+        println!("{p}: schema ok ({n} measurements)");
+        return Ok(());
+    }
+
+    let load_report = |key: &str| -> Result<mxfp4_train::util::json::Json> {
+        let p = args
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("--compare-only needs --{key} <path>"))?;
+        let text = std::fs::read_to_string(p).with_context(|| format!("--{key} {p}"))?;
+        let doc = mxfp4_train::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("--{key} {p}: {e}"))?;
+        bench::validate(&doc).map_err(|e| anyhow::anyhow!("--{key} {p}: {e}"))?;
+        Ok(doc)
+    };
+
+    if args.has("compare-only") {
+        let base = load_report("baseline")?;
+        let fresh = load_report("report")?;
+        let inject = match args.get("inject-slowdown") {
+            Some(v) => Some(v.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!("--inject-slowdown {v}: not a number")
+            })?),
+            None => None,
+        };
+        let out = bench::compare(&base, &fresh, inject);
+        print!("{}", out.table());
+        anyhow::ensure!(out.regressions == 0, "{} benchmark regression(s)", out.regressions);
+        return Ok(());
+    }
+
+    let trace = start_trace(args);
+    let scale = args.get_or("suite", "micro");
+    anyhow::ensure!(
+        scale == "micro" || scale == "full",
+        "--suite must be micro or full, got {scale}"
+    );
+    let selected: Option<Vec<String>> = args
+        .get("suites")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    if let Some(sel) = &selected {
+        let known = mxfp4_train::obs::suites::names();
+        for s in sel {
+            anyhow::ensure!(
+                known.contains(&s.as_str()),
+                "unknown suite {s} (available: {})",
+                known.join(", ")
+            );
+        }
+    }
+    if let Some(out) = args.get("out") {
+        std::env::set_var(bench::OUT_ENV, out);
+    }
+
+    let mut report_path = None;
+    let mut failed: Vec<String> = Vec::new();
+    for (name, run) in mxfp4_train::obs::suites::SUITES {
+        if selected.as_ref().is_some_and(|sel| !sel.iter().any(|s| s == name)) {
+            continue;
+        }
+        let outcome = run(scale).with_context(|| format!("suite {name}"))?;
+        failed.extend(outcome.failed.iter().map(|g| format!("{name}/{g}")));
+        report_path = Some(outcome.path);
+    }
+    let Some(report_path) = report_path else {
+        anyhow::bail!("no suites selected");
+    };
+    println!("\nreport: {}", report_path.display());
+    finish_trace(&trace)?;
+
+    let baseline = args
+        .get("baseline")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| bench::repo_root().join("BENCH_baseline.json"));
+    if args.has("update-baseline") {
+        std::fs::copy(&report_path, &baseline)
+            .with_context(|| format!("--update-baseline -> {}", baseline.display()))?;
+        println!("baseline updated: {}", baseline.display());
+    } else if args.has("no-compare") {
+        println!("(comparison skipped: --no-compare)");
+    } else if baseline.exists() {
+        let parse = |p: &std::path::Path| -> Result<mxfp4_train::util::json::Json> {
+            let text = std::fs::read_to_string(p)?;
+            mxfp4_train::util::json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))
+        };
+        let base = parse(&baseline)?;
+        let fresh = parse(&report_path)?;
+        println!("\nvs baseline {}:", baseline.display());
+        let out = bench::compare(&base, &fresh, None);
+        print!("{}", out.table());
+        anyhow::ensure!(out.regressions == 0, "{} benchmark regression(s)", out.regressions);
+    } else {
+        println!(
+            "(no baseline at {}; seed one with `mxfp4-train bench --update-baseline`)",
+            baseline.display()
+        );
+    }
+
+    anyhow::ensure!(failed.is_empty(), "failed gates: {}", failed.join(", "));
     Ok(())
 }
 

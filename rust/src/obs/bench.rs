@@ -1,0 +1,815 @@
+//! Benchmark observability: structured measurements, noise statistics,
+//! gate records, and schema-versioned `BENCH_<gitrev>.json` reports.
+//!
+//! Every bench target (`rust/benches/*.rs`) and the `bench` CLI
+//! subcommand time closures through a [`Reporter`]: warmup + repetition
+//! control, **median/MAD** noise statistics over repetitions, derived
+//! rates (GFLOP/s, GB/s, tok/s — the caller names the unit), and
+//! environment capture (git rev, CPU model, selected GEMM kernel,
+//! thread count, feature flags). Each run merges one suite into a
+//! report at the repo root, so `cargo bench` and `mxfp4-train bench`
+//! both grow the same perf trajectory.
+//!
+//! Gates are *data*: a [`Reporter`] records `(value, op, threshold,
+//! pass)` per gate and the run fails after the whole suite has printed,
+//! instead of scattering hard-coded `assert!`s mid-run.
+//!
+//! The comparator ([`compare`]) applies a noise-aware rule against a
+//! committed baseline: a measurement regresses iff its median worsens
+//! by more than `max(5%, 3×MAD)` — see `docs/OBSERVABILITY.md`
+//! ("Benchmark reports & regression gates").
+//!
+//! Ties into the rest of the obs layer: every timed region runs under a
+//! `trace::span_cat(_, "bench")` span (so `--trace-out` from a bench
+//! run yields a Perfetto view of exactly what was timed) and every
+//! measurement publishes `bench.<suite>.<name>.*` gauges.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Bump when the report layout changes incompatibly. Validators and
+/// comparators refuse documents from another schema.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Env override for where reports are written (CI sandboxes, tests).
+pub const OUT_ENV: &str = "MXFP4_BENCH_OUT";
+
+// ---------------------------------------------------------------------------
+// Timing + noise statistics
+// ---------------------------------------------------------------------------
+
+/// Median and MAD (median absolute deviation) of per-rep seconds/iter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub median_secs: f64,
+    pub mad_secs: f64,
+}
+
+fn median(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    }
+}
+
+/// Median + MAD over a sample set (used by [`measure`]; public so the
+/// comparator's tests and external tools can reproduce the rule).
+pub fn median_mad(samples: &[f64]) -> Stats {
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = median(&v);
+    let mut dev: Vec<f64> = v.iter().map(|x| (x - med).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats { median_secs: med, mad_secs: median(&dev) }
+}
+
+/// Run `f` `warmup` times untimed, then `reps` repetitions of `iters`
+/// calls each; returns median/MAD of the per-rep mean seconds/iter.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, reps: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let reps = reps.max(1);
+    let iters = iters.max(1);
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    median_mad(&times)
+}
+
+/// Back-compat shim with the pre-report harness: median seconds/iter
+/// over 3 repetitions (bench helpers that only need a number).
+pub fn time_secs<F: FnMut()>(warmup: usize, iters: usize, f: F) -> f64 {
+    measure(warmup, iters, 3, f).median_secs
+}
+
+/// Print a section header (`==== title ====`).
+pub fn header(title: &str) {
+    println!("\n==== {title} ====");
+}
+
+// ---------------------------------------------------------------------------
+// Environment capture
+// ---------------------------------------------------------------------------
+
+/// The context a measurement is only comparable within.
+#[derive(Debug, Clone)]
+pub struct EnvInfo {
+    pub git_rev: String,
+    pub cpu: String,
+    pub threads: usize,
+    pub kernel: String,
+    pub os: String,
+    pub features: Vec<String>,
+}
+
+/// Short git revision of the repo containing `root` ("unknown" when git
+/// or the repo is unavailable — reports still get written).
+pub fn git_rev(root: &Path) -> String {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .current_dir(root)
+        .output();
+    match out {
+        Ok(o) if o.status.success() => {
+            let rev = String::from_utf8_lossy(&o.stdout).trim().to_string();
+            if rev.chars().all(|c| c.is_ascii_alphanumeric()) && !rev.is_empty() {
+                rev
+            } else {
+                "unknown".to_string()
+            }
+        }
+        _ => "unknown".to_string(),
+    }
+}
+
+fn cpu_model() -> String {
+    if let Ok(text) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in text.lines() {
+            // x86 "model name", POWER "cpu"; aarch64 often has neither.
+            if line.starts_with("model name") {
+                if let Some((_, v)) = line.split_once(':') {
+                    return v.trim().to_string();
+                }
+            }
+        }
+    }
+    std::env::consts::ARCH.to_string()
+}
+
+/// Capture the measurement environment: git rev, CPU model, worker
+/// count, selected GEMM kernel, OS/arch, and compiled feature flags.
+pub fn capture_env(root: &Path) -> EnvInfo {
+    let mut features = Vec::new();
+    if cfg!(feature = "mmap") {
+        features.push("mmap".to_string());
+    }
+    EnvInfo {
+        git_rev: git_rev(root),
+        cpu: cpu_model(),
+        threads: crate::util::threadpool::default_workers(),
+        kernel: crate::gemm::simd::Kernel::select().name().to_string(),
+        os: format!("{}-{}", std::env::consts::OS, std::env::consts::ARCH),
+        features,
+    }
+}
+
+/// Walk up from the current directory to the repo root (the directory
+/// holding `ROADMAP.md`); falls back to the current directory so bench
+/// binaries run from anywhere.
+pub fn repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join("ROADMAP.md").is_file() || dir.join(".git").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => return cwd,
+        }
+    }
+}
+
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// Measurements, gates, reporter
+// ---------------------------------------------------------------------------
+
+/// One named timed measurement inside a suite.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub unit: String,
+    pub units_per_iter: f64,
+    pub median_secs: f64,
+    pub mad_secs: f64,
+    pub rate: f64,
+    pub warmup: usize,
+    pub iters: usize,
+    pub reps: usize,
+}
+
+/// One data-driven gate: `value op threshold`, recorded not asserted.
+#[derive(Debug, Clone)]
+pub struct GateRec {
+    pub name: String,
+    pub value: f64,
+    pub threshold: f64,
+    /// `">="` (value must be at least threshold) or `"<="`.
+    pub op: &'static str,
+    pub pass: bool,
+}
+
+/// What [`Reporter::finish`] did: where the report landed and which
+/// gates failed (empty = suite passed).
+#[derive(Debug)]
+pub struct FinishOutcome {
+    pub path: PathBuf,
+    pub failed: Vec<String>,
+}
+
+/// Collects one suite's measurements and gates, then merges them into
+/// the repo-root `BENCH_<gitrev>.json` report.
+pub struct Reporter {
+    suite: String,
+    scale: String,
+    reps: usize,
+    env: EnvInfo,
+    root: PathBuf,
+    measurements: Vec<Measurement>,
+    gates: Vec<GateRec>,
+}
+
+fn leak(s: String) -> &'static str {
+    Box::leak(s.into_boxed_str())
+}
+
+impl Reporter {
+    /// Start a suite at the default ("full") scale with 5 reps.
+    pub fn start(suite: &str) -> Reporter {
+        Reporter::start_scaled(suite, "full")
+    }
+
+    /// Start a suite with an explicit scale tag ("micro" / "full").
+    pub fn start_scaled(suite: &str, scale: &str) -> Reporter {
+        let root = repo_root();
+        let env = capture_env(&root);
+        header(&format!("{suite} [{scale}] — kernel {}, {} threads", env.kernel, env.threads));
+        Reporter {
+            suite: suite.to_string(),
+            scale: scale.to_string(),
+            reps: 5,
+            env,
+            root,
+            measurements: Vec::new(),
+            gates: Vec::new(),
+        }
+    }
+
+    /// Override the repetition count (noise floor vs runtime tradeoff).
+    pub fn with_reps(mut self, reps: usize) -> Reporter {
+        self.reps = reps.max(1);
+        self
+    }
+
+    pub fn suite(&self) -> &str {
+        &self.suite
+    }
+
+    pub fn env(&self) -> &EnvInfo {
+        &self.env
+    }
+
+    /// Print a sub-section header inside the suite.
+    pub fn section(&self, title: &str) {
+        header(title);
+    }
+
+    /// Time `f` under a `"bench"` tracing span, print the aligned row,
+    /// record the measurement, publish `bench.*` gauges, and return the
+    /// median seconds/iter.
+    pub fn bench<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units: f64,
+        unit_name: &str,
+        warmup: usize,
+        iters: usize,
+        f: F,
+    ) -> f64 {
+        let stats = {
+            let _sp = crate::obs::trace::span_cat(
+                leak(format!("bench.{}.{}", self.suite, name)),
+                "bench",
+            );
+            measure(warmup, iters, self.reps, f)
+        };
+        println!(
+            "{name:<44} {:>12.3} us/iter {:>14.2} {unit_name}/s",
+            stats.median_secs * 1e6,
+            units / stats.median_secs
+        );
+        let rate = units / stats.median_secs;
+        crate::obs::set_gauge(&format!("bench.{}.{name}.secs", self.suite), stats.median_secs);
+        crate::obs::set_gauge(&format!("bench.{}.{name}.rate", self.suite), rate);
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            unit: unit_name.to_string(),
+            units_per_iter: units,
+            median_secs: stats.median_secs,
+            mad_secs: stats.mad_secs,
+            rate,
+            warmup,
+            iters,
+            reps: self.reps,
+        });
+        stats.median_secs
+    }
+
+    fn gate(&mut self, name: &str, value: f64, threshold: f64, op: &'static str) -> bool {
+        let pass = match op {
+            ">=" => value >= threshold,
+            "<=" => value <= threshold,
+            _ => unreachable!("gate op"),
+        };
+        println!(
+            "gate {name:<42} {value:>12.4} {op} {threshold:<10} {}",
+            if pass { "PASS" } else { "FAIL" }
+        );
+        self.gates.push(GateRec { name: name.to_string(), value, threshold, op, pass });
+        pass
+    }
+
+    /// Record a gate that requires `value >= threshold` (speedups,
+    /// compression ratios). Failure is reported at [`finish`]
+    /// (`Reporter::finish`), not here.
+    pub fn gate_min(&mut self, name: &str, value: f64, threshold: f64) -> bool {
+        self.gate(name, value, threshold, ">=")
+    }
+
+    /// Record a gate that requires `value <= threshold` (overhead caps).
+    pub fn gate_max(&mut self, name: &str, value: f64, threshold: f64) -> bool {
+        self.gate(name, value, threshold, "<=")
+    }
+
+    fn suite_json(&self) -> Json {
+        let mut ms = BTreeMap::new();
+        for m in &self.measurements {
+            ms.insert(
+                m.name.clone(),
+                json::obj(vec![
+                    ("unit", json::s(&m.unit)),
+                    ("units_per_iter", json::num(m.units_per_iter)),
+                    ("median_secs", json::num(m.median_secs)),
+                    ("mad_secs", json::num(m.mad_secs)),
+                    ("rate", json::num(m.rate)),
+                    ("warmup", json::num(m.warmup as f64)),
+                    ("iters", json::num(m.iters as f64)),
+                    ("reps", json::num(m.reps as f64)),
+                ]),
+            );
+        }
+        let mut gs = BTreeMap::new();
+        for g in &self.gates {
+            gs.insert(
+                g.name.clone(),
+                json::obj(vec![
+                    ("value", json::num(g.value)),
+                    ("threshold", json::num(g.threshold)),
+                    ("op", json::s(g.op)),
+                    ("pass", Json::Bool(g.pass)),
+                ]),
+            );
+        }
+        json::obj(vec![
+            ("scale", json::s(&self.scale)),
+            ("measurements", Json::Obj(ms)),
+            ("gates", Json::Obj(gs)),
+        ])
+    }
+
+    fn env_json(&self) -> Json {
+        json::obj(vec![
+            ("cpu", json::s(&self.env.cpu)),
+            ("threads", json::num(self.env.threads as f64)),
+            ("kernel", json::s(&self.env.kernel)),
+            ("os", json::s(&self.env.os)),
+            (
+                "features",
+                json::arr(self.env.features.iter().map(|f| json::s(f)).collect()),
+            ),
+        ])
+    }
+
+    /// Where this run's report lands: `$MXFP4_BENCH_OUT` if set, else
+    /// `<repo root>/BENCH_<gitrev>.json`.
+    pub fn report_path(&self) -> PathBuf {
+        if let Ok(p) = std::env::var(OUT_ENV) {
+            if !p.is_empty() {
+                return PathBuf::from(p);
+            }
+        }
+        self.root.join(format!("BENCH_{}.json", self.env.git_rev))
+    }
+
+    /// Merge this suite into the report (other suites for the same git
+    /// rev are preserved; a same-named suite is replaced), write it,
+    /// print the gate summary, and return which gates failed.
+    pub fn finish(self) -> std::io::Result<FinishOutcome> {
+        let path = self.report_path();
+        let mut suites: BTreeMap<String, Json> = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(doc) = json::parse(&text) {
+                let same_rev = doc.get("git_rev").as_str() == Some(self.env.git_rev.as_str());
+                let same_schema = doc.get("schema").as_i64() == Some(SCHEMA_VERSION as i64);
+                if same_rev && same_schema {
+                    if let Some(obj) = doc.get("suites").as_obj() {
+                        suites = obj.clone();
+                    }
+                }
+            }
+        }
+        suites.insert(self.suite.clone(), self.suite_json());
+        let doc = json::obj(vec![
+            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("created_unix", json::num(unix_now() as f64)),
+            ("git_rev", json::s(&self.env.git_rev)),
+            ("env", self.env_json()),
+            ("suites", Json::Obj(suites)),
+        ]);
+        crate::util::fs::atomic_write(&path, |w| {
+            use std::io::Write as _;
+            writeln!(w, "{doc}")
+        })?;
+        let failed: Vec<String> =
+            self.gates.iter().filter(|g| !g.pass).map(|g| g.name.clone()).collect();
+        if failed.is_empty() {
+            println!(
+                "suite {}: {} measurements, {} gates ok -> {}",
+                self.suite,
+                self.measurements.len(),
+                self.gates.len(),
+                path.display()
+            );
+        } else {
+            println!("suite {}: FAILED gates: {}", self.suite, failed.join(", "));
+        }
+        Ok(FinishOutcome { path, failed })
+    }
+
+    /// [`finish`](Reporter::finish) for standalone bench binaries:
+    /// panics after the whole suite has printed if any gate failed,
+    /// preserving `cargo bench`'s nonzero exit on regression.
+    pub fn finish_and_assert(self) {
+        let suite = self.suite.clone();
+        let out = self.finish().unwrap_or_else(|e| panic!("bench report write failed: {e}"));
+        assert!(out.failed.is_empty(), "suite {suite} failed gates: {}", out.failed.join(", "));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schema validation
+// ---------------------------------------------------------------------------
+
+fn require_num(doc: &Json, ctx: &str, key: &str) -> Result<f64, String> {
+    doc.get(key).as_f64().ok_or_else(|| format!("{ctx}: missing/non-numeric \"{key}\""))
+}
+
+fn require_str<'a>(doc: &'a Json, ctx: &str, key: &str) -> Result<&'a str, String> {
+    doc.get(key).as_str().ok_or_else(|| format!("{ctx}: missing/non-string \"{key}\""))
+}
+
+/// Validate a parsed report against the schema this module writes.
+/// Returns the number of measurements seen across all suites.
+pub fn validate(doc: &Json) -> Result<usize, String> {
+    let schema = require_num(doc, "report", "schema")? as u32;
+    if schema != SCHEMA_VERSION {
+        return Err(format!("report: schema {schema}, expected {SCHEMA_VERSION}"));
+    }
+    require_num(doc, "report", "created_unix")?;
+    require_str(doc, "report", "git_rev")?;
+    let env = doc.get("env");
+    require_str(env, "env", "cpu")?;
+    require_num(env, "env", "threads")?;
+    require_str(env, "env", "kernel")?;
+    require_str(env, "env", "os")?;
+    env.get("features").as_arr().ok_or("env: missing \"features\" array".to_string())?;
+    let suites = doc.get("suites").as_obj().ok_or("report: missing \"suites\"".to_string())?;
+    let mut n = 0usize;
+    for (sname, suite) in suites {
+        let ctx = format!("suite {sname}");
+        require_str(suite, &ctx, "scale")?;
+        let ms = suite
+            .get("measurements")
+            .as_obj()
+            .ok_or(format!("{ctx}: missing \"measurements\""))?;
+        for (mname, m) in ms {
+            let mctx = format!("{ctx}/{mname}");
+            require_str(m, &mctx, "unit")?;
+            for key in ["units_per_iter", "median_secs", "mad_secs", "rate", "warmup", "iters", "reps"] {
+                require_num(m, &mctx, key)?;
+            }
+            if m.get("median_secs").as_f64().unwrap() < 0.0 {
+                return Err(format!("{mctx}: negative median_secs"));
+            }
+            n += 1;
+        }
+        let gs = suite.get("gates").as_obj().ok_or(format!("{ctx}: missing \"gates\""))?;
+        for (gname, g) in gs {
+            let gctx = format!("{ctx}/gate {gname}");
+            require_num(g, &gctx, "value")?;
+            require_num(g, &gctx, "threshold")?;
+            let op = require_str(g, &gctx, "op")?;
+            if op != ">=" && op != "<=" {
+                return Err(format!("{gctx}: bad op {op:?}"));
+            }
+            if g.get("pass").as_bool().is_none() {
+                return Err(format!("{gctx}: missing \"pass\""));
+            }
+        }
+    }
+    Ok(n)
+}
+
+// ---------------------------------------------------------------------------
+// Baseline comparison
+// ---------------------------------------------------------------------------
+
+/// One baseline-vs-fresh measurement pair with the noise-aware verdict.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub suite: String,
+    pub name: String,
+    pub base_secs: f64,
+    pub fresh_secs: f64,
+    pub margin_secs: f64,
+    pub regressed: bool,
+    pub improved: bool,
+}
+
+/// The comparator's noise-aware rule, in one place: a measurement
+/// regresses iff the fresh median is slower than the baseline median
+/// by more than `max(5% of baseline, 3×MAD)` (the larger of the two
+/// MADs — either run being noisy widens the margin).
+pub fn regression_margin(base_secs: f64, base_mad: f64, fresh_mad: f64) -> f64 {
+    (0.05 * base_secs).max(3.0 * base_mad.max(fresh_mad))
+}
+
+/// Result of comparing a fresh report against a baseline.
+#[derive(Debug)]
+pub struct CompareOutcome {
+    pub deltas: Vec<Delta>,
+    /// Measurements present in only one of the reports (not failures).
+    pub unmatched: usize,
+    pub regressions: usize,
+}
+
+impl CompareOutcome {
+    /// Human-readable delta table, one row per compared measurement.
+    pub fn table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<52} {:>12} {:>12} {:>8} {:>8}  verdict",
+            "measurement", "base us", "fresh us", "delta", "noise"
+        );
+        for d in &self.deltas {
+            let pct = if d.base_secs > 0.0 {
+                100.0 * (d.fresh_secs - d.base_secs) / d.base_secs
+            } else {
+                0.0
+            };
+            let noise_pct =
+                if d.base_secs > 0.0 { 100.0 * d.margin_secs / d.base_secs } else { 0.0 };
+            let verdict = if d.regressed {
+                "REGRESSED"
+            } else if d.improved {
+                "improved"
+            } else {
+                "ok"
+            };
+            let _ = writeln!(
+                out,
+                "{:<52} {:>12.3} {:>12.3} {:>+7.1}% {:>7.1}%  {verdict}",
+                format!("{}/{}", d.suite, d.name),
+                d.base_secs * 1e6,
+                d.fresh_secs * 1e6,
+                pct,
+                noise_pct,
+            );
+        }
+        if self.unmatched > 0 {
+            let _ = writeln!(out, "({} measurements present in only one report)", self.unmatched);
+        }
+        let _ = writeln!(
+            out,
+            "{} compared, {} regressed",
+            self.deltas.len(),
+            self.regressions
+        );
+        out
+    }
+}
+
+fn suite_measurements(doc: &Json) -> BTreeMap<(String, String), (f64, f64)> {
+    let mut out = BTreeMap::new();
+    if let Some(suites) = doc.get("suites").as_obj() {
+        for (sname, suite) in suites {
+            if let Some(ms) = suite.get("measurements").as_obj() {
+                for (mname, m) in ms {
+                    if let (Some(med), Some(mad)) =
+                        (m.get("median_secs").as_f64(), m.get("mad_secs").as_f64())
+                    {
+                        out.insert((sname.clone(), mname.clone()), (med, mad));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Compare `fresh` against `base`, suite/measurement pairs matched by
+/// name. `inject_slowdown` multiplies every fresh median first — the
+/// comparator's self-test hook (`bench --compare-only
+/// --inject-slowdown 2`). Unmatched measurements are counted, not
+/// failed, so adding or removing a bench is never a "regression".
+pub fn compare(base: &Json, fresh: &Json, inject_slowdown: Option<f64>) -> CompareOutcome {
+    let slow = inject_slowdown.unwrap_or(1.0);
+    let b = suite_measurements(base);
+    let f = suite_measurements(fresh);
+    let mut deltas = Vec::new();
+    let mut unmatched = 0usize;
+    for (key, (base_med, base_mad)) in &b {
+        match f.get(key) {
+            Some((fresh_med, fresh_mad)) => {
+                let fresh_med = fresh_med * slow;
+                let margin = regression_margin(*base_med, *base_mad, *fresh_mad);
+                deltas.push(Delta {
+                    suite: key.0.clone(),
+                    name: key.1.clone(),
+                    base_secs: *base_med,
+                    fresh_secs: fresh_med,
+                    margin_secs: margin,
+                    regressed: fresh_med - base_med > margin,
+                    improved: base_med - fresh_med > margin,
+                });
+            }
+            None => unmatched += 1,
+        }
+    }
+    unmatched += f.keys().filter(|k| !b.contains_key(*k)).count();
+    let regressions = deltas.iter().filter(|d| d.regressed).count();
+    CompareOutcome { deltas, unmatched, regressions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_mad_math() {
+        let s = median_mad(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.median_secs, 3.0);
+        // deviations: [2,1,0,1,97] -> sorted [0,1,1,2,97] -> median 1
+        assert_eq!(s.mad_secs, 1.0);
+        let even = median_mad(&[1.0, 3.0]);
+        assert_eq!(even.median_secs, 2.0);
+        assert_eq!(even.mad_secs, 1.0);
+        assert_eq!(median_mad(&[]).median_secs, 0.0);
+    }
+
+    #[test]
+    fn measure_is_sane() {
+        let mut n = 0u64;
+        let s = measure(1, 4, 3, || n += 1);
+        assert!(s.median_secs >= 0.0 && s.mad_secs >= 0.0);
+        assert_eq!(n, (1 + 3 * 4) as u64, "warmup + reps*iters calls");
+    }
+
+    #[test]
+    fn regression_rule_noise_aware() {
+        // quiet baseline: the 5% floor governs
+        assert_eq!(regression_margin(100.0, 0.0, 0.0), 5.0);
+        // noisy run: 3x the larger MAD governs
+        assert_eq!(regression_margin(100.0, 1.0, 4.0), 12.0);
+        let base = report_fixture(100e-6, 1e-6);
+        // +4% on a quiet baseline: inside the 5% floor
+        let ok = compare(&base, &report_fixture(104e-6, 1e-6), None);
+        assert_eq!(ok.regressions, 0);
+        assert_eq!(ok.deltas.len(), 1);
+        // 2x slowdown: flagged
+        let bad = compare(&base, &report_fixture(100e-6, 1e-6), Some(2.0));
+        assert_eq!(bad.regressions, 1);
+        assert!(bad.table().contains("REGRESSED"), "table: {}", bad.table());
+        // big improvement is noted, never failed
+        let fast = compare(&base, &report_fixture(50e-6, 1e-6), None);
+        assert_eq!(fast.regressions, 0);
+        assert!(fast.deltas[0].improved);
+        // a noisy enough pair swallows a 2x delta
+        let noisy = compare(
+            &report_fixture(100e-6, 40e-6),
+            &report_fixture(200e-6, 1e-6),
+            None,
+        );
+        assert_eq!(noisy.regressions, 0, "3*40us margin > 100us delta");
+    }
+
+    #[test]
+    fn unmatched_measurements_are_not_regressions() {
+        let base = report_fixture(100e-6, 1e-6);
+        let empty = json::parse(r#"{"schema":1,"suites":{}}"#).unwrap();
+        let out = compare(&base, &empty, None);
+        assert_eq!(out.regressions, 0);
+        assert_eq!(out.unmatched, 1);
+    }
+
+    #[test]
+    fn validate_accepts_own_fixture_and_rejects_junk() {
+        let good = full_fixture(123e-6, 2e-6);
+        assert_eq!(validate(&good), Ok(1));
+        let missing = json::parse(r#"{"schema":1}"#).unwrap();
+        assert!(validate(&missing).is_err());
+        let wrong_schema = full_fixture_schema(99);
+        assert!(validate(&wrong_schema).unwrap_err().contains("schema 99"));
+    }
+
+    // -- fixtures -----------------------------------------------------------
+
+    fn measurement_json(median: f64, mad: f64) -> Json {
+        json::obj(vec![
+            ("unit", json::s("GFLOP")),
+            ("units_per_iter", json::num(2.0)),
+            ("median_secs", json::num(median)),
+            ("mad_secs", json::num(mad)),
+            ("rate", json::num(2.0 / median)),
+            ("warmup", json::num(1.0)),
+            ("iters", json::num(4.0)),
+            ("reps", json::num(5.0)),
+        ])
+    }
+
+    fn report_fixture(median: f64, mad: f64) -> Json {
+        let mut ms = BTreeMap::new();
+        ms.insert("packed_gemm".to_string(), measurement_json(median, mad));
+        let mut suites = BTreeMap::new();
+        suites.insert(
+            "gemm".to_string(),
+            json::obj(vec![
+                ("scale", json::s("full")),
+                ("measurements", Json::Obj(ms)),
+                ("gates", Json::Obj(BTreeMap::new())),
+            ]),
+        );
+        json::obj(vec![("schema", json::num(1.0)), ("suites", Json::Obj(suites))])
+    }
+
+    fn full_fixture_schema(schema: u32) -> Json {
+        let mut doc = full_fixture(1e-3, 1e-5);
+        if let Json::Obj(map) = &mut doc {
+            map.insert("schema".to_string(), json::num(schema as f64));
+        }
+        doc
+    }
+
+    fn full_fixture(median: f64, mad: f64) -> Json {
+        let mut ms = BTreeMap::new();
+        ms.insert("packed_gemm".to_string(), measurement_json(median, mad));
+        let mut gs = BTreeMap::new();
+        gs.insert(
+            "simd_speedup".to_string(),
+            json::obj(vec![
+                ("value", json::num(2.4)),
+                ("threshold", json::num(2.0)),
+                ("op", json::s(">=")),
+                ("pass", Json::Bool(true)),
+            ]),
+        );
+        let mut suites = BTreeMap::new();
+        suites.insert(
+            "gemm".to_string(),
+            json::obj(vec![
+                ("scale", json::s("full")),
+                ("measurements", Json::Obj(ms)),
+                ("gates", Json::Obj(gs)),
+            ]),
+        );
+        json::obj(vec![
+            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("created_unix", json::num(1.0)),
+            ("git_rev", json::s("abc123")),
+            (
+                "env",
+                json::obj(vec![
+                    ("cpu", json::s("test-cpu")),
+                    ("threads", json::num(4.0)),
+                    ("kernel", json::s("scalar")),
+                    ("os", json::s("linux-x86_64")),
+                    ("features", json::arr(vec![])),
+                ]),
+            ),
+            ("suites", Json::Obj(suites)),
+        ])
+    }
+}

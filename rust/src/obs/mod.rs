@@ -22,7 +22,9 @@
 //! result, so every bitwise-parity contract holds with observability
 //! on or off.
 
+pub mod bench;
 pub mod quant;
+pub mod suites;
 pub mod trace;
 
 use std::collections::BTreeMap;

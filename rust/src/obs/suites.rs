@@ -1,0 +1,323 @@
+//! In-process benchmark suites for the `bench` CLI subcommand.
+//!
+//! Each suite runs the repo's canonical measurements through a
+//! [`crate::obs::bench::Reporter`] at one of two scales:
+//!
+//! * **micro** — shrunken shapes that finish in seconds. Measurements
+//!   are recorded for the report/comparator but *performance* gates are
+//!   not registered (tiny shapes sit inside timing noise); only
+//!   deterministic gates (e.g. the §3.1 clip fraction) run.
+//! * **full** — the bench-target shapes with the canonical data-driven
+//!   gates: ≥3× packed-vs-seed, ≥2× SIMD, ≥3×/≥5× checkpoint
+//!   size/cold-start, ≤3% tracing overhead, fused-pack wins.
+//!
+//! The standalone `cargo bench` targets keep the exhaustive versions;
+//! these runners cover the measurements the regression trajectory
+//! tracks, so `scripts/bench.sh` needs one binary and one process.
+
+use anyhow::Result;
+
+use crate::coordinator::checkpoint;
+use crate::gemm::simd::Kernel;
+use crate::gemm::{mx_gemm_packed, mx_gemm_packed_with, Mat};
+use crate::hadamard;
+use crate::model::{GPTConfig, NativeRecipe};
+use crate::mx::block::MxVec;
+use crate::mx::mat::MxMat;
+use crate::mx::pipeline::PackPipeline;
+use crate::mx::{quant, store};
+use crate::obs::bench::{FinishOutcome, Reporter};
+use crate::obs::trace;
+use crate::rng::Rng;
+use crate::runtime::executor;
+use crate::serve::{KvPool, ServeModel};
+use crate::util::threadpool;
+
+/// A suite runner: takes the scale (`"micro"` / `"full"`), returns
+/// where the report landed and which gates failed.
+pub type SuiteFn = fn(&str) -> Result<FinishOutcome>;
+
+/// Suite registry, in run order. `bench --suites a,b` selects by name.
+pub const SUITES: &[(&str, SuiteFn)] = &[
+    ("gemm", run_gemm),
+    ("pack", run_pack),
+    ("quant", run_quant),
+    ("decode", run_decode),
+    ("ckpt", run_ckpt),
+    ("obs", run_obs),
+];
+
+pub fn names() -> Vec<&'static str> {
+    SUITES.iter().map(|(n, _)| *n).collect()
+}
+
+fn is_full(scale: &str) -> bool {
+    scale == "full"
+}
+
+/// Packed LUT engine vs the seed per-block path, and the SIMD shuffle
+/// kernel vs the scalar oracle (`benches/gemm.rs` core).
+fn run_gemm(scale: &str) -> Result<FinishOutcome> {
+    let full = is_full(scale);
+    let mut r = Reporter::start_scaled("gemm", scale);
+    let n = if full { 1024usize } else { 128 };
+    let iters = if full { 1 } else { 4 };
+    let mut rng = Rng::seed(0);
+    let aw = Mat::gaussian(n, n, 1.0, &mut rng);
+    let bw = Mat::gaussian(n, n, 1.0, &mut rng); // Bᵀ-shaped
+    let flops = 2.0 * (n * n * n) as f64;
+
+    let qa: Vec<MxVec> = (0..n).map(|i| MxVec::quantize_nr(aw.row(i))).collect();
+    let qb: Vec<MxVec> = (0..n).map(|i| MxVec::quantize_nr(bw.row(i))).collect();
+    let t_seed = r.bench("seed_mxvec_dot", flops, "flop", 0, iters, || {
+        let mut c = Mat::zeros(n, n);
+        for i in 0..n {
+            let qi = &qa[i];
+            for (j, qj) in qb.iter().enumerate() {
+                c.data[i * n + j] = qi.dot(qj);
+            }
+        }
+        std::hint::black_box(&c);
+    });
+
+    let pa = aw.pack_nr();
+    let pbt = bw.pack_nr();
+    let t_packed = r.bench("packed_lut_1w", flops, "flop", 1, iters, || {
+        std::hint::black_box(mx_gemm_packed(&pa, &pbt, 1));
+    });
+    if full {
+        r.gate_min("packed_vs_seed_speedup", t_seed / t_packed, 3.0);
+    }
+
+    match Kernel::simd() {
+        None => println!("(no SIMD ISA on this host; scalar kernel is the active path)"),
+        Some(simd) => {
+            let t_scalar = r.bench("packed_scalar_oracle", flops, "flop", 1, iters, || {
+                std::hint::black_box(mx_gemm_packed_with(&pa, &pbt, 1, Kernel::Scalar));
+            });
+            let t_simd = r.bench("packed_simd_kernel", flops, "flop", 1, iters, || {
+                std::hint::black_box(mx_gemm_packed_with(&pa, &pbt, 1, simd));
+            });
+            if full {
+                r.gate_min("simd_speedup", t_scalar / t_simd, 2.0);
+            }
+        }
+    }
+    Ok(r.finish()?)
+}
+
+/// Fused streaming operand prep vs the materialize-then-quantize path
+/// (`benches/pack.rs` core, minus the counting allocator — that
+/// contract needs a `#[global_allocator]` and stays in the bench).
+fn run_pack(scale: &str) -> Result<FinishOutcome> {
+    let full = is_full(scale);
+    let mut r = Reporter::start_scaled("pack", scale);
+    let n = if full { 1024usize } else { 256 };
+    let iters = if full { 3 } else { 5 };
+    let mut rng = Rng::seed(3);
+    let w = Mat::gaussian(n, n, 1.0, &mut rng);
+    let sign = hadamard::sample_sign(32, &mut rng);
+    let elems = (n * n) as f64;
+
+    let t_mat = r.bench("materialized_transpose_rht_quant", elems, "elem", 1, iters, || {
+        let mut wt = crate::gemm::transpose_flat(&w.data, n, n);
+        hadamard::rht_blockwise_dense(&mut wt, &sign, 1);
+        std::hint::black_box(MxMat::quantize_nr(&wt, n, n));
+    });
+    let t_fused = r.bench("fused_pipeline_1w", elems, "elem", 1, iters, || {
+        std::hint::black_box(PackPipeline::transposed(&w.data, n, n).with_rht(&sign).pack_nr(1));
+    });
+    r.bench("fused_pipeline_4w", elems, "elem", 1, iters, || {
+        std::hint::black_box(PackPipeline::transposed(&w.data, n, n).with_rht(&sign).pack_nr(4));
+    });
+    if full {
+        r.gate_min("fused_vs_materialized", t_mat / t_fused, 1.0);
+    }
+    Ok(r.finish()?)
+}
+
+/// Quantization kernel rates + the deterministic §3.1 clip-fraction
+/// gate (`benches/quant.rs` core). The clip gate runs at both scales —
+/// it measures the data distribution, not the machine.
+fn run_quant(scale: &str) -> Result<FinishOutcome> {
+    let full = is_full(scale);
+    let mut r = Reporter::start_scaled("quant", scale);
+    let n = if full { 1 << 20 } else { 1 << 16 };
+    let iters = if full { 5 } else { 8 };
+    let mut base = vec![0.0f32; n];
+    Rng::seed(0).fill_normal(&mut base, 2.0);
+    let elems = n as f64;
+
+    r.bench("qdq_nr", elems, "elem", 1, iters, || {
+        let mut v = base.clone();
+        quant::qdq_nr(&mut v);
+        std::hint::black_box(v);
+    });
+    r.bench("qdq_sr", elems, "elem", 1, iters, || {
+        let mut v = base.clone();
+        quant::qdq_sr(&mut v, &mut Rng::seed(1));
+        std::hint::black_box(v);
+    });
+    let rows = if full { 1024 } else { 256 };
+    r.bench("mxmat_quantize_nr", elems, "elem", 1, iters, || {
+        std::hint::black_box(MxMat::quantize_nr(&base, rows, n / rows));
+    });
+    let pm = MxMat::quantize_nr(&base, rows, n / rows);
+    r.bench("mxmat_dequantize", elems, "elem", 1, iters, || {
+        std::hint::black_box(pm.dequantize());
+    });
+
+    let frac = quant::clip_fraction(&base);
+    r.gate_min("clip_fraction_floor", frac, 0.005);
+    r.gate_max("clip_fraction_ceiling", frac, 0.10);
+    Ok(r.finish()?)
+}
+
+fn decode_model(cfg: &GPTConfig) -> Result<std::sync::Arc<ServeModel>> {
+    let params = executor::init_params_for(&cfg.param_specs(), cfg.n_layers, 1);
+    let mut m = ServeModel::new(cfg.clone(), NativeRecipe::parse("mxfp4").unwrap(), params)?;
+    m.set_workers(1);
+    Ok(std::sync::Arc::new(m))
+}
+
+fn rand_prompt(n: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::seed(seed);
+    (0..n).map(|_| (rng.next_u64() % vocab as u64) as i32).collect()
+}
+
+/// KV-cached decode throughput, dense and paged (`benches/decode.rs`
+/// core: prefill rate, tok/s, and the ≤5% paged-overhead gate).
+fn run_decode(scale: &str) -> Result<FinishOutcome> {
+    let full = is_full(scale);
+    let mut r = Reporter::start_scaled("decode", scale);
+    let seq = if full { 128usize } else { 64 };
+    let steps = if full { 32usize } else { 8 };
+    let cfg = if full {
+        GPTConfig::new(256, 128, 2, 4, seq, 0)
+    } else {
+        GPTConfig::new(256, 64, 1, 2, seq, 0)
+    };
+    let model = decode_model(&cfg)?;
+
+    let toks = rand_prompt(seq, cfg.vocab, 3);
+    r.bench("prefill_full_window", seq as f64, "tok", 1, 4, || {
+        std::hint::black_box(model.prefill(&toks).unwrap());
+    });
+
+    let depth = seq - seq / 4; // window-edge-ish depth at both scales
+    let prompt = rand_prompt(depth, cfg.vocab, 2);
+    let (state, _) = model.prefill(&prompt)?;
+    let t_dense = r.bench("kv_decode_dense", steps as f64, "tok", 1, 4, || {
+        let mut st = state.clone();
+        for i in 0..steps {
+            std::hint::black_box(model.decode_step(&mut st, (i % 251) as i32).unwrap());
+        }
+    });
+
+    let pool = KvPool::for_config(&cfg, 16, 256);
+    let mut pstate = pool.fresh_state();
+    model.decode_spans(&mut [&mut pstate], &[&prompt])?;
+    let t_paged = r.bench("kv_decode_paged", steps as f64, "tok", 1, 4, || {
+        let mut st = pstate.clone();
+        for i in 0..steps {
+            std::hint::black_box(model.decode_step(&mut st, (i % 251) as i32).unwrap());
+        }
+    });
+    if full {
+        // rates are steps/secs, so the ratio inverts the times
+        r.gate_min("paged_over_dense_rate", t_dense / t_paged, 0.95);
+    }
+    Ok(r.finish()?)
+}
+
+/// Checkpoint cold starts: f32 load-then-pack vs `.mxpk` zero-quantize
+/// load, plus the size ratio (`benches/ckpt.rs` core).
+fn run_ckpt(scale: &str) -> Result<FinishOutcome> {
+    let full = is_full(scale);
+    let mut r = Reporter::start_scaled("ckpt", scale);
+    let preset = if full { "small" } else { "test" };
+    let dir = std::env::temp_dir().join(format!("mxfp4_suite_ckpt_{scale}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    let (cfg, _) = GPTConfig::preset(preset).unwrap();
+    let recipe = NativeRecipe::parse("mxfp4").unwrap();
+    let specs = cfg.param_specs();
+    let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+    let params = executor::init_params_for(&specs, cfg.n_layers, 7);
+    let workers = threadpool::default_workers();
+
+    let f32_path = dir.join("master.mxck");
+    let pk_path = dir.join("packed.mxpk");
+    checkpoint::save(&f32_path, &names, &params)?;
+    let pk = checkpoint::build_packed(&cfg, &recipe, &names, &params, workers)?;
+    store::write(&pk_path, &pk)?;
+
+    let f32_bytes = std::fs::metadata(&f32_path)?.len();
+    let pk_bytes = std::fs::metadata(&pk_path)?.len();
+    let ratio = f32_bytes as f64 / pk_bytes as f64;
+    println!("size: .mxck {f32_bytes} B -> .mxpk {pk_bytes} B ({ratio:.2}x smaller)");
+
+    let t_f32 = r.bench("cold_start_f32_load_pack", 1.0, "load", 1, 1, || {
+        let (_, tensors) = checkpoint::load(&f32_path).unwrap();
+        let m = ServeModel::new(cfg.clone(), recipe.clone(), tensors).unwrap();
+        std::hint::black_box(&m);
+    });
+    let t_pk = r.bench("cold_start_packed_load", 1.0, "load", 1, 1, || {
+        let m = ServeModel::load_packed(&pk_path).unwrap();
+        assert_eq!(m.pack_stats(), 0, "packed load must not quantize");
+        std::hint::black_box(&m);
+    });
+    if full {
+        r.gate_min("mxpk_size_ratio", ratio, 3.0);
+        r.gate_min("packed_load_speedup", t_f32 / t_pk, 5.0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(r.finish()?)
+}
+
+/// Tracing overhead: disabled span cost and traced/untraced packed-GEMM
+/// ratio (`benches/obs.rs` core). Restores the ambient tracing state,
+/// so a `bench --trace-out` run keeps collecting afterwards.
+fn run_obs(scale: &str) -> Result<FinishOutcome> {
+    let full = is_full(scale);
+    let mut r = Reporter::start_scaled("obs", scale);
+    let was_enabled = trace::enabled();
+
+    trace::set_enabled(false);
+    let calls = 100_000usize;
+    let t_span = r.bench("disabled_span_call", calls as f64, "call", 1, 4, || {
+        for _ in 0..calls {
+            std::hint::black_box(trace::span("bench.noop"));
+        }
+    });
+    let ns = t_span / calls as f64 * 1e9;
+    println!("disabled span construct+drop: {ns:.2} ns/call");
+    if full {
+        r.gate_max("disabled_span_ns", ns, 1000.0);
+    }
+
+    let n = if full { 1024usize } else { 256 };
+    let iters = if full { 2 } else { 4 };
+    let mut rng = Rng::seed(0);
+    let aw = Mat::gaussian(n, n, 1.0, &mut rng);
+    let bw = Mat::gaussian(n, n, 1.0, &mut rng);
+    let pa = aw.pack_nr();
+    let pbt = bw.pack_nr();
+    let flops = 2.0 * (n * n * n) as f64;
+    let t_off = r.bench("gemm_tracing_off", flops, "flop", 1, iters, || {
+        std::hint::black_box(mx_gemm_packed(&pa, &pbt, 1));
+    });
+    trace::set_enabled(true);
+    let t_on = r.bench("gemm_tracing_on", flops, "flop", 1, iters, || {
+        std::hint::black_box(mx_gemm_packed(&pa, &pbt, 1));
+    });
+    trace::set_enabled(was_enabled);
+    if !was_enabled {
+        trace::clear();
+    }
+    if full {
+        r.gate_max("gemm_tracing_ratio", t_on / t_off, 1.03);
+    }
+    Ok(r.finish()?)
+}

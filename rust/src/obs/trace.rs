@@ -15,6 +15,7 @@
 //! tracing on or off (`tests/obs.rs` pins this).
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
@@ -111,13 +112,28 @@ impl Drop for LocalBuf {
     }
 }
 
+/// `tid -> OS thread name`, captured when a thread first records a
+/// span; exported as Chrome-trace `thread_name` metadata so Perfetto
+/// shows readable track names instead of bare tids.
+fn thread_names() -> &'static Mutex<BTreeMap<u64, String>> {
+    static N: OnceLock<Mutex<BTreeMap<u64, String>>> = OnceLock::new();
+    N.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn register_thread(tid: u64) {
+    let name = std::thread::current()
+        .name()
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    thread_names().lock().unwrap().insert(tid, name);
+}
+
 thread_local! {
-    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf {
-        spans: Vec::new(),
-        tid: {
-            static NEXT_TID: AtomicU64 = AtomicU64::new(1);
-            NEXT_TID.fetch_add(1, Ordering::Relaxed)
-        },
+    static LOCAL: RefCell<LocalBuf> = RefCell::new({
+        static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        register_thread(tid);
+        LocalBuf { spans: Vec::new(), tid }
     });
 }
 
@@ -194,7 +210,9 @@ pub fn clear() {
 /// Write every collected span as Chrome trace-event JSON: open in
 /// Perfetto (ui.perfetto.dev) or `chrome://tracing`. Timestamps are
 /// microseconds from the trace epoch; `pid` is constant 1 and `tid` is
-/// the internal thread index.
+/// the internal thread index. The stream opens with `ph:"M"` metadata
+/// events — one `process_name` plus a `thread_name` per tid that
+/// recorded spans — so Perfetto labels tracks with OS thread names.
 pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
     let spans = snapshot();
     let dropped = dropped();
@@ -205,13 +223,26 @@ pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
     }
     let mut w = BufWriter::new(File::create(path)?);
     write!(w, "{{\"traceEvents\":[")?;
-    for (i, r) in spans.iter().enumerate() {
-        if i > 0 {
-            write!(w, ",")?;
-        }
+    write!(
+        w,
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{{\"name\":\"mxfp4-train\"}}}}"
+    )?;
+    let names = thread_names().lock().unwrap().clone();
+    let mut tids: Vec<u64> = spans.iter().map(|r| r.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in &tids {
+        let name = names.get(tid).cloned().unwrap_or_else(|| format!("thread-{tid}"));
         write!(
             w,
-            "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{}}}",
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"args\":{{\"name\":{}}}}}",
+            json::s(&name)
+        )?;
+    }
+    for r in spans.iter() {
+        write!(
+            w,
+            ",{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{}}}",
             json::s(r.name),
             json::s(r.cat),
             r.start_ns as f64 / 1e3,
@@ -228,7 +259,6 @@ pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
 /// interval containment). Times are inclusive of children; counts are
 /// span instances.
 pub fn phase_report() -> String {
-    use std::collections::BTreeMap;
     use std::fmt::Write as _;
 
     let spans = snapshot();
@@ -326,10 +356,27 @@ mod tests {
         let doc = crate::util::json::parse(&text).unwrap();
         let events = doc.get("traceEvents").as_arr().unwrap();
         assert!(events.iter().any(|e| e.get("name").as_str() == Some("t.inner")));
+        assert_eq!(
+            events[0].get("name").as_str(),
+            Some("process_name"),
+            "metadata leads the event stream"
+        );
+        let mut thread_names_seen = 0usize;
         for e in events {
-            assert_eq!(e.get("ph").as_str(), Some("X"));
-            assert!(e.get("ts").as_f64().is_some() && e.get("dur").as_f64().is_some());
+            match e.get("ph").as_str() {
+                Some("X") => {
+                    assert!(e.get("ts").as_f64().is_some() && e.get("dur").as_f64().is_some());
+                }
+                Some("M") => {
+                    assert!(e.get("args").get("name").as_str().is_some(), "M events carry a name");
+                    if e.get("name").as_str() == Some("thread_name") {
+                        thread_names_seen += 1;
+                    }
+                }
+                other => panic!("unexpected ph {other:?}"),
+            }
         }
+        assert!(thread_names_seen >= 1, "every traced tid gets a thread_name event");
         let _ = std::fs::remove_file(&path);
         clear();
     }

@@ -322,6 +322,10 @@ pub struct Engine {
     /// Registry handle held hot (one lookup at construction, atomic
     /// bumps per tick): wall seconds per [`Engine::step`].
     tick_hist: Arc<crate::obs::Histogram>,
+    /// `--metrics-every` periodic snapshot refresh: `(path, interval,
+    /// last write)`, checked at the end of every tick so long-lived
+    /// serve loops expose progress before exit.
+    metrics_every: Option<(std::path::PathBuf, std::time::Duration, std::time::Instant)>,
 }
 
 impl Engine {
@@ -341,7 +345,16 @@ impl Engine {
             tick: 0,
             spec: None,
             tick_hist: crate::obs::histogram("engine.tick_secs", &crate::obs::LATENCY_BUCKETS),
+            metrics_every: None,
         }
+    }
+
+    /// Refresh the metrics snapshot at `path` roughly every `every`
+    /// while the engine ticks (the serve CLI's `--metrics-every`; the
+    /// at-exit dump still writes the final document). Failures to write
+    /// warn and keep serving — observability never kills traffic.
+    pub fn set_metrics_every(&mut self, path: std::path::PathBuf, every: std::time::Duration) {
+        self.metrics_every = Some((path, every, std::time::Instant::now()));
     }
 
     /// Attach a draft model for speculative decoding: each tick the
@@ -456,6 +469,21 @@ impl Engine {
         let secs = timer.secs();
         self.stats.secs += secs;
         self.tick_hist.observe(secs);
+        let refresh = match &mut self.metrics_every {
+            Some((_, every, last)) if last.elapsed() >= *every => {
+                *last = std::time::Instant::now();
+                true
+            }
+            _ => false,
+        };
+        if refresh {
+            self.publish_obs();
+            if let Some((path, _, _)) = &self.metrics_every {
+                if let Err(e) = crate::obs::write_snapshot(path) {
+                    crate::warn!("metrics-every snapshot write failed: {e}");
+                }
+            }
+        }
         Ok(self.done.len() - before)
     }
 

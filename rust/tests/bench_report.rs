@@ -1,0 +1,133 @@
+//! Benchmark report round-trip: Reporter -> BENCH json -> validate ->
+//! compare, including the comparator's injected-slowdown self-test.
+//!
+//! Own integration-test binary: the reporter publishes `bench.*`
+//! gauges into the process-global obs registry, so sharing a process
+//! with the `tests/obs.rs` snapshot assertions would race.
+
+use std::sync::{Mutex, OnceLock};
+
+use mxfp4_train::obs::bench;
+use mxfp4_train::util::json;
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    match L.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poison) => poison.into_inner(),
+    }
+}
+
+/// Run one tiny suite to `out` (via MXFP4_BENCH_OUT) and return the
+/// parsed report document.
+fn run_suite(suite: &str, gate_pass: bool, out: &std::path::Path) -> json::Json {
+    std::env::set_var(bench::OUT_ENV, out);
+    let mut r = bench::Reporter::start_scaled(suite, "micro").with_reps(3);
+    let v: Vec<f64> = (0..4096).map(|i| i as f64).collect();
+    r.bench("vec_sum_4k", v.len() as f64, "elem", 1, 8, || {
+        std::hint::black_box(v.iter().sum::<f64>());
+    });
+    r.gate_min("tautology", if gate_pass { 2.0 } else { 0.5 }, 1.0);
+    let outcome = r.finish().unwrap();
+    std::env::remove_var(bench::OUT_ENV);
+    assert_eq!(outcome.path, out);
+    assert_eq!(outcome.failed.is_empty(), gate_pass, "gate outcome: {:?}", outcome.failed);
+    json::parse(&std::fs::read_to_string(out).unwrap()).unwrap()
+}
+
+#[test]
+fn bench_report_roundtrip_validates_and_merges() {
+    let _g = lock();
+    let out = std::env::temp_dir().join("mxfp4_it_bench_report.json");
+    let _ = std::fs::remove_file(&out);
+
+    let doc = run_suite("it_alpha", true, &out);
+    let n = bench::validate(&doc).expect("fresh report must satisfy its own schema");
+    assert_eq!(n, 1, "one measurement recorded");
+    let suite = doc.get("suites").get("it_alpha");
+    assert_eq!(suite.get("scale").as_str(), Some("micro"));
+    let m = suite.get("measurements").get("vec_sum_4k");
+    assert!(m.get("median_secs").as_f64().unwrap() > 0.0);
+    assert!(m.get("mad_secs").as_f64().unwrap() >= 0.0);
+    assert_eq!(m.get("unit").as_str(), Some("elem"));
+    assert!(m.get("rate").as_f64().unwrap() > 0.0);
+    assert_eq!(suite.get("gates").get("tautology").get("pass"), &json::Json::Bool(true));
+
+    // a second suite merges into the same file without dropping the first
+    let doc2 = run_suite("it_beta", true, &out);
+    assert_eq!(bench::validate(&doc2).unwrap(), 2);
+    assert!(doc2.get("suites").get("it_alpha").get("measurements").as_obj().is_some());
+    assert!(doc2.get("suites").get("it_beta").get("measurements").as_obj().is_some());
+
+    // the bench.* gauges published alongside the report
+    let gauge = mxfp4_train::obs::gauge("bench.it_alpha.vec_sum_4k.secs");
+    assert!(gauge.get() > 0.0, "reporter must publish bench gauges");
+
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn bench_failed_gate_is_reported_not_silent() {
+    let _g = lock();
+    let out = std::env::temp_dir().join("mxfp4_it_bench_failgate.json");
+    let _ = std::fs::remove_file(&out);
+    let doc = run_suite("it_fail", false, &out);
+    let gate = doc.get("suites").get("it_fail").get("gates").get("tautology");
+    assert_eq!(gate.get("pass"), &json::Json::Bool(false));
+    assert_eq!(gate.get("op").as_str(), Some(">="));
+    let _ = std::fs::remove_file(&out);
+}
+
+/// Minimal comparator input: one suite, one measurement, fixed noise.
+fn mini_report(median: f64, mad: f64) -> json::Json {
+    json::obj(vec![(
+        "suites",
+        json::obj(vec![(
+            "s",
+            json::obj(vec![(
+                "measurements",
+                json::obj(vec![(
+                    "m",
+                    json::obj(vec![
+                        ("median_secs", json::num(median)),
+                        ("mad_secs", json::num(mad)),
+                    ]),
+                )]),
+            )]),
+        )]),
+    )])
+}
+
+#[test]
+fn bench_comparator_passes_unchanged_and_flags_injected_slowdown() {
+    let _g = lock();
+    let out = std::env::temp_dir().join("mxfp4_it_bench_compare.json");
+    let _ = std::fs::remove_file(&out);
+    let doc = run_suite("it_cmp", true, &out);
+
+    // unchanged rerun: identical medians can never regress
+    let same = bench::compare(&doc, &doc, None);
+    assert_eq!(same.regressions, 0);
+    assert_eq!(same.deltas.len(), 1);
+    assert!(same.table().contains("0 regressed"), "{}", same.table());
+
+    // synthetic 2x slowdown against a low-noise fixture (the measured
+    // micro workload's MAD is host-dependent; the rule itself is not):
+    // margin = max(5% of 1ms, 3 x 10us) = 50us, delta = 1ms >> margin
+    let fixture = mini_report(1e-3, 1e-5);
+    let slow = bench::compare(&fixture, &fixture, Some(2.0));
+    assert_eq!(slow.regressions, 1, "2x must be flagged: {}", slow.table());
+    assert!(slow.table().contains("REGRESSED"), "{}", slow.table());
+    // and the same injection on the real measured report must never
+    // *error*; whether it flags depends on the host's noise floor
+    let _ = bench::compare(&doc, &doc, Some(2.0));
+
+    // validation failure modes the CLI leans on
+    assert!(bench::validate(&json::parse("{}").unwrap()).is_err());
+    let mut broken = std::fs::read_to_string(&out).unwrap();
+    broken = broken.replace("\"schema\": 1", "\"schema\": 99");
+    broken = broken.replace("\"schema\":1", "\"schema\":99");
+    let bdoc = json::parse(&broken).unwrap();
+    assert!(bench::validate(&bdoc).is_err(), "wrong schema version must be rejected");
+    let _ = std::fs::remove_file(&out);
+}

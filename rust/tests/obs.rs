@@ -191,11 +191,27 @@ fn obs_chrome_trace_export_roundtrip() {
     let events = doc.get("traceEvents").as_arr().unwrap();
     assert!(!events.is_empty());
     assert!(events.iter().any(|ev| ev.get("name").as_str() == Some("engine.tick")));
+    // leading metadata events name the process and each seen thread so
+    // Perfetto shows readable lanes; the rest are complete X spans
+    assert_eq!(events[0].get("name").as_str(), Some("process_name"));
+    let mut thread_names = 0usize;
     for ev in events {
-        assert_eq!(ev.get("ph").as_str(), Some("X"));
-        assert!(ev.get("ts").as_f64().is_some() && ev.get("dur").as_f64().is_some());
-        assert!(ev.get("tid").as_i64().is_some());
+        match ev.get("ph").as_str() {
+            Some("X") => {
+                assert!(ev.get("ts").as_f64().is_some() && ev.get("dur").as_f64().is_some());
+                assert!(ev.get("tid").as_i64().is_some());
+            }
+            Some("M") => {
+                assert!(ev.get("args").get("name").as_str().is_some());
+                if ev.get("name").as_str() == Some("thread_name") {
+                    thread_names += 1;
+                    assert!(ev.get("tid").as_i64().is_some());
+                }
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
     }
+    assert!(thread_names >= 1, "no thread_name metadata events");
     assert_eq!(doc.get("droppedSpans").as_i64(), Some(0));
     let report = trace::phase_report();
     assert!(report.contains("engine.tick"), "phase tree: {report}");

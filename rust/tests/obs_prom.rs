@@ -1,0 +1,109 @@
+//! Prometheus exposition edge cases (obs::prometheus_text).
+//!
+//! Own integration-test binary (own process) so `obs::reset()` on the
+//! process-global registry can never race the `tests/obs.rs` suite. The
+//! tests within this file still share that registry, so each takes the
+//! file-local lock and starts from a reset.
+
+use std::sync::{Mutex, OnceLock};
+
+use mxfp4_train::obs;
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    match L.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poison) => poison.into_inner(),
+    }
+}
+
+/// Every non-alphanumeric character in a metric name (dots, slashes,
+/// spaces, unicode) must map to `_`, with the `mxfp4_` prefix applied.
+#[test]
+fn prom_name_sanitization() {
+    let _g = lock();
+    obs::reset();
+    obs::counter("serve.tok/s rate-2").add(7);
+    obs::set_gauge("weird.μ.gauge", 1.5);
+    let text = obs::prometheus_text();
+    assert!(
+        text.contains("mxfp4_serve_tok_s_rate_2 7"),
+        "slash/space/dash not sanitized: {text}"
+    );
+    assert!(text.contains("# TYPE mxfp4_serve_tok_s_rate_2 counter"), "{text}");
+    assert!(text.contains("mxfp4_weird___gauge 1.5"), "non-ascii not sanitized: {text}");
+    // no unsanitized byte may survive into a metric name line
+    for line in text.lines().filter(|l| !l.starts_with('#')) {
+        let name = line.split([' ', '{']).next().unwrap();
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "bad metric name {name:?}"
+        );
+    }
+}
+
+/// The cumulative histogram must always end in a `+Inf` bucket whose
+/// count equals the total observation count, even when every sample
+/// lands above the last finite bound.
+#[test]
+fn prom_inf_bucket_emission() {
+    let _g = lock();
+    obs::reset();
+    let h = obs::histogram("inf.only", &[1.0, 2.0]);
+    for v in [5.0, 10.0, 100.0] {
+        h.observe(v);
+    }
+    let text = obs::prometheus_text();
+    assert!(text.contains("mxfp4_inf_only_bucket{le=\"+Inf\"} 3"), "{text}");
+    assert!(text.contains("mxfp4_inf_only_bucket{le=\"1\"} 0"), "{text}");
+    assert!(text.contains("mxfp4_inf_only_bucket{le=\"2\"} 0"), "{text}");
+}
+
+/// A reset registry exposes nothing: no half-written TYPE lines, no
+/// stale instruments from earlier tests.
+#[test]
+fn prom_empty_registry_output() {
+    let _g = lock();
+    obs::reset();
+    let text = obs::prometheus_text();
+    assert!(text.is_empty(), "reset registry must expose no metrics, got: {text}");
+    // the JSON snapshot stays structurally valid while empty
+    let snap = obs::snapshot_json();
+    assert_eq!(snap.get("counters").as_obj().map(|m| m.len()), Some(0));
+    assert_eq!(snap.get("gauges").as_obj().map(|m| m.len()), Some(0));
+    assert_eq!(snap.get("histograms").as_obj().map(|m| m.len()), Some(0));
+}
+
+/// `_sum` must equal the exact sum of observations, `_count` the exact
+/// number, and the `+Inf` bucket must agree with `_count`.
+#[test]
+fn prom_histogram_sum_count_consistency() {
+    let _g = lock();
+    obs::reset();
+    let h = obs::histogram("lat.secs", &obs::LATENCY_BUCKETS);
+    let samples = [0.0005, 0.003, 0.02, 0.02, 1.5, 30.0];
+    for v in samples {
+        h.observe(v);
+    }
+    let text = obs::prometheus_text();
+    let field = |suffix: &str| -> f64 {
+        let prefix = format!("mxfp4_lat_secs_{suffix} ");
+        text.lines()
+            .find_map(|l| l.strip_prefix(&prefix))
+            .unwrap_or_else(|| panic!("missing {prefix}: {text}"))
+            .parse()
+            .unwrap()
+    };
+    assert_eq!(field("count"), samples.len() as f64);
+    let want_sum: f64 = samples.iter().sum();
+    assert!((field("sum") - want_sum).abs() < 1e-9, "sum {} != {want_sum}", field("sum"));
+    let inf_line = format!("mxfp4_lat_secs_bucket{{le=\"+Inf\"}} {}", samples.len());
+    assert!(text.contains(&inf_line), "{text}");
+    // cumulative monotonicity across the printed buckets
+    let mut prev = 0u64;
+    for l in text.lines().filter(|l| l.starts_with("mxfp4_lat_secs_bucket")) {
+        let c: u64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(c >= prev, "bucket counts must be cumulative: {text}");
+        prev = c;
+    }
+}

@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# Bench orchestrator (documented in docs/OBSERVABILITY.md).
+#
+# Builds the release binary, runs the selected in-process benchmark
+# suites through `mxfp4-train bench`, and compares the emitted
+# BENCH_<gitrev>.json against the committed BENCH_baseline.json with the
+# noise-aware rule (regression iff the median worsens by more than
+# max(5%, 3x MAD)). Exits nonzero on any failed gate or regression.
+#
+# Usage: ./scripts/bench.sh [--suite micro|full] [--suites a,b,c]
+#                           [--out path] [--update-baseline] [--no-compare]
+#                           [--selftest]
+#
+#   --suite micro      shrunken shapes, seconds per suite (default; what
+#                      CI runs) — perf gates are recorded but sized-down
+#   --suite full       bench-target shapes with the canonical gates
+#   --suites a,b,c     subset of: gemm pack quant decode ckpt obs
+#   --out <path>       report destination (default: repo root,
+#                      BENCH_<gitrev>.json)
+#   --update-baseline  copy the fresh report over BENCH_baseline.json
+#   --no-compare       skip the baseline comparison
+#   --selftest         CI mode: run the micro suites to a scratch
+#                      report, validate its schema, prove the comparator
+#                      passes an unchanged rerun AND flags an injected
+#                      2x slowdown, then clean up. No baseline needed.
+
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+BIN=rust/target/release/mxfp4-train
+
+SELFTEST=0
+ARGS=()
+for a in "$@"; do
+    case "$a" in
+        --selftest) SELFTEST=1 ;;
+        *) ARGS+=("$a") ;;
+    esac
+done
+
+echo "==> cargo build --release"
+(cd rust && cargo build --release)
+
+if [[ "$SELFTEST" == "1" ]]; then
+    scratch="$(mktemp -d)"
+    trap 'rm -rf "$scratch"' EXIT
+    report="$scratch/BENCH_selftest.json"
+
+    echo "==> bench selftest: micro suites -> $report"
+    "$BIN" bench --suite micro --out "$report" --no-compare
+
+    echo "==> bench selftest: schema validation"
+    "$BIN" bench --validate "$report"
+
+    echo "==> bench selftest: comparator must pass an unchanged rerun"
+    "$BIN" bench --compare-only --baseline "$report" --report "$report"
+
+    echo "==> bench selftest: comparator must flag an injected 2x slowdown"
+    if "$BIN" bench --compare-only --baseline "$report" --report "$report" \
+        --inject-slowdown 2 >"$scratch/inject.log" 2>&1; then
+        echo "FAIL: comparator accepted a synthetic 2x regression"
+        cat "$scratch/inject.log"
+        exit 1
+    fi
+    grep -q "REGRESSED" "$scratch/inject.log" \
+        || { echo "FAIL: no REGRESSED verdict in the injected-slowdown table"; cat "$scratch/inject.log"; exit 1; }
+    echo "    (regression correctly flagged, nonzero exit)"
+    echo "==> bench selftest passed"
+    exit 0
+fi
+
+exec "$BIN" bench "${ARGS[@]}"

@@ -19,6 +19,9 @@
 #      and --features mmap readers), a train -> convert -> serve smoke
 #      asserting byte-identical completions + zero quantize packs, and
 #      the benches/ckpt.rs size/cold-start gates
+#   6d. bench reports: scripts/bench.sh --selftest (micro suites emit a
+#      schema-valid BENCH_<gitrev>.json; the noise-aware comparator
+#      passes an unchanged rerun and flags an injected 2x slowdown)
 #   7. cargo doc           (rustdoc, warnings denied)
 #
 # Usage: ./scripts/ci.sh        (from the repo root; any extra args are
@@ -231,6 +234,13 @@ rm -rf "$ckroot"
 
 echo "==> checkpoint bench gates (.mxpk >=3x smaller, packed load >=5x faster)"
 cargo bench --bench ckpt
+
+echo "==> bench report smoke (micro suites + schema validation + comparator both ways)"
+# scripts/bench.sh --selftest: runs the micro suites to a scratch
+# BENCH report, validates it against the schema, proves the comparator
+# passes an unchanged rerun, and proves an injected synthetic 2x
+# slowdown exits nonzero with a REGRESSED verdict.
+(cd .. && ./scripts/bench.sh --selftest)
 
 echo "==> cargo doc (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
